@@ -1,0 +1,62 @@
+//! Quickstart: train a model with SGP + SlowMo in ~30 lines.
+//!
+//! Run with:  cargo run --release --example quickstart
+//! Requires:  make artifacts   (AOT-lowers the JAX/Pallas graphs first)
+
+use slowmo::bench::Scale;
+use slowmo::net::CostModel;
+use slowmo::optim::kernels::InnerOpt;
+use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::slowmo::SlowMoCfg;
+use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (HLO text lowered from JAX once, at build
+    //    time) and bring up the PJRT CPU engine.
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu(&dir)?;
+    println!("engine: {}", engine.platform());
+
+    // 2. Configure: 4 workers running SGP (push-sum gossip over the
+    //    exponential graph), wrapped in SlowMo with τ=12, β=0.7 —
+    //    the paper's CIFAR-10 configuration.
+    let steps = 240;
+    let cfg = TrainCfg {
+        preset: "cifar-mlp".into(),
+        m: 4,
+        steps,
+        seed: 0,
+        algo: AlgoSpec::Sgp(InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 }),
+        slowmo: Some(SlowMoCfg::new(1.0, 0.7, 12)),
+        sched: Schedule::image_default(0.1, steps),
+        heterogeneity: 0.8,
+        eval_every: 60,
+        eval_batches: 8,
+        force_pjrt: false,
+        native_kernels: true,
+        cost: CostModel::ethernet_10g(),
+        compute_time_s: 0.0,
+        record_gradnorm: false,
+    };
+
+    // 3. Train and inspect.
+    let result = train(&cfg, &manifest, Some(&engine))?;
+    println!("\nvalidation curve (mean across {} workers):", cfg.m);
+    for p in &result.eval_curve {
+        println!(
+            "  step {:>4}  loss {:.4}  acc {:.2}%  [{:.4}, {:.4}]",
+            p.step,
+            p.loss_mean,
+            100.0 * p.metric_mean,
+            p.loss_min,
+            p.loss_max
+        );
+    }
+    println!("\nbest training loss:  {:.4}", result.best_train_loss);
+    println!("best validation acc: {:.2}%",
+             100.0 * result.best_eval_metric);
+    println!("fabric traffic:      {}",
+             slowmo::util::fmt_bytes(result.bytes_sent));
+    Ok(())
+}

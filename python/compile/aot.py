@@ -1,0 +1,246 @@
+"""AOT export: lower every Layer-2 graph to HLO text + manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+  <preset>.train.hlo.txt / <preset>.eval.hlo.txt   model graphs
+  opt.{nesterov,adam,slowmo,axpy}.d<d>.hlo.txt     optimizer graphs per d
+  init.<preset>.f32                                 initial flat params (LE)
+  manifest.json                                     machine-readable index
+  golden.json                                       kernel golden vectors for
+                                                    the Rust mirror tests
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--group default]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import optim, presets
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange).
+
+    Large constants MUST be printed in full: the default printer elides
+    them as ``constant({...})`` and xla_extension's text parser silently
+    zero-fills the elision, corrupting the graph (caught by
+    rust/tests/runtime_smoke.rs and guarded here).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New-jax metadata attributes (source_end_line etc.) are unknown to the
+    # 0.5.1-era text parser; strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    if "{...}" in text:
+        raise RuntimeError("HLO printer elided a large constant")
+    return text
+
+
+def _io_desc(avals) -> list[dict]:
+    out = []
+    for i, a in enumerate(avals):
+        out.append({"index": i, "shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def lower_fn(fn, example_args):
+    # keep_unused: the Rust runtime feeds every manifest input; letting jit
+    # prune unused args (e.g. quad-eval's noise) would desync the
+    # signature.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_avals = lowered.out_info
+    flat_out = jax.tree_util.tree_leaves(out_avals)
+    return text, _io_desc(example_args), _io_desc(flat_out)
+
+
+def batch_args(name: str):
+    """Example (abstract) batch inputs for a preset's train/eval graphs."""
+    family, cfg = presets.PRESETS[name]
+    if family == "lm":
+        tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+        return (tok, tok)
+    if family == "mlp":
+        return (jax.ShapeDtypeStruct((cfg.batch, cfg.in_dim), jnp.float32),
+                jax.ShapeDtypeStruct((cfg.batch,), jnp.int32))
+    if family == "cnn":
+        return (jax.ShapeDtypeStruct((cfg.batch, cfg.hw, cfg.hw, cfg.in_ch),
+                                     jnp.float32),
+                jax.ShapeDtypeStruct((cfg.batch,), jnp.int32))
+    if family == "quad":
+        vec = jax.ShapeDtypeStruct((cfg.dim,), jnp.float32)
+        return (vec, vec)
+    raise KeyError(family)
+
+
+def data_desc(name: str) -> dict:
+    """What the Rust data generator needs to synthesize batches."""
+    family, cfg = presets.PRESETS[name]
+    if family == "lm":
+        return {"kind": "lm", "vocab": cfg.vocab, "seq_len": cfg.seq_len,
+                "batch": cfg.batch}
+    if family == "mlp":
+        return {"kind": "class", "in_dim": cfg.in_dim,
+                "classes": cfg.classes, "batch": cfg.batch}
+    if family == "cnn":
+        return {"kind": "image", "hw": cfg.hw, "in_ch": cfg.in_ch,
+                "classes": cfg.classes, "batch": cfg.batch}
+    if family == "quad":
+        return {"kind": "quad", "dim": cfg.dim, "cond": cfg.cond}
+    raise KeyError(family)
+
+
+def export_preset(name: str, out_dir: str, manifest: dict) -> int:
+    spec = presets.spec_for(name)
+    d = spec.flat_len
+    train_fn, eval_fn = presets.fns_for(name)
+    flat = jax.ShapeDtypeStruct((d,), jnp.float32)
+    args = (flat,) + batch_args(name)
+
+    entry: dict = {
+        "family": presets.PRESETS[name][0],
+        "flat_len": d,
+        "raw_len": spec.raw_len,
+        "data": data_desc(name),
+        "params": spec.describe(),
+    }
+    for kind, fn in (("train", train_fn), ("eval", eval_fn)):
+        fname = f"{name}.{kind}.hlo.txt"
+        text, ins, outs = lower_fn(fn, args)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry[kind] = {"file": fname, "inputs": ins, "outputs": outs}
+        print(f"  {fname}: {len(text)} chars, {len(ins)} in / {len(outs)} out")
+
+    # Initial parameters: raw little-endian f32, generated here so every
+    # Rust worker starts from the same point (paper assumption x_0 shared).
+    init = np.asarray(spec.init_flat(jax.random.PRNGKey(0)),
+                      dtype="<f4")
+    init_file = f"init.{name}.f32"
+    init.tofile(os.path.join(out_dir, init_file))
+    entry["init_file"] = init_file
+    manifest["presets"][name] = entry
+    return d
+
+
+def export_optim(d: int, out_dir: str, manifest: dict) -> None:
+    vec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    sc = jax.ShapeDtypeStruct((1,), jnp.float32)
+    graphs = {
+        "nesterov": (optim.nesterov_step, (vec, vec, vec, sc, sc, sc)),
+        "adam": (optim.adam_step, (vec, vec, vec, vec, sc, sc, sc, sc, sc)),
+        "slowmo": (optim.slowmo_update, (vec, vec, vec, sc, sc, sc)),
+        "axpy": (optim.axpy_mix, (vec, vec, sc, sc)),
+    }
+    entry = {}
+    for gname, (fn, args) in graphs.items():
+        fname = f"opt.{gname}.d{d}.hlo.txt"
+        text, ins, outs = lower_fn(fn, args)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry[gname] = {"file": fname, "inputs": ins, "outputs": outs}
+    manifest["optim"][str(d)] = entry
+    print(f"  optimizer graphs for d={d}")
+
+
+def export_golden(out_dir: str) -> None:
+    """Small golden vectors so the Rust mirror optimizers can be verified
+    bit-for-bit against the jnp oracle without a Python runtime."""
+    rng = np.random.RandomState(1234)
+    d = 16
+
+    def vec():
+        return rng.randn(d).astype(np.float32)
+
+    cases = {}
+    x0, xt, u = vec(), vec(), vec()
+    xn, un = ref.slowmo_update(jnp.array(x0), jnp.array(xt), jnp.array(u),
+                               0.05, 1.0, 0.7)
+    cases["slowmo"] = {
+        "in": {"x0": x0.tolist(), "xt": xt.tolist(), "u": u.tolist(),
+               "gamma": 0.05, "alpha": 1.0, "beta": 0.7},
+        "out": {"x": np.asarray(xn).tolist(), "u": np.asarray(un).tolist()},
+    }
+    x, h, g = vec(), vec(), vec()
+    xn, hn = ref.nesterov_step(jnp.array(x), jnp.array(h), jnp.array(g),
+                               0.1, 0.9, 1e-4)
+    cases["nesterov"] = {
+        "in": {"x": x.tolist(), "h": h.tolist(), "g": g.tolist(),
+               "gamma": 0.1, "beta0": 0.9, "wd": 1e-4},
+        "out": {"x": np.asarray(xn).tolist(), "h": np.asarray(hn).tolist()},
+    }
+    x, h, g = vec(), vec(), vec()
+    v = np.abs(vec())
+    xn, hn, vn = ref.adam_step(jnp.array(x), jnp.array(h), jnp.array(v),
+                               jnp.array(g), 1e-3, 0.9, 0.98, 1e-8, 7.0)
+    cases["adam"] = {
+        "in": {"x": x.tolist(), "h": h.tolist(), "v": v.tolist(),
+               "g": g.tolist(), "gamma": 1e-3, "beta1": 0.9, "beta2": 0.98,
+               "eps": 1e-8, "step": 7.0},
+        "out": {"x": np.asarray(xn).tolist(), "h": np.asarray(hn).tolist(),
+                "v": np.asarray(vn).tolist()},
+    }
+    x, y = vec(), vec()
+    cases["axpy"] = {
+        "in": {"x": x.tolist(), "y": y.tolist(), "a": 0.25, "b": 0.75},
+        "out": {"z": np.asarray(ref.axpy_mix(
+            jnp.array(x), jnp.array(y), 0.25, 0.75)).tolist()},
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(cases, f)
+    print("  golden.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--group", default="default",
+                    choices=sorted(presets.GROUPS))
+    ap.add_argument("--preset", action="append", default=[],
+                    help="extra presets to export (repeatable)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = list(dict.fromkeys(presets.GROUPS[args.group] + args.preset))
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest: dict = {"version": 1, "presets": {}, "optim": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest.setdefault("presets", {})
+        manifest.setdefault("optim", {})
+
+    dims = set()
+    for name in names:
+        print(f"preset {name}")
+        dims.add(export_preset(name, args.out_dir, manifest))
+    for d in sorted(dims):
+        export_optim(d, args.out_dir, manifest)
+    export_golden(args.out_dir)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

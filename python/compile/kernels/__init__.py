@@ -1,0 +1,28 @@
+"""Layer-1 Pallas kernels for the SlowMo reproduction.
+
+Every kernel here is the arithmetic hot-spot of one piece of the SlowMo
+framework (Wang et al., ICLR 2020):
+
+- :mod:`.slowmo`    -- fused slow-momentum outer update (paper Eq. 2-3).
+- :mod:`.nesterov`  -- fused Nesterov-momentum SGD inner step (Alg. 2/4).
+- :mod:`.adam`      -- fused Adam inner step with bias correction (Table C.1).
+- :mod:`.mix`       -- fused axpy gossip mixing / push-sum combine.
+- :mod:`.attention` -- tiled causal attention for the L2 transformer.
+
+All kernels are written with TPU-shaped BlockSpecs (VMEM tiles that are
+multiples of the 8x128 f32 register tile) but are lowered with
+``interpret=True`` so the emitted HLO contains no Mosaic custom-calls and can
+be executed by the CPU PJRT client that the Rust Layer-3 coordinator uses.
+
+Correctness oracles for every kernel live in :mod:`.ref` and are enforced by
+``python/tests/test_kernels.py``.
+"""
+
+# Default 1-D VMEM block for elementwise optimizer kernels: 65536 f32
+# = 512 x 128 lanes = 256 KiB per operand. Chosen in DESIGN.md SS5 so that the
+# worst-case kernel (adam: 4 in + 3 out operands) stays under 2 MiB of VMEM
+# working set per grid step, leaving room for double buffering in a 16 MiB
+# VMEM budget.
+BLOCK_ELEMS = 65536
+
+from . import adam, attention, mix, nesterov, ref, slowmo  # noqa: E402,F401

@@ -1,0 +1,61 @@
+"""Fused Adam inner step with bias correction (paper Table C.1).
+
+    h_{k+1} = beta1 * h_k + (1 - beta1) * g
+    v_{k+1} = beta2 * v_k + (1 - beta2) * g^2
+    h_hat   = h_{k+1} / (1 - beta1^l)
+    v_hat   = v_{k+1} / (1 - beta2^l)
+    x_{k+1} = x_k - gamma * h_hat / (sqrt(v_hat) + eps)
+
+``l`` is the *global* step counter: when the SlowMo buffer strategy is
+"maintain" (the paper's default for Adam / WMT), l = t*tau + k keeps counting
+across outer iterations; when "reset", l restarts at 1 each outer loop. The
+counter is a runtime input so one compiled artifact serves both strategies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import as_scalar, pick_block, scalar_spec, vec_spec
+
+
+def _kernel(x_ref, h_ref, v_ref, g_ref, gamma_ref, beta1_ref, beta2_ref,
+            eps_ref, step_ref, x_out_ref, h_out_ref, v_out_ref):
+    gamma = gamma_ref[0]
+    beta1 = beta1_ref[0]
+    beta2 = beta2_ref[0]
+    eps = eps_ref[0]
+    step = step_ref[0]  # l >= 1, as f32
+    g = g_ref[...]
+    h_new = beta1 * h_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    h_out_ref[...] = h_new
+    v_out_ref[...] = v_new
+    bc1 = 1.0 - jnp.power(beta1, step)
+    bc2 = 1.0 - jnp.power(beta2, step)
+    h_hat = h_new / bc1
+    v_hat = v_new / bc2
+    x_out_ref[...] = x_ref[...] - gamma * h_hat / (jnp.sqrt(v_hat) + eps)
+
+
+def adam_step(x, h, v, g, gamma, beta1, beta2, eps, step, *,
+              block_elems=None, interpret=True):
+    """One fused Adam step; returns ``(x_next, h_next, v_next)``.
+
+    ``step`` is the 1-based global Adam step counter (runtime scalar).
+    """
+    d = x.shape[0]
+    block = pick_block(d, block_elems)
+    out_shape = tuple(jax.ShapeDtypeStruct((d,), jnp.float32)
+                      for _ in range(3))
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // block,),
+        in_specs=[vec_spec(block)] * 4 + [scalar_spec()] * 5,
+        out_specs=tuple(vec_spec(block) for _ in range(3)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, v, g, as_scalar(gamma), as_scalar(beta1), as_scalar(beta2),
+      as_scalar(eps), as_scalar(step))

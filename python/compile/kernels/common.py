@@ -1,0 +1,53 @@
+"""Shared helpers for the Layer-1 Pallas kernels.
+
+All elementwise optimizer kernels operate on flat ``f32[d]`` parameter
+vectors. The Layer-2 export path pads ``d`` up to a multiple of the VMEM
+block so every grid step is full (no masking needed); the padding tail is
+provably inert under every optimizer update (zero gradient -> zero momentum
+-> zero update), which ``python/tests/test_padding.py`` asserts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 512 x 128 f32 lanes = 256 KiB per operand in VMEM. See kernels/__init__.py.
+BLOCK_ELEMS = 65536
+
+
+def pick_block(d: int, block_elems: int | None) -> int:
+    """Choose the 1-D VMEM block size for a flat vector of length ``d``.
+
+    ``block_elems=None`` requests whole-array (single grid step) execution,
+    which is the fastest layout for the CPU-PJRT interpret path; an explicit
+    block must divide ``d`` exactly.
+    """
+    if block_elems is None or block_elems >= d:
+        return d
+    if d % block_elems != 0:
+        raise ValueError(
+            f"flat length {d} is not a multiple of block {block_elems}; "
+            "pad the parameter vector first (see compile.model.pad_len)"
+        )
+    return block_elems
+
+
+def vec_spec(block: int) -> pl.BlockSpec:
+    """BlockSpec for a flat vector tiled 1-D along the grid."""
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def scalar_spec() -> pl.BlockSpec:
+    """BlockSpec for a broadcast ``f32[1]`` runtime scalar (lr, beta, ...).
+
+    Every grid step maps to the same single-element block, emulating the
+    SMEM-resident scalar operand a real TPU kernel would use.
+    """
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def as_scalar(x) -> jax.Array:
+    """Coerce a python float / 0-d array to the ``f32[1]`` scalar layout."""
+    return jnp.asarray(x, dtype=jnp.float32).reshape(1)

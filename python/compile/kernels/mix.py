@@ -1,0 +1,39 @@
+"""Fused axpy gossip mixing kernel.
+
+SGP / OSGP / D-PSGD mix a worker's parameters with a received message as a
+two-term convex (column-stochastic) combination:
+
+    x' = a * x + b * y        (paper Alg. 2 line 7 with one in-neighbor)
+
+and the push-sum weight update is the same combination on scalars. The fused
+kernel is also used by the SlowMo exact-average reduction tree, where each
+combine step is a = b = 1 (sum) followed by a final 1/m scale, expressed as
+``axpy_mix(acc, x, 1.0, 1.0)`` / ``axpy_mix(acc, acc, 1/m, 0.0)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import as_scalar, pick_block, scalar_spec, vec_spec
+
+
+def _kernel(x_ref, y_ref, a_ref, b_ref, out_ref):
+    out_ref[...] = a_ref[0] * x_ref[...] + b_ref[0] * y_ref[...]
+
+
+def axpy_mix(x, y, a, b, *, block_elems=None, interpret=True):
+    """Return ``a*x + b*y`` over flat ``f32[d]`` vectors."""
+    d = x.shape[0]
+    block = pick_block(d, block_elems)
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // block,),
+        in_specs=[vec_spec(block), vec_spec(block),
+                  scalar_spec(), scalar_spec()],
+        out_specs=vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(x, y, as_scalar(a), as_scalar(b))

@@ -1,0 +1,53 @@
+"""Fused Nesterov-momentum SGD inner step (paper Alg. 2/4, Table C.1).
+
+The base-optimizer update the paper uses on every worker for the image
+tasks is SGD with Nesterov momentum and (decoupled) weight decay:
+
+    g'     = g + wd * x                       (L2 regularization)
+    h_{k+1} = beta0 * h_k + g'
+    d      = beta0 * h_{k+1} + g'             (Nesterov look-ahead direction)
+    x_{k+1} = x_k - gamma * d
+
+Fusing the three statements keeps the HBM traffic at 3 reads + 2 writes per
+element, matching the fused `foreach` optimizer loop PyTorch gives the
+original paper on V100s.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import as_scalar, pick_block, scalar_spec, vec_spec
+
+
+def _kernel(x_ref, h_ref, g_ref, gamma_ref, beta0_ref, wd_ref,
+            x_out_ref, h_out_ref):
+    gamma = gamma_ref[0]
+    beta0 = beta0_ref[0]
+    wd = wd_ref[0]
+    g = g_ref[...] + wd * x_ref[...]
+    h_new = beta0 * h_ref[...] + g
+    h_out_ref[...] = h_new
+    x_out_ref[...] = x_ref[...] - gamma * (beta0 * h_new + g)
+
+
+def nesterov_step(x, h, g, gamma, beta0, wd=0.0, *, block_elems=None,
+                  interpret=True):
+    """One fused Nesterov-SGD step; returns ``(x_next, h_next)``."""
+    d = x.shape[0]
+    block = pick_block(d, block_elems)
+    out_shape = (
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // block,),
+        in_specs=[vec_spec(block), vec_spec(block), vec_spec(block),
+                  scalar_spec(), scalar_spec(), scalar_spec()],
+        out_specs=(vec_spec(block), vec_spec(block)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, h, g, as_scalar(gamma), as_scalar(beta0), as_scalar(wd))

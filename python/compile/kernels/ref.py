@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel.
+
+These are the ground truth against which ``python/tests/test_kernels.py``
+checks the Pallas kernels (allclose over randomized shape/seed sweeps), and
+they double as the spec the Rust mirror optimizers (`rust/src/optim/`) are
+tested against via golden vectors exported by ``python/tests/test_golden.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def slowmo_update(x0, xt, u, gamma, alpha, beta):
+    """Paper Eq. 2-3 (slow momentum update + outer iterate step)."""
+    u_new = beta * u + (x0 - xt) / gamma
+    x_new = x0 - alpha * gamma * u_new
+    return x_new, u_new
+
+
+def nesterov_step(x, h, g, gamma, beta0, wd=0.0):
+    """Nesterov-momentum SGD with L2 weight decay (paper Alg. 2/4 inner)."""
+    g = g + wd * x
+    h_new = beta0 * h + g
+    x_new = x - gamma * (beta0 * h_new + g)
+    return x_new, h_new
+
+
+def adam_step(x, h, v, g, gamma, beta1, beta2, eps, step):
+    """Adam with bias correction (paper Table C.1); ``step`` is 1-based."""
+    h_new = beta1 * h + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    h_hat = h_new / (1.0 - beta1 ** step)
+    v_hat = v_new / (1.0 - beta2 ** step)
+    x_new = x - gamma * h_hat / (jnp.sqrt(v_hat) + eps)
+    return x_new, h_new, v_new
+
+
+def axpy_mix(x, y, a, b):
+    """Gossip mixing / push-sum combine: ``a*x + b*y``."""
+    return a * x + b * y
+
+
+def causal_attention(q, k, v):
+    """Dense causal attention over ``f32[H, S, Dh]``."""
+    h, s, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    scores = jnp.where(mask[None], scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

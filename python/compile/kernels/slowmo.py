@@ -1,0 +1,68 @@
+"""Fused SlowMo outer update (paper Eq. 2-3) as a Pallas kernel.
+
+One outer iteration of Algorithm 1 ends with, on every worker (identical
+inputs after the exact-average, so the result stays synchronized):
+
+    u_{t+1}   = beta * u_t + (x_{t,0} - x_{t,tau}) / gamma_t      (Eq. 2)
+    x_{t+1,0} = x_{t,0} - alpha * gamma_t * u_{t+1}               (Eq. 3)
+
+The fused kernel reads ``x0, xt, u`` once each and writes ``x', u'`` once
+each: 3 reads + 2 writes = 5d * 4 bytes of HBM traffic per call, vs. 7d for
+the unfused two-statement jnp version (which re-reads u' and x0). The kernel
+is bandwidth-bound; DESIGN.md SS8 carries the roofline estimate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import as_scalar, pick_block, scalar_spec, vec_spec
+
+
+def _kernel(x0_ref, xt_ref, u_ref, gamma_ref, alpha_ref, beta_ref,
+            x_out_ref, u_out_ref):
+    gamma = gamma_ref[0]
+    alpha = alpha_ref[0]
+    beta = beta_ref[0]
+    x0 = x0_ref[...]
+    # Eq. 2: the (x0 - xt) difference is rescaled by 1/gamma to make the slow
+    # buffer invariant to the fast-lr schedule.
+    u_new = beta * u_ref[...] + (x0 - xt_ref[...]) / gamma
+    u_out_ref[...] = u_new
+    # Eq. 3: outer step uses the *product* of slow and fast learning rates.
+    x_out_ref[...] = x0 - alpha * gamma * u_new
+
+
+def slowmo_update(x0, xt, u, gamma, alpha, beta, *, block_elems=None,
+                  interpret=True):
+    """Apply the fused SlowMo outer update.
+
+    Args:
+      x0: ``f32[d]`` outer iterate x_{t,0}.
+      xt: ``f32[d]`` averaged inner result x_{t,tau}.
+      u:  ``f32[d]`` slow momentum buffer u_t.
+      gamma, alpha, beta: runtime scalars (python float or ``f32[1]``).
+      block_elems: VMEM block (None = whole array; fastest on CPU PJRT).
+      interpret: must stay True for CPU-PJRT execution (no Mosaic).
+
+    Returns:
+      ``(x_next, u_next)`` both ``f32[d]``.
+    """
+    d = x0.shape[0]
+    block = pick_block(d, block_elems)
+    grid = (d // block,)
+    out_shape = (
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[vec_spec(block), vec_spec(block), vec_spec(block),
+                  scalar_spec(), scalar_spec(), scalar_spec()],
+        out_specs=(vec_spec(block), vec_spec(block)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x0, xt, u, as_scalar(gamma), as_scalar(alpha), as_scalar(beta))

@@ -1,0 +1,365 @@
+"""Layer-2 model definitions (JAX, compiled AOT; never run at train time).
+
+Four model families, all expressed over a single flat ``f32[d]`` parameter
+vector (see :mod:`compile.params`):
+
+- :class:`LMConfig` / transformer language model -- the WMT'16-analog task
+  (paper Table 1 row 3, Table 2b, Fig. 2c/3b). GPT-style causal decoder with
+  the Pallas attention kernel (``use_pallas_attention``).
+- :class:`MLPConfig` / MLP classifier -- the CIFAR-10-analog task.
+- :class:`CNNConfig` / small conv net -- CIFAR-like image task, exercising
+  conv workloads (ResNet-18 stand-in at CPU-budget scale).
+- :class:`QuadConfig` / quadratic objective -- the smooth (non-)convex
+  workload used to validate Theorem 1 / Corollary 1 rates (bench `theory`).
+
+Each family exposes ``spec(cfg)`` (parameter packing), ``train(cfg)``
+(``(flat, *batch) -> (loss, grads)``) and ``evaluate(cfg)``
+(``(flat, *batch) -> (loss, metric)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention
+from .params import ParamSpec
+
+
+# --------------------------------------------------------------------------
+# Transformer language model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """GPT-style causal LM. Sizes chosen per preset in compile.presets."""
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64
+    batch: int = 8
+    mlp_ratio: int = 4
+    use_pallas_attention: bool = False
+    attn_block: int = 64
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def lm_spec(cfg: LMConfig) -> ParamSpec:
+    s = ParamSpec()
+    d, v = cfg.d_model, cfg.vocab
+    s.add("tok_embed", (v, d), "normal:0.02")
+    s.add("pos_embed", (cfg.seq_len, d), "normal:0.02")
+    proj_std = 0.02 / max(1.0, (2 * cfg.n_layers) ** 0.5)
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        s.add(p + "ln1.scale", (d,), "ones")
+        s.add(p + "ln1.bias", (d,), "zeros")
+        s.add(p + "attn.wqkv", (d, 3 * d), "normal:0.02")
+        s.add(p + "attn.bqkv", (3 * d,), "zeros")
+        s.add(p + "attn.wo", (d, d), f"normal:{proj_std}")
+        s.add(p + "attn.bo", (d,), "zeros")
+        s.add(p + "ln2.scale", (d,), "ones")
+        s.add(p + "ln2.bias", (d,), "zeros")
+        s.add(p + "mlp.wi", (d, cfg.mlp_ratio * d), "normal:0.02")
+        s.add(p + "mlp.bi", (cfg.mlp_ratio * d,), "zeros")
+        s.add(p + "mlp.wo", (cfg.mlp_ratio * d, d), f"normal:{proj_std}")
+        s.add(p + "mlp.bo", (d,), "zeros")
+    s.add("ln_f.scale", (d,), "ones")
+    s.add("ln_f.bias", (d,), "zeros")
+    s.add("unembed", (d, v), "normal:0.02")
+    return s
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _dense_attention(q, k, v):
+    """(B, H, S, Dh) dense causal attention -- the XLA-fused fallback."""
+    s = q.shape[2]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def _lm_logits(cfg: LMConfig, spec: ParamSpec, flat, tokens):
+    """tokens: i32[B, S] -> logits f32[B, S, V]."""
+    p = spec.unpack(flat)
+    b, s = tokens.shape
+    x = p["tok_embed"][tokens] + p["pos_embed"][None, :, :]
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        hgt = _layer_norm(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        qkv = hgt @ p[pre + "attn.wqkv"] + p[pre + "attn.bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(
+                0, 2, 1, 3)
+
+        q, k, v = heads(q), heads(k), heads(v)
+        if cfg.use_pallas_attention:
+            # Fold batch into the head grid dimension: the Pallas kernel
+            # treats dim 0 as an independent grid axis, so (B*H, S, Dh) runs
+            # each (batch, head) pair as its own tile schedule.
+            fold = lambda t: t.reshape(b * cfg.n_heads, s, cfg.d_head)
+            out = causal_attention(fold(q), fold(k), fold(v),
+                                   cfg.attn_block, cfg.attn_block)
+            out = out.reshape(b, cfg.n_heads, s, cfg.d_head)
+        else:
+            out = _dense_attention(q, k, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        x = x + out @ p[pre + "attn.wo"] + p[pre + "attn.bo"]
+        hgt = _layer_norm(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        hgt = jax.nn.gelu(hgt @ p[pre + "mlp.wi"] + p[pre + "mlp.bi"])
+        x = x + hgt @ p[pre + "mlp.wo"] + p[pre + "mlp.bo"]
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    return x @ p["unembed"]
+
+
+def _token_nll(logits, targets, label_smoothing=0.0):
+    """Mean token cross-entropy; label smoothing per the WMT setup (0.1)."""
+    v = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jax.nn.one_hot(targets, v, dtype=jnp.float32)
+    if label_smoothing > 0.0:
+        tgt = (1.0 - label_smoothing) * tgt + label_smoothing / v
+    return -jnp.mean(jnp.sum(tgt * logp, axis=-1))
+
+
+def lm_train(cfg: LMConfig, label_smoothing: float = 0.0):
+    spec = lm_spec(cfg)
+
+    def loss_fn(flat, tokens, targets):
+        logits = _lm_logits(cfg, spec, flat, tokens)
+        return _token_nll(logits, targets, label_smoothing)
+
+    vag = jax.value_and_grad(loss_fn)
+
+    def step(flat, tokens, targets):
+        loss, grads = vag(flat, tokens, targets)
+        return loss, grads
+
+    return step
+
+
+def lm_eval(cfg: LMConfig):
+    spec = lm_spec(cfg)
+
+    def step(flat, tokens, targets):
+        logits = _lm_logits(cfg, spec, flat, tokens)
+        nll = _token_nll(logits, targets, 0.0)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+        return nll, correct
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (CIFAR-10 / ImageNet analog at CPU scale)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int = 512
+    hidden: tuple[int, ...] = (256, 128)
+    classes: int = 10
+    batch: int = 32
+
+
+def mlp_spec(cfg: MLPConfig) -> ParamSpec:
+    s = ParamSpec()
+    dims = (cfg.in_dim,) + tuple(cfg.hidden) + (cfg.classes,)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        std = (2.0 / a) ** 0.5  # He init for the relu stack
+        s.add(f"fc{i}.w", (a, b), f"normal:{std}")
+        s.add(f"fc{i}.b", (b,), "zeros")
+    return s
+
+
+def _mlp_logits(cfg: MLPConfig, spec: ParamSpec, flat, x):
+    p = spec.unpack(flat)
+    n = len(cfg.hidden) + 1
+    for i in range(n):
+        x = x @ p[f"fc{i}.w"] + p[f"fc{i}.b"]
+        if i + 1 < n:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _class_nll(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def mlp_train(cfg: MLPConfig):
+    spec = mlp_spec(cfg)
+
+    def loss_fn(flat, x, y):
+        return _class_nll(_mlp_logits(cfg, spec, flat, x), y)
+
+    vag = jax.value_and_grad(loss_fn)
+
+    def step(flat, x, y):
+        return vag(flat, x, y)
+
+    return step
+
+
+def mlp_eval(cfg: MLPConfig):
+    spec = mlp_spec(cfg)
+
+    def step(flat, x, y):
+        logits = _mlp_logits(cfg, spec, flat, x)
+        loss = _class_nll(logits, y)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, correct
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Small CNN (conv workload; ResNet stand-in at CPU budget)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    hw: int = 16          # input is (hw, hw, in_ch)
+    in_ch: int = 3
+    channels: tuple[int, ...] = (16, 32)
+    classes: int = 10
+    batch: int = 32
+
+
+def cnn_spec(cfg: CNNConfig) -> ParamSpec:
+    s = ParamSpec()
+    cin = cfg.in_ch
+    for i, cout in enumerate(cfg.channels):
+        std = (2.0 / (9 * cin)) ** 0.5
+        s.add(f"conv{i}.w", (3, 3, cin, cout), f"normal:{std}")
+        s.add(f"conv{i}.b", (cout,), "zeros")
+        cin = cout
+    # Each conv is followed by 2x2 avg-pool; final feature map is flattened.
+    final_hw = cfg.hw // (2 ** len(cfg.channels))
+    feat = final_hw * final_hw * cfg.channels[-1]
+    std = (2.0 / feat) ** 0.5
+    s.add("head.w", (feat, cfg.classes), f"normal:{std}")
+    s.add("head.b", (cfg.classes,), "zeros")
+    return s
+
+
+def _cnn_logits(cfg: CNNConfig, spec: ParamSpec, flat, x):
+    p = spec.unpack(flat)
+    for i in range(len(cfg.channels)):
+        x = jax.lax.conv_general_dilated(
+            x, p[f"conv{i}.w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x + p[f"conv{i}.b"])
+        x = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+    x = x.reshape(x.shape[0], -1)
+    return x @ p["head.w"] + p["head.b"]
+
+
+def cnn_train(cfg: CNNConfig):
+    spec = cnn_spec(cfg)
+
+    def loss_fn(flat, x, y):
+        return _class_nll(_cnn_logits(cfg, spec, flat, x), y)
+
+    vag = jax.value_and_grad(loss_fn)
+
+    def step(flat, x, y):
+        return vag(flat, x, y)
+
+    return step
+
+
+def cnn_eval(cfg: CNNConfig):
+    spec = cnn_spec(cfg)
+
+    def step(flat, x, y):
+        logits = _cnn_logits(cfg, spec, flat, x)
+        loss = _class_nll(logits, y)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return loss, correct
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Quadratic objective (theory-validation workload)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuadConfig:
+    """f_i(x) = 0.5 * (x - c_i)^T diag(lam) (x - c_i), stochastic gradients
+    g = grad + noise. The worker-specific centers c_i realize the zeta^2
+    heterogeneity bound of Corollary 1; `batch` slots carry the noise draw
+    so the artifact signature matches the classifier graphs.
+    """
+    dim: int = 4096
+    cond: float = 100.0  # eigenvalue spread lam in [1, cond] (log-spaced)
+    batch: int = 1
+
+
+def quad_spec(cfg: QuadConfig) -> ParamSpec:
+    s = ParamSpec()
+    s.add("x", (cfg.dim,), "normal:1.0")
+    return s
+
+
+def _quad_lam(cfg: QuadConfig):
+    return jnp.logspace(0.0, jnp.log10(cfg.cond), cfg.dim)
+
+
+def quad_train(cfg: QuadConfig):
+    """(flat, center[dim], noise[dim]) -> (loss, grads).
+
+    `center` encodes the worker's local objective; `noise` is the stochastic
+    gradient perturbation (generated Rust-side from the seeded RNG so runs
+    are bit-deterministic).
+    """
+    spec = quad_spec(cfg)
+    lam = _quad_lam(cfg)
+
+    def step(flat, center, noise):
+        x = spec.unpack(flat)["x"]
+        diff = x - center
+        loss = 0.5 * jnp.sum(lam * diff * diff) / cfg.dim
+        grad_x = lam * diff / cfg.dim + noise
+        grads = jnp.zeros_like(flat)
+        grads = jax.lax.dynamic_update_slice(grads, grad_x, (0,))
+        return loss, grads
+
+    return step
+
+
+def quad_eval(cfg: QuadConfig):
+    spec = quad_spec(cfg)
+    lam = _quad_lam(cfg)
+
+    def step(flat, center, noise):
+        x = spec.unpack(flat)["x"]
+        diff = x - center
+        loss = 0.5 * jnp.sum(lam * diff * diff) / cfg.dim
+        gnorm = jnp.sum((lam * diff / cfg.dim) ** 2)
+        return loss, gnorm
+
+    return step

@@ -1,0 +1,42 @@
+"""Layer-2 optimizer graphs: thin jax wrappers over the Layer-1 kernels.
+
+Each function here becomes one AOT artifact per distinct flat parameter
+length ``d``. Scalars (learning rate, momenta, step counter) are runtime
+inputs so a single compiled executable serves every hyperparameter setting
+and learning-rate schedule -- critical for the Fig. 3 / Fig. B.2 sweeps,
+which reuse one artifact across the whole grid.
+"""
+
+from __future__ import annotations
+
+from .kernels import adam as adam_k
+from .kernels import mix as mix_k
+from .kernels import nesterov as nesterov_k
+from .kernels import slowmo as slowmo_k
+
+# None => whole-array single-block execution (fastest for CPU PJRT; the
+# blocked variant is exercised by the pytest sweep and the perf ablation).
+DEFAULT_BLOCK = None
+
+
+def nesterov_step(x, h, g, gamma, beta0, wd):
+    """(x, h, g, gamma[1], beta0[1], wd[1]) -> (x', h')."""
+    return nesterov_k.nesterov_step(x, h, g, gamma, beta0, wd,
+                                    block_elems=DEFAULT_BLOCK)
+
+
+def adam_step(x, h, v, g, gamma, beta1, beta2, eps, step):
+    """(x, h, v, g, scalars...) -> (x', h', v')."""
+    return adam_k.adam_step(x, h, v, g, gamma, beta1, beta2, eps, step,
+                            block_elems=DEFAULT_BLOCK)
+
+
+def slowmo_update(x0, xt, u, gamma, alpha, beta):
+    """(x0, xt, u, gamma[1], alpha[1], beta[1]) -> (x', u')."""
+    return slowmo_k.slowmo_update(x0, xt, u, gamma, alpha, beta,
+                                  block_elems=DEFAULT_BLOCK)
+
+
+def axpy_mix(x, y, a, b):
+    """(x, y, a[1], b[1]) -> a*x + b*y."""
+    return mix_k.axpy_mix(x, y, a, b, block_elems=DEFAULT_BLOCK)

@@ -1,0 +1,119 @@
+"""Flat-parameter packing for Layer-2 models.
+
+The Rust coordinator treats every model as a single flat ``f32[d]`` buffer:
+one PJRT literal per worker for parameters, gradients and each optimizer
+buffer. This module maps named parameter tensors onto slices of that vector,
+pads ``d`` up to an alignment multiple (so the blocked Pallas optimizer
+kernels tile exactly), and provides initializers.
+
+The padding tail is inert: it is never read by the model, gets zero
+gradients, and every optimizer update maps zero (grad, buffers) to zero
+update -- asserted in python/tests/test_models.py::test_padding_inert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# Flat length alignment. 128 matches the TPU lane width; the AOT exporter can
+# additionally request 65536-alignment when emitting blocked optimizer
+# kernels (see compile.kernels.common.BLOCK_ELEMS).
+ALIGN = 128
+
+
+def pad_len(n: int, align: int = ALIGN) -> int:
+    """Round ``n`` up to a multiple of ``align``."""
+    return int(math.ceil(n / align) * align)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    name: str
+    shape: tuple[int, ...]
+    offset: int
+    init: str  # "normal:<std>" | "zeros" | "ones"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape)) if self.shape else 1
+
+
+class ParamSpec:
+    """Ordered collection of named tensors packed into one flat vector."""
+
+    def __init__(self, align: int = ALIGN):
+        self._entries: list[ParamEntry] = []
+        self._cursor = 0
+        self._align = align
+
+    def add(self, name: str, shape: tuple[int, ...], init: str) -> None:
+        if any(e.name == name for e in self._entries):
+            raise ValueError(f"duplicate parameter name {name!r}")
+        entry = ParamEntry(name, tuple(shape), self._cursor, init)
+        self._entries.append(entry)
+        self._cursor += entry.size
+
+    @property
+    def raw_len(self) -> int:
+        return self._cursor
+
+    @property
+    def flat_len(self) -> int:
+        return pad_len(self._cursor, self._align)
+
+    @property
+    def entries(self) -> list[ParamEntry]:
+        return list(self._entries)
+
+    def unpack(self, flat: jax.Array) -> dict[str, jax.Array]:
+        """Slice the flat vector into the named tensors (inside the graph)."""
+        out = {}
+        for e in self._entries:
+            out[e.name] = jax.lax.dynamic_slice(
+                flat, (e.offset,), (e.size,)).reshape(e.shape)
+        return out
+
+    def init_flat(self, key: jax.Array) -> jax.Array:
+        """Materialize the initial flat parameter vector."""
+        flat = jnp.zeros((self.flat_len,), jnp.float32)
+        keys = jax.random.split(key, max(len(self._entries), 1))
+        for e, k in zip(self._entries, keys):
+            if e.init == "zeros":
+                continue
+            if e.init == "ones":
+                vals = jnp.ones(e.size, jnp.float32)
+            elif e.init.startswith("normal:"):
+                std = float(e.init.split(":", 1)[1])
+                vals = std * jax.random.normal(k, (e.size,), jnp.float32)
+            elif e.init.startswith("uniform:"):
+                lim = float(e.init.split(":", 1)[1])
+                vals = jax.random.uniform(k, (e.size,), jnp.float32,
+                                          -lim, lim)
+            else:
+                raise ValueError(f"unknown init {e.init!r}")
+            flat = jax.lax.dynamic_update_slice(flat, vals, (e.offset,))
+        return flat
+
+    def describe(self) -> list[dict]:
+        """Manifest-friendly description of the packing."""
+        return [
+            {"name": e.name, "shape": list(e.shape), "offset": e.offset,
+             "size": e.size, "init": e.init}
+            for e in self._entries
+        ]
+
+
+def make_loss_and_grad(loss_fn: Callable) -> Callable:
+    """Wrap ``loss_fn(flat, *batch) -> loss`` into ``-> (loss, grads)``."""
+    vag = jax.value_and_grad(loss_fn)
+
+    def train_step(flat, *batch):
+        loss, grads = vag(flat, *batch)
+        return loss, grads
+
+    return train_step

@@ -1,0 +1,81 @@
+"""Model presets: the concrete workloads each experiment uses.
+
+DESIGN.md SS2 maps the paper's testbeds onto these CPU-scale stand-ins. The
+Rust side selects a preset by name; `aot.py --preset <name>` (or `all`,
+`default`) exports its artifacts.
+
+Parameter counts (unpadded):
+  cifar-mlp   ~ 1.7M     (CIFAR-10 / ResNet-18 analog)
+  cifar-cnn   ~ 30K      (conv workload variant)
+  imagenet-mlp~ 4.3M     (ImageNet / ResNet-50 analog)
+  wmt-lm      ~ 3.2M     (WMT'16 / big-transformer analog)
+  lm-tiny     ~ 0.8M     (CI-speed transformer)
+  lm-e2e      ~ 12.6M    (end-to-end example default)
+  lm-100m     ~ 101M     (full-scale single-run demo)
+  quad        4K         (theory validation)
+"""
+
+from __future__ import annotations
+
+from . import model as M
+
+# name -> (family, cfg)
+PRESETS: dict[str, tuple[str, object]] = {
+    "cifar-mlp": ("mlp", M.MLPConfig(in_dim=512, hidden=(1024, 512),
+                                     classes=10, batch=32)),
+    "cifar-cnn": ("cnn", M.CNNConfig(hw=16, in_ch=3, channels=(16, 32),
+                                     classes=10, batch=32)),
+    "imagenet-mlp": ("mlp", M.MLPConfig(in_dim=1024, hidden=(1280, 640),
+                                        classes=100, batch=32)),
+    "wmt-lm": ("lm", M.LMConfig(vocab=512, d_model=192, n_layers=4,
+                                n_heads=6, seq_len=64, batch=8)),
+    "lm-tiny": ("lm", M.LMConfig(vocab=256, d_model=96, n_layers=2,
+                                 n_heads=4, seq_len=32, batch=4)),
+    "lm-tiny-pallas": ("lm", M.LMConfig(vocab=256, d_model=96, n_layers=2,
+                                        n_heads=4, seq_len=32, batch=4,
+                                        use_pallas_attention=True,
+                                        attn_block=32)),
+    "lm-e2e": ("lm", M.LMConfig(vocab=512, d_model=384, n_layers=6,
+                                n_heads=6, seq_len=128, batch=8)),
+    "lm-100m": ("lm", M.LMConfig(vocab=8192, d_model=768, n_layers=12,
+                                 n_heads=12, seq_len=256, batch=4)),
+    "quad": ("quad", M.QuadConfig(dim=4096, cond=100.0)),
+}
+
+# Export groups.
+GROUPS = {
+    "default": ["cifar-mlp", "cifar-cnn", "imagenet-mlp", "wmt-lm",
+                "lm-tiny", "lm-tiny-pallas", "quad"],
+    "e2e": ["lm-e2e"],
+    "big": ["lm-100m"],
+    "all": ["cifar-mlp", "cifar-cnn", "imagenet-mlp", "wmt-lm", "lm-tiny",
+            "lm-tiny-pallas", "lm-e2e", "quad"],
+}
+
+
+def spec_for(name: str):
+    family, cfg = PRESETS[name]
+    if family == "lm":
+        return M.lm_spec(cfg)
+    if family == "mlp":
+        return M.mlp_spec(cfg)
+    if family == "cnn":
+        return M.cnn_spec(cfg)
+    if family == "quad":
+        return M.quad_spec(cfg)
+    raise KeyError(family)
+
+
+def fns_for(name: str):
+    """Return (train_fn, eval_fn) for a preset."""
+    family, cfg = PRESETS[name]
+    if family == "lm":
+        ls = 0.1 if name.startswith("wmt") else 0.0
+        return M.lm_train(cfg, label_smoothing=ls), M.lm_eval(cfg)
+    if family == "mlp":
+        return M.mlp_train(cfg), M.mlp_eval(cfg)
+    if family == "cnn":
+        return M.cnn_train(cfg), M.cnn_eval(cfg)
+    if family == "quad":
+        return M.quad_train(cfg), M.quad_eval(cfg)
+    raise KeyError(family)

@@ -1,0 +1,18 @@
+//! Shared bench-entry plumbing (included by each bench target via `mod`).
+//!
+//! Scale comes from SLOWMO_SCALE (ci|quick|standard|full, default ci);
+//! each bench regenerates one paper table/figure via bench::experiments.
+use slowmo::bench::{Env, Scale};
+
+pub fn env() -> Env {
+    let scale = std::env::var("SLOWMO_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Ci);
+    Env::load(scale).expect("run `make artifacts` first")
+}
+
+pub fn tasks(env: &Env) -> Vec<slowmo::bench::experiments::TaskSpec> {
+    use slowmo::bench::experiments::TaskSpec;
+    vec![TaskSpec::cifar(), TaskSpec::imagenet(), TaskSpec::wmt(env.scale)]
+}

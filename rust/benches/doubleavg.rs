@@ -1,0 +1,7 @@
+//! Regenerates the §4 double-averaging comparison.
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    slowmo::bench::experiments::doubleavg(&env, &tasks[1]).unwrap();
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Figure 2 / B.1 (validation + training curves).
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    slowmo::bench::experiments::fig2(&env, &tasks).unwrap();
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Figure 3 (effect of tau).
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    // The paper sweeps tau on ImageNet (3a) and WMT (3b).
+    slowmo::bench::experiments::fig3(&env, &tasks[1]).unwrap();
+    slowmo::bench::experiments::fig3(&env, &tasks[2]).unwrap();
+}

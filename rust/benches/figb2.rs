@@ -1,0 +1,11 @@
+//! Regenerates paper Figure B.2 (alpha x beta sweep).
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    // B.2a: CIFAR with OSGP base; B.2b: LM with Adam base.
+    slowmo::bench::experiments::figb2(&env, &tasks[0], &[0.5, 1.0],
+                                      &[0.0, 0.2, 0.4, 0.6, 0.8]).unwrap();
+    slowmo::bench::experiments::figb2(&env, &tasks[2], &[0.5, 1.0],
+                                      &[0.1, 0.3, 0.5]).unwrap();
+}

@@ -1,0 +1,6 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf).
+mod common;
+fn main() {
+    let env = common::env();
+    slowmo::bench::micro::run(&env).unwrap();
+}

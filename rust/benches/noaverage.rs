@@ -1,0 +1,7 @@
+//! Regenerates the §6 SGP-SlowMo-noaverage comparison.
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    slowmo::bench::experiments::noaverage(&env, &tasks[1]).unwrap();
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Table 1 (and Table B.1's NLL columns).
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    slowmo::bench::experiments::table1(&env, &tasks).unwrap();
+}

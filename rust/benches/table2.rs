@@ -1,0 +1,6 @@
+//! Regenerates paper Table 2 (time/iteration, analytic cost model).
+mod common;
+fn main() {
+    let env = common::env();
+    slowmo::bench::experiments::table2(&env).unwrap();
+}

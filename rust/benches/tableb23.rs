@@ -1,0 +1,9 @@
+//! Regenerates paper Tables B.2/B.3 (buffer strategies).
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    // B.2: ImageNet/Nesterov; B.3: WMT/Adam.
+    slowmo::bench::experiments::tableb23(&env, &tasks[1]).unwrap();
+    slowmo::bench::experiments::tableb23(&env, &tasks[2]).unwrap();
+}

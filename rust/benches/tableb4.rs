@@ -1,0 +1,7 @@
+//! Regenerates paper Table B.4 (multi-seed std devs on CIFAR).
+mod common;
+fn main() {
+    let env = common::env();
+    let tasks = common::tasks(&env);
+    slowmo::bench::experiments::tableb4(&env, &tasks[0]).unwrap();
+}

@@ -1,0 +1,7 @@
+//! Empirically validates Theorem 1 / Corollaries 1-2 on the quadratic
+//! workload (linear speedup in m; tau effect; Lookahead case).
+mod common;
+fn main() {
+    let env = common::env();
+    slowmo::bench::experiments::theory(&env).unwrap();
+}

@@ -1,0 +1,98 @@
+//! AR-SGD / AR-Adam: the classic ALLREDUCE-every-step baseline.
+//!
+//! Gradients are exact-averaged across all m workers with the ring
+//! allreduce, then every worker applies the identical inner-optimizer step
+//! — so all worker states stay bit-identical (asserted in tests). This is
+//! the paper's "traditional Allreduce implementation of parallel
+//! SGD/Adam" and the τ=1 anchor of the SlowMo framework.
+
+use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
+use crate::net::ring_allreduce_mean;
+use crate::optim::kernels::InnerOpt;
+use anyhow::Result;
+
+pub struct AllReduce {
+    inner: InnerOpt,
+}
+
+impl AllReduce {
+    pub fn new(inner: InnerOpt) -> Self {
+        Self { inner }
+    }
+}
+
+impl BaseAlgorithm for AllReduce {
+    fn name(&self) -> String {
+        format!("ar-{}", self.inner.name())
+    }
+
+    fn inner(&self) -> &InnerOpt {
+        &self.inner
+    }
+
+    fn step(
+        &self,
+        ctx: &mut Ctx,
+        state: &mut WorkerState,
+        g: &[f32],
+        gamma: f32,
+        _k: u64,
+    ) -> Result<()> {
+        let mut avg = g.to_vec();
+        ctx.clock =
+            ring_allreduce_mean(ctx.fabric, ctx.worker, &mut avg, ctx.clock);
+        apply_inner(ctx, &self.inner, state, &avg, gamma)?;
+        state.z.copy_from_slice(&state.x);
+        Ok(())
+    }
+
+    fn lockstep(&self) -> bool {
+        true
+    }
+
+    fn comm_elems_per_step(&self, d: usize) -> usize {
+        // Ring allreduce moves 2(m-1)/m * d values per worker; report the
+        // asymptotic 2d.
+        2 * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::drive;
+    use super::*;
+
+    #[test]
+    fn workers_stay_bit_identical() {
+        let algo = AllReduce::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
+        let states = drive(&algo, 4, 8, 30, 0.05);
+        for s in &states[1..] {
+            assert_eq!(s.x, states[0].x);
+            assert_eq!(s.h, states[0].h);
+        }
+    }
+
+    #[test]
+    fn converges_to_mean_target() {
+        // Average gradient pulls to the mean of worker targets.
+        let algo = AllReduce::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        let m = 4;
+        let states = drive(&algo, m, 4, 80, 0.4);
+        for s in &states {
+            for &x in &s.x {
+                assert!((x - 2.5).abs() < 1e-2, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn adam_variant_identical_too() {
+        let algo = AllReduce::new(InnerOpt::adam_default());
+        let states = drive(&algo, 3, 4, 10, 1e-2);
+        for s in &states[1..] {
+            assert_eq!(s.x, states[0].x);
+            assert_eq!(s.v, states[0].v);
+        }
+        assert_eq!(algo.name(), "ar-adam");
+    }
+}

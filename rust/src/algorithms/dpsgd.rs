@@ -1,0 +1,177 @@
+//! Decentralized Parallel SGD (D-PSGD, Lian et al. 2017).
+//!
+//! Undirected gossip with a **doubly-stochastic** mixing matrix (symmetric
+//! ring, Metropolis 1/3 weights): each step, every worker takes a local
+//! momentum step, exchanges scaled parameters with both ring neighbors,
+//! and mixes. Because the matrix is doubly stochastic the plain average is
+//! preserved — no push-sum weights needed (w stays 1, z mirrors x).
+
+use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
+use crate::net::GossipMsg;
+use crate::optim::kernels::InnerOpt;
+use crate::topology::{SymmetricRing, Topology};
+use anyhow::Result;
+
+pub struct Dpsgd {
+    inner: InnerOpt,
+    topo: SymmetricRing,
+}
+
+impl Dpsgd {
+    pub fn new(inner: InnerOpt, m: usize) -> Self {
+        Self { inner, topo: SymmetricRing::new(m) }
+    }
+
+    fn in_degree(&self, m: usize) -> usize {
+        match m {
+            1 => 0,
+            2 => 1,
+            _ => 2,
+        }
+    }
+}
+
+impl BaseAlgorithm for Dpsgd {
+    fn name(&self) -> String {
+        format!("dpsgd-{}", self.inner.name())
+    }
+
+    fn inner(&self) -> &InnerOpt {
+        &self.inner
+    }
+
+    fn step(
+        &self,
+        ctx: &mut Ctx,
+        state: &mut WorkerState,
+        g: &[f32],
+        gamma: f32,
+        k: u64,
+    ) -> Result<()> {
+        apply_inner(ctx, &self.inner, state, g, gamma)?;
+
+        let round = self.topo.round(ctx.worker, k);
+        for &(peer, p) in &round.out {
+            let payload: Vec<f32> =
+                state.x.iter().map(|&v| v * p as f32).collect();
+            ctx.fabric.gossip_send(
+                peer,
+                GossipMsg {
+                    from: ctx.worker,
+                    step: k,
+                    payload,
+                    weight: 0.0,
+                    send_time: ctx.clock,
+                },
+            );
+        }
+        crate::optim::scale(&mut state.x, round.self_weight as f32);
+
+        // Blocking receive of exactly the step-k neighbor messages.
+        let expect = self.in_degree(ctx.m);
+        let mut consumed = 0;
+        let mut stash_idx = 0;
+        while consumed < expect {
+            if stash_idx < state.stash.len() {
+                if state.stash[stash_idx].step == k {
+                    let msg = state.stash.remove(stash_idx);
+                    let arrival = msg.send_time
+                        + ctx.fabric.cost.xfer_time(msg.payload.len());
+                    crate::optim::add_assign(&mut state.x, &msg.payload);
+                    ctx.clock = ctx.clock.max(arrival);
+                    consumed += 1;
+                } else {
+                    stash_idx += 1;
+                }
+                continue;
+            }
+            let (msg, arrival) = ctx.fabric.gossip_recv(ctx.worker);
+            if msg.step == k {
+                crate::optim::add_assign(&mut state.x, &msg.payload);
+                ctx.clock = ctx.clock.max(arrival);
+                consumed += 1;
+            } else {
+                state.stash.push(msg);
+            }
+        }
+        state.z.copy_from_slice(&state.x);
+        Ok(())
+    }
+
+    fn lockstep(&self) -> bool {
+        true
+    }
+
+    fn comm_elems_per_step(&self, d: usize) -> usize {
+        self.topo.sends_per_step() * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::drive;
+    use super::*;
+    use crate::exec::run_workers;
+    use crate::net::{CostModel, Fabric};
+    use crate::optim::kernels::Kernels;
+
+    #[test]
+    fn mixing_preserves_global_mean() {
+        // Zero gradients: the sum over workers of x must be invariant.
+        let m = 5;
+        let algo = Dpsgd::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }, m);
+        let fabric = Fabric::new(m, CostModel::free());
+        let kernels = Kernels::Native;
+        let states = run_workers(m, |w| {
+            let mut st = WorkerState::new(&[w as f32; 4], algo.inner());
+            let mut ctx = Ctx { worker: w, m, fabric: &fabric,
+                                kernels: &kernels, clock: 0.0 };
+            for k in 0..40 {
+                algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
+            }
+            st
+        });
+        let total: f64 =
+            states.iter().map(|s| s.x[0] as f64).sum();
+        assert!((total - 10.0).abs() < 1e-4, "sum {total}");
+        // And consensus: all near the mean 2.0.
+        for s in &states {
+            assert!((s.x[0] - 2.0).abs() < 1e-2, "{}", s.x[0]);
+        }
+    }
+
+    #[test]
+    fn converges_to_mean_target() {
+        let m = 4;
+        let algo = Dpsgd::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }, m);
+        let states = drive(&algo, m, 4, 200, 0.2);
+        let want = 2.5; // mean of targets 1..=4
+        for s in &states {
+            for &x in &s.x {
+                assert!((x - want).abs() < 0.15, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_and_one_worker_edge_cases() {
+        let algo1 = Dpsgd::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }, 1);
+        let s1 = drive(&algo1, 1, 2, 30, 0.5);
+        assert!((s1[0].x[0] - 1.0).abs() < 1e-3);
+        let algo2 = Dpsgd::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }, 2);
+        let s2 = drive(&algo2, 2, 2, 100, 0.2);
+        for s in &s2 {
+            assert!((s.x[0] - 1.5).abs() < 0.1, "{}", s.x[0]);
+        }
+    }
+
+    #[test]
+    fn push_sum_weight_untouched() {
+        let m = 3;
+        let algo = Dpsgd::new(InnerOpt::nesterov_default(), m);
+        let states = drive(&algo, m, 2, 10, 0.1);
+        for s in &states {
+            assert_eq!(s.w, 1.0);
+        }
+    }
+}

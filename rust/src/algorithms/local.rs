@@ -1,0 +1,98 @@
+//! Local SGD / Local Adam base algorithm: no inner-loop communication.
+//!
+//! Paper equivalences (Section 2): wrapping [`Local`] in the SlowMo
+//! controller with α=1, β=0 *is* Local SGD (McDonald et al. 2010; Stich
+//! 2019) — the controller's exact average is the periodic ALLREDUCE of
+//! Alg. 4 line 6. With β>0 it is BMUF (Chen & Huo 2016); with τ=1 and the
+//! "maintain" buffer strategy it is AR-SGD up to where the momentum buffer
+//! lives (see [`super::AllReduce`] for the true gradient-allreduce AR).
+
+use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
+use crate::optim::kernels::InnerOpt;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct Local {
+    inner: InnerOpt,
+}
+
+impl Local {
+    pub fn new(inner: InnerOpt) -> Self {
+        Self { inner }
+    }
+}
+
+impl BaseAlgorithm for Local {
+    fn name(&self) -> String {
+        format!("local-{}", self.inner.name())
+    }
+
+    fn inner(&self) -> &InnerOpt {
+        &self.inner
+    }
+
+    fn step(
+        &self,
+        ctx: &mut Ctx,
+        state: &mut WorkerState,
+        g: &[f32],
+        gamma: f32,
+        _k: u64,
+    ) -> Result<()> {
+        apply_inner(ctx, &self.inner, state, g, gamma)?;
+        // Keep the de-biased view coherent for uniform eval plumbing.
+        state.z.copy_from_slice(&state.x);
+        Ok(())
+    }
+
+    fn lockstep(&self) -> bool {
+        false
+    }
+
+    fn comm_elems_per_step(&self, _d: usize) -> usize {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::drive;
+    use super::*;
+
+    #[test]
+    fn workers_converge_to_their_local_targets() {
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        // target for worker w is w+1; gamma=0.5 with plain SGD on
+        // g = x - t converges geometrically.
+        let states = drive(&algo, 3, 4, 60, 0.5);
+        for (w, s) in states.iter().enumerate() {
+            for &x in &s.x {
+                assert!((x - (w + 1) as f32).abs() < 1e-3, "w{w} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_communication_happens() {
+        use crate::net::{CostModel, Fabric};
+        use crate::optim::kernels::Kernels;
+        let fabric = Fabric::new(2, CostModel::free());
+        let algo = Local::new(InnerOpt::nesterov_default());
+        let kernels = Kernels::Native;
+        let mut ctx = Ctx { worker: 0, m: 2, fabric: &fabric,
+                            kernels: &kernels, clock: 0.0 };
+        let mut st = WorkerState::new(&[1.0; 8], algo.inner());
+        algo.step(&mut ctx, &mut st, &[0.1; 8], 0.1, 0).unwrap();
+        assert_eq!(fabric.msgs_sent(), 0);
+        assert_eq!(algo.comm_elems_per_step(8), 0);
+        assert!(!algo.lockstep());
+    }
+
+    #[test]
+    fn adam_variant_counts_steps() {
+        let algo = Local::new(InnerOpt::adam_default());
+        let states = drive(&algo, 1, 2, 5, 1e-3);
+        assert_eq!(states[0].adam_step, 5);
+        assert_eq!(algo.name(), "local-adam");
+    }
+}

@@ -1,0 +1,234 @@
+//! Base distributed optimization algorithms (the paper's baselines).
+//!
+//! Every baseline implements [`BaseAlgorithm`]: one *inner* step consumes
+//! this worker's stochastic gradients and updates its [`WorkerState`],
+//! possibly communicating over the [`Fabric`]. The SlowMo controller
+//! ([`crate::slowmo`]) wraps any of them (paper Alg. 1 line 4).
+//!
+//! | paper name       | here                                  |
+//! |------------------|---------------------------------------|
+//! | Local SGD / Adam | [`Local`] (no inner-loop comm)        |
+//! | SGP (Alg. 2)     | [`Sgp`] with `overlap=false`          |
+//! | OSGP (Alg. 3)    | [`Sgp`] with `overlap=true`           |
+//! | D-PSGD           | [`Dpsgd`]                             |
+//! | AR-SGD / AR-Adam | [`AllReduce`] (gradient allreduce)    |
+//! | double-averaging | [`DoubleAvg`] (Alg. 5, Yu et al.)     |
+
+mod allreduce;
+mod double_avg;
+mod dpsgd;
+mod local;
+mod sgp;
+
+pub use allreduce::AllReduce;
+pub use double_avg::DoubleAvg;
+pub use dpsgd::Dpsgd;
+pub use local::Local;
+pub use sgp::Sgp;
+
+use crate::net::{Fabric, GossipMsg};
+use crate::optim::kernels::{InnerOpt, Kernels};
+use anyhow::Result;
+
+/// Per-worker mutable optimizer state. Flat `f32[d]` vectors matching the
+/// AOT artifacts' flat parameter layout.
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    /// Biased parameters x (what gossip mixes).
+    pub x: Vec<f32>,
+    /// First-moment / momentum buffer h.
+    pub h: Vec<f32>,
+    /// Second-moment buffer v (Adam only; empty otherwise).
+    pub v: Vec<f32>,
+    /// Push-sum weight w (SGP family; 1.0 elsewhere).
+    pub w: f64,
+    /// De-biased parameters z = x / w (SGP family; mirrors x elsewhere).
+    pub z: Vec<f32>,
+    /// 1-based Adam step counter l (paper Table C.1).
+    pub adam_step: u64,
+    /// Blocking-gossip stash: early messages from faster senders.
+    pub stash: Vec<GossipMsg>,
+    /// OSGP: consecutive steps with an empty inbox (Alg. 3
+    /// `count_since_last`).
+    pub pending_count: u64,
+}
+
+impl WorkerState {
+    pub fn new(init: &[f32], inner: &InnerOpt) -> Self {
+        let d = init.len();
+        Self {
+            x: init.to_vec(),
+            h: vec![0.0; d],
+            v: if inner.uses_second_moment() {
+                vec![0.0; d]
+            } else {
+                Vec::new()
+            },
+            w: 1.0,
+            z: init.to_vec(),
+            adam_step: 0,
+            stash: Vec::new(),
+            pending_count: 0,
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Zero momentum buffers and restart the Adam counter (the "reset"
+    /// buffer strategy; paper App. B.4).
+    pub fn reset_buffers(&mut self) {
+        self.h.iter_mut().for_each(|v| *v = 0.0);
+        self.v.iter_mut().for_each(|v| *v = 0.0);
+        self.adam_step = 0;
+    }
+}
+
+/// Everything an algorithm may touch during one inner step.
+pub struct Ctx<'a> {
+    pub worker: usize,
+    pub m: usize,
+    pub fabric: &'a Fabric,
+    pub kernels: &'a Kernels,
+    /// Simulated wall-clock for this worker (advanced by comm waits; the
+    /// trainer adds compute time).
+    pub clock: f64,
+}
+
+/// A base distributed optimization algorithm (paper Alg. 1 line 4 step).
+pub trait BaseAlgorithm: Send + Sync {
+    fn name(&self) -> String;
+
+    fn inner(&self) -> &InnerOpt;
+
+    /// Perform one inner step with this worker's gradient `g` (evaluated
+    /// at [`BaseAlgorithm::eval_params`]) and fast learning rate `gamma`.
+    /// `k` is the global inner-step index (for time-varying topologies).
+    fn step(
+        &self,
+        ctx: &mut Ctx,
+        state: &mut WorkerState,
+        g: &[f32],
+        gamma: f32,
+        k: u64,
+    ) -> Result<()>;
+
+    /// The parameters gradients should be evaluated at (z for push-sum
+    /// methods, x otherwise).
+    fn eval_params<'s>(&self, state: &'s WorkerState) -> &'s [f32] {
+        &state.x
+    }
+
+    /// Whether inner steps require all workers to advance in lockstep
+    /// (blocking gossip / collectives). Local methods return false.
+    fn lockstep(&self) -> bool;
+
+    /// Called by the SlowMo controller right after the exact average so
+    /// push-sum state can be re-synchronized (w=1, z=x).
+    fn on_exact_average(&self, state: &mut WorkerState) {
+        state.w = 1.0;
+        state.z.copy_from_slice(&state.x);
+    }
+
+    /// f32 values communicated per worker per inner step (for comm
+    /// accounting in benches that don't run a fabric).
+    fn comm_elems_per_step(&self, d: usize) -> usize;
+}
+
+/// Run the inner optimizer (nesterov/adam) on (x, h, v) in place.
+pub(crate) fn apply_inner(
+    ctx: &mut Ctx,
+    inner: &InnerOpt,
+    state: &mut WorkerState,
+    g: &[f32],
+    gamma: f32,
+) -> Result<()> {
+    state.adam_step += 1;
+    let step = state.adam_step;
+    // Split borrows: x/h/v are distinct fields.
+    let WorkerState { x, h, v, .. } = state;
+    ctx.kernels.inner_step(inner, x, h, v, g, gamma, step)
+}
+
+#[doc(hidden)] // test helper, also used by integration tests/benches
+pub mod testutil {
+    use super::*;
+    use crate::net::CostModel;
+
+    /// Drive `m` workers of `algo` for `steps` inner steps on a synthetic
+    /// quadratic gradient (g = params - target_w, target_w = w+1),
+    /// returning final states. Used by the per-algorithm unit tests.
+    pub fn drive(
+        algo: &dyn BaseAlgorithm,
+        m: usize,
+        d: usize,
+        steps: u64,
+        gamma: f32,
+    ) -> Vec<WorkerState> {
+        let fabric = Fabric::new(m, CostModel::free());
+        let kernels = Kernels::Native;
+        let barrier = crate::exec::Barrier::new(m);
+        crate::exec::run_workers(m, |w| {
+            let init: Vec<f32> = (0..d).map(|i| (i + 1) as f32).collect();
+            let mut state = WorkerState::new(&init, algo.inner());
+            let mut ctx = Ctx {
+                worker: w,
+                m,
+                fabric: &fabric,
+                kernels: &kernels,
+                clock: 0.0,
+            };
+            let target = vec![(w + 1) as f32; d];
+            for k in 0..steps {
+                let g: Vec<f32> = algo
+                    .eval_params(&state)
+                    .iter()
+                    .zip(&target)
+                    .map(|(&x, &t)| x - t)
+                    .collect();
+                algo.step(&mut ctx, &mut state, &g, gamma, k).unwrap();
+            }
+            // Absorb in-flight gossip so push-sum mass checks see the whole
+            // system (real OSGP runs end with an exact average anyway).
+            barrier.wait();
+            for (msg, _) in fabric.gossip_drain(w) {
+                crate::optim::add_assign(&mut state.x, &msg.payload);
+                state.w += msg.weight;
+            }
+            let inv_w = (1.0 / state.w) as f32;
+            for (z, &x) in state.z.iter_mut().zip(&state.x) {
+                *z = x * inv_w;
+            }
+            state
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_state_init_shapes() {
+        let s = WorkerState::new(&[1.0, 2.0], &InnerOpt::nesterov_default());
+        assert_eq!(s.d(), 2);
+        assert!(s.v.is_empty());
+        assert_eq!(s.w, 1.0);
+        assert_eq!(s.x, s.z);
+        let s = WorkerState::new(&[1.0, 2.0], &InnerOpt::adam_default());
+        assert_eq!(s.v.len(), 2);
+    }
+
+    #[test]
+    fn reset_buffers_zeroes() {
+        let mut s = WorkerState::new(&[1.0; 4], &InnerOpt::adam_default());
+        s.h[0] = 5.0;
+        s.v[1] = 2.0;
+        s.adam_step = 9;
+        s.reset_buffers();
+        assert!(s.h.iter().all(|&x| x == 0.0));
+        assert!(s.v.iter().all(|&x| x == 0.0));
+        assert_eq!(s.adam_step, 0);
+    }
+}

@@ -1,0 +1,307 @@
+//! Stochastic Gradient Push (paper Alg. 2) and Overlap SGP (Alg. 3).
+//!
+//! Push-sum gossip over the time-varying directed exponential graph:
+//! each step, worker i takes a local momentum step on its biased
+//! parameters x, splits the result (and its push-sum weight w) between
+//! itself and one out-neighbor, merges whatever it receives, and
+//! de-biases z = x / w for the next gradient evaluation.
+//!
+//! - `overlap = false` (SGP): blocking — each worker consumes exactly its
+//!   in-degree of step-k messages before proceeding (lockstep).
+//! - `overlap = true` (OSGP): non-blocking — send and continue, merging
+//!   whatever has arrived; if nothing arrived for `sync_every` consecutive
+//!   steps, block until one message shows up (Alg. 3 `count_since_last`).
+//!
+//! Push-sum mass (Σ_i w_i = m) and average (Σ_i x_i preserved) invariants
+//! are property-tested below and in `rust/tests/algorithms.rs`.
+
+use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
+use crate::net::GossipMsg;
+use crate::optim::kernels::InnerOpt;
+use crate::topology::Topology;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct Sgp {
+    inner: InnerOpt,
+    topo: Arc<dyn Topology>,
+    pub overlap: bool,
+    /// OSGP: block for a message after this many receive-less steps.
+    pub sync_every: u64,
+}
+
+impl Sgp {
+    pub fn new(inner: InnerOpt, topo: Arc<dyn Topology>) -> Self {
+        Self { inner, topo, overlap: false, sync_every: 1 }
+    }
+
+    /// OSGP: `sync_every = 1` bounds staleness to one overlapped step —
+    /// matching the reference implementation, where communication of step
+    /// k overlaps with compute of step k+1 but is awaited before k+2.
+    /// Looser bounds let a fast worker halve its push-sum weight
+    /// geometrically while running solo, destabilizing z = x/w.
+    pub fn overlap(inner: InnerOpt, topo: Arc<dyn Topology>) -> Self {
+        Self { inner, topo, overlap: true, sync_every: 1 }
+    }
+
+    /// Number of step-`k` messages addressed to `worker`.
+    fn in_degree(&self, worker: usize, k: u64) -> usize {
+        let m = self.topo.m();
+        (0..m)
+            .filter(|&s| {
+                s != worker
+                    && self
+                        .topo
+                        .round(s, k)
+                        .out
+                        .iter()
+                        .any(|&(dst, _)| dst == worker)
+            })
+            .count()
+    }
+
+    fn merge(state: &mut WorkerState, msg: &GossipMsg) {
+        crate::optim::add_assign(&mut state.x, &msg.payload);
+        state.w += msg.weight;
+    }
+}
+
+impl BaseAlgorithm for Sgp {
+    fn name(&self) -> String {
+        format!(
+            "{}-{}",
+            if self.overlap { "osgp" } else { "sgp" },
+            self.inner.name()
+        )
+    }
+
+    fn inner(&self) -> &InnerOpt {
+        &self.inner
+    }
+
+    fn eval_params<'s>(&self, state: &'s WorkerState) -> &'s [f32] {
+        &state.z
+    }
+
+    fn step(
+        &self,
+        ctx: &mut Ctx,
+        state: &mut WorkerState,
+        g: &[f32],
+        gamma: f32,
+        k: u64,
+    ) -> Result<()> {
+        // 1. Local momentum step on the biased parameters x (Alg. 2 l.3-4).
+        apply_inner(ctx, &self.inner, state, g, gamma)?;
+
+        // 2. Send scaled (x, w) shares to out-neighbors (Alg. 2 l.5).
+        let round = self.topo.round(ctx.worker, k);
+        for &(peer, p) in &round.out {
+            let payload: Vec<f32> =
+                state.x.iter().map(|&v| v * p as f32).collect();
+            ctx.fabric.gossip_send(
+                peer,
+                GossipMsg {
+                    from: ctx.worker,
+                    step: k,
+                    payload,
+                    weight: p * state.w,
+                    send_time: ctx.clock,
+                },
+            );
+        }
+        // Keep own share (Alg. 2 l.7-8).
+        crate::optim::scale(&mut state.x, round.self_weight as f32);
+        state.w *= round.self_weight;
+
+        // 3. Receive (Alg. 2 l.6 / Alg. 3 l.9-18).
+        if self.overlap {
+            let mut got = false;
+            for (msg, arrival) in ctx.fabric.gossip_drain(ctx.worker) {
+                Self::merge(state, &msg);
+                ctx.clock = ctx.clock.max(arrival);
+                got = true;
+            }
+            if got {
+                state.pending_count = 0;
+            } else {
+                state.pending_count += 1;
+                if state.pending_count >= self.sync_every {
+                    // Staleness bound (Alg. 3 count_since_last): wait for a
+                    // message, but with a timeout so a peer that already
+                    // finished its run cannot deadlock us.
+                    if let Some((msg, arrival)) = ctx
+                        .fabric
+                        .gossip_recv_timeout(
+                            ctx.worker,
+                            std::time::Duration::from_millis(20),
+                        )
+                    {
+                        Self::merge(state, &msg);
+                        ctx.clock = ctx.clock.max(arrival);
+                    }
+                    state.pending_count = 0;
+                }
+            }
+        } else {
+            // Blocking: consume exactly the in-degree of step-k messages,
+            // stashing any early messages from faster senders.
+            let expect = self.in_degree(ctx.worker, k);
+            let mut consumed = 0;
+            let mut stash_idx = 0;
+            while consumed < expect {
+                // First check the stash for step-k messages.
+                if stash_idx < state.stash.len() {
+                    if state.stash[stash_idx].step == k {
+                        let msg = state.stash.remove(stash_idx);
+                        let arrival = msg.send_time
+                            + ctx.fabric.cost.xfer_time(msg.payload.len());
+                        Self::merge(state, &msg);
+                        ctx.clock = ctx.clock.max(arrival);
+                        consumed += 1;
+                    } else {
+                        stash_idx += 1;
+                    }
+                    continue;
+                }
+                let (msg, arrival) = ctx.fabric.gossip_recv(ctx.worker);
+                if msg.step == k {
+                    Self::merge(state, &msg);
+                    ctx.clock = ctx.clock.max(arrival);
+                    consumed += 1;
+                } else {
+                    state.stash.push(msg);
+                }
+            }
+        }
+
+        // 4. De-bias (Alg. 2 l.9).
+        let inv_w = (1.0 / state.w) as f32;
+        for (z, &x) in state.z.iter_mut().zip(&state.x) {
+            *z = x * inv_w;
+        }
+        Ok(())
+    }
+
+    fn lockstep(&self) -> bool {
+        !self.overlap
+    }
+
+    fn comm_elems_per_step(&self, d: usize) -> usize {
+        self.topo.sends_per_step() * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::drive;
+    use super::*;
+    use crate::topology::ExponentialGraph;
+    use crate::util::mean;
+
+    fn sgp(m: usize, overlap: bool) -> Sgp {
+        let topo = Arc::new(ExponentialGraph::new(m));
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        if overlap {
+            Sgp::overlap(inner, topo)
+        } else {
+            Sgp::new(inner, topo)
+        }
+    }
+
+    #[test]
+    fn push_sum_mass_conserved() {
+        for &overlap in &[false, true] {
+            let algo = sgp(4, overlap);
+            let states = drive(&algo, 4, 8, 25, 0.1);
+            let total_w: f64 = states.iter().map(|s| s.w).sum();
+            assert!(
+                (total_w - 4.0).abs() < 1e-9,
+                "overlap={overlap} mass {total_w}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocking_sgp_consensus_on_agreeing_workers() {
+        // With zero gradients the workers should reach consensus on the
+        // initial value (gossip only mixes).
+        let m = 8;
+        let algo = sgp(m, false);
+        let fabric = crate::net::Fabric::new(m, crate::net::CostModel::free());
+        let kernels = crate::optim::kernels::Kernels::Native;
+        let states = crate::exec::run_workers(m, |w| {
+            let init = vec![w as f32; 4]; // worker-specific values
+            let mut st = WorkerState::new(&init, algo.inner());
+            let mut ctx = Ctx { worker: w, m, fabric: &fabric,
+                                kernels: &kernels, clock: 0.0 };
+            for k in 0..60 {
+                algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
+            }
+            st
+        });
+        // Average of initial values is (m-1)/2 = 3.5; all z must be there.
+        for s in &states {
+            for &z in &s.z {
+                assert!((z - 3.5).abs() < 1e-3, "z={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn sgp_tracks_mean_of_targets() {
+        // Workers pull toward different targets (w+1); SGP consensus should
+        // land near the mean target (m+1)/2 + 0.5 = mean of 1..=m.
+        let m = 4;
+        let algo = sgp(m, false);
+        let states = drive(&algo, m, 4, 200, 0.2);
+        let want = mean(&(1..=m).map(|x| x as f64).collect::<Vec<_>>());
+        for s in &states {
+            for &z in &s.z {
+                assert!((z as f64 - want).abs() < 0.15, "z={z} want {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn osgp_makes_progress_without_blocking() {
+        let m = 4;
+        let algo = sgp(m, true);
+        let states = drive(&algo, m, 4, 200, 0.2);
+        let want = mean(&(1..=m).map(|x| x as f64).collect::<Vec<_>>());
+        for s in &states {
+            for &z in &s.z {
+                // Looser: asynchrony adds noise but must stay in range.
+                assert!((z as f64 - want).abs() < 0.8, "z={z} want {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_degree_matches_exponential_graph() {
+        let algo = sgp(8, false);
+        for k in 0..6 {
+            for w in 0..8 {
+                assert_eq!(algo.in_degree(w, k), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_sgp_is_local() {
+        let algo = sgp(1, false);
+        let states = drive(&algo, 1, 4, 50, 0.5);
+        for &x in &states[0].x {
+            assert!((x - 1.0).abs() < 1e-3);
+        }
+        assert_eq!(states[0].w, 1.0);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(sgp(2, false).name(), "sgp-nesterov-sgd");
+        assert_eq!(sgp(2, true).name(), "osgp-nesterov-sgd");
+        assert!(sgp(2, false).lockstep());
+        assert!(!sgp(2, true).lockstep());
+    }
+}

@@ -1,0 +1,106 @@
+//! Micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! Hot-path latencies: model train-step execute, optimizer kernels
+//! (PJRT artifact vs native mirror), ring allreduce, gossip mixing, and
+//! literal-conversion overhead. Run via `cargo bench --bench micro` or
+//! `slowmo exp micro`.
+
+use super::Env;
+use crate::benchkit::Bench;
+use crate::data::task_for;
+use crate::exec::run_workers;
+use crate::net::{ring_allreduce_mean, CostModel, Fabric};
+use crate::optim::kernels::{InnerOpt, Kernels};
+use crate::runtime::engine::Arg;
+use crate::trainer::model_exec;
+use anyhow::Result;
+
+pub fn run(env: &Env) -> Result<Bench> {
+    let mut b = Bench::new();
+
+    // ---- model train step (the dominant per-iteration cost) ----
+    for preset in ["cifar-mlp", "lm-tiny", "quad"] {
+        let info = env.manifest.preset(preset)?;
+        let model = model_exec::build(Some(&env.engine), &env.manifest,
+                                      preset, true)?;
+        let task = task_for(&info.data, 1, 0, 0.0);
+        let params = env.manifest.load_init(info)?;
+        let batch = task.train_batch(0, 0);
+        b.run(&format!("train-step/{preset}/pjrt"), || {
+            model.train_step(&params, &batch).unwrap();
+        });
+    }
+    // Native quad fast path for comparison.
+    {
+        let info = env.manifest.preset("quad")?;
+        let model = model_exec::build(None, &env.manifest, "quad", false)?;
+        let task = task_for(&info.data, 1, 0, 0.0);
+        let params = env.manifest.load_init(info)?;
+        let batch = task.train_batch(0, 0);
+        b.run("train-step/quad/native", || {
+            model.train_step(&params, &batch).unwrap();
+        });
+    }
+
+    // ---- optimizer kernels: PJRT artifact vs native mirror ----
+    for &d in &[4096usize, 1988736] {
+        if env.manifest.optim_for(d).is_err() {
+            continue;
+        }
+        let pjrt = Kernels::pjrt(&env.engine, &env.manifest, d)?;
+        let native = Kernels::Native;
+        let inner = InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 };
+        let mut rng = crate::rng::Xoshiro256::seed_from(1);
+        let mut x = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        let g = x.clone();
+        for (name, k) in [("pjrt", &pjrt), ("native", &native)] {
+            let mut xx = x.clone();
+            let mut hh = vec![0.0f32; d];
+            let mut vv = Vec::new();
+            b.run(&format!("nesterov/d{d}/{name}"), || {
+                k.inner_step(&inner, &mut xx, &mut hh, &mut vv, &g, 0.05, 1)
+                    .unwrap();
+            });
+            let mut x0 = x.clone();
+            let mut u = vec![0.0f32; d];
+            b.run(&format!("slowmo-update/d{d}/{name}"), || {
+                k.slowmo_update(&mut x0, &g, &mut u, 0.05, 1.0, 0.7)
+                    .unwrap();
+            });
+        }
+    }
+
+    // ---- collectives ----
+    for &(m, d) in &[(4usize, 65536usize), (8, 1048576)] {
+        let fabric = Fabric::new(m, CostModel::free());
+        b.run(&format!("ring-allreduce/m{m}/d{d}"), || {
+            run_workers(m, |w| {
+                let mut x = vec![w as f32; d];
+                ring_allreduce_mean(&fabric, w, &mut x, 0.0);
+            });
+        });
+    }
+
+    // ---- raw PJRT execute overhead (tiny graph: the axpy kernel) ----
+    {
+        let d = 4096;
+        let opt = env.manifest.optim_for(d)?;
+        let exe = env.engine.load(&opt.graphs["axpy"])?;
+        let x = vec![1.0f32; d];
+        let y = vec![2.0f32; d];
+        b.run("pjrt-execute-overhead/axpy-4k", || {
+            exe.exec(&[
+                Arg::F32(&x, &[d]),
+                Arg::F32(&y, &[d]),
+                Arg::F32(&[0.5], &[1]),
+                Arg::F32(&[0.5], &[1]),
+            ])
+            .unwrap();
+        });
+    }
+
+    b.report();
+    b.write_jsonl(&env.out_path("micro.jsonl"))?;
+    Ok(b)
+}

@@ -1,0 +1,146 @@
+//! Experiment harnesses: one entry point per paper table/figure.
+//!
+//! Each harness (see DESIGN.md §4 for the full index) builds the workload,
+//! runs the baseline grid, prints the same rows/series the paper reports,
+//! and writes machine-readable results under `results/`. They are invoked
+//! both by the `slowmo exp <id>` CLI and by the `cargo bench` targets in
+//! `benches/`.
+
+pub mod experiments;
+pub mod micro;
+
+use crate::net::CostModel;
+use crate::runtime::{artifacts_dir, Engine, Manifest};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Experiment scale. The paper's full workloads (90 epochs of ImageNet on
+/// 256 GPUs) are far beyond a single-core CI budget; `quick` reproduces
+/// every table's *shape* in minutes, `standard` tightens the statistics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Smallest: the default for `cargo bench` so the whole suite fits a
+    /// single-core CI budget (shapes only, noisy statistics).
+    Ci,
+    Quick,
+    Standard,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ci" => Some(Self::Ci),
+            "quick" => Some(Self::Quick),
+            "standard" => Some(Self::Standard),
+            "full" => Some(Self::Full),
+            _ => None,
+        }
+    }
+
+    /// Workers.
+    pub fn m(&self) -> usize {
+        match self {
+            Scale::Ci | Scale::Quick => 4,
+            Scale::Standard => 8,
+            Scale::Full => 16,
+        }
+    }
+
+    /// Inner steps per run.
+    pub fn steps(&self) -> u64 {
+        match self {
+            Scale::Ci => 96,
+            Scale::Quick => 240,
+            Scale::Standard => 960,
+            Scale::Full => 3840,
+        }
+    }
+
+    /// τ used for gossip bases (paper: 48; scaled down so quick runs still
+    /// see ≥10 outer iterations).
+    pub fn tau_gossip(&self) -> u64 {
+        match self {
+            Scale::Ci => 12,
+            Scale::Quick => 24,
+            Scale::Standard => 48,
+            Scale::Full => 48,
+        }
+    }
+
+    /// τ for Local SGD/Adam (paper: 12).
+    pub fn tau_local(&self) -> u64 {
+        12
+    }
+
+    pub fn eval_every(&self) -> u64 {
+        match self {
+            // Fewer checkpoints at ci scale: evals are a large fraction of
+            // a 96-step run's wall time.
+            Scale::Ci => self.steps() / 4,
+            _ => self.steps() / 12,
+        }
+    }
+
+    pub fn eval_batches(&self) -> u64 {
+        match self {
+            Scale::Ci => 4,
+            Scale::Quick => 8,
+            _ => 16,
+        }
+    }
+
+    pub fn seeds(&self) -> u64 {
+        match self {
+            Scale::Ci | Scale::Quick => 2,
+            Scale::Standard => 3,
+            Scale::Full => 5,
+        }
+    }
+}
+
+/// Shared context for the harnesses.
+pub struct Env {
+    pub manifest: Manifest,
+    pub engine: Arc<Engine>,
+    pub scale: Scale,
+    pub out_dir: String,
+}
+
+impl Env {
+    pub fn load(scale: Scale) -> Result<Self> {
+        let dir = artifacts_dir();
+        let manifest = Manifest::load(&dir)?;
+        let engine = Engine::cpu(&dir)?;
+        Ok(Self {
+            manifest,
+            engine,
+            scale,
+            out_dir: "results".to_string(),
+        })
+    }
+
+    pub fn cost(&self) -> CostModel {
+        CostModel::ethernet_10g()
+    }
+
+    pub fn out_path(&self, name: &str) -> String {
+        format!("{}/{}", self.out_dir, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parse_and_params() {
+        assert_eq!(Scale::parse("quick"), Some(Scale::Quick));
+        assert_eq!(Scale::parse("standard"), Some(Scale::Standard));
+        assert_eq!(Scale::parse("full"), Some(Scale::Full));
+        assert_eq!(Scale::parse("x"), None);
+        assert!(Scale::Quick.steps() < Scale::Full.steps());
+        assert!(Scale::Quick.steps() / Scale::Quick.tau_gossip() >= 10);
+        assert_eq!(Scale::Full.seeds(), 5);
+    }
+}

@@ -1,0 +1,284 @@
+//! Micro-benchmark harness (criterion replacement).
+//!
+//! `cargo bench` targets in `benches/` use [`Bench`] for hot-path timing
+//! (warmup, calibrated iteration counts, median/p10/p90 over samples) and
+//! plain table printing for the experiment harnesses. Results can also be
+//! appended as JSONL for EXPERIMENTS.md bookkeeping.
+
+use crate::jsonx::Json;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Stats {
+    fn percentile(&self, q: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return 0.0;
+        }
+        let idx = ((s.len() - 1) as f64 * q).round() as usize;
+        s[idx]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+
+    pub fn p10(&self) -> f64 {
+        self.percentile(0.1)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(0.9)
+    }
+
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.samples)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("median_s", Json::num(self.median())),
+            ("p10_s", Json::num(self.p10())),
+            ("p90_s", Json::num(self.p90())),
+            ("mean_s", Json::num(self.mean())),
+            ("samples", Json::num(self.samples.len() as f64)),
+        ])
+    }
+}
+
+/// Timing harness with warmup + automatic iteration calibration.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    pub min_sample_time: f64, // seconds per sample
+    results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            samples: 15,
+            min_sample_time: 0.05,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn fast() -> Self {
+        Self {
+            warmup_iters: 1,
+            samples: 5,
+            min_sample_time: 0.01,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, reporting seconds per call.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // Calibrate: how many iterations per sample to exceed
+        // min_sample_time.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = (self.min_sample_time / once).ceil().max(1.0) as usize;
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        self.results.push(Stats {
+            name: name.to_string(),
+            samples,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn report(&self) {
+        println!("{:<44} {:>12} {:>12} {:>12}", "benchmark", "median",
+                 "p10", "p90");
+        for s in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12}",
+                s.name,
+                crate::util::fmt_secs(s.median()),
+                crate::util::fmt_secs(s.p10()),
+                crate::util::fmt_secs(s.p90()),
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Append results to a JSONL file (one object per line).
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        for s in &self.results {
+            writeln!(f, "{}", crate::jsonx::to_string(&s.to_json()))?;
+        }
+        Ok(())
+    }
+}
+
+/// Fixed-width ASCII table printer for experiment harnesses (paper tables).
+pub struct Table {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::Arr(r.iter().map(|c| Json::str(c)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the table as JSON under results/.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, crate::jsonx::to_string(&self.to_json()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep_scale() {
+        let mut b = Bench {
+            warmup_iters: 0,
+            samples: 3,
+            min_sample_time: 0.001,
+            results: vec![],
+        };
+        let s = b.run("spin", || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(s.median() > 100e-6, "median {}", s.median());
+        assert!(s.median() < 10e-3);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.p10(), 1.0);
+        assert_eq!(s.p90(), 5.0);
+        assert_eq!(s.mean(), 3.0);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let s = Stats { name: "x".into(), samples: vec![1.0] };
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("samples").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn table_json() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".to_string(), "2".to_string()]);
+        let j = t.to_json();
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,361 @@
+//! Declarative CLI argument parser (clap replacement).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! repeated flags, defaults, required flags, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_switch: bool,
+    pub required: bool,
+    pub repeatable: bool,
+}
+
+impl Flag {
+    pub fn opt(name: &'static str, default: &str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+            required: false,
+            repeatable: false,
+        }
+    }
+
+    pub fn required(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            default: None,
+            is_switch: false,
+            required: true,
+            repeatable: false,
+        }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+            required: false,
+            repeatable: false,
+        }
+    }
+
+    pub fn repeated(name: &'static str, help: &'static str) -> Self {
+        Self {
+            name,
+            help,
+            default: None,
+            is_switch: false,
+            required: false,
+            repeatable: true,
+        }
+    }
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true"))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| format!("missing --{name}"))?;
+        raw.parse()
+            .map_err(|_| format!("--{name}: cannot parse {raw:?}"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get_parsed(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get_parsed(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.get_parsed(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get_parsed(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn string(&self, name: &str) -> String {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing --{name}"))
+            .to_string()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, f: Flag) -> Self {
+        self.flags.push(f);
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&Flag> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Parse raw args (after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                args.values.insert(f.name.to_string(), vec![d.clone()]);
+            }
+            if f.is_switch {
+                args.values
+                    .insert(f.name.to_string(), vec!["false".to_string()]);
+            }
+        }
+        let mut i = 0;
+        let mut seen: Vec<&str> = Vec::new();
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let flag = self
+                    .find(name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                let value = if flag.is_switch {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    raw.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("--{name} needs a value"))?
+                };
+                let slot = args.values.entry(name.to_string()).or_default();
+                if flag.repeatable && seen.contains(&flag.name) {
+                    slot.push(value);
+                } else {
+                    *slot = vec![value];
+                }
+                seen.push(flag.name);
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !args.values.contains_key(f.name) {
+                return Err(format!("missing required flag --{}", f.name));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.name, self.about);
+        for f in &self.flags {
+            let kind = if f.is_switch {
+                "".to_string()
+            } else if let Some(d) = &f.default {
+                format!(" <value> (default {d})")
+            } else if f.required {
+                " <value> (required)".to_string()
+            } else {
+                " <value>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s
+    }
+}
+
+/// Top-level multi-command application.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            commands: Vec::new(),
+        }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nCommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `<command> --help` for per-command flags.\n");
+        s
+    }
+
+    /// Dispatch: returns (command name, parsed args) or a help/error text.
+    pub fn dispatch(&self, raw: &[String]) -> Result<(&Command, Args), String> {
+        let Some(cmd_name) = raw.first() else {
+            return Err(self.help());
+        };
+        if cmd_name == "--help" || cmd_name == "help" || cmd_name == "-h" {
+            return Err(self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command {cmd_name:?}\n\n{}", self.help()))?;
+        if raw[1..].iter().any(|a| a == "--help" || a == "-h") {
+            return Err(cmd.help());
+        }
+        let args = cmd.parse(&raw[1..])?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .flag(Flag::opt("steps", "100", "number of steps"))
+            .flag(Flag::required("preset", "model preset"))
+            .flag(Flag::switch("verbose", "chatty output"))
+            .flag(Flag::repeated("tag", "experiment tags"))
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cmd().parse(&s(&["--preset", "lm-tiny"])).unwrap();
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.usize("steps"), 100);
+        assert_eq!(a.string("preset"), "lm-tiny");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&s(&[])).is_err());
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let a = cmd()
+            .parse(&s(&["--preset=quad", "--steps=5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.usize("steps"), 5);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = cmd()
+            .parse(&s(&["--preset", "q", "--tag", "a", "--tag", "b"]))
+            .unwrap();
+        assert_eq!(a.get_all("tag"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn non_repeated_last_wins() {
+        let a = cmd()
+            .parse(&s(&["--preset", "a", "--preset", "b"]))
+            .unwrap();
+        assert_eq!(a.string("preset"), "b");
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(cmd().parse(&s(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_is_error() {
+        assert!(cmd().parse(&s(&["--preset", "p", "--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = cmd().parse(&s(&["--preset", "p", "extra1", "extra2"])).unwrap();
+        assert_eq!(a.positionals, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App::new("slowmo", "repro").command(cmd());
+        let (c, a) = app
+            .dispatch(&s(&["train", "--preset", "p"]))
+            .unwrap();
+        assert_eq!(c.name, "train");
+        assert_eq!(a.string("preset"), "p");
+        assert!(app.dispatch(&s(&["bogus"])).is_err());
+        assert!(app.dispatch(&s(&[])).is_err());
+        let help = app.dispatch(&s(&["train", "--help"])).unwrap_err();
+        assert!(help.contains("--steps"));
+    }
+
+    #[test]
+    fn parse_numeric_error_message() {
+        let a = cmd().parse(&s(&["--preset", "p", "--steps", "abc"])).unwrap();
+        let e = a.get_parsed::<usize>("steps").unwrap_err();
+        assert!(e.contains("steps"));
+    }
+}

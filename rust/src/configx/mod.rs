@@ -1,0 +1,226 @@
+//! Experiment configuration: a TOML-subset parser + the typed experiment
+//! config the trainer consumes.
+//!
+//! The grammar covers what experiment files need: `[section]` headers,
+//! `key = value` with string/float/int/bool/array values, `#` comments.
+//! (No nested tables-in-arrays / datetimes — flagged as parse errors.)
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value. Top-level keys live in "".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.f64_or(section, key, default as f64) as usize
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .and_then(|v| v.as_bool())
+            .unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> = inner
+            .split(',')
+            .map(|x| parse_value(x.trim()))
+            .collect();
+        return Ok(Value::Arr(items?));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment file
+seed = 42
+name = "table1-cell"   # inline comment
+
+[train]
+steps = 1200
+lr = 0.05
+warmup = true
+taus = [12, 24, 48]
+
+[slowmo]
+alpha = 1.0
+beta = 0.7
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.f64_or("", "seed", 0.0), 42.0);
+        assert_eq!(c.str_or("", "name", ""), "table1-cell");
+        assert_eq!(c.usize_or("train", "steps", 0), 1200);
+        assert_eq!(c.f64_or("train", "lr", 0.0), 0.05);
+        assert!(c.bool_or("train", "warmup", false));
+        assert_eq!(c.f64_or("slowmo", "beta", 0.0), 0.7);
+        let taus = c.get("train", "taus").unwrap();
+        match taus {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("train", "steps", 7), 7);
+        assert_eq!(c.str_or("x", "y", "z"), "z");
+        assert!(!c.bool_or("a", "b", false));
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let c = Config::parse("s = \"a # b\"").unwrap();
+        assert_eq!(c.str_or("", "s", ""), "a # b");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Config::parse("[oops").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = ").is_err());
+        assert!(Config::parse("x = \"unterminated").is_err());
+        assert!(Config::parse("x = [1, 2").is_err());
+        assert!(Config::parse("x = what").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("x = []").unwrap();
+        assert_eq!(c.get("", "x"), Some(&Value::Arr(vec![])));
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let c = Config::parse("a = -1.5\nb = 1e-4").unwrap();
+        assert_eq!(c.f64_or("", "a", 0.0), -1.5);
+        assert_eq!(c.f64_or("", "b", 0.0), 1e-4);
+    }
+}

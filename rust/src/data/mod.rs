@@ -1,0 +1,556 @@
+//! Synthetic datasets and per-worker sharding.
+//!
+//! DESIGN.md §2: the paper's CIFAR-10/ImageNet/WMT'16 workloads are
+//! replaced by synthetic tasks that preserve what SlowMo's behaviour
+//! depends on — a non-convex model trained on *worker-sharded,
+//! heterogeneous* data:
+//!
+//! - [`ClassTask`] — Gaussian class clusters in R^d with per-worker class
+//!   skew (Dirichlet-style) controlling the inter-worker heterogeneity ζ².
+//! - [`ImageTask`] — the same construction shaped as (hw, hw, ch) images
+//!   with fixed per-class patterns (for the CNN preset).
+//! - [`LmTask`] — a char stream from a seeded order-1 Markov chain, so the
+//!   transformer has real sequential structure to learn; each worker reads
+//!   a disjoint region of the stream.
+//! - [`QuadTask`] — worker-specific quadratic centers + gradient noise for
+//!   the Theorem-1 validation benches (ζ and σ are direct knobs).
+//!
+//! Everything derives from `(seed, worker, step)` via [`crate::rng::stream`]
+//! so runs are bit-deterministic and two algorithms see identical batches.
+
+use crate::rng::{stream, Xoshiro256};
+use crate::runtime::DataDesc;
+
+/// One training batch, already flattened for the PJRT engine.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// (x flattened [B*F...], y labels [B])
+    Class { x: Vec<f32>, y: Vec<i32> },
+    /// (tokens [B*S], targets [B*S])
+    Lm { tokens: Vec<i32>, targets: Vec<i32> },
+    /// (center [dim], noise [dim])
+    Quad { center: Vec<f32>, noise: Vec<f32> },
+}
+
+/// A task hands out per-(worker, step) batches.
+pub trait Task: Send + Sync {
+    fn train_batch(&self, worker: usize, step: u64) -> Batch;
+    /// Held-out batch (identical across workers so eval is comparable).
+    fn eval_batch(&self, idx: u64) -> Batch;
+    fn desc(&self) -> &DataDesc;
+}
+
+/// Build the right task for a preset's data descriptor.
+pub fn task_for(desc: &DataDesc, m: usize, seed: u64,
+                heterogeneity: f64) -> Box<dyn Task> {
+    match desc {
+        DataDesc::Class { .. } => {
+            Box::new(ClassTask::new(desc.clone(), m, seed, heterogeneity))
+        }
+        DataDesc::Image { .. } => {
+            Box::new(ImageTask::new(desc.clone(), m, seed, heterogeneity))
+        }
+        DataDesc::Lm { .. } => Box::new(LmTask::new(desc.clone(), seed)),
+        DataDesc::Quad { .. } => {
+            Box::new(QuadTask::new(desc.clone(), m, seed, heterogeneity, 0.1))
+        }
+    }
+}
+
+// ------------------------------------------------------------------ Class
+
+/// Per-worker class-probability skew: worker i prefers classes near
+/// `i * classes / m` with strength `het` (0 = iid shards, 1 = strongly
+/// non-iid). This is the ζ² knob of Corollary 1.
+fn class_probs(classes: usize, m: usize, worker: usize, het: f64) -> Vec<f64> {
+    let uniform = 1.0 / classes as f64;
+    let center = (worker * classes) as f64 / m.max(1) as f64;
+    let mut p: Vec<f64> = (0..classes)
+        .map(|c| {
+            let mut dist = (c as f64 - center).abs();
+            dist = dist.min(classes as f64 - dist); // circular distance
+            let peak = (-dist * dist / (classes as f64 * 0.5)).exp();
+            (1.0 - het) * uniform + het * peak
+        })
+        .collect();
+    let total: f64 = p.iter().sum();
+    for v in &mut p {
+        *v /= total;
+    }
+    p
+}
+
+fn sample_class(probs: &[f64], rng: &mut Xoshiro256) -> usize {
+    let u = rng.next_f64();
+    let mut acc = 0.0;
+    for (c, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return c;
+        }
+    }
+    probs.len() - 1
+}
+
+pub struct ClassTask {
+    desc: DataDesc,
+    centers: Vec<Vec<f32>>, // per class, length in_dim
+    probs: Vec<Vec<f64>>,   // per worker
+    seed: u64,
+    noise: f32,
+}
+
+impl ClassTask {
+    pub fn new(desc: DataDesc, m: usize, seed: u64, het: f64) -> Self {
+        let (in_dim, classes) = match &desc {
+            DataDesc::Class { in_dim, classes, .. } => (*in_dim, *classes),
+            _ => panic!("ClassTask needs a Class descriptor"),
+        };
+        let mut rng = stream(seed, "class-centers", 0, 0, 0);
+        let sep = 2.0f32;
+        let centers = (0..classes)
+            .map(|_| {
+                let mut c = vec![0.0; in_dim];
+                rng.fill_normal(&mut c, sep / (in_dim as f32).sqrt());
+                c
+            })
+            .collect();
+        let probs = (0..m)
+            .map(|w| class_probs(classes, m, w, het))
+            .collect();
+        Self { desc, centers, probs, seed, noise: 1.0 }
+    }
+
+    fn gen(&self, rng: &mut Xoshiro256, probs: &[f64]) -> Batch {
+        let (in_dim, batch) = match &self.desc {
+            DataDesc::Class { in_dim, batch, .. } => (*in_dim, *batch),
+            _ => unreachable!(),
+        };
+        let mut x = Vec::with_capacity(batch * in_dim);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = sample_class(probs, rng);
+            y.push(c as i32);
+            // Noise scale calibrated so the Bayes-optimal margin is ~2σ:
+            // the task is learnable but not saturated, keeping the
+            // baseline/SlowMo accuracy gaps visible (paper Table 1 shape).
+            let sigma = self.noise * 16.0 / (in_dim as f32).sqrt().max(1.0);
+            for f in 0..in_dim {
+                x.push(self.centers[c][f] + sigma * rng.normal_f32());
+            }
+        }
+        Batch::Class { x, y }
+    }
+}
+
+impl Task for ClassTask {
+    fn train_batch(&self, worker: usize, step: u64) -> Batch {
+        let mut rng = stream(self.seed, "class-train", worker as u64, step, 0);
+        self.gen(&mut rng, &self.probs[worker])
+    }
+
+    fn eval_batch(&self, idx: u64) -> Batch {
+        let mut rng = stream(self.seed, "class-eval", idx, 0, 0);
+        let classes = self.centers.len();
+        let uniform = vec![1.0 / classes as f64; classes];
+        self.gen(&mut rng, &uniform)
+    }
+
+    fn desc(&self) -> &DataDesc {
+        &self.desc
+    }
+}
+
+// ------------------------------------------------------------------ Image
+
+pub struct ImageTask {
+    desc: DataDesc,
+    patterns: Vec<Vec<f32>>, // per class, hw*hw*ch
+    probs: Vec<Vec<f64>>,
+    seed: u64,
+}
+
+impl ImageTask {
+    pub fn new(desc: DataDesc, m: usize, seed: u64, het: f64) -> Self {
+        let (hw, in_ch, classes) = match &desc {
+            DataDesc::Image { hw, in_ch, classes, .. } => {
+                (*hw, *in_ch, *classes)
+            }
+            _ => panic!("ImageTask needs an Image descriptor"),
+        };
+        let mut rng = stream(seed, "image-patterns", 0, 0, 0);
+        let n = hw * hw * in_ch;
+        let patterns = (0..classes)
+            .map(|_| {
+                let mut p = vec![0.0; n];
+                rng.fill_normal(&mut p, 1.0);
+                p
+            })
+            .collect();
+        let probs = (0..m)
+            .map(|w| class_probs(classes, m, w, het))
+            .collect();
+        Self { desc, patterns, probs, seed }
+    }
+
+    fn gen(&self, rng: &mut Xoshiro256, probs: &[f64]) -> Batch {
+        let (hw, in_ch, batch) = match &self.desc {
+            DataDesc::Image { hw, in_ch, batch, .. } => {
+                (*hw, *in_ch, *batch)
+            }
+            _ => unreachable!(),
+        };
+        let n = hw * hw * in_ch;
+        let mut x = Vec::with_capacity(batch * n);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = sample_class(probs, rng);
+            y.push(c as i32);
+            for f in 0..n {
+                x.push(self.patterns[c][f] + 0.5 * rng.normal_f32());
+            }
+        }
+        Batch::Class { x, y }
+    }
+}
+
+impl Task for ImageTask {
+    fn train_batch(&self, worker: usize, step: u64) -> Batch {
+        let mut rng = stream(self.seed, "image-train", worker as u64, step, 0);
+        self.gen(&mut rng, &self.probs[worker])
+    }
+
+    fn eval_batch(&self, idx: u64) -> Batch {
+        let mut rng = stream(self.seed, "image-eval", idx, 0, 0);
+        let classes = self.patterns.len();
+        let uniform = vec![1.0 / classes as f64; classes];
+        self.gen(&mut rng, &uniform)
+    }
+
+    fn desc(&self) -> &DataDesc {
+        &self.desc
+    }
+}
+
+// --------------------------------------------------------------------- LM
+
+/// Order-1 Markov chain over the vocab with sparse, peaked transitions.
+/// Entropy is well below log(V), so a model that learns the chain beats
+/// the uniform baseline by a wide, measurable margin.
+pub struct LmTask {
+    desc: DataDesc,
+    /// transitions[c] = list of (next_char, cumulative probability)
+    transitions: Vec<Vec<(i32, f64)>>,
+    seed: u64,
+}
+
+impl LmTask {
+    pub fn new(desc: DataDesc, seed: u64) -> Self {
+        let vocab = match &desc {
+            DataDesc::Lm { vocab, .. } => *vocab,
+            _ => panic!("LmTask needs an Lm descriptor"),
+        };
+        let mut rng = stream(seed, "lm-chain", 0, 0, 0);
+        let fanout = 8.min(vocab);
+        let transitions = (0..vocab)
+            .map(|_| {
+                // `fanout` successors with Zipf-ish weights.
+                let mut succ: Vec<i32> = (0..fanout)
+                    .map(|_| rng.below(vocab as u64) as i32)
+                    .collect();
+                succ.dedup();
+                let weights: Vec<f64> = (0..succ.len())
+                    .map(|r| 1.0 / (r as f64 + 1.0))
+                    .collect();
+                let total: f64 = weights.iter().sum();
+                let mut acc = 0.0;
+                succ.iter()
+                    .zip(weights)
+                    .map(|(&c, w)| {
+                        acc += w / total;
+                        (c, acc)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { desc, transitions, seed }
+    }
+
+    fn next_char(&self, cur: i32, rng: &mut Xoshiro256) -> i32 {
+        let row = &self.transitions[cur as usize];
+        let u = rng.next_f64();
+        for &(c, cum) in row {
+            if u < cum {
+                return c;
+            }
+        }
+        row.last().map(|&(c, _)| c).unwrap_or(0)
+    }
+
+    fn gen(&self, rng: &mut Xoshiro256) -> Batch {
+        let (vocab, seq, batch) = match &self.desc {
+            DataDesc::Lm { vocab, seq_len, batch } => {
+                (*vocab, *seq_len, *batch)
+            }
+            _ => unreachable!(),
+        };
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let mut cur = rng.below(vocab as u64) as i32;
+            for _ in 0..seq {
+                tokens.push(cur);
+                let nxt = self.next_char(cur, rng);
+                targets.push(nxt);
+                cur = nxt;
+            }
+        }
+        Batch::Lm { tokens, targets }
+    }
+}
+
+impl Task for LmTask {
+    fn train_batch(&self, worker: usize, step: u64) -> Batch {
+        let mut rng = stream(self.seed, "lm-train", worker as u64, step, 0);
+        self.gen(&mut rng)
+    }
+
+    fn eval_batch(&self, idx: u64) -> Batch {
+        let mut rng = stream(self.seed, "lm-eval", idx, 0, 0);
+        self.gen(&mut rng)
+    }
+
+    fn desc(&self) -> &DataDesc {
+        &self.desc
+    }
+}
+
+// ------------------------------------------------------------------- Quad
+
+pub struct QuadTask {
+    desc: DataDesc,
+    centers: Vec<Vec<f32>>, // per worker
+    pub sigma: f32,
+    seed: u64,
+}
+
+impl QuadTask {
+    pub fn new(desc: DataDesc, m: usize, seed: u64, zeta: f64,
+               sigma: f64) -> Self {
+        let dim = match &desc {
+            DataDesc::Quad { dim, .. } => *dim,
+            _ => panic!("QuadTask needs a Quad descriptor"),
+        };
+        // Worker centers: shared optimum + per-worker offset of norm ~zeta.
+        let mut base_rng = stream(seed, "quad-base", 0, 0, 0);
+        let mut base = vec![0.0f32; dim];
+        base_rng.fill_normal(&mut base, 1.0);
+        let centers = (0..m)
+            .map(|w| {
+                let mut rng = stream(seed, "quad-center", w as u64, 0, 0);
+                let mut c = base.clone();
+                for v in c.iter_mut() {
+                    *v += zeta as f32 * rng.normal_f32()
+                        / (dim as f32).sqrt();
+                }
+                c
+            })
+            .collect();
+        Self { desc, centers, sigma: sigma as f32, seed }
+    }
+
+    /// The global optimum (mean of worker centers) — the λ-weighted
+    /// minimizer of the average objective.
+    pub fn global_center(&self) -> Vec<f32> {
+        let dim = self.centers[0].len();
+        let mut out = vec![0.0f32; dim];
+        for c in &self.centers {
+            for (o, &v) in out.iter_mut().zip(c) {
+                *o += v;
+            }
+        }
+        let m = self.centers.len() as f32;
+        for o in out.iter_mut() {
+            *o /= m;
+        }
+        out
+    }
+}
+
+impl Task for QuadTask {
+    fn train_batch(&self, worker: usize, step: u64) -> Batch {
+        let dim = self.centers[worker].len();
+        let mut rng = stream(self.seed, "quad-noise", worker as u64, step, 0);
+        let mut noise = vec![0.0f32; dim];
+        rng.fill_normal(&mut noise, self.sigma / (dim as f32).sqrt());
+        Batch::Quad {
+            center: self.centers[worker].clone(),
+            noise,
+        }
+    }
+
+    fn eval_batch(&self, _idx: u64) -> Batch {
+        Batch::Quad {
+            center: self.global_center(),
+            noise: vec![0.0; self.centers[0].len()],
+        }
+    }
+
+    fn desc(&self) -> &DataDesc {
+        &self.desc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn class_desc() -> DataDesc {
+        DataDesc::Class { in_dim: 8, classes: 4, batch: 16 }
+    }
+
+    #[test]
+    fn class_probs_sum_to_one_and_skew() {
+        let p0 = class_probs(10, 4, 0, 0.9);
+        let p2 = class_probs(10, 4, 2, 0.9);
+        assert!((p0.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((p2.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_ne!(p0, p2);
+        // het=0 => uniform
+        let u = class_probs(10, 4, 1, 0.0);
+        assert!(u.iter().all(|&x| (x - 0.1).abs() < 1e-12));
+    }
+
+    #[test]
+    fn class_batches_deterministic_and_distinct() {
+        let t = ClassTask::new(class_desc(), 4, 7, 0.5);
+        let a = t.train_batch(0, 3);
+        let b = t.train_batch(0, 3);
+        let c = t.train_batch(1, 3);
+        match (&a, &b, &c) {
+            (Batch::Class { x: xa, y: ya }, Batch::Class { x: xb, y: yb },
+             Batch::Class { x: xc, .. }) => {
+                assert_eq!(xa, xb);
+                assert_eq!(ya, yb);
+                assert_ne!(xa, xc);
+                assert_eq!(xa.len(), 16 * 8);
+                assert_eq!(ya.len(), 16);
+                assert!(ya.iter().all(|&y| (0..4).contains(&y)));
+            }
+            _ => panic!("wrong batch kind"),
+        }
+    }
+
+    #[test]
+    fn heterogeneity_skews_class_histogram() {
+        let t = ClassTask::new(class_desc(), 2, 1, 0.95);
+        let mut counts = [[0usize; 4]; 2];
+        for w in 0..2 {
+            for s in 0..50 {
+                if let Batch::Class { y, .. } = t.train_batch(w, s) {
+                    for lbl in y {
+                        counts[w][lbl as usize] += 1;
+                    }
+                }
+            }
+        }
+        // Worker 0 should prefer class 0 over worker 1's preference.
+        assert!(counts[0][0] > counts[1][0]);
+    }
+
+    #[test]
+    fn lm_batches_in_vocab_and_shifted() {
+        let desc = DataDesc::Lm { vocab: 32, seq_len: 12, batch: 3 };
+        let t = LmTask::new(desc, 5);
+        match t.train_batch(0, 0) {
+            Batch::Lm { tokens, targets } => {
+                assert_eq!(tokens.len(), 36);
+                assert_eq!(targets.len(), 36);
+                assert!(tokens.iter().all(|&c| (0..32).contains(&c)));
+                assert!(targets.iter().all(|&c| (0..32).contains(&c)));
+                // Within a row, target[i] == token[i+1].
+                for row in 0..3 {
+                    for i in 0..11 {
+                        assert_eq!(targets[row * 12 + i],
+                                   tokens[row * 12 + i + 1]);
+                    }
+                }
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn lm_chain_is_learnable_not_uniform() {
+        // Empirical successor entropy must be clearly below log2(V).
+        let desc = DataDesc::Lm { vocab: 64, seq_len: 256, batch: 4 };
+        let t = LmTask::new(desc, 9);
+        let mut counts = std::collections::HashMap::new();
+        for s in 0..8 {
+            if let Batch::Lm { tokens, targets } = t.train_batch(0, s) {
+                for (a, b) in tokens.iter().zip(&targets) {
+                    *counts.entry((*a, *b)).or_insert(0usize) += 1;
+                }
+            }
+        }
+        // Distinct bigrams should be far fewer than V^2 (sparse chain).
+        assert!(counts.len() < 64 * 12, "bigrams: {}", counts.len());
+    }
+
+    #[test]
+    fn image_batches_shape() {
+        let desc = DataDesc::Image { hw: 4, in_ch: 2, classes: 3, batch: 5 };
+        let t = ImageTask::new(desc, 2, 3, 0.5);
+        match t.train_batch(1, 0) {
+            Batch::Class { x, y } => {
+                assert_eq!(x.len(), 5 * 4 * 4 * 2);
+                assert_eq!(y.len(), 5);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn quad_centers_heterogeneous_with_zeta() {
+        let desc = DataDesc::Quad { dim: 64, cond: 10.0 };
+        let t0 = QuadTask::new(desc.clone(), 4, 1, 0.0, 0.1);
+        let t1 = QuadTask::new(desc, 4, 1, 5.0, 0.1);
+        // zeta=0 -> identical centers; zeta>0 -> spread.
+        assert_eq!(t0.centers[0], t0.centers[1]);
+        assert_ne!(t1.centers[0], t1.centers[1]);
+        let g = t1.global_center();
+        assert_eq!(g.len(), 64);
+    }
+
+    #[test]
+    fn quad_noise_scales_with_sigma() {
+        let desc = DataDesc::Quad { dim: 256, cond: 10.0 };
+        let t = QuadTask::new(desc, 1, 2, 0.0, 1.0);
+        if let Batch::Quad { noise, .. } = t.train_batch(0, 0) {
+            let norm = crate::util::norm(&noise);
+            assert!(norm > 0.3 && norm < 3.0, "norm {norm}");
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn eval_batches_worker_independent() {
+        let t = ClassTask::new(class_desc(), 4, 7, 0.9);
+        let a = t.eval_batch(0);
+        let b = t.eval_batch(0);
+        match (a, b) {
+            (Batch::Class { x: xa, .. }, Batch::Class { x: xb, .. }) => {
+                assert_eq!(xa, xb)
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn task_for_dispatch() {
+        let d = DataDesc::Lm { vocab: 8, seq_len: 4, batch: 1 };
+        let t = task_for(&d, 2, 0, 0.0);
+        assert_eq!(t.desc(), &d);
+    }
+}

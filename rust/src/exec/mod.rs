@@ -1,0 +1,313 @@
+//! Execution substrate: scoped worker threads, barriers, mailboxes.
+//!
+//! The image ships no tokio; this workload (m worker loops + blocking PJRT
+//! execute calls) maps naturally onto one OS thread per worker with
+//! channel-based message passing, which is what this module provides.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Reusable cyclic barrier for `n` parties (std::sync::Barrier equivalent,
+/// re-implemented so we can expose generation counts to tests).
+pub struct Barrier {
+    n: usize,
+    state: Mutex<(usize, u64)>, // (arrived, generation)
+    cv: Condvar,
+}
+
+impl Barrier {
+    pub fn new(n: usize) -> Arc<Self> {
+        assert!(n > 0);
+        Arc::new(Self {
+            n,
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Block until all `n` parties arrive. Returns true for exactly one
+    /// "leader" per generation.
+    pub fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            true
+        } else {
+            while st.1 == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+            false
+        }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.state.lock().unwrap().1
+    }
+}
+
+/// Spawn `n` scoped worker threads running `f(worker_id)` and join them all,
+/// propagating the first panic. Returns each worker's result in id order.
+pub fn run_workers<T: Send>(n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let f = &f;
+                scope.spawn(move || f(i))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    })
+}
+
+/// A simple fixed-size thread pool for fire-and-forget jobs (used by the
+/// bench harness to parallelize independent experiment cells).
+pub struct ThreadPool {
+    tx: Option<Sender<Box<dyn FnOnce() + Send>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Box<dyn FnOnce() + Send>>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            let (lock, cv) = &*pending;
+                            *lock.lock().unwrap() -= 1;
+                            cv.notify_all();
+                        }
+                        Err(_) => return,
+                    }
+                })
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            handles,
+            pending,
+        }
+    }
+
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("pool thread died");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-worker mailboxes: `send(to, msg)` / `recv(worker)`. The fabric in
+/// [`crate::net`] builds on this.
+pub struct Mailboxes<T> {
+    senders: Vec<Sender<T>>,
+    receivers: Vec<Mutex<Receiver<T>>>,
+    sent: AtomicUsize,
+}
+
+impl<T: Send> Mailboxes<T> {
+    pub fn new(n: usize) -> Self {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Mutex::new(rx));
+        }
+        Self {
+            senders,
+            receivers,
+            sent: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.senders.is_empty()
+    }
+
+    pub fn send(&self, to: usize, msg: T) {
+        self.sent.fetch_add(1, Ordering::Relaxed);
+        self.senders[to].send(msg).expect("receiver dropped");
+    }
+
+    /// Blocking receive for `worker`'s mailbox.
+    pub fn recv(&self, worker: usize) -> T {
+        self.receivers[worker]
+            .lock()
+            .unwrap()
+            .recv()
+            .expect("all senders dropped")
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self, worker: usize) -> Option<T> {
+        self.receivers[worker].lock().unwrap().try_recv().ok()
+    }
+
+    /// Receive with a timeout; `None` if nothing arrived in time.
+    pub fn recv_timeout(
+        &self,
+        worker: usize,
+        timeout: std::time::Duration,
+    ) -> Option<T> {
+        self.receivers[worker]
+            .lock()
+            .unwrap()
+            .recv_timeout(timeout)
+            .ok()
+    }
+
+    /// Drain everything currently queued for `worker`.
+    pub fn drain(&self, worker: usize) -> Vec<T> {
+        let rx = self.receivers[worker].lock().unwrap();
+        let mut out = Vec::new();
+        while let Ok(m) = rx.try_recv() {
+            out.push(m);
+        }
+        out
+    }
+
+    pub fn total_sent(&self) -> usize {
+        self.sent.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn barrier_synchronizes() {
+        let b = Barrier::new(4);
+        let counter = AtomicU64::new(0);
+        run_workers(4, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            b.wait();
+            // After the barrier every thread must see all 4 increments.
+            assert_eq!(counter.load(Ordering::SeqCst), 4);
+        });
+        assert_eq!(b.generation(), 1);
+    }
+
+    #[test]
+    fn barrier_elects_single_leader_per_generation() {
+        let b = Barrier::new(3);
+        for _ in 0..5 {
+            let leaders: usize = run_workers(3, |_| b.wait() as usize)
+                .into_iter()
+                .sum();
+            assert_eq!(leaders, 1);
+        }
+        assert_eq!(b.generation(), 5);
+    }
+
+    #[test]
+    fn run_workers_returns_in_id_order() {
+        let out = run_workers(8, |i| i * 10);
+        assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_wait_idle_on_empty_pool() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle(); // must not deadlock
+    }
+
+    #[test]
+    fn mailboxes_point_to_point() {
+        let mb: Mailboxes<(usize, u32)> = Mailboxes::new(3);
+        mb.send(1, (0, 42));
+        mb.send(1, (2, 43));
+        mb.send(0, (1, 7));
+        assert_eq!(mb.recv(1), (0, 42));
+        assert_eq!(mb.recv(1), (2, 43));
+        assert_eq!(mb.recv(0), (1, 7));
+        assert_eq!(mb.total_sent(), 3);
+        assert!(mb.try_recv(2).is_none());
+    }
+
+    #[test]
+    fn mailboxes_drain() {
+        let mb: Mailboxes<u32> = Mailboxes::new(2);
+        for i in 0..5 {
+            mb.send(0, i);
+        }
+        assert_eq!(mb.drain(0), vec![0, 1, 2, 3, 4]);
+        assert!(mb.drain(0).is_empty());
+    }
+
+    #[test]
+    fn mailboxes_cross_thread() {
+        let mb: Arc<Mailboxes<usize>> = Arc::new(Mailboxes::new(4));
+        run_workers(4, |i| {
+            // Everyone sends its id to everyone (incl. self), then receives
+            // exactly 4 messages.
+            for to in 0..4 {
+                mb.send(to, i);
+            }
+            let mut got: Vec<usize> = (0..4).map(|_| mb.recv(i)).collect();
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1, 2, 3]);
+        });
+    }
+}

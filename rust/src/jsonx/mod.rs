@@ -1,0 +1,169 @@
+//! Minimal JSON parser/serializer (serde replacement for this image).
+//!
+//! Consumes `artifacts/manifest.json` + `golden.json` and emits metrics
+//! JSONL / result tables. Supports the full JSON grammar (objects, arrays,
+//! strings with escapes, numbers, bool, null); numbers are stored as f64
+//! (adequate: the manifest's largest integers are parameter offsets < 2^53).
+
+mod parse;
+mod ser;
+
+pub use parse::{parse, ParseError};
+pub use ser::to_string;
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Object keys are ordered (BTreeMap) so serialization is
+/// deterministic — important for golden-file tests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Follow a `.`-separated path of object keys.
+    pub fn path(&self, path: &str) -> Option<&Json> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|x| x as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Convenience: array of f32 (for golden vectors).
+    pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
+        self.as_arr()?
+            .iter()
+            .map(|v| v.as_f64().map(|x| x as f32))
+            .collect()
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        Json::Num(x)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Num(x as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+
+impl From<Vec<f64>> for Json {
+    fn from(v: Vec<f64>) -> Self {
+        Json::Arr(v.into_iter().map(Json::Num).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let j = parse(r#"{"a": {"b": [1, 2.5, "x", true, null]}}"#).unwrap();
+        assert_eq!(j.path("a.b").unwrap().as_arr().unwrap().len(), 5);
+        assert_eq!(j.path("a.b").unwrap().as_arr().unwrap()[1].as_f64(),
+                   Some(2.5));
+        assert_eq!(j.path("a.missing"), None);
+        assert_eq!(j.get("a").unwrap().get("b").unwrap().as_arr().unwrap()[2]
+            .as_str(), Some("x"));
+    }
+
+    #[test]
+    fn f32_vec() {
+        let j = parse("[1, 2, 3.5]").unwrap();
+        assert_eq!(j.as_f32_vec().unwrap(), vec![1.0, 2.0, 3.5]);
+        assert_eq!(parse("[1, \"x\"]").unwrap().as_f32_vec(), None);
+    }
+
+    #[test]
+    fn round_trip() {
+        let src = r#"{"m": {"x": [1,2,3], "y": "hi\n", "z": -1.5e-3}, "n": null}"#;
+        let j = parse(src).unwrap();
+        let s = to_string(&j);
+        assert_eq!(parse(&s).unwrap(), j);
+    }
+}

@@ -1,0 +1,110 @@
+//! Compact JSON serializer.
+
+use super::Json;
+
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(x) => write_num(*x, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(xs) => {
+            out.push('[');
+            for (i, x) in xs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(x, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(m) => {
+            out.push('{');
+            for (i, (k, x)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write_value(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if !x.is_finite() {
+        // JSON has no Inf/NaN; emit null like most tolerant writers.
+        out.push_str("null");
+    } else if x == x.trunc() && x.abs() < 1e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else {
+        out.push_str(&format!("{x}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Json};
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(to_string(&Json::Null), "null");
+        assert_eq!(to_string(&Json::Bool(true)), "true");
+        assert_eq!(to_string(&Json::Num(42.0)), "42");
+        assert_eq!(to_string(&Json::Num(0.5)), "0.5");
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+        assert_eq!(to_string(&Json::Str("a\"b\n".into())), r#""a\"b\n""#);
+    }
+
+    #[test]
+    fn containers() {
+        let j = Json::obj(vec![
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+            ("s", Json::str("hi")),
+        ]);
+        // BTreeMap orders keys: "s" before "xs".
+        assert_eq!(to_string(&j), r#"{"s":"hi","xs":[1,2]}"#);
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        assert_eq!(to_string(&Json::Str("\u{0001}".into())), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn round_trip_preserves() {
+        let j = Json::obj(vec![
+            ("a", Json::Num(-1.25e-7)),
+            ("b", Json::Arr(vec![Json::Null, Json::Bool(false)])),
+        ]);
+        assert_eq!(parse(&to_string(&j)).unwrap(), j);
+    }
+}

@@ -1,0 +1,34 @@
+//! # slowmo — SlowMo distributed training framework (ICLR 2020 reproduction)
+//!
+//! A three-layer reproduction of *SlowMo: Improving Communication-Efficient
+//! Distributed SGD with Slow Momentum* (Wang, Tantia, Ballas & Rabbat):
+//!
+//! - **Layer 3 (this crate)** — the distributed coordinator: worker threads,
+//!   gossip/allreduce fabric over time-varying exponential topologies, the
+//!   τ-step inner scheduler and the SlowMo outer-momentum controller.
+//! - **Layer 2** — JAX model/optimizer graphs AOT-lowered to HLO text
+//!   (`python/compile/`), executed here via the PJRT CPU client
+//!   ([`runtime`]). Python never runs on the training path.
+//! - **Layer 1** — Pallas kernels for the optimizer/attention hot-spots
+//!   (`python/compile/kernels/`), lowered into the same HLO.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algorithms;
+pub mod bench;
+pub mod benchkit;
+pub mod clix;
+pub mod configx;
+pub mod data;
+pub mod exec;
+pub mod jsonx;
+pub mod net;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod slowmo;
+pub mod testkit;
+pub mod topology;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,244 @@
+//! `slowmo` — CLI launcher for the SlowMo reproduction.
+//!
+//! Commands:
+//!   train  — run one training job (preset × algorithm × SlowMo config)
+//!   exp    — regenerate a paper table/figure (see DESIGN.md §4)
+//!   micro  — hot-path micro-benchmarks
+//!   info   — show manifest / artifacts status
+//!
+//! Examples:
+//!   slowmo train --preset cifar-mlp --algo sgp --slowmo --tau 12 --beta 0.7
+//!   slowmo exp table1 --scale quick
+//!   slowmo exp fig3 --scale standard
+
+use slowmo::bench::{experiments, micro, Env, Scale};
+use slowmo::clix::{App, Command, Flag};
+use slowmo::net::CostModel;
+use slowmo::optim::kernels::InnerOpt;
+use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
+use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
+
+fn app() -> App {
+    App::new("slowmo", "SlowMo (ICLR 2020) reproduction — rust/JAX/Pallas")
+        .command(
+            Command::new("train", "run one training job")
+                .flag(Flag::opt("preset", "cifar-mlp", "model preset (see `slowmo info`)"))
+                .flag(Flag::opt("algo", "sgp",
+                                "local|sgp|osgp|dpsgd|ar|doubleavg[:tau], \
+                                 add -adam for Adam"))
+                .flag(Flag::opt("m", "4", "number of workers"))
+                .flag(Flag::opt("steps", "240", "inner steps per worker"))
+                .flag(Flag::opt("seed", "0", "RNG seed"))
+                .flag(Flag::switch("slowmo", "wrap the base algorithm in SlowMo"))
+                .flag(Flag::opt("tau", "12", "SlowMo inner-loop length"))
+                .flag(Flag::opt("alpha", "1.0", "slow learning rate"))
+                .flag(Flag::opt("beta", "0.7", "slow momentum"))
+                .flag(Flag::opt("buffers", "reset",
+                                "reset|maintain|average buffer strategy"))
+                .flag(Flag::switch("no-average", "skip the exact average (§6)"))
+                .flag(Flag::opt("lr", "0.1", "base/peak fast learning rate"))
+                .flag(Flag::opt("het", "0.5", "data heterogeneity (0..1)"))
+                .flag(Flag::opt("eval-every", "0", "eval period (0 = end only)"))
+                .flag(Flag::opt("eval-batches", "8", "batches per eval"))
+                .flag(Flag::switch("pjrt-kernels",
+                                   "run optimizer kernels via the PJRT \
+                                    artifacts instead of the native \
+                                    mirrors (slower on CPU; see §Perf)"))
+                .flag(Flag::opt("out", "results/runs.jsonl",
+                                "append JSONL result here")),
+        )
+        .command(
+            Command::new("exp", "regenerate a paper table/figure")
+                .flag(Flag::opt("scale", "quick", "quick|standard|full"))
+                .flag(Flag::opt("task", "", "restrict to one task (cifar|imagenet|wmt)")),
+        )
+        .command(Command::new("micro", "hot-path micro-benchmarks"))
+        .command(Command::new("info", "artifacts / manifest status"))
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    let (cmd, args) = match app.dispatch(&raw) {
+        Ok(x) => x,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(if raw.is_empty() { 0 } else { 2 });
+        }
+    };
+    let result = match cmd.name {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "micro" => cmd_micro(&args),
+        "info" => cmd_info(),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let engine = Engine::cpu(&dir)?;
+    let algo = AlgoSpec::parse(&args.string("algo"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --algo"))?;
+    let slowmo = if args.get_bool("slowmo") {
+        let buffers = BufferStrategy::parse(&args.string("buffers"))
+            .ok_or_else(|| anyhow::anyhow!("unknown --buffers"))?;
+        let mut s = SlowMoCfg::new(args.f32("alpha"), args.f32("beta"),
+                                   args.u64("tau"))
+            .with_buffers(buffers);
+        if args.get_bool("no-average") {
+            s = s.no_average();
+        }
+        Some(s)
+    } else {
+        None
+    };
+    let steps = args.u64("steps");
+    let is_adam = matches!(
+        algo,
+        AlgoSpec::Local(InnerOpt::Adam { .. })
+            | AlgoSpec::Sgp(InnerOpt::Adam { .. })
+            | AlgoSpec::Osgp(InnerOpt::Adam { .. })
+            | AlgoSpec::AllReduce(InnerOpt::Adam { .. })
+    );
+    let lr = args.f32("lr");
+    let cfg = TrainCfg {
+        preset: args.string("preset"),
+        m: args.usize("m"),
+        steps,
+        seed: args.u64("seed"),
+        algo,
+        slowmo,
+        sched: if is_adam {
+            Schedule::lm_default(lr, steps)
+        } else {
+            Schedule::image_default(lr, steps)
+        },
+        heterogeneity: args.f64("het"),
+        eval_every: args.u64("eval-every"),
+        eval_batches: args.u64("eval-batches"),
+        force_pjrt: false,
+        native_kernels: !args.get_bool("pjrt-kernels"),
+        cost: CostModel::ethernet_10g(),
+        compute_time_s: 0.0,
+        record_gradnorm: false,
+    };
+    println!("training {} / {} ...", cfg.preset, cfg.algo_name());
+    let r = train(&cfg, &manifest, Some(&engine))?;
+    println!("best train loss     {:.4}", r.best_train_loss);
+    println!("best val metric     {:.4}", r.best_eval_metric);
+    println!("final val loss      {:.4}", r.final_eval_loss);
+    println!("simulated time/iter {}",
+             slowmo::util::fmt_secs(r.sim_time_per_iter()));
+    println!("fabric bytes sent   {}", slowmo::util::fmt_bytes(r.bytes_sent));
+    println!("wall time           {}", slowmo::util::fmt_secs(r.wall_time));
+    r.append_jsonl(&args.string("out"))?;
+    Ok(())
+}
+
+fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
+    let scale = Scale::parse(&args.string("scale"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --scale"))?;
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let env = Env::load(scale)?;
+    let tasks = {
+        let filter = args.string("task");
+        let all = vec![
+            experiments::TaskSpec::cifar(),
+            experiments::TaskSpec::imagenet(),
+            experiments::TaskSpec::wmt(scale),
+        ];
+        if filter.is_empty() {
+            all
+        } else {
+            all.into_iter()
+                .filter(|t| {
+                    t.paper_name.to_lowercase().contains(&filter)
+                        || t.preset.contains(&filter)
+                })
+                .collect()
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match which {
+        "table1" => {
+            experiments::table1(&env, &tasks)?;
+        }
+        "table2" => {
+            experiments::table2(&env)?;
+        }
+        "fig2" => experiments::fig2(&env, &tasks)?,
+        "fig3" => {
+            experiments::fig3(&env, &tasks[0])?;
+        }
+        "figb2" => {
+            experiments::figb2(
+                &env,
+                &tasks[0],
+                &[0.5, 1.0],
+                &[0.0, 0.2, 0.4, 0.6, 0.8],
+            )?;
+        }
+        "tableb23" => {
+            experiments::tableb23(&env, &tasks[0])?;
+        }
+        "tableb4" => {
+            experiments::tableb4(&env, &tasks[0])?;
+        }
+        "doubleavg" => {
+            experiments::doubleavg(&env, &tasks[0])?;
+        }
+        "noaverage" => {
+            experiments::noaverage(&env, &tasks[0])?;
+        }
+        "theory" => {
+            experiments::theory(&env)?;
+        }
+        "all" => {
+            experiments::table2(&env)?;
+            experiments::theory(&env)?;
+            experiments::table1(&env, &tasks)?;
+            experiments::fig2(&env, &tasks)?;
+            experiments::fig3(&env, &tasks[0])?;
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?} (table1|table2|fig2|fig3|figb2|\
+             tableb23|tableb4|doubleavg|noaverage|theory|all)"
+        ),
+    }
+    println!("\n[exp {which} done in {}]",
+             slowmo::util::fmt_secs(t0.elapsed().as_secs_f64()));
+    Ok(())
+}
+
+fn cmd_micro(_args: &slowmo::clix::Args) -> anyhow::Result<()> {
+    let env = Env::load(Scale::Quick)?;
+    micro::run(&env)?;
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    println!("artifacts dir: {dir}");
+    let manifest = Manifest::load(&dir)?;
+    println!("presets:");
+    for (name, p) in &manifest.presets {
+        println!(
+            "  {:<16} family={:<5} d={:>9} ({} raw params)",
+            name, p.family, p.flat_len, p.raw_len
+        );
+    }
+    println!("optimizer graph dims: {:?}",
+             manifest.optim.keys().collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! The in-process message fabric: typed point-to-point messages between
+//! worker threads with byte accounting and simulated-time stamps.
+
+use crate::exec::Mailboxes;
+use crate::net::cost::CostModel;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One gossip message (SGP/OSGP/D-PSGD payload).
+#[derive(Clone, Debug)]
+pub struct GossipMsg {
+    pub from: usize,
+    /// Gossip step the sender was at (for diagnostics; push-sum itself is
+    /// correct for arbitrarily delayed messages).
+    pub step: u64,
+    /// Scaled parameters p·x.
+    pub payload: Vec<f32>,
+    /// Scaled push-sum weight p·w.
+    pub weight: f64,
+    /// Sender's simulated clock when the message left.
+    pub send_time: f64,
+}
+
+/// Fabric over `m` workers: gossip mailboxes + a generic chunk channel for
+/// collectives + counters.
+pub struct Fabric {
+    m: usize,
+    gossip: Mailboxes<GossipMsg>,
+    /// Collective lanes (ring allreduce chunks etc.).
+    chunks: Mailboxes<(usize, Vec<f32>)>,
+    pub cost: CostModel,
+    bytes_sent: AtomicU64,
+    msgs_sent: AtomicU64,
+}
+
+impl Fabric {
+    pub fn new(m: usize, cost: CostModel) -> Self {
+        Self {
+            m,
+            gossip: Mailboxes::new(m),
+            chunks: Mailboxes::new(m),
+            cost,
+            bytes_sent: AtomicU64::new(0),
+            msgs_sent: AtomicU64::new(0),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    fn account(&self, elems: usize) {
+        self.bytes_sent
+            .fetch_add(elems as u64 * 4, Ordering::Relaxed);
+        self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Send a gossip message; returns the simulated arrival time.
+    pub fn gossip_send(&self, to: usize, msg: GossipMsg) -> f64 {
+        let arrival = msg.send_time + self.cost.xfer_time(msg.payload.len());
+        self.account(msg.payload.len());
+        self.gossip.send(to, msg);
+        arrival
+    }
+
+    /// Blocking gossip receive for `worker`. Returns the message and its
+    /// simulated arrival time (send_time + transfer).
+    pub fn gossip_recv(&self, worker: usize) -> (GossipMsg, f64) {
+        let msg = self.gossip.recv(worker);
+        let arrival = msg.send_time + self.cost.xfer_time(msg.payload.len());
+        (msg, arrival)
+    }
+
+    /// Gossip receive with a timeout (OSGP staleness-bound path): `None`
+    /// if nothing arrives — e.g. when peers already finished their run.
+    pub fn gossip_recv_timeout(
+        &self,
+        worker: usize,
+        timeout: std::time::Duration,
+    ) -> Option<(GossipMsg, f64)> {
+        let msg = self.gossip.recv_timeout(worker, timeout)?;
+        let arrival = msg.send_time + self.cost.xfer_time(msg.payload.len());
+        Some((msg, arrival))
+    }
+
+    /// Drain all gossip messages currently queued for `worker`
+    /// (OSGP non-blocking receive path).
+    pub fn gossip_drain(&self, worker: usize) -> Vec<(GossipMsg, f64)> {
+        self.gossip
+            .drain(worker)
+            .into_iter()
+            .map(|msg| {
+                let arrival =
+                    msg.send_time + self.cost.xfer_time(msg.payload.len());
+                (msg, arrival)
+            })
+            .collect()
+    }
+
+    /// Collective lane: send one tagged chunk.
+    pub(crate) fn chunk_send(&self, to: usize, tag: usize, data: Vec<f32>) {
+        self.account(data.len());
+        self.chunks.send(to, (tag, data));
+    }
+
+    /// Collective lane: blocking receive (chunks from a single predecessor
+    /// arrive in FIFO order, so tags are sanity checks).
+    pub(crate) fn chunk_recv(&self, worker: usize) -> (usize, Vec<f32>) {
+        self.chunks.recv(worker)
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn msgs_sent(&self) -> u64 {
+        self.msgs_sent.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run_workers;
+
+    #[test]
+    fn gossip_round_trip_and_accounting() {
+        let f = Fabric::new(2, CostModel::free());
+        let msg = GossipMsg {
+            from: 0,
+            step: 3,
+            payload: vec![1.0, 2.0, 3.0],
+            weight: 0.5,
+            send_time: 1.0,
+        };
+        f.gossip_send(1, msg);
+        let (got, arrival) = f.gossip_recv(1);
+        assert_eq!(got.from, 0);
+        assert_eq!(got.payload, vec![1.0, 2.0, 3.0]);
+        assert_eq!(arrival, 1.0); // free network: arrival == send time
+        assert_eq!(f.bytes_sent(), 12);
+        assert_eq!(f.msgs_sent(), 1);
+    }
+
+    #[test]
+    fn arrival_time_includes_transfer() {
+        let cost = CostModel { latency_s: 1.0, bandwidth_bps: 4.0 };
+        let f = Fabric::new(2, cost);
+        let msg = GossipMsg {
+            from: 0,
+            step: 0,
+            payload: vec![0.0; 2], // 8 bytes -> 2 s at 4 B/s
+            weight: 1.0,
+            send_time: 10.0,
+        };
+        let eta = f.gossip_send(1, msg);
+        assert!((eta - 13.0).abs() < 1e-12);
+        let (_, arrival) = f.gossip_recv(1);
+        assert!((arrival - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_returns_all_pending() {
+        let f = Fabric::new(2, CostModel::free());
+        for step in 0..3 {
+            f.gossip_send(
+                0,
+                GossipMsg {
+                    from: 1,
+                    step,
+                    payload: vec![step as f32],
+                    weight: 0.5,
+                    send_time: 0.0,
+                },
+            );
+        }
+        let msgs = f.gossip_drain(0);
+        assert_eq!(msgs.len(), 3);
+        assert!(f.gossip_drain(0).is_empty());
+    }
+
+    #[test]
+    fn concurrent_gossip_all_to_all() {
+        let f = Fabric::new(4, CostModel::free());
+        run_workers(4, |i| {
+            for to in 0..4 {
+                if to != i {
+                    f.gossip_send(
+                        to,
+                        GossipMsg {
+                            from: i,
+                            step: 0,
+                            payload: vec![i as f32],
+                            weight: 1.0,
+                            send_time: 0.0,
+                        },
+                    );
+                }
+            }
+            let mut froms: Vec<usize> =
+                (0..3).map(|_| f.gossip_recv(i).0.from).collect();
+            froms.sort_unstable();
+            let expect: Vec<usize> =
+                (0..4).filter(|&x| x != i).collect();
+            assert_eq!(froms, expect);
+        });
+        assert_eq!(f.msgs_sent(), 12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Simulated communication fabric.
+//!
+//! DESIGN.md §2: the paper's 32-node / 10 Gbps Ethernet testbed is replaced
+//! by an in-process fabric that is *bit-exact* in what data moves (real
+//! messages between worker threads, real ring-allreduce) and *analytic* in
+//! what time passes (an α-β cost model integrated per worker as simulated
+//! wall-clock). The accuracy experiments depend only on the former; the
+//! timing tables (Table 2, Fig. 3 right axes) depend only on the latter.
+
+pub mod collectives;
+pub mod cost;
+pub mod fabric;
+
+pub use collectives::ring_allreduce_mean;
+pub use cost::{CostModel, WorkloadTiming};
+pub use fabric::{Fabric, GossipMsg};

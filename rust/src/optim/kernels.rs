@@ -1,0 +1,249 @@
+//! Optimizer kernel dispatch: native Rust mirrors or the AOT Pallas/XLA
+//! artifacts via PJRT.
+//!
+//! Both engines compute identical math (asserted by `rust/tests/` golden
+//! and equivalence tests). The PJRT path is the architecture's hot path
+//! (L1 Pallas kernels lowered to HLO); the native path is the baseline the
+//! perf pass compares against and the engine unit tests run on.
+
+use anyhow::Result;
+
+use crate::runtime::engine::{Arg, ExecHandle};
+use crate::runtime::{Engine, Manifest};
+
+/// Hyperparameters of the inner (base) optimizer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InnerOpt {
+    /// SGD with Nesterov momentum + L2 weight decay (paper image tasks).
+    Nesterov { beta0: f32, wd: f32 },
+    /// Adam (paper WMT task). `beta1/beta2/eps` per Kingma & Ba.
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl InnerOpt {
+    pub fn nesterov_default() -> Self {
+        InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 }
+    }
+
+    pub fn adam_default() -> Self {
+        InnerOpt::Adam { beta1: 0.9, beta2: 0.98, eps: 1e-8 }
+    }
+
+    pub fn uses_second_moment(&self) -> bool {
+        matches!(self, InnerOpt::Adam { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InnerOpt::Nesterov { .. } => "nesterov-sgd",
+            InnerOpt::Adam { .. } => "adam",
+        }
+    }
+}
+
+/// Kernel execution backend.
+pub enum Kernels {
+    /// Pure-Rust in-place mirrors (see [`crate::optim`]).
+    Native,
+    /// AOT artifacts executed on PJRT.
+    Pjrt {
+        nesterov: ExecHandle,
+        adam: ExecHandle,
+        slowmo: ExecHandle,
+        axpy: ExecHandle,
+    },
+}
+
+impl Kernels {
+    /// Load the PJRT optimizer kernels for flat length `d`.
+    pub fn pjrt(engine: &Engine, manifest: &Manifest, d: usize) -> Result<Self> {
+        let opt = manifest.optim_for(d)?;
+        Ok(Kernels::Pjrt {
+            nesterov: engine.load(&opt.graphs["nesterov"])?,
+            adam: engine.load(&opt.graphs["adam"])?,
+            slowmo: engine.load(&opt.graphs["slowmo"])?,
+            axpy: engine.load(&opt.graphs["axpy"])?,
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Kernels::Native => "native",
+            Kernels::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// One inner-optimizer step on (x, h, v) given grads.
+    /// `adam_step` is the 1-based Adam counter (ignored for Nesterov).
+    pub fn inner_step(
+        &self,
+        inner: &InnerOpt,
+        x: &mut Vec<f32>,
+        h: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        g: &[f32],
+        gamma: f32,
+        adam_step: u64,
+    ) -> Result<()> {
+        match (self, inner) {
+            (Kernels::Native, InnerOpt::Nesterov { beta0, wd }) => {
+                super::nesterov_step(x, h, g, gamma, *beta0, *wd);
+                Ok(())
+            }
+            (Kernels::Native, InnerOpt::Adam { beta1, beta2, eps }) => {
+                super::adam_step(
+                    x, h, v, g, gamma, *beta1, *beta2, *eps,
+                    adam_step as f32,
+                );
+                Ok(())
+            }
+            (
+                Kernels::Pjrt { nesterov, .. },
+                InnerOpt::Nesterov { beta0, wd },
+            ) => {
+                let d = x.len();
+                let out = nesterov.exec(&[
+                    Arg::F32(x, &[d]),
+                    Arg::F32(h, &[d]),
+                    Arg::F32(g, &[d]),
+                    Arg::F32(&[gamma], &[1]),
+                    Arg::F32(&[*beta0], &[1]),
+                    Arg::F32(&[*wd], &[1]),
+                ])?;
+                let mut it = out.into_iter();
+                *x = it.next().unwrap();
+                *h = it.next().unwrap();
+                Ok(())
+            }
+            (Kernels::Pjrt { adam, .. }, InnerOpt::Adam { beta1, beta2, eps }) => {
+                let d = x.len();
+                let out = adam.exec(&[
+                    Arg::F32(x, &[d]),
+                    Arg::F32(h, &[d]),
+                    Arg::F32(v, &[d]),
+                    Arg::F32(g, &[d]),
+                    Arg::F32(&[gamma], &[1]),
+                    Arg::F32(&[*beta1], &[1]),
+                    Arg::F32(&[*beta2], &[1]),
+                    Arg::F32(&[*eps], &[1]),
+                    Arg::F32(&[adam_step as f32], &[1]),
+                ])?;
+                let mut it = out.into_iter();
+                *x = it.next().unwrap();
+                *h = it.next().unwrap();
+                *v = it.next().unwrap();
+                Ok(())
+            }
+        }
+    }
+
+    /// SlowMo outer update (Eq. 2–3): updates `x0` and `u` in place.
+    pub fn slowmo_update(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        u: &mut Vec<f32>,
+        gamma: f32,
+        alpha: f32,
+        beta: f32,
+    ) -> Result<()> {
+        match self {
+            Kernels::Native => {
+                super::slowmo_update(x0, xt, u, gamma, alpha, beta);
+                Ok(())
+            }
+            Kernels::Pjrt { slowmo, .. } => {
+                let d = x0.len();
+                let out = slowmo.exec(&[
+                    Arg::F32(x0, &[d]),
+                    Arg::F32(xt, &[d]),
+                    Arg::F32(u, &[d]),
+                    Arg::F32(&[gamma], &[1]),
+                    Arg::F32(&[alpha], &[1]),
+                    Arg::F32(&[beta], &[1]),
+                ])?;
+                let mut it = out.into_iter();
+                *x0 = it.next().unwrap();
+                *u = it.next().unwrap();
+                Ok(())
+            }
+        }
+    }
+
+    /// Gossip mixing `x <- a*x + b*y`.
+    pub fn axpy(
+        &self,
+        x: &mut Vec<f32>,
+        y: &[f32],
+        a: f32,
+        b: f32,
+    ) -> Result<()> {
+        match self {
+            Kernels::Native => {
+                super::axpy_mix_inplace(x, y, a, b);
+                Ok(())
+            }
+            Kernels::Pjrt { axpy, .. } => {
+                let d = x.len();
+                let out = axpy.exec(&[
+                    Arg::F32(x, &[d]),
+                    Arg::F32(y, &[d]),
+                    Arg::F32(&[a], &[1]),
+                    Arg::F32(&[b], &[1]),
+                ])?;
+                *x = out.into_iter().next().unwrap();
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inner_opt_names_and_moments() {
+        assert_eq!(InnerOpt::nesterov_default().name(), "nesterov-sgd");
+        assert_eq!(InnerOpt::adam_default().name(), "adam");
+        assert!(InnerOpt::adam_default().uses_second_moment());
+        assert!(!InnerOpt::nesterov_default().uses_second_moment());
+    }
+
+    #[test]
+    fn native_kernels_match_direct_calls() {
+        let k = Kernels::Native;
+        let inner = InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 };
+        let mut x = vec![1.0f32; 8];
+        let mut h = vec![0.0f32; 8];
+        let mut v = vec![];
+        let g = vec![0.5f32; 8];
+        k.inner_step(&inner, &mut x, &mut h, &mut v, &g, 0.1, 1).unwrap();
+        let mut x2 = vec![1.0f32; 8];
+        let mut h2 = vec![0.0f32; 8];
+        crate::optim::nesterov_step(&mut x2, &mut h2, &g, 0.1, 0.9, 0.0);
+        assert_eq!(x, x2);
+        assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn native_adam_and_slowmo_and_axpy() {
+        let k = Kernels::Native;
+        let inner = InnerOpt::adam_default();
+        let mut x = vec![0.0f32; 4];
+        let mut h = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        let g = vec![1.0f32; 4];
+        k.inner_step(&inner, &mut x, &mut h, &mut v, &g, 1e-3, 1).unwrap();
+        assert!(x.iter().all(|&xi| xi < 0.0));
+
+        let mut x0 = vec![1.0f32; 4];
+        let mut u = vec![0.0f32; 4];
+        k.slowmo_update(&mut x0, &x, &mut u, 0.1, 1.0, 0.0).unwrap();
+        assert!(crate::util::allclose(&x0, &x, 1e-6, 1e-7));
+
+        let mut a = vec![2.0f32; 4];
+        k.axpy(&mut a, &[4.0; 4], 0.5, 0.25).unwrap();
+        assert!(crate::util::allclose(&a, &[2.0; 4], 1e-6, 1e-7));
+    }
+}

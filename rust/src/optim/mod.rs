@@ -1,0 +1,237 @@
+//! Native Rust mirrors of the Layer-1 optimizer kernels.
+//!
+//! These exactly mirror `python/compile/kernels/ref.py` and serve three
+//! purposes:
+//! 1. golden-vector verification that the Rust and JAX stacks agree
+//!    (`rust/tests/golden.rs` checks against `artifacts/golden.json`);
+//! 2. a native execution engine (`runtime::Engine::Native`) so every
+//!    algorithm can also run without PJRT — used heavily by unit tests and
+//!    as the perf baseline the PJRT path is compared to;
+//! 3. the in-place hot-path variants the coordinator uses for mixing.
+//!
+//! All functions are allocation-free in-place updates over `&mut [f32]`.
+
+pub mod kernels;
+
+/// Fused Nesterov-momentum SGD step (paper Alg. 2/4 inner step).
+///
+/// `h <- beta0*h + (g + wd*x)`; `x <- x - gamma*(beta0*h + g + wd*x)`.
+pub fn nesterov_step(
+    x: &mut [f32],
+    h: &mut [f32],
+    g: &[f32],
+    gamma: f32,
+    beta0: f32,
+    wd: f32,
+) {
+    assert_eq!(x.len(), h.len());
+    assert_eq!(x.len(), g.len());
+    for i in 0..x.len() {
+        let gi = g[i] + wd * x[i];
+        let hn = beta0 * h[i] + gi;
+        h[i] = hn;
+        x[i] -= gamma * (beta0 * hn + gi);
+    }
+}
+
+/// Fused Adam step with bias correction (paper Table C.1). `step` is the
+/// 1-based global counter `l`.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step(
+    x: &mut [f32],
+    h: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    gamma: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    step: f32,
+) {
+    assert_eq!(x.len(), h.len());
+    assert_eq!(x.len(), v.len());
+    assert_eq!(x.len(), g.len());
+    let bc1 = 1.0 - beta1.powf(step);
+    let bc2 = 1.0 - beta2.powf(step);
+    for i in 0..x.len() {
+        let gi = g[i];
+        let hn = beta1 * h[i] + (1.0 - beta1) * gi;
+        let vn = beta2 * v[i] + (1.0 - beta2) * gi * gi;
+        h[i] = hn;
+        v[i] = vn;
+        let h_hat = hn / bc1;
+        let v_hat = vn / bc2;
+        x[i] -= gamma * h_hat / (v_hat.sqrt() + eps);
+    }
+}
+
+/// Fused SlowMo outer update (paper Eq. 2–3), in place:
+/// `u <- beta*u + (x0 - xt)/gamma`; returns the new outer iterate in `x0`.
+pub fn slowmo_update(
+    x0: &mut [f32],
+    xt: &[f32],
+    u: &mut [f32],
+    gamma: f32,
+    alpha: f32,
+    beta: f32,
+) {
+    assert_eq!(x0.len(), xt.len());
+    assert_eq!(x0.len(), u.len());
+    for i in 0..x0.len() {
+        let un = beta * u[i] + (x0[i] - xt[i]) / gamma;
+        u[i] = un;
+        x0[i] -= alpha * gamma * un;
+    }
+}
+
+/// `x <- a*x + b*y` (gossip mixing / push-sum combine).
+pub fn axpy_mix_inplace(x: &mut [f32], y: &[f32], a: f32, b: f32) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        x[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// `out <- a*x + b*y` into a separate buffer.
+pub fn axpy_mix(out: &mut [f32], x: &[f32], y: &[f32], a: f32, b: f32) {
+    assert_eq!(out.len(), x.len());
+    assert_eq!(out.len(), y.len());
+    for i in 0..out.len() {
+        out[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// `acc += x` (reduction building block).
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for i in 0..acc.len() {
+        acc[i] += x[i];
+    }
+}
+
+/// `x *= s`.
+pub fn scale(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Mean of `m` equal-length vectors into `out`.
+pub fn mean_into(out: &mut [f32], vecs: &[&[f32]]) {
+    assert!(!vecs.is_empty());
+    out.copy_from_slice(vecs[0]);
+    for v in &vecs[1..] {
+        add_assign(out, v);
+    }
+    scale(out, 1.0 / vecs.len() as f32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::allclose;
+
+    #[test]
+    fn nesterov_zero_momentum_is_sgd() {
+        let mut x = vec![1.0, 2.0];
+        let mut h = vec![0.0, 0.0];
+        nesterov_step(&mut x, &mut h, &[0.5, -0.5], 0.1, 0.0, 0.0);
+        assert!(allclose(&x, &[0.95, 2.05], 1e-6, 1e-7));
+        assert!(allclose(&h, &[0.5, -0.5], 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn nesterov_momentum_accumulates() {
+        let mut x = vec![0.0];
+        let mut h = vec![0.0];
+        // Two steps with the same gradient: direction grows with momentum.
+        nesterov_step(&mut x, &mut h, &[1.0], 1.0, 0.9, 0.0);
+        let first = -x[0]; // = 0.9*1 + 1 = 1.9
+        assert!((first - 1.9).abs() < 1e-6);
+        nesterov_step(&mut x, &mut h, &[1.0], 1.0, 0.9, 0.0);
+        // h = 0.9*1 + 1 = 1.9; update = 0.9*1.9 + 1 = 2.71
+        assert!((-x[0] - (1.9 + 2.71)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut x = vec![10.0];
+        let mut h = vec![0.0];
+        nesterov_step(&mut x, &mut h, &[0.0], 0.1, 0.0, 0.1);
+        assert!(x[0] < 10.0);
+    }
+
+    #[test]
+    fn adam_first_step_sign_like() {
+        let mut x = vec![0.0, 0.0];
+        let mut h = vec![0.0, 0.0];
+        let mut v = vec![0.0, 0.0];
+        adam_step(&mut x, &mut h, &mut v, &[3.0, -0.01], 1e-3, 0.9, 0.98,
+                  1e-12, 1.0);
+        assert!((x[0] + 1e-3).abs() < 1e-6, "{}", x[0]);
+        assert!((x[1] - 1e-3).abs() < 1e-6, "{}", x[1]);
+    }
+
+    #[test]
+    fn slowmo_beta0_alpha1_adopts_average() {
+        let mut x0 = vec![1.0, 2.0, 3.0];
+        let xt = vec![0.5, 1.5, 2.5];
+        let mut u = vec![0.0; 3];
+        slowmo_update(&mut x0, &xt, &mut u, 0.05, 1.0, 0.0);
+        assert!(allclose(&x0, &xt, 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn slowmo_buffer_lr_invariance() {
+        // u update divides by gamma, so u after one update is independent
+        // of gamma given the same displacement.
+        let x0 = vec![1.0f32; 4];
+        let xt = vec![0.0f32; 4];
+        for &gamma in &[0.1, 0.01] {
+            let mut x = x0.clone();
+            let mut u = vec![0.0; 4];
+            slowmo_update(&mut x, &xt, &mut u, gamma, 1.0, 0.7);
+            assert!(allclose(&u, &[1.0 / gamma; 4], 1e-5, 1e-6));
+        }
+    }
+
+    #[test]
+    fn slowmo_momentum_carries_over() {
+        let mut x0 = vec![0.0f32];
+        let xt = vec![0.0f32];
+        let mut u = vec![2.0f32];
+        // No displacement: u' = beta*u; x' = -alpha*gamma*beta*u.
+        slowmo_update(&mut x0, &xt, &mut u, 0.1, 1.0, 0.5);
+        assert!((u[0] - 1.0).abs() < 1e-6);
+        assert!((x0[0] + 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_variants_agree() {
+        let x = vec![1.0, 2.0];
+        let y = vec![3.0, 4.0];
+        let mut out = vec![0.0; 2];
+        axpy_mix(&mut out, &x, &y, 0.25, 0.75);
+        let mut xin = x.clone();
+        axpy_mix_inplace(&mut xin, &y, 0.25, 0.75);
+        assert_eq!(out, xin);
+        assert!(allclose(&out, &[2.5, 3.5], 1e-6, 1e-7));
+    }
+
+    #[test]
+    fn mean_into_matches_manual() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 6.0];
+        let mut out = vec![0.0; 2];
+        mean_into(&mut out, &[&a, &b]);
+        assert!(allclose(&out, &[2.0, 4.0], 1e-6, 1e-7));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        let mut x = vec![0.0; 2];
+        let mut h = vec![0.0; 3];
+        nesterov_step(&mut x, &mut h, &[0.0; 2], 0.1, 0.9, 0.0);
+    }
+}

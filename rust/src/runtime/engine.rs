@@ -1,0 +1,212 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute from
+//! many worker threads.
+//!
+//! Thread-safety: the PJRT C API guarantees `PJRT_LoadedExecutable_Execute`
+//! and buffer transfers are thread-safe; the rust wrapper types are raw
+//! pointers and therefore `!Send` by default, so we wrap them in shim types
+//! with explicit `unsafe impl Send + Sync`. Set `SLOWMO_PJRT_SERIALIZE=1`
+//! to route every execute through a global mutex instead (diagnostic mode).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::manifest::GraphInfo;
+
+/// An argument to a compiled graph.
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> Arg<'a> {
+    pub fn f32v(data: &'a [f32]) -> Self {
+        Arg::F32(data, &[])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Arg::F32(data, shape) => {
+                let l = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    l
+                } else {
+                    let dims: Vec<i64> =
+                        shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+            Arg::I32(data, shape) => {
+                let l = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    l
+                } else {
+                    let dims: Vec<i64> =
+                        shape.iter().map(|&d| d as i64).collect();
+                    l.reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Arg::F32(d, _) => d.len(),
+            Arg::I32(d, _) => d.len(),
+        }
+    }
+}
+
+struct SharedClient(xla::PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+struct SharedExec(xla::PjRtLoadedExecutable);
+unsafe impl Send for SharedExec {}
+unsafe impl Sync for SharedExec {}
+
+/// Handle to one compiled executable.
+#[derive(Clone)]
+pub struct ExecHandle {
+    exec: Arc<SharedExec>,
+    pub info: GraphInfo,
+    serialize: bool,
+}
+
+static EXEC_LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+
+impl ExecHandle {
+    /// Execute with the given args; returns the flattened f32 outputs
+    /// (one `Vec<f32>` per output tensor; i32 outputs are converted).
+    pub fn exec(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.info.file,
+                self.info.inputs.len(),
+                args.len()
+            );
+        }
+        for (i, (a, want)) in args.iter().zip(&self.info.inputs).enumerate() {
+            if a.len() != want.elem_count() {
+                bail!(
+                    "{}: arg {i} has {} elements, signature wants {} {:?}",
+                    self.info.file,
+                    a.len(),
+                    want.elem_count(),
+                    want.shape
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let _guard = if self.serialize {
+            Some(EXEC_LOCK.get_or_init(|| Mutex::new(())).lock().unwrap())
+        } else {
+            None
+        };
+        let result = self.exec.0.execute::<xla::Literal>(&literals)?;
+        drop(_guard);
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("empty execute result"))?
+            .to_literal_sync()?;
+        // Graphs are lowered with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let ty = p.ty()?;
+            let v: Vec<f32> = match ty {
+                xla::ElementType::F32 => p.to_vec::<f32>()?,
+                xla::ElementType::S32 => p
+                    .to_vec::<i32>()?
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect(),
+                other => bail!("output {i}: unsupported dtype {other:?}"),
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Compile-once cache of executables for one artifacts directory.
+pub struct Engine {
+    client: SharedClient,
+    dir: String,
+    cache: Mutex<BTreeMap<String, ExecHandle>>,
+    serialize: bool,
+}
+
+impl Engine {
+    /// Create a PJRT CPU engine rooted at `dir` (the artifacts directory).
+    pub fn cpu(dir: &str) -> Result<Arc<Self>> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Arc::new(Self {
+            client: SharedClient(client),
+            dir: dir.to_string(),
+            cache: Mutex::new(BTreeMap::new()),
+            serialize: std::env::var("SLOWMO_PJRT_SERIALIZE").is_ok(),
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.0.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the graph described by `info`.
+    pub fn load(&self, info: &GraphInfo) -> Result<ExecHandle> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(h) = cache.get(&info.file) {
+                return Ok(h.clone());
+            }
+        }
+        let path = format!("{}/{}", self.dir, info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exec = self
+            .client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))
+            .context("PJRT compile failed")?;
+        let handle = ExecHandle {
+            exec: Arc::new(SharedExec(exec)),
+            info: info.clone(),
+            serialize: self.serialize,
+        };
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(info.file.clone(), handle.clone());
+        Ok(handle)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/ (integration
+    // level); here we only test arg validation plumbing that doesn't need a
+    // PJRT client.
+    use super::*;
+
+    #[test]
+    fn arg_lengths() {
+        let a = Arg::F32(&[1.0, 2.0], &[2]);
+        assert_eq!(a.len(), 2);
+        let b = Arg::I32(&[1, 2, 3, 4], &[2, 2]);
+        assert_eq!(b.len(), 4);
+    }
+}

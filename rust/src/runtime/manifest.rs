@@ -1,0 +1,322 @@
+//! Typed view of `artifacts/manifest.json`.
+
+use crate::jsonx::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// One tensor in a graph signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoDesc {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoDesc {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One lowered graph (train or eval) and its signature.
+#[derive(Clone, Debug)]
+pub struct GraphInfo {
+    pub file: String,
+    pub inputs: Vec<IoDesc>,
+    pub outputs: Vec<IoDesc>,
+}
+
+/// What the Rust data generator must synthesize for a preset.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataDesc {
+    Lm { vocab: usize, seq_len: usize, batch: usize },
+    Class { in_dim: usize, classes: usize, batch: usize },
+    Image { hw: usize, in_ch: usize, classes: usize, batch: usize },
+    Quad { dim: usize, cond: f64 },
+}
+
+impl DataDesc {
+    pub fn batch(&self) -> usize {
+        match self {
+            DataDesc::Lm { batch, .. } => *batch,
+            DataDesc::Class { batch, .. } => *batch,
+            DataDesc::Image { batch, .. } => *batch,
+            DataDesc::Quad { .. } => 1,
+        }
+    }
+
+    /// Tokens (LM) or examples (classifiers) consumed per training step;
+    /// used to normalize loss curves across presets.
+    pub fn examples_per_step(&self) -> usize {
+        match self {
+            DataDesc::Lm { batch, seq_len, .. } => batch * seq_len,
+            _ => self.batch(),
+        }
+    }
+}
+
+/// One model preset exported by `python -m compile.aot`.
+#[derive(Clone, Debug)]
+pub struct PresetInfo {
+    pub name: String,
+    pub family: String,
+    pub flat_len: usize,
+    pub raw_len: usize,
+    pub init_file: String,
+    pub data: DataDesc,
+    pub train: GraphInfo,
+    pub eval: GraphInfo,
+}
+
+/// Optimizer graphs for a given flat length d.
+#[derive(Clone, Debug)]
+pub struct OptimInfo {
+    pub d: usize,
+    pub graphs: BTreeMap<String, GraphInfo>, // nesterov/adam/slowmo/axpy
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub optim: BTreeMap<usize, OptimInfo>,
+}
+
+fn io_desc(j: &Json) -> Result<IoDesc> {
+    let shape = j
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("io desc missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(|d| d.as_str())
+        .ok_or_else(|| anyhow!("io desc missing dtype"))?
+        .to_string();
+    Ok(IoDesc { shape, dtype })
+}
+
+fn graph_info(j: &Json) -> Result<GraphInfo> {
+    let file = j
+        .get("file")
+        .and_then(|f| f.as_str())
+        .ok_or_else(|| anyhow!("graph missing file"))?
+        .to_string();
+    let parse_ios = |key: &str| -> Result<Vec<IoDesc>> {
+        j.get(key)
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("graph missing {key}"))?
+            .iter()
+            .map(io_desc)
+            .collect()
+    };
+    Ok(GraphInfo {
+        file,
+        inputs: parse_ios("inputs")?,
+        outputs: parse_ios("outputs")?,
+    })
+}
+
+fn data_desc(j: &Json) -> Result<DataDesc> {
+    let kind = j
+        .get("kind")
+        .and_then(|k| k.as_str())
+        .ok_or_else(|| anyhow!("data missing kind"))?;
+    let gu = |key: &str| -> Result<usize> {
+        j.get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("data missing {key}"))
+    };
+    Ok(match kind {
+        "lm" => DataDesc::Lm {
+            vocab: gu("vocab")?,
+            seq_len: gu("seq_len")?,
+            batch: gu("batch")?,
+        },
+        "class" => DataDesc::Class {
+            in_dim: gu("in_dim")?,
+            classes: gu("classes")?,
+            batch: gu("batch")?,
+        },
+        "image" => DataDesc::Image {
+            hw: gu("hw")?,
+            in_ch: gu("in_ch")?,
+            classes: gu("classes")?,
+            batch: gu("batch")?,
+        },
+        "quad" => DataDesc::Quad {
+            dim: gu("dim")?,
+            cond: j
+                .get("cond")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("data missing cond"))?,
+        },
+        other => bail!("unknown data kind {other:?}"),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Self> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path}"))?;
+        Self::from_json_text(&text, dir)
+    }
+
+    pub fn from_json_text(text: &str, dir: &str) -> Result<Self> {
+        let j = parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j
+            .get("presets")
+            .and_then(|p| p.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing presets"))?
+        {
+            let info = PresetInfo {
+                name: name.clone(),
+                family: pj
+                    .get("family")
+                    .and_then(|f| f.as_str())
+                    .ok_or_else(|| anyhow!("preset {name} missing family"))?
+                    .to_string(),
+                flat_len: pj
+                    .get("flat_len")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("preset {name} missing flat_len"))?,
+                raw_len: pj
+                    .get("raw_len")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow!("preset {name} missing raw_len"))?,
+                init_file: pj
+                    .get("init_file")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                data: data_desc(
+                    pj.get("data")
+                        .ok_or_else(|| anyhow!("preset {name} missing data"))?,
+                )?,
+                train: graph_info(
+                    pj.get("train")
+                        .ok_or_else(|| anyhow!("preset {name} missing train"))?,
+                )?,
+                eval: graph_info(
+                    pj.get("eval")
+                        .ok_or_else(|| anyhow!("preset {name} missing eval"))?,
+                )?,
+            };
+            presets.insert(name.clone(), info);
+        }
+        let mut optim = BTreeMap::new();
+        if let Some(om) = j.get("optim").and_then(|o| o.as_obj()) {
+            for (dstr, oj) in om {
+                let d: usize = dstr
+                    .parse()
+                    .map_err(|_| anyhow!("bad optim key {dstr}"))?;
+                let mut graphs = BTreeMap::new();
+                for (gname, gj) in oj
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("optim {dstr} not an object"))?
+                {
+                    graphs.insert(gname.clone(), graph_info(gj)?);
+                }
+                optim.insert(d, OptimInfo { d, graphs });
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_string(),
+            presets,
+            optim,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow!("preset {name:?} not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn optim_for(&self, d: usize) -> Result<&OptimInfo> {
+        self.optim
+            .get(&d)
+            .ok_or_else(|| anyhow!("no optimizer graphs for d={d}"))
+    }
+
+    /// Load the exported initial parameter vector for a preset
+    /// (little-endian f32 raw file).
+    pub fn load_init(&self, preset: &PresetInfo) -> Result<Vec<f32>> {
+        let path = format!("{}/{}", self.dir, preset.init_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path}"))?;
+        if bytes.len() != preset.flat_len * 4 {
+            bail!(
+                "{path}: expected {} bytes, got {}",
+                preset.flat_len * 4,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "presets": {
+        "p": {
+          "family": "mlp", "flat_len": 256, "raw_len": 250,
+          "init_file": "init.p.f32",
+          "data": {"kind": "class", "in_dim": 8, "classes": 3, "batch": 4},
+          "train": {"file": "p.train.hlo.txt",
+                    "inputs": [{"index":0,"shape":[256],"dtype":"float32"},
+                               {"index":1,"shape":[4,8],"dtype":"float32"},
+                               {"index":2,"shape":[4],"dtype":"int32"}],
+                    "outputs": [{"index":0,"shape":[],"dtype":"float32"},
+                                {"index":1,"shape":[256],"dtype":"float32"}]},
+          "eval": {"file": "p.eval.hlo.txt", "inputs": [], "outputs": []}
+        }
+      },
+      "optim": {
+        "256": {"axpy": {"file": "opt.axpy.d256.hlo.txt",
+                          "inputs": [], "outputs": []}}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(SAMPLE, "/tmp").unwrap();
+        let p = m.preset("p").unwrap();
+        assert_eq!(p.flat_len, 256);
+        assert_eq!(p.train.inputs.len(), 3);
+        assert_eq!(p.train.inputs[1].shape, vec![4, 8]);
+        assert_eq!(p.train.outputs[0].elem_count(), 1); // rank-0 scalar
+        assert_eq!(
+            p.data,
+            DataDesc::Class { in_dim: 8, classes: 3, batch: 4 }
+        );
+        assert!(m.optim_for(256).unwrap().graphs.contains_key("axpy"));
+        assert!(m.optim_for(512).is_err());
+        assert!(m.preset("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::from_json_text("{}", ".").is_err());
+        assert!(Manifest::from_json_text("[1]", ".").is_err());
+        assert!(Manifest::from_json_text("not json", ".").is_err());
+    }
+
+    #[test]
+    fn data_desc_examples_per_step() {
+        let lm = DataDesc::Lm { vocab: 10, seq_len: 8, batch: 2 };
+        assert_eq!(lm.examples_per_step(), 16);
+        let c = DataDesc::Class { in_dim: 4, classes: 2, batch: 32 };
+        assert_eq!(c.examples_per_step(), 32);
+    }
+}

@@ -1,0 +1,34 @@
+//! Runtime: load AOT artifacts (HLO text) and execute them via PJRT.
+//!
+//! - [`manifest`] — typed view of `artifacts/manifest.json` (what the AOT
+//!   exporter produced: graphs, shapes, data descriptors, param packing).
+//! - [`engine`] — the PJRT CPU execution engine (compile-once,
+//!   execute-many, thread-safe) plus buffer plumbing.
+//!
+//! The interchange format is HLO *text* (`HloModuleProto::from_text_file`);
+//! see DESIGN.md and /opt/xla-example/README.md for why serialized protos
+//! from jax >= 0.5 are rejected by xla_extension 0.5.1.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, ExecHandle};
+pub use manifest::{DataDesc, GraphInfo, Manifest, PresetInfo};
+
+/// Default artifacts directory, overridable with `SLOWMO_ARTIFACTS`.
+pub fn artifacts_dir() -> String {
+    std::env::var("SLOWMO_ARTIFACTS").unwrap_or_else(|_| {
+        // Walk up from cwd looking for an `artifacts/` dir so tests work
+        // from both the workspace root and `rust/`.
+        let mut dir = std::env::current_dir().unwrap_or_default();
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand.to_string_lossy().into_owned();
+            }
+            if !dir.pop() {
+                return "artifacts".to_string();
+            }
+        }
+    })
+}

@@ -1,0 +1,346 @@
+//! The SlowMo outer-loop controller (paper Algorithm 1).
+//!
+//! Wraps any [`BaseAlgorithm`]: after every τ inner steps it
+//! (1) exact-averages worker parameters with the ring allreduce (line 6),
+//! (2) applies the slow-momentum update (lines 7–8) through the Layer-1
+//! `slowmo_update` kernel, and (3) applies the configured base-optimizer
+//! buffer strategy (line 2; App. B.4).
+//!
+//! Framework special cases (all covered by tests):
+//! - α=1, β=0, base=Local  → Local SGD
+//! - β>0, base=Local       → BMUF
+//! - τ=1, α=1, β=0         → AR-SGD (up to gradient- vs param-averaging)
+//! - m=1, β=0, α∈(0,1]     → Lookahead
+//! - `exact_average=false` → SGP-SlowMo-noaverage (paper §6)
+
+use crate::algorithms::{BaseAlgorithm, WorkerState};
+use crate::net::{ring_allreduce_mean, Fabric};
+use crate::optim::kernels::Kernels;
+use anyhow::Result;
+
+/// How base-optimizer buffers are treated at each outer boundary
+/// (paper Alg. 1 line 2; App. B.4 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferStrategy {
+    /// Zero momentum buffers, restart the Adam counter. Paper default for
+    /// Nesterov-SGD bases (CIFAR/ImageNet).
+    Reset,
+    /// Keep buffers. Paper default for Adam bases (WMT).
+    Maintain,
+    /// ALLREDUCE-average buffers across workers (extra communication).
+    Average,
+}
+
+impl BufferStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reset" => Some(Self::Reset),
+            "maintain" => Some(Self::Maintain),
+            "average" => Some(Self::Average),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Reset => "reset",
+            Self::Maintain => "maintain",
+            Self::Average => "average",
+        }
+    }
+}
+
+/// SlowMo hyperparameters.
+#[derive(Clone, Debug)]
+pub struct SlowMoCfg {
+    /// Slow learning rate α (paper fixes α=1 throughout).
+    pub alpha: f32,
+    /// Slow momentum β (paper tunes 0.4–0.8).
+    pub beta: f32,
+    /// Inner steps per outer iteration τ.
+    pub tau: u64,
+    pub buffers: BufferStrategy,
+    /// `false` = skip line 6 (SGP-SlowMo-noaverage, §6).
+    pub exact_average: bool,
+}
+
+impl SlowMoCfg {
+    pub fn new(alpha: f32, beta: f32, tau: u64) -> Self {
+        assert!(tau >= 1, "tau must be >= 1");
+        Self {
+            alpha,
+            beta,
+            tau,
+            buffers: BufferStrategy::Reset,
+            exact_average: true,
+        }
+    }
+
+    pub fn with_buffers(mut self, b: BufferStrategy) -> Self {
+        self.buffers = b;
+        self
+    }
+
+    pub fn no_average(mut self) -> Self {
+        self.exact_average = false;
+        self
+    }
+
+    /// Is `k+1` (1-based step count) an outer boundary?
+    pub fn is_boundary(&self, k: u64) -> bool {
+        (k + 1) % self.tau == 0
+    }
+}
+
+/// Per-worker outer-loop state: the slow momentum buffer u_t and the outer
+/// iterate x_{t,0}. After every exact average these are identical across
+/// workers (paper's "always synchronized" invariant — asserted in tests);
+/// under the noaverage variant they may drift.
+#[derive(Clone, Debug)]
+pub struct OuterState {
+    pub u: Vec<f32>,
+    pub x0: Vec<f32>,
+    /// Outer iterations completed.
+    pub t: u64,
+}
+
+impl OuterState {
+    pub fn new(init: &[f32]) -> Self {
+        Self {
+            u: vec![0.0; init.len()],
+            x0: init.to_vec(),
+            t: 0,
+        }
+    }
+}
+
+/// Execute one outer boundary (paper Alg. 1 lines 6–8 + line 2 for the
+/// next iteration) for `worker`. Must be called by all workers
+/// concurrently when `exact_average` or `buffers == Average` (collectives).
+///
+/// `gamma` is the fast learning rate γ_t used during the inner loop.
+/// Returns the updated simulated clock.
+#[allow(clippy::too_many_arguments)]
+pub fn outer_update(
+    cfg: &SlowMoCfg,
+    algo: &dyn BaseAlgorithm,
+    fabric: &Fabric,
+    kernels: &Kernels,
+    worker: usize,
+    state: &mut WorkerState,
+    outer: &mut OuterState,
+    gamma: f32,
+    mut clock: f64,
+) -> Result<f64> {
+    // Line 6: exact average x_{t,tau} (skip for the noaverage variant).
+    if cfg.exact_average {
+        clock = ring_allreduce_mean(fabric, worker, &mut state.x, clock);
+        algo.on_exact_average(state);
+    }
+
+    // Lines 7-8 via the fused L1 kernel: updates (x0, u) in place.
+    kernels.slowmo_update(
+        &mut outer.x0,
+        &state.x,
+        &mut outer.u,
+        gamma,
+        cfg.alpha,
+        cfg.beta,
+    )?;
+
+    // Adopt the new outer iterate as the inner starting point.
+    state.x.copy_from_slice(&outer.x0);
+    state.w = 1.0;
+    state.z.copy_from_slice(&state.x);
+
+    // Line 2 (for the next outer iteration): buffer strategy.
+    match cfg.buffers {
+        BufferStrategy::Reset => state.reset_buffers(),
+        BufferStrategy::Maintain => {}
+        BufferStrategy::Average => {
+            clock = ring_allreduce_mean(fabric, worker, &mut state.h, clock);
+            if !state.v.is_empty() {
+                clock =
+                    ring_allreduce_mean(fabric, worker, &mut state.v, clock);
+            }
+        }
+    }
+    outer.t += 1;
+    Ok(clock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Local;
+    use crate::exec::run_workers;
+    use crate::net::CostModel;
+    use crate::optim::kernels::InnerOpt;
+    use crate::util::allclose;
+
+    fn run_outer(
+        cfg: &SlowMoCfg,
+        m: usize,
+        states: Vec<WorkerState>,
+        outers: Vec<OuterState>,
+        gamma: f32,
+    ) -> Vec<(WorkerState, OuterState)> {
+        let fabric = Fabric::new(m, CostModel::free());
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
+        let kernels = Kernels::Native;
+        run_workers(m, |w| {
+            let mut st = states[w].clone();
+            let mut ou = outers[w].clone();
+            outer_update(cfg, &algo, &fabric, &kernels, w, &mut st, &mut ou,
+                         gamma, 0.0)
+                .unwrap();
+            (st, ou)
+        })
+    }
+
+    fn mk_states(m: usize, d: usize) -> (Vec<WorkerState>, Vec<OuterState>) {
+        let inner = InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 };
+        let init = vec![1.0f32; d];
+        let mut states = Vec::new();
+        let mut outers = Vec::new();
+        for w in 0..m {
+            let mut s = WorkerState::new(&init, &inner);
+            // Simulate divergent inner trajectories.
+            for (i, x) in s.x.iter_mut().enumerate() {
+                *x = (w * d + i) as f32 * 0.01;
+            }
+            s.h = vec![w as f32; d];
+            states.push(s);
+            outers.push(OuterState::new(&init));
+        }
+        (states, outers)
+    }
+
+    #[test]
+    fn beta0_alpha1_adopts_exact_average() {
+        // SlowMo(alpha=1, beta=0) must set every worker to the average of
+        // the x_{t,tau}'s — the Local SGD equivalence.
+        let m = 3;
+        let d = 8;
+        let (states, outers) = mk_states(m, d);
+        let want: Vec<f32> = (0..d)
+            .map(|i| {
+                (0..m).map(|w| states[w].x[i]).sum::<f32>() / m as f32
+            })
+            .collect();
+        let cfg = SlowMoCfg::new(1.0, 0.0, 4);
+        let out = run_outer(&cfg, m, states, outers, 0.1);
+        for (st, ou) in &out {
+            assert!(allclose(&st.x, &want, 1e-5, 1e-6));
+            assert!(allclose(&ou.x0, &want, 1e-5, 1e-6));
+        }
+    }
+
+    #[test]
+    fn workers_synchronized_after_update() {
+        let m = 4;
+        let (states, outers) = mk_states(m, 16);
+        let cfg = SlowMoCfg::new(1.0, 0.7, 4);
+        let out = run_outer(&cfg, m, states, outers, 0.05);
+        for (st, ou) in &out[1..] {
+            assert_eq!(st.x, out[0].0.x, "x must be identical");
+            assert_eq!(ou.u, out[0].1.u, "u must be identical");
+        }
+        assert_eq!(out[0].1.t, 1);
+    }
+
+    #[test]
+    fn reset_strategy_zeroes_buffers_maintain_keeps() {
+        let m = 2;
+        let (states, outers) = mk_states(m, 4);
+        let reset = SlowMoCfg::new(1.0, 0.5, 4);
+        let out = run_outer(&reset, m, states.clone(), outers.clone(), 0.1);
+        assert!(out[1].0.h.iter().all(|&h| h == 0.0));
+
+        let maintain = SlowMoCfg::new(1.0, 0.5, 4)
+            .with_buffers(BufferStrategy::Maintain);
+        let out = run_outer(&maintain, m, states, outers, 0.1);
+        assert!(out[1].0.h.iter().all(|&h| h == 1.0)); // worker 1's buffer
+    }
+
+    #[test]
+    fn average_strategy_averages_buffers() {
+        let m = 2;
+        let (states, outers) = mk_states(m, 4);
+        let cfg = SlowMoCfg::new(1.0, 0.5, 4)
+            .with_buffers(BufferStrategy::Average);
+        let out = run_outer(&cfg, m, states, outers, 0.1);
+        // h was w (0 and 1) -> averaged to 0.5 on both workers.
+        for (st, _) in &out {
+            assert!(st.h.iter().all(|&h| (h - 0.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn noaverage_variant_keeps_local_x() {
+        let m = 2;
+        let (states, outers) = mk_states(m, 4);
+        let x_before: Vec<Vec<f32>> =
+            states.iter().map(|s| s.x.clone()).collect();
+        let cfg = SlowMoCfg::new(1.0, 0.0, 4).no_average();
+        let out = run_outer(&cfg, m, states, outers, 0.1);
+        // With beta=0, alpha=1 and no averaging, each worker adopts its own
+        // x (not the average) — workers stay apart.
+        for (w, (st, _)) in out.iter().enumerate() {
+            assert!(allclose(&st.x, &x_before[w], 1e-5, 1e-6));
+        }
+        assert_ne!(out[0].0.x, out[1].0.x);
+    }
+
+    #[test]
+    fn momentum_accumulates_across_outer_iterations() {
+        // Two outer updates with the same displacement: second step moves
+        // farther (u compounds).
+        let d = 4;
+        let cfg = SlowMoCfg::new(1.0, 0.5, 1);
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let fabric = Fabric::new(1, CostModel::free());
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        let mut st = WorkerState::new(&vec![10.0; d], &inner);
+        let mut ou = OuterState::new(&vec![10.0; d]);
+        let gamma = 1.0;
+        // Inner loop "moved" x down by 1 each outer iteration.
+        st.x.iter_mut().for_each(|x| *x -= 1.0);
+        outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
+                     gamma, 0.0)
+            .unwrap();
+        let x1 = ou.x0[0]; // 10 - 1*(1) = 9
+        assert!((x1 - 9.0).abs() < 1e-6);
+        st.x.iter_mut().for_each(|x| *x -= 1.0);
+        outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
+                     gamma, 0.0)
+            .unwrap();
+        // u = 0.5*1 + 1 = 1.5 -> x = 9 - 1.5 = 7.5
+        assert!((ou.x0[0] - 7.5).abs() < 1e-6, "{}", ou.x0[0]);
+    }
+
+    #[test]
+    fn boundary_arithmetic() {
+        let cfg = SlowMoCfg::new(1.0, 0.5, 12);
+        assert!(!cfg.is_boundary(0));
+        assert!(cfg.is_boundary(11));
+        assert!(cfg.is_boundary(23));
+        assert!(!cfg.is_boundary(12));
+        let c1 = SlowMoCfg::new(1.0, 0.0, 1);
+        assert!(c1.is_boundary(0));
+        assert!(c1.is_boundary(5));
+    }
+
+    #[test]
+    fn buffer_strategy_parse() {
+        assert_eq!(BufferStrategy::parse("reset"),
+                   Some(BufferStrategy::Reset));
+        assert_eq!(BufferStrategy::parse("maintain"),
+                   Some(BufferStrategy::Maintain));
+        assert_eq!(BufferStrategy::parse("average"),
+                   Some(BufferStrategy::Average));
+        assert_eq!(BufferStrategy::parse("bogus"), None);
+        assert_eq!(BufferStrategy::Reset.name(), "reset");
+    }
+}

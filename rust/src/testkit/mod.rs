@@ -1,0 +1,285 @@
+//! Property-based testing mini-framework (proptest replacement).
+//!
+//! Provides seeded generators and a `forall` runner with shrinking for the
+//! coordinator invariant tests (topology stochasticity, collective
+//! correctness, optimizer equivalences). Failures print the seed + case so
+//! they are reproducible; shrinking bisects sized inputs toward minimal
+//! counterexamples.
+
+use crate::rng::Xoshiro256;
+
+/// A generator produces a case from an RNG and can try to shrink it.
+pub trait Gen {
+    type Item: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Item;
+    /// Candidate smaller versions of a failing case (best-first).
+    fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+        let _ = item;
+        Vec::new()
+    }
+}
+
+/// Number of cases per property (override with SLOWMO_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SLOWMO_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` generated inputs; panic with a reproducible
+/// report (seed, case index, shrunk input) on the first failure.
+pub fn forall<G: Gen>(name: &str, gen: &G, prop: impl Fn(&G::Item) -> bool) {
+    forall_seeded(name, gen, 0xC0FFEE, default_cases(), prop)
+}
+
+pub fn forall_seeded<G: Gen>(
+    name: &str,
+    gen: &G,
+    seed: u64,
+    cases: usize,
+    prop: impl Fn(&G::Item) -> bool,
+) {
+    let mut rng = Xoshiro256::seed_from(seed);
+    for case_idx in 0..cases {
+        let case = gen.generate(&mut rng);
+        if !prop(&case) {
+            let shrunk = shrink_loop(gen, case.clone(), &prop);
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, case={case_idx})\n\
+                 original: {case:?}\nshrunk:   {shrunk:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Item,
+    prop: &impl Fn(&G::Item) -> bool,
+) -> G::Item {
+    // Up to 200 shrink steps: take the first smaller case that still fails.
+    for _ in 0..200 {
+        let mut improved = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    failing
+}
+
+// ----------------------------------------------------------- primitive gens
+
+/// usize in [lo, hi] (inclusive). Shrinks toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Item = usize;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, &item: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if item > self.0 {
+            out.push(self.0);
+            let mid = self.0 + (item - self.0) / 2;
+            if mid != self.0 && mid != item {
+                out.push(mid);
+            }
+            out.push(item - 1);
+        }
+        out
+    }
+}
+
+/// f32 vector with length in [min_len, max_len], values N(0, scale).
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Item = Vec<f32>;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> Vec<f32> {
+        let n = self.min_len
+            + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, self.scale);
+        v
+    }
+
+    fn shrink(&self, item: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if item.len() > self.min_len {
+            // Halve the tail.
+            let keep = (item.len() / 2).max(self.min_len);
+            out.push(item[..keep].to_vec());
+        }
+        // Zero out values (simplest content).
+        if item.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; item.len()]);
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Item = (A::Item, B::Item);
+
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Item {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, item: &Self::Item) -> Vec<Self::Item> {
+        let mut out: Vec<Self::Item> = self
+            .0
+            .shrink(&item.0)
+            .into_iter()
+            .map(|a| (a, item.1.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink(&item.1)
+                .into_iter()
+                .map(|b| (item.0.clone(), b)),
+        );
+        out
+    }
+}
+
+/// Vector of m f32-vectors of equal length (worker parameter sets).
+pub struct WorkerVecs {
+    pub m_range: (usize, usize),
+    pub d_range: (usize, usize),
+    pub scale: f32,
+}
+
+impl Gen for WorkerVecs {
+    type Item = Vec<Vec<f32>>;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> Vec<Vec<f32>> {
+        let m = self.m_range.0
+            + rng.below((self.m_range.1 - self.m_range.0 + 1) as u64) as usize;
+        let d = self.d_range.0
+            + rng.below((self.d_range.1 - self.d_range.0 + 1) as u64) as usize;
+        (0..m)
+            .map(|_| {
+                let mut v = vec![0.0; d];
+                rng.fill_normal(&mut v, self.scale);
+                v
+            })
+            .collect()
+    }
+
+    fn shrink(&self, item: &Vec<Vec<f32>>) -> Vec<Vec<Vec<f32>>> {
+        let mut out = Vec::new();
+        if item.len() > self.m_range.0 {
+            out.push(item[..item.len() - 1].to_vec());
+        }
+        if let Some(first) = item.first() {
+            if first.len() > self.d_range.0 {
+                let keep = (first.len() / 2).max(self.d_range.0);
+                out.push(item.iter().map(|v| v[..keep].to_vec()).collect());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usize_gen_in_range() {
+        let g = UsizeIn(2, 9);
+        let mut rng = Xoshiro256::seed_from(1);
+        for _ in 0..1000 {
+            let x = g.generate(&mut rng);
+            assert!((2..=9).contains(&x));
+        }
+    }
+
+    #[test]
+    fn usize_shrinks_toward_lo() {
+        let g = UsizeIn(2, 100);
+        let c = g.shrink(&50);
+        assert!(c.contains(&2));
+        assert!(c.iter().all(|&x| x < 50));
+    }
+
+    #[test]
+    fn vec_gen_lengths() {
+        let g = VecF32 { min_len: 1, max_len: 8, scale: 1.0 };
+        let mut rng = Xoshiro256::seed_from(2);
+        for _ in 0..200 {
+            let v = g.generate(&mut rng);
+            assert!((1..=8).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall("sum-commutes", &VecF32 { min_len: 0, max_len: 32, scale: 1.0 },
+               |v| {
+                   let fwd: f32 = v.iter().sum();
+                   let rev: f32 = v.iter().rev().sum();
+                   (fwd - rev).abs() <= 1e-3
+               });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures() {
+        forall("always-false", &UsizeIn(0, 10), |_| false);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // Property "len < 4" fails for generated vecs of len >= 4; the
+        // shrunk case should have exactly the minimal failing size.
+        let g = VecF32 { min_len: 0, max_len: 64, scale: 1.0 };
+        let res = std::panic::catch_unwind(|| {
+            forall_seeded("short", &g, 7, 64, |v| v.len() < 4)
+        });
+        let msg = *res.unwrap_err().downcast::<String>().unwrap();
+        // shrunk case should be small: len 4..=7 after halving steps
+        let shrunk = msg.split("shrunk:").nth(1).unwrap();
+        let commas = shrunk.matches(',').count();
+        assert!(commas <= 7, "shrunk case too large: {shrunk}");
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = Pair(UsizeIn(0, 10), UsizeIn(0, 10));
+        let shrunk = g.shrink(&(5, 5));
+        assert!(shrunk.iter().any(|&(a, b)| a < 5 && b == 5));
+        assert!(shrunk.iter().any(|&(a, b)| a == 5 && b < 5));
+    }
+
+    #[test]
+    fn worker_vecs_shapes() {
+        let g = WorkerVecs { m_range: (2, 5), d_range: (1, 16), scale: 1.0 };
+        let mut rng = Xoshiro256::seed_from(3);
+        for _ in 0..100 {
+            let w = g.generate(&mut rng);
+            assert!((2..=5).contains(&w.len()));
+            let d = w[0].len();
+            assert!(w.iter().all(|v| v.len() == d));
+        }
+    }
+}

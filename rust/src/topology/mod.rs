@@ -1,0 +1,386 @@
+//! Communication topologies and mixing weights.
+//!
+//! SGP/OSGP (paper Alg. 2/3, Assran et al. 2019) gossip over a
+//! **time-varying directed exponential graph**: with workers ranked
+//! `0..m-1`, at step `k` node `i` sends to the peer `2^(k mod ⌈log2 m⌉)`
+//! hops away, so each node sends/receives exactly one message per step and
+//! cycles through exponentially-spaced peers. The mixing matrix is
+//! **column-stochastic** (each sender splits its mass: 1/2 self, 1/2 peer),
+//! which together with push-sum weights de-biases the average.
+//!
+//! D-PSGD (Lian et al. 2017) uses an undirected graph with a
+//! **doubly-stochastic** matrix; we provide the symmetric ring.
+
+/// A directed communication round: who sends to whom with what weight.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Round {
+    /// (peer, weight) pairs for outgoing messages, excluding self.
+    pub out: Vec<(usize, f64)>,
+    /// Weight kept for self.
+    pub self_weight: f64,
+}
+
+impl Round {
+    /// Column-stochasticity: self weight + outgoing weights must sum to 1.
+    pub fn total_mass(&self) -> f64 {
+        self.self_weight + self.out.iter().map(|(_, w)| w).sum::<f64>()
+    }
+}
+
+/// A (possibly time-varying) topology over `m` workers.
+pub trait Topology: Send + Sync {
+    fn m(&self) -> usize;
+
+    /// Outgoing plan for `worker` at global gossip step `k`.
+    fn round(&self, worker: usize, k: u64) -> Round;
+
+    /// Human-readable name for logs/benches.
+    fn name(&self) -> &'static str;
+
+    /// Messages sent per worker per step (for the comm cost model).
+    fn sends_per_step(&self) -> usize {
+        1
+    }
+}
+
+/// Time-varying directed exponential graph (SGP/OSGP default).
+#[derive(Clone, Debug)]
+pub struct ExponentialGraph {
+    m: usize,
+    n_offsets: u32,
+}
+
+impl ExponentialGraph {
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        // Offsets 2^0 .. 2^(ceil(log2(m))-1); for m=1 there are none.
+        let n_offsets = if m <= 1 {
+            0
+        } else {
+            (usize::BITS - (m - 1).leading_zeros()).max(1)
+        };
+        Self { m, n_offsets }
+    }
+
+    /// The hop distance used at step k.
+    pub fn offset_at(&self, k: u64) -> usize {
+        if self.n_offsets == 0 {
+            0
+        } else {
+            1usize << (k % self.n_offsets as u64) as u32
+        }
+    }
+}
+
+impl Topology for ExponentialGraph {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn round(&self, worker: usize, k: u64) -> Round {
+        if self.m == 1 {
+            return Round { out: vec![], self_weight: 1.0 };
+        }
+        let peer = (worker + self.offset_at(k)) % self.m;
+        if peer == worker {
+            // Happens when the offset wraps to a multiple of m (m not a
+            // power of two can't produce this since offset < m, but guard).
+            return Round { out: vec![], self_weight: 1.0 };
+        }
+        Round {
+            out: vec![(peer, 0.5)],
+            self_weight: 0.5,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "exponential"
+    }
+}
+
+/// Directed ring: node i sends to i+1 with weight 1/2.
+#[derive(Clone, Debug)]
+pub struct DirectedRing {
+    m: usize,
+}
+
+impl DirectedRing {
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        Self { m }
+    }
+}
+
+impl Topology for DirectedRing {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn round(&self, worker: usize, _k: u64) -> Round {
+        if self.m == 1 {
+            return Round { out: vec![], self_weight: 1.0 };
+        }
+        Round {
+            out: vec![((worker + 1) % self.m, 0.5)],
+            self_weight: 0.5,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "directed-ring"
+    }
+}
+
+/// Undirected symmetric ring with Metropolis weights 1/3 (D-PSGD): node i
+/// exchanges with both neighbors; the induced matrix is doubly stochastic.
+#[derive(Clone, Debug)]
+pub struct SymmetricRing {
+    m: usize,
+}
+
+impl SymmetricRing {
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        Self { m }
+    }
+}
+
+impl Topology for SymmetricRing {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn round(&self, worker: usize, _k: u64) -> Round {
+        match self.m {
+            1 => Round { out: vec![], self_weight: 1.0 },
+            2 => Round {
+                out: vec![((worker + 1) % 2, 0.5)],
+                self_weight: 0.5,
+            },
+            m => Round {
+                out: vec![
+                    ((worker + 1) % m, 1.0 / 3.0),
+                    ((worker + m - 1) % m, 1.0 / 3.0),
+                ],
+                self_weight: 1.0 / 3.0,
+            },
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "symmetric-ring"
+    }
+
+    fn sends_per_step(&self) -> usize {
+        2
+    }
+}
+
+/// Complete graph with uniform weights (one-step exact averaging; the
+/// degenerate topology that makes gossip equal ALLREDUCE).
+#[derive(Clone, Debug)]
+pub struct Complete {
+    m: usize,
+}
+
+impl Complete {
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        Self { m }
+    }
+}
+
+impl Topology for Complete {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn round(&self, worker: usize, _k: u64) -> Round {
+        let w = 1.0 / self.m as f64;
+        Round {
+            out: (0..self.m)
+                .filter(|&p| p != worker)
+                .map(|p| (p, w))
+                .collect(),
+            self_weight: w,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "complete"
+    }
+
+    fn sends_per_step(&self) -> usize {
+        self.m.saturating_sub(1)
+    }
+}
+
+/// Build the m×m column-stochastic mixing matrix P for step k
+/// (`P[dst][src]`): used by tests and the dense-mixing reference path.
+pub fn mixing_matrix(topo: &dyn Topology, k: u64) -> Vec<Vec<f64>> {
+    let m = topo.m();
+    let mut p = vec![vec![0.0; m]; m];
+    for src in 0..m {
+        let round = topo.round(src, k);
+        p[src][src] = round.self_weight;
+        for (dst, w) in round.out {
+            p[dst][src] += w;
+        }
+    }
+    p
+}
+
+/// Column sums of a matrix (stochasticity check helper).
+pub fn column_sums(p: &[Vec<f64>]) -> Vec<f64> {
+    let m = p.len();
+    (0..m).map(|c| (0..m).map(|r| p[r][c]).sum()).collect()
+}
+
+/// Row sums of a matrix.
+pub fn row_sums(p: &[Vec<f64>]) -> Vec<f64> {
+    p.iter().map(|row| row.iter().sum()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Pair, UsizeIn};
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn exponential_offsets_cycle() {
+        let g = ExponentialGraph::new(8); // log2(7)+1 = 3 offsets: 1,2,4
+        assert_eq!(g.offset_at(0), 1);
+        assert_eq!(g.offset_at(1), 2);
+        assert_eq!(g.offset_at(2), 4);
+        assert_eq!(g.offset_at(3), 1);
+    }
+
+    #[test]
+    fn exponential_one_send_per_step() {
+        let g = ExponentialGraph::new(32);
+        for k in 0..10 {
+            for w in 0..32 {
+                let r = g.round(w, k);
+                assert_eq!(r.out.len(), 1);
+                assert!(close(r.total_mass(), 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_each_node_receives_exactly_one() {
+        let g = ExponentialGraph::new(16);
+        for k in 0..8 {
+            let mut recv_count = vec![0usize; 16];
+            for w in 0..16 {
+                for (p, _) in g.round(w, k).out {
+                    recv_count[p] += 1;
+                }
+            }
+            assert!(recv_count.iter().all(|&c| c == 1), "{recv_count:?}");
+        }
+    }
+
+    #[test]
+    fn single_node_topologies_are_self_loops() {
+        for topo in [
+            &ExponentialGraph::new(1) as &dyn Topology,
+            &DirectedRing::new(1),
+            &SymmetricRing::new(1),
+            &Complete::new(1),
+        ] {
+            let r = topo.round(0, 0);
+            assert!(r.out.is_empty());
+            assert!(close(r.self_weight, 1.0));
+        }
+    }
+
+    #[test]
+    fn mixing_matrices_column_stochastic() {
+        // Property: every topology at every step yields a column-stochastic
+        // matrix (mass conservation — the push-sum invariant).
+        forall(
+            "column-stochastic",
+            &Pair(UsizeIn(1, 33), UsizeIn(0, 20)),
+            |&(m, k)| {
+                let topos: Vec<Box<dyn Topology>> = vec![
+                    Box::new(ExponentialGraph::new(m)),
+                    Box::new(DirectedRing::new(m)),
+                    Box::new(SymmetricRing::new(m)),
+                    Box::new(Complete::new(m)),
+                ];
+                topos.iter().all(|t| {
+                    column_sums(&mixing_matrix(t.as_ref(), k as u64))
+                        .iter()
+                        .all(|&s| close(s, 1.0))
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn symmetric_ring_doubly_stochastic() {
+        forall("doubly-stochastic", &UsizeIn(1, 33), |&m| {
+            let p = mixing_matrix(&SymmetricRing::new(m), 0);
+            column_sums(&p).iter().all(|&s| close(s, 1.0))
+                && row_sums(&p).iter().all(|&s| close(s, 1.0))
+        });
+    }
+
+    #[test]
+    fn complete_graph_averages_in_one_step() {
+        let m = 5;
+        let p = mixing_matrix(&Complete::new(m), 0);
+        for row in &p {
+            for &v in row {
+                assert!(close(v, 1.0 / m as f64));
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_info_spreads_to_all_in_log_rounds() {
+        // After ceil(log2(m)) rounds every node's value has reached every
+        // other node (support of P_k ... P_0 is full).
+        let m = 16;
+        let g = ExponentialGraph::new(m);
+        let mut reach = vec![vec![false; m]; m];
+        for (i, row) in reach.iter_mut().enumerate() {
+            row[i] = true;
+        }
+        for k in 0..4 {
+            let p = mixing_matrix(&g, k);
+            let mut next = reach.clone();
+            for dst in 0..m {
+                for src in 0..m {
+                    if p[dst][src] > 0.0 {
+                        for origin in 0..m {
+                            if reach[src][origin] {
+                                next[dst][origin] = true;
+                            }
+                        }
+                    }
+                }
+            }
+            reach = next;
+        }
+        assert!(reach.iter().all(|row| row.iter().all(|&b| b)));
+    }
+
+    #[test]
+    fn mixing_preserves_mean_when_doubly_stochastic() {
+        let m = 7;
+        let p = mixing_matrix(&SymmetricRing::new(m), 0);
+        let xs: Vec<f64> = (0..m).map(|i| i as f64).collect();
+        let mean0: f64 = xs.iter().sum::<f64>() / m as f64;
+        let mixed: Vec<f64> = (0..m)
+            .map(|dst| (0..m).map(|src| p[dst][src] * xs[src]).sum())
+            .collect();
+        let mean1: f64 = mixed.iter().sum::<f64>() / m as f64;
+        assert!(close(mean0, mean1));
+    }
+}

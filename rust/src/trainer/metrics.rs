@@ -1,0 +1,200 @@
+//! Training metrics: curves, summaries, JSONL sinks.
+
+use crate::jsonx::Json;
+use crate::util::{mean, stddev};
+
+/// One evaluation point (paper Fig. 2 / B.1 curves).
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    /// Global inner step at which the eval ran.
+    pub step: u64,
+    /// Mean / min / max across workers (Fig. 2's shaded min-max band).
+    pub loss_mean: f64,
+    pub loss_min: f64,
+    pub loss_max: f64,
+    /// Task metric: accuracy for classifiers, token accuracy for LM,
+    /// grad-norm for quad. Mean across workers.
+    pub metric_mean: f64,
+    /// Simulated wall-clock when the eval ran (max across workers).
+    pub sim_time: f64,
+}
+
+impl EvalPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("loss_mean", Json::num(self.loss_mean)),
+            ("loss_min", Json::num(self.loss_min)),
+            ("loss_max", Json::num(self.loss_max)),
+            ("metric_mean", Json::num(self.metric_mean)),
+            ("sim_time", Json::num(self.sim_time)),
+        ])
+    }
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub algo: String,
+    pub preset: String,
+    pub m: usize,
+    pub steps: u64,
+    pub seed: u64,
+    /// Per-outer-iteration mean training loss (averaged over workers).
+    pub train_curve: Vec<(u64, f64)>,
+    pub eval_curve: Vec<EvalPoint>,
+    /// Best (minimum) smoothed training loss.
+    pub best_train_loss: f64,
+    /// Best validation metric (max for accuracy-like, caller interprets).
+    pub best_eval_metric: f64,
+    /// Final validation loss (for NLL tables).
+    pub final_eval_loss: f64,
+    /// Simulated seconds for the whole run (max across workers).
+    pub sim_time: f64,
+    /// Real wall-clock seconds spent training.
+    pub wall_time: f64,
+    /// Total f32 bytes sent over the fabric.
+    pub bytes_sent: u64,
+    /// Mean grad-norm^2 trajectory per outer iteration (theory bench).
+    pub gradnorm_curve: Vec<(u64, f64)>,
+}
+
+impl TrainResult {
+    /// Simulated seconds per inner iteration.
+    pub fn sim_time_per_iter(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.sim_time / self.steps as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algo", Json::str(&self.algo)),
+            ("preset", Json::str(&self.preset)),
+            ("m", Json::num(self.m as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("best_train_loss", Json::num(self.best_train_loss)),
+            ("best_eval_metric", Json::num(self.best_eval_metric)),
+            ("final_eval_loss", Json::num(self.final_eval_loss)),
+            ("sim_time", Json::num(self.sim_time)),
+            ("wall_time", Json::num(self.wall_time)),
+            ("bytes_sent", Json::num(self.bytes_sent as f64)),
+            (
+                "train_curve",
+                Json::Arr(
+                    self.train_curve
+                        .iter()
+                        .map(|&(s, l)| {
+                            Json::Arr(vec![
+                                Json::num(s as f64),
+                                Json::num(l),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "eval_curve",
+                Json::Arr(
+                    self.eval_curve.iter().map(|p| p.to_json()).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Append to a JSONL results file.
+    pub fn append_jsonl(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        writeln!(f, "{}", crate::jsonx::to_string(&self.to_json()))
+    }
+}
+
+/// Aggregate of several seeds of the same cell (paper Table B.4).
+#[derive(Clone, Debug)]
+pub struct SeedAggregate {
+    pub best_train_loss_mean: f64,
+    pub best_eval_metric_mean: f64,
+    pub best_eval_metric_std: f64,
+    pub n: usize,
+}
+
+impl SeedAggregate {
+    pub fn from_runs(runs: &[TrainResult]) -> Self {
+        let losses: Vec<f64> =
+            runs.iter().map(|r| r.best_train_loss).collect();
+        let metrics: Vec<f64> =
+            runs.iter().map(|r| r.best_eval_metric).collect();
+        Self {
+            best_train_loss_mean: mean(&losses),
+            best_eval_metric_mean: mean(&metrics),
+            best_eval_metric_std: stddev(&metrics),
+            n: runs.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy(seed: u64, loss: f64, metric: f64) -> TrainResult {
+        TrainResult {
+            algo: "x".into(),
+            preset: "p".into(),
+            m: 2,
+            steps: 100,
+            seed,
+            train_curve: vec![(10, 1.0), (20, loss)],
+            eval_curve: vec![],
+            best_train_loss: loss,
+            best_eval_metric: metric,
+            final_eval_loss: loss,
+            sim_time: 50.0,
+            wall_time: 1.0,
+            bytes_sent: 42,
+            gradnorm_curve: vec![],
+        }
+    }
+
+    #[test]
+    fn per_iter_time() {
+        let r = dummy(0, 0.5, 0.9);
+        assert!((r.sim_time_per_iter() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let r = dummy(0, 0.5, 0.9);
+        let j = r.to_json();
+        assert_eq!(j.get("algo").unwrap().as_str(), Some("x"));
+        let parsed =
+            crate::jsonx::parse(&crate::jsonx::to_string(&j)).unwrap();
+        assert_eq!(parsed.get("best_train_loss").unwrap().as_f64(),
+                   Some(0.5));
+        assert_eq!(
+            parsed.get("train_curve").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn seed_aggregate() {
+        let runs =
+            vec![dummy(0, 0.5, 0.90), dummy(1, 0.3, 0.92), dummy(2, 0.4, 0.94)];
+        let agg = SeedAggregate::from_runs(&runs);
+        assert!((agg.best_eval_metric_mean - 0.92).abs() < 1e-12);
+        assert!((agg.best_train_loss_mean - 0.4).abs() < 1e-12);
+        assert!(agg.best_eval_metric_std > 0.0);
+        assert_eq!(agg.n, 3);
+    }
+}

@@ -1,0 +1,442 @@
+//! The multi-worker training driver.
+//!
+//! Spawns one thread per worker, wires the data tasks, the base algorithm,
+//! the optional SlowMo controller, the fabric, and the model executor
+//! together, and records the metrics every experiment harness consumes.
+
+pub mod metrics;
+pub mod model_exec;
+pub mod schedule;
+
+pub use metrics::{EvalPoint, SeedAggregate, TrainResult};
+pub use model_exec::ModelExec;
+pub use schedule::Schedule;
+
+use crate::algorithms::{
+    AllReduce, BaseAlgorithm, Ctx, DoubleAvg, Dpsgd, Local, Sgp, WorkerState,
+};
+use crate::data::{task_for, Task};
+use crate::net::{CostModel, Fabric};
+use crate::optim::kernels::{InnerOpt, Kernels};
+use crate::runtime::{DataDesc, Engine, Manifest};
+use crate::slowmo::{OuterState, SlowMoCfg};
+use crate::topology::ExponentialGraph;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which base algorithm to construct (flat spec, CLI/config friendly).
+#[derive(Clone, Debug)]
+pub enum AlgoSpec {
+    Local(InnerOpt),
+    Sgp(InnerOpt),
+    Osgp(InnerOpt),
+    Dpsgd(InnerOpt),
+    AllReduce(InnerOpt),
+    DoubleAvg(InnerOpt, u64),
+}
+
+impl AlgoSpec {
+    pub fn build(&self, m: usize) -> Arc<dyn BaseAlgorithm> {
+        match self {
+            AlgoSpec::Local(i) => Arc::new(Local::new(*i)),
+            AlgoSpec::Sgp(i) => {
+                Arc::new(Sgp::new(*i, Arc::new(ExponentialGraph::new(m))))
+            }
+            AlgoSpec::Osgp(i) => {
+                Arc::new(Sgp::overlap(*i, Arc::new(ExponentialGraph::new(m))))
+            }
+            AlgoSpec::Dpsgd(i) => Arc::new(Dpsgd::new(*i, m)),
+            AlgoSpec::AllReduce(i) => Arc::new(AllReduce::new(*i)),
+            AlgoSpec::DoubleAvg(i, tau) => Arc::new(DoubleAvg::new(*i, *tau)),
+        }
+    }
+
+    /// Parse e.g. "sgp", "local-adam", "doubleavg:12".
+    pub fn parse(s: &str) -> Option<Self> {
+        let (name, rest) = match s.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (s, None),
+        };
+        let adam = name.ends_with("-adam");
+        let base = name.trim_end_matches("-adam");
+        let inner = if adam {
+            InnerOpt::adam_default()
+        } else {
+            InnerOpt::nesterov_default()
+        };
+        match base {
+            "local" => Some(AlgoSpec::Local(inner)),
+            "sgp" => Some(AlgoSpec::Sgp(inner)),
+            "osgp" => Some(AlgoSpec::Osgp(inner)),
+            "dpsgd" => Some(AlgoSpec::Dpsgd(inner)),
+            "ar" | "allreduce" => Some(AlgoSpec::AllReduce(inner)),
+            "doubleavg" => {
+                let tau = rest.and_then(|r| r.parse().ok()).unwrap_or(12);
+                Some(AlgoSpec::DoubleAvg(inner, tau))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Full training configuration for one run.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub preset: String,
+    pub m: usize,
+    /// Total inner steps per worker.
+    pub steps: u64,
+    pub seed: u64,
+    pub algo: AlgoSpec,
+    /// `None` = run the base algorithm bare (e.g. plain SGP baseline).
+    pub slowmo: Option<SlowMoCfg>,
+    pub sched: Schedule,
+    /// Data heterogeneity knob (0 = iid shards .. 1 = strongly non-iid).
+    pub heterogeneity: f64,
+    /// Evaluate every this many steps (0 = only at the end).
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    /// Force model graphs through PJRT even when a native path exists.
+    pub force_pjrt: bool,
+    /// Run the optimizer kernels natively instead of via the AOT
+    /// artifacts (perf ablation; math is identical).
+    pub native_kernels: bool,
+    pub cost: CostModel,
+    /// Simulated compute charge per inner step; 0.0 = use measured wall
+    /// time of the train_step call.
+    pub compute_time_s: f64,
+    /// Record grad-norm² trajectories (theory benches).
+    pub record_gradnorm: bool,
+}
+
+impl TrainCfg {
+    pub fn quick(preset: &str, algo: AlgoSpec, steps: u64) -> Self {
+        Self {
+            preset: preset.to_string(),
+            m: 4,
+            steps,
+            seed: 0,
+            algo,
+            slowmo: None,
+            sched: Schedule::Const(0.05),
+            heterogeneity: 0.5,
+            eval_every: 0,
+            eval_batches: 4,
+            force_pjrt: false,
+            native_kernels: false,
+            cost: CostModel::free(),
+            compute_time_s: 0.0,
+            record_gradnorm: false,
+        }
+    }
+
+    pub fn with_slowmo(mut self, s: SlowMoCfg) -> Self {
+        self.slowmo = Some(s);
+        self
+    }
+
+    /// Display name: "sgp+slowmo(t48,b0.6)" etc.
+    pub fn algo_name(&self) -> String {
+        let base = self.algo.build(self.m).name();
+        match &self.slowmo {
+            None => base,
+            Some(s) => format!(
+                "{base}+slowmo(t{},a{},b{}{}{})",
+                s.tau,
+                s.alpha,
+                s.beta,
+                if s.exact_average { "" } else { ",noavg" },
+                format_args!(",{}", s.buffers.name()),
+            ),
+        }
+    }
+}
+
+struct WorkerOut {
+    losses: Vec<f32>,
+    gradnorms: Vec<f64>,
+    evals: Vec<(u64, f32, f32, f64)>, // (step, loss, metric, clock)
+    clock: f64,
+}
+
+/// Run one training job. `engine` may be `None` only for presets with a
+/// native model path (quad).
+pub fn train(
+    cfg: &TrainCfg,
+    manifest: &Manifest,
+    engine: Option<&Engine>,
+) -> Result<TrainResult> {
+    let t_wall = Instant::now();
+    let info = manifest.preset(&cfg.preset)?;
+    let init = manifest.load_init(info)?;
+    let d = info.flat_len;
+    let task: Box<dyn Task> =
+        task_for(&info.data, cfg.m, cfg.seed, cfg.heterogeneity);
+    let model =
+        model_exec::build(engine, manifest, &cfg.preset, cfg.force_pjrt)?;
+    let kernels = if cfg.native_kernels || engine.is_none() {
+        Kernels::Native
+    } else {
+        Kernels::pjrt(engine.unwrap(), manifest, d)?
+    };
+    let algo = cfg.algo.build(cfg.m);
+    let fabric = Fabric::new(cfg.m, cfg.cost.clone());
+
+    let eval_points: Vec<u64> = {
+        let mut pts = Vec::new();
+        if cfg.eval_every > 0 {
+            let mut s = cfg.eval_every;
+            while s < cfg.steps {
+                pts.push(s);
+                s += cfg.eval_every;
+            }
+        }
+        pts.push(cfg.steps); // always evaluate at the end
+        pts
+    };
+
+    let outs: Vec<Result<WorkerOut>> = crate::exec::run_workers(cfg.m, |w| {
+        let mut state = WorkerState::new(&init, algo.inner());
+        let mut outer = cfg.slowmo.as_ref().map(|_| OuterState::new(&init));
+        let mut ctx = Ctx {
+            worker: w,
+            m: cfg.m,
+            fabric: &fabric,
+            kernels: &kernels,
+            clock: 0.0,
+        };
+        let mut out = WorkerOut {
+            losses: Vec::with_capacity(cfg.steps as usize),
+            gradnorms: Vec::new(),
+            evals: Vec::new(),
+            clock: 0.0,
+        };
+        let mut eval_idx = 0;
+        let mut gamma_outer = cfg.sched.gamma(0);
+        for k in 0..cfg.steps {
+            let gamma = cfg.sched.gamma(k);
+            if let Some(s) = &cfg.slowmo {
+                if k % s.tau == 0 {
+                    // γ_t for Eq. 2: the rate in effect at the start of
+                    // this outer iteration.
+                    gamma_outer = gamma;
+                }
+            }
+            let batch = task.train_batch(w, k);
+            let t0 = Instant::now();
+            let (loss, grads) =
+                model.train_step(algo.eval_params(&state), &batch)?;
+            ctx.clock += if cfg.compute_time_s > 0.0 {
+                cfg.compute_time_s
+            } else {
+                t0.elapsed().as_secs_f64()
+            };
+            out.losses.push(loss);
+            if cfg.record_gradnorm {
+                out.gradnorms.push(crate::util::sqnorm(&grads));
+            }
+            algo.step(&mut ctx, &mut state, &grads, gamma, k)?;
+            if let (Some(scfg), Some(outer)) = (&cfg.slowmo, outer.as_mut())
+            {
+                if scfg.is_boundary(k) {
+                    ctx.clock = crate::slowmo::outer_update(
+                        scfg, algo.as_ref(), &fabric, &kernels, w,
+                        &mut state, outer, gamma_outer, ctx.clock,
+                    )?;
+                }
+            }
+            // Evaluation checkpoints.
+            while eval_idx < eval_points.len()
+                && k + 1 == eval_points[eval_idx]
+            {
+                let (l, mtr) =
+                    run_eval(&model, &*task, algo.eval_params(&state),
+                             cfg.eval_batches)?;
+                out.evals.push((k + 1, l, mtr, ctx.clock));
+                eval_idx += 1;
+            }
+        }
+        out.clock = ctx.clock;
+        Ok(out)
+    });
+    let mut workers = Vec::with_capacity(cfg.m);
+    for o in outs {
+        workers.push(o?);
+    }
+
+    Ok(assemble(cfg, info.data.clone(), workers, &fabric,
+                t_wall.elapsed().as_secs_f64()))
+}
+
+fn run_eval(
+    model: &ModelExec,
+    task: &dyn Task,
+    params: &[f32],
+    batches: u64,
+) -> Result<(f32, f32)> {
+    let mut loss = 0.0f64;
+    let mut metric = 0.0f64;
+    for b in 0..batches.max(1) {
+        let batch = task.eval_batch(b);
+        let (l, c) = model.eval_step(params, &batch)?;
+        loss += l as f64;
+        metric += c as f64;
+    }
+    let n = batches.max(1) as f64;
+    Ok((
+        (loss / n) as f32,
+        (metric / (n * model.metric_denom())) as f32,
+    ))
+}
+
+fn assemble(
+    cfg: &TrainCfg,
+    desc: DataDesc,
+    workers: Vec<WorkerOut>,
+    fabric: &Fabric,
+    wall: f64,
+) -> TrainResult {
+    let window = cfg
+        .slowmo
+        .as_ref()
+        .map(|s| s.tau)
+        .unwrap_or(16)
+        .max(1) as usize;
+    // Train curve: per-window mean over steps and workers.
+    let steps = cfg.steps as usize;
+    let mut train_curve = Vec::new();
+    let mut best_train = f64::INFINITY;
+    let mut i = 0;
+    while i < steps {
+        let j = (i + window).min(steps);
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for w in &workers {
+            for &l in &w.losses[i..j] {
+                acc += l as f64;
+                n += 1;
+            }
+        }
+        let mean = acc / n.max(1) as f64;
+        train_curve.push((j as u64, mean));
+        best_train = best_train.min(mean);
+        i = j;
+    }
+    // Grad-norm curve (same windows).
+    let mut gradnorm_curve = Vec::new();
+    if cfg.record_gradnorm {
+        let mut i = 0;
+        while i < steps {
+            let j = (i + window).min(steps);
+            let mut acc = 0.0f64;
+            let mut n = 0usize;
+            for w in &workers {
+                for &g in &w.gradnorms[i..j] {
+                    acc += g;
+                    n += 1;
+                }
+            }
+            gradnorm_curve.push((j as u64, acc / n.max(1) as f64));
+            i = j;
+        }
+    }
+    // Eval curve: combine workers per step.
+    let mut eval_curve = Vec::new();
+    if let Some(first) = workers.first() {
+        for (idx, &(step, ..)) in first.evals.iter().enumerate() {
+            let losses: Vec<f64> = workers
+                .iter()
+                .map(|w| w.evals[idx].1 as f64)
+                .collect();
+            let metrics: Vec<f64> = workers
+                .iter()
+                .map(|w| w.evals[idx].2 as f64)
+                .collect();
+            let clock = workers
+                .iter()
+                .map(|w| w.evals[idx].3)
+                .fold(0.0f64, f64::max);
+            eval_curve.push(EvalPoint {
+                step,
+                loss_mean: crate::util::mean(&losses),
+                loss_min: losses.iter().cloned().fold(f64::INFINITY, f64::min),
+                loss_max: losses.iter().cloned().fold(f64::NEG_INFINITY,
+                                                      f64::max),
+                metric_mean: crate::util::mean(&metrics),
+                sim_time: clock,
+            });
+        }
+    }
+    // Higher-is-better for classifier/LM accuracy; lower for quad gsq.
+    let metric_better_high = !matches!(desc, DataDesc::Quad { .. });
+    let best_eval_metric = eval_curve
+        .iter()
+        .map(|p| p.metric_mean)
+        .fold(
+            if metric_better_high {
+                f64::NEG_INFINITY
+            } else {
+                f64::INFINITY
+            },
+            if metric_better_high { f64::max } else { f64::min },
+        );
+    let final_eval_loss =
+        eval_curve.last().map(|p| p.loss_mean).unwrap_or(f64::NAN);
+    let sim_time = workers.iter().map(|w| w.clock).fold(0.0f64, f64::max);
+    TrainResult {
+        algo: cfg.algo_name(),
+        preset: cfg.preset.clone(),
+        m: cfg.m,
+        steps: cfg.steps,
+        seed: cfg.seed,
+        train_curve,
+        eval_curve,
+        best_train_loss: best_train,
+        best_eval_metric,
+        final_eval_loss,
+        sim_time,
+        wall_time: wall,
+        bytes_sent: fabric.bytes_sent(),
+        gradnorm_curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_spec_parse() {
+        assert!(matches!(AlgoSpec::parse("local"),
+                         Some(AlgoSpec::Local(_))));
+        assert!(matches!(AlgoSpec::parse("sgp"), Some(AlgoSpec::Sgp(_))));
+        assert!(matches!(AlgoSpec::parse("osgp"), Some(AlgoSpec::Osgp(_))));
+        assert!(matches!(AlgoSpec::parse("dpsgd"),
+                         Some(AlgoSpec::Dpsgd(_))));
+        assert!(matches!(AlgoSpec::parse("ar"),
+                         Some(AlgoSpec::AllReduce(_))));
+        match AlgoSpec::parse("doubleavg:24") {
+            Some(AlgoSpec::DoubleAvg(_, 24)) => {}
+            other => panic!("{other:?}"),
+        }
+        match AlgoSpec::parse("local-adam") {
+            Some(AlgoSpec::Local(InnerOpt::Adam { .. })) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(AlgoSpec::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn algo_name_formats() {
+        let cfg = TrainCfg::quick("quad", AlgoSpec::parse("sgp").unwrap(), 10)
+            .with_slowmo(crate::slowmo::SlowMoCfg::new(1.0, 0.6, 48));
+        let n = cfg.algo_name();
+        assert!(n.contains("sgp"), "{n}");
+        assert!(n.contains("t48"), "{n}");
+        assert!(n.contains("b0.6"), "{n}");
+        let bare =
+            TrainCfg::quick("quad", AlgoSpec::parse("local").unwrap(), 10);
+        assert_eq!(bare.algo_name(), "local-nesterov-sgd");
+    }
+}

@@ -1,0 +1,252 @@
+//! Model execution: the per-step fwd/bwd (train) and metric (eval) calls.
+//!
+//! Two backends:
+//! - [`ModelExec::Pjrt`] — the AOT artifacts (Layer-2 JAX graphs with the
+//!   Layer-1 kernels lowered in) via the PJRT CPU client. The production
+//!   path; Python never runs here.
+//! - [`ModelExec::NativeQuad`] — the quadratic theory workload in closed
+//!   form (the L2 `quad` graphs are trivial, and the theory benches sweep
+//!   thousands of cells, so a native fast path keeps them cheap). Verified
+//!   against the PJRT quad artifacts in `rust/tests/`.
+
+use crate::data::Batch;
+use crate::runtime::engine::{Arg, ExecHandle};
+use crate::runtime::{DataDesc, Engine, Manifest, PresetInfo};
+use anyhow::{bail, Result};
+
+pub enum ModelExec {
+    Pjrt {
+        train: ExecHandle,
+        eval: ExecHandle,
+        desc: DataDesc,
+        d: usize,
+    },
+    NativeQuad {
+        dim: usize,
+        cond: f64,
+        d: usize,
+    },
+}
+
+impl ModelExec {
+    /// Load the PJRT graphs for a preset.
+    pub fn pjrt(engine: &Engine, preset: &PresetInfo) -> Result<Self> {
+        Ok(ModelExec::Pjrt {
+            train: engine.load(&preset.train)?,
+            eval: engine.load(&preset.eval)?,
+            desc: preset.data.clone(),
+            d: preset.flat_len,
+        })
+    }
+
+    /// Closed-form quad executor matching the `quad` preset semantics.
+    pub fn native_quad(preset: &PresetInfo) -> Result<Self> {
+        match preset.data {
+            DataDesc::Quad { dim, cond } => Ok(ModelExec::NativeQuad {
+                dim,
+                cond,
+                d: preset.flat_len,
+            }),
+            _ => bail!("native executor only supports the quad family"),
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        match self {
+            ModelExec::Pjrt { d, .. } => *d,
+            ModelExec::NativeQuad { d, .. } => *d,
+        }
+    }
+
+    fn quad_lambda(dim: usize, cond: f64, i: usize) -> f64 {
+        if dim <= 1 {
+            return 1.0;
+        }
+        10f64.powf(cond.log10() * i as f64 / (dim - 1) as f64)
+    }
+
+    /// One fwd/bwd: returns (loss, grads).
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+    ) -> Result<(f32, Vec<f32>)> {
+        match self {
+            ModelExec::Pjrt { train, desc, d, .. } => {
+                let out = exec_graph(train, params, *d, desc, batch)?;
+                let mut it = out.into_iter();
+                let loss = it.next().unwrap()[0];
+                let grads = it.next().unwrap();
+                Ok((loss, grads))
+            }
+            ModelExec::NativeQuad { dim, cond, d } => {
+                let (center, noise) = match batch {
+                    Batch::Quad { center, noise } => (center, noise),
+                    _ => bail!("quad executor needs quad batches"),
+                };
+                let mut grads = vec![0.0f32; *d];
+                let mut loss = 0.0f64;
+                let inv = 1.0 / *dim as f64;
+                for i in 0..*dim {
+                    let lam = Self::quad_lambda(*dim, *cond, i);
+                    let diff = (params[i] - center[i]) as f64;
+                    loss += 0.5 * lam * diff * diff * inv;
+                    grads[i] = (lam * diff * inv) as f32 + noise[i];
+                }
+                Ok((loss as f32, grads))
+            }
+        }
+    }
+
+    /// Eval: returns (loss, metric) where metric is `ncorrect` for
+    /// classifiers/LM and grad-norm² for quad.
+    pub fn eval_step(&self, params: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        match self {
+            ModelExec::Pjrt { eval, desc, d, .. } => {
+                let out = exec_graph(eval, params, *d, desc, batch)?;
+                Ok((out[0][0], out[1][0]))
+            }
+            ModelExec::NativeQuad { dim, cond, d: _ } => {
+                let center = match batch {
+                    Batch::Quad { center, .. } => center,
+                    _ => bail!("quad executor needs quad batches"),
+                };
+                let mut loss = 0.0f64;
+                let mut gsq = 0.0f64;
+                let inv = 1.0 / *dim as f64;
+                for i in 0..*dim {
+                    let lam = Self::quad_lambda(*dim, *cond, i);
+                    let diff = (params[i] - center[i]) as f64;
+                    loss += 0.5 * lam * diff * diff * inv;
+                    let g = lam * diff * inv;
+                    gsq += g * g;
+                }
+                Ok((loss as f32, gsq as f32))
+            }
+        }
+    }
+
+    /// Fraction denominator for accuracy metrics (examples per eval batch).
+    pub fn metric_denom(&self) -> f64 {
+        match self {
+            ModelExec::Pjrt { desc, .. } => desc.examples_per_step() as f64,
+            ModelExec::NativeQuad { .. } => 1.0,
+        }
+    }
+}
+
+fn exec_graph(
+    exe: &ExecHandle,
+    params: &[f32],
+    d: usize,
+    desc: &DataDesc,
+    batch: &Batch,
+) -> Result<Vec<Vec<f32>>> {
+    match (desc, batch) {
+        (DataDesc::Lm { seq_len, batch: b, .. }, Batch::Lm { tokens, targets }) => {
+            let shape = [*b, *seq_len];
+            exe.exec(&[
+                Arg::F32(params, &[d]),
+                Arg::I32(tokens, &shape),
+                Arg::I32(targets, &shape),
+            ])
+        }
+        (DataDesc::Class { in_dim, batch: b, .. }, Batch::Class { x, y }) => {
+            exe.exec(&[
+                Arg::F32(params, &[d]),
+                Arg::F32(x, &[*b, *in_dim]),
+                Arg::I32(y, &[*b]),
+            ])
+        }
+        (
+            DataDesc::Image { hw, in_ch, batch: b, .. },
+            Batch::Class { x, y },
+        ) => exe.exec(&[
+            Arg::F32(params, &[d]),
+            Arg::F32(x, &[*b, *hw, *hw, *in_ch]),
+            Arg::I32(y, &[*b]),
+        ]),
+        (DataDesc::Quad { dim, .. }, Batch::Quad { center, noise }) => exe
+            .exec(&[
+                Arg::F32(params, &[d]),
+                Arg::F32(center, &[*dim]),
+                Arg::F32(noise, &[*dim]),
+            ]),
+        _ => bail!("batch kind does not match data descriptor"),
+    }
+}
+
+/// Build a model executor for `preset`, choosing native fast paths where
+/// available unless `force_pjrt`.
+pub fn build(
+    engine: Option<&Engine>,
+    manifest: &Manifest,
+    preset: &str,
+    force_pjrt: bool,
+) -> Result<ModelExec> {
+    let info = manifest.preset(preset)?;
+    if !force_pjrt && matches!(info.data, DataDesc::Quad { .. }) {
+        return ModelExec::native_quad(info);
+    }
+    match engine {
+        Some(e) => ModelExec::pjrt(e, info),
+        None => bail!("preset {preset} requires the PJRT engine"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_exec(dim: usize) -> ModelExec {
+        ModelExec::NativeQuad { dim, cond: 100.0, d: dim }
+    }
+
+    #[test]
+    fn native_quad_loss_and_grads() {
+        let e = quad_exec(4);
+        let params = vec![1.0f32; 4];
+        let batch = Batch::Quad { center: vec![0.0; 4], noise: vec![0.0; 4] };
+        let (loss, grads) = e.train_step(&params, &batch).unwrap();
+        // lam = 10^{2i/3}: [1, 4.64, 21.5, 100]; loss = 0.5*sum(lam)/4.
+        let lam: Vec<f64> =
+            (0..4).map(|i| 10f64.powf(2.0 * i as f64 / 3.0)).collect();
+        let want = 0.5 * lam.iter().sum::<f64>() / 4.0;
+        assert!((loss as f64 - want).abs() < 1e-4);
+        for i in 0..4 {
+            assert!((grads[i] as f64 - lam[i] / 4.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn native_quad_noise_enters_grads_not_loss() {
+        let e = quad_exec(4);
+        let params = vec![1.0f32; 4];
+        let b0 = Batch::Quad { center: vec![0.0; 4], noise: vec![0.0; 4] };
+        let b1 = Batch::Quad { center: vec![0.0; 4], noise: vec![1.0; 4] };
+        let (l0, g0) = e.train_step(&params, &b0).unwrap();
+        let (l1, g1) = e.train_step(&params, &b1).unwrap();
+        assert_eq!(l0, l1);
+        for i in 0..4 {
+            assert!((g1[i] - g0[i] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn native_quad_eval_at_center_is_zero() {
+        let e = quad_exec(8);
+        let params = vec![2.0f32; 8];
+        let batch =
+            Batch::Quad { center: vec![2.0; 8], noise: vec![0.0; 8] };
+        let (loss, gsq) = e.eval_step(&params, &batch).unwrap();
+        assert_eq!(loss, 0.0);
+        assert_eq!(gsq, 0.0);
+    }
+
+    #[test]
+    fn mismatched_batch_kind_errors() {
+        let e = quad_exec(4);
+        let bad = Batch::Class { x: vec![0.0; 4], y: vec![0] };
+        assert!(e.train_step(&[0.0; 4], &bad).is_err());
+    }
+}

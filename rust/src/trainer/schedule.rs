@@ -1,0 +1,128 @@
+//! Fast-learning-rate schedules γ_t.
+//!
+//! The paper uses linear warmup + step decay for the image tasks (Goyal et
+//! al. 2017) and linear warmup + inverse-sqrt decay for WMT (Ott et al.
+//! 2018). SlowMo's Eq. 2 divides the displacement by γ_t precisely so the
+//! slow buffer is invariant to these schedules.
+
+/// γ as a function of the global inner step k.
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    Const(f32),
+    /// Linear warmup to `base` over `warmup` steps, then multiply by
+    /// `factor` at each step in `decays` (absolute step indices).
+    WarmupStepDecay {
+        base: f32,
+        warmup: u64,
+        decays: Vec<u64>,
+        factor: f32,
+    },
+    /// Linear warmup to `peak` over `warmup` steps, then
+    /// peak * sqrt(warmup / k).
+    WarmupInvSqrt { peak: f32, warmup: u64 },
+}
+
+impl Schedule {
+    pub fn gamma(&self, k: u64) -> f32 {
+        match self {
+            Schedule::Const(g) => *g,
+            Schedule::WarmupStepDecay { base, warmup, decays, factor } => {
+                let mut g = if *warmup > 0 && k < *warmup {
+                    base * (k + 1) as f32 / *warmup as f32
+                } else {
+                    *base
+                };
+                for &d in decays {
+                    if k >= d {
+                        g *= factor;
+                    }
+                }
+                g
+            }
+            Schedule::WarmupInvSqrt { peak, warmup } => {
+                if *warmup > 0 && k < *warmup {
+                    peak * (k + 1) as f32 / *warmup as f32
+                } else {
+                    peak * (*warmup.max(&1) as f32 / (k + 1) as f32).sqrt()
+                }
+            }
+        }
+    }
+
+    /// The paper's image-task schedule scaled to `total` steps: warmup for
+    /// the first 2.5%, decay ×0.1 at 50%, 75%, 87.5% (CIFAR shape).
+    pub fn image_default(base: f32, total: u64) -> Self {
+        Schedule::WarmupStepDecay {
+            base,
+            warmup: total / 40,
+            decays: vec![total / 2, total * 3 / 4, total * 7 / 8],
+            factor: 0.1,
+        }
+    }
+
+    /// The WMT-style Adam schedule scaled to `total` steps.
+    pub fn lm_default(peak: f32, total: u64) -> Self {
+        Schedule::WarmupInvSqrt { peak, warmup: (total / 10).max(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        let s = Schedule::Const(0.1);
+        assert_eq!(s.gamma(0), 0.1);
+        assert_eq!(s.gamma(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::WarmupStepDecay {
+            base: 1.0,
+            warmup: 10,
+            decays: vec![],
+            factor: 0.1,
+        };
+        assert!((s.gamma(0) - 0.1).abs() < 1e-6);
+        assert!((s.gamma(4) - 0.5).abs() < 1e-6);
+        assert!((s.gamma(9) - 1.0).abs() < 1e-6);
+        assert!((s.gamma(100) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decays_compound() {
+        let s = Schedule::WarmupStepDecay {
+            base: 1.0,
+            warmup: 0,
+            decays: vec![10, 20],
+            factor: 0.1,
+        };
+        assert!((s.gamma(5) - 1.0).abs() < 1e-7);
+        assert!((s.gamma(10) - 0.1).abs() < 1e-7);
+        assert!((s.gamma(25) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn inv_sqrt_decays() {
+        let s = Schedule::WarmupInvSqrt { peak: 1e-3, warmup: 100 };
+        assert!(s.gamma(0) < 1e-4);
+        let at_warmup = s.gamma(99);
+        assert!((at_warmup - 1e-3).abs() < 1e-5);
+        let later = s.gamma(399);
+        assert!((later - 5e-4).abs() < 1e-5, "{later}"); // sqrt(100/400)
+        assert!(s.gamma(1000) < later);
+    }
+
+    #[test]
+    fn presets_are_sane() {
+        let img = Schedule::image_default(0.1, 4000);
+        assert!(img.gamma(0) < 0.1);
+        assert!((img.gamma(1000) - 0.1).abs() < 1e-6);
+        assert!((img.gamma(2000) - 0.01).abs() < 1e-6);
+        assert!(img.gamma(3999) < 1e-3);
+        let lm = Schedule::lm_default(1e-3, 1000);
+        assert!(lm.gamma(999) < 1e-3);
+    }
+}

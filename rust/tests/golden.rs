@@ -1,0 +1,109 @@
+//! Golden-vector verification: the Rust mirror optimizers must match the
+//! pure-jnp oracle bit-for-bit-ish (f32 rounding), via the vectors the AOT
+//! exporter dumped into artifacts/golden.json.
+
+use slowmo::jsonx::{parse, Json};
+use slowmo::optim;
+use slowmo::runtime::artifacts_dir;
+use slowmo::util::allclose;
+
+fn golden() -> Option<Json> {
+    let path = format!("{}/golden.json", artifacts_dir());
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(parse(&text).expect("golden.json parses"))
+}
+
+fn vecf(case: &Json, key: &str) -> Vec<f32> {
+    case.path(key)
+        .and_then(|v| v.as_f32_vec())
+        .unwrap_or_else(|| panic!("missing {key}"))
+}
+
+fn scalar(case: &Json, key: &str) -> f32 {
+    case.path(key).and_then(|v| v.as_f64()).unwrap() as f32
+}
+
+#[test]
+fn slowmo_update_matches_jnp_oracle() {
+    let Some(g) = golden() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let c = g.get("slowmo").unwrap();
+    let mut x0 = vecf(c, "in.x0");
+    let xt = vecf(c, "in.xt");
+    let mut u = vecf(c, "in.u");
+    optim::slowmo_update(
+        &mut x0,
+        &xt,
+        &mut u,
+        scalar(c, "in.gamma"),
+        scalar(c, "in.alpha"),
+        scalar(c, "in.beta"),
+    );
+    assert!(allclose(&x0, &vecf(c, "out.x"), 1e-6, 1e-7), "x mismatch");
+    assert!(allclose(&u, &vecf(c, "out.u"), 1e-6, 1e-7), "u mismatch");
+}
+
+#[test]
+fn nesterov_matches_jnp_oracle() {
+    let Some(g) = golden() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let c = g.get("nesterov").unwrap();
+    let mut x = vecf(c, "in.x");
+    let mut h = vecf(c, "in.h");
+    let gr = vecf(c, "in.g");
+    optim::nesterov_step(
+        &mut x,
+        &mut h,
+        &gr,
+        scalar(c, "in.gamma"),
+        scalar(c, "in.beta0"),
+        scalar(c, "in.wd"),
+    );
+    assert!(allclose(&x, &vecf(c, "out.x"), 1e-6, 1e-7), "x mismatch");
+    assert!(allclose(&h, &vecf(c, "out.h"), 1e-6, 1e-7), "h mismatch");
+}
+
+#[test]
+fn adam_matches_jnp_oracle() {
+    let Some(g) = golden() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let c = g.get("adam").unwrap();
+    let mut x = vecf(c, "in.x");
+    let mut h = vecf(c, "in.h");
+    let mut v = vecf(c, "in.v");
+    let gr = vecf(c, "in.g");
+    optim::adam_step(
+        &mut x,
+        &mut h,
+        &mut v,
+        &gr,
+        scalar(c, "in.gamma"),
+        scalar(c, "in.beta1"),
+        scalar(c, "in.beta2"),
+        scalar(c, "in.eps"),
+        scalar(c, "in.step"),
+    );
+    assert!(allclose(&x, &vecf(c, "out.x"), 1e-5, 1e-7), "x mismatch");
+    assert!(allclose(&h, &vecf(c, "out.h"), 1e-6, 1e-7), "h mismatch");
+    assert!(allclose(&v, &vecf(c, "out.v"), 1e-6, 1e-7), "v mismatch");
+}
+
+#[test]
+fn axpy_matches_jnp_oracle() {
+    let Some(g) = golden() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let c = g.get("axpy").unwrap();
+    let x = vecf(c, "in.x");
+    let y = vecf(c, "in.y");
+    let mut out = vec![0.0; x.len()];
+    optim::axpy_mix(&mut out, &x, &y, scalar(c, "in.a"), scalar(c, "in.b"));
+    assert!(allclose(&out, &vecf(c, "out.z"), 1e-6, 1e-7));
+}

@@ -1,0 +1,246 @@
+//! Integration: PJRT engine executes the AOT artifacts end to end.
+//!
+//! Requires `make artifacts` to have run (skips otherwise, with a loud
+//! message, so `cargo test` before artifact export doesn't hard-fail).
+
+use slowmo::optim;
+use slowmo::runtime::engine::Arg;
+use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::util::allclose;
+
+fn setup() -> Option<(Manifest, std::sync::Arc<Engine>)> {
+    let dir = artifacts_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!("SKIP: no artifacts at {dir} (run `make artifacts`)");
+        return None;
+    };
+    let engine = Engine::cpu(&dir).expect("pjrt cpu client");
+    Some((manifest, engine))
+}
+
+#[test]
+fn quad_train_executes_and_matches_closed_form() {
+    let Some((m, eng)) = setup() else { return };
+    let p = m.preset("quad").expect("quad preset");
+    let exe = eng.load(&p.train).expect("compile quad.train");
+    let d = p.flat_len;
+    let dim = match p.data {
+        slowmo::runtime::DataDesc::Quad { dim, .. } => dim,
+        _ => panic!(),
+    };
+    let params = m.load_init(p).expect("init vector");
+    let center = vec![0.0f32; dim];
+    let noise = vec![0.0f32; dim];
+    let out = exe
+        .exec(&[
+            Arg::F32(&params, &[d]),
+            Arg::F32(&center, &[dim]),
+            Arg::F32(&noise, &[dim]),
+        ])
+        .expect("execute");
+    assert_eq!(out.len(), 2);
+    let loss = out[0][0];
+    let grads = &out[1];
+    assert_eq!(grads.len(), d);
+    // Closed form: loss = 0.5/dim * sum lam_i x_i^2, lam log-spaced 1..cond.
+    let mut want_loss = 0.0f64;
+    for i in 0..dim {
+        let lam = 10f64.powf(2.0 * i as f64 / (dim - 1) as f64);
+        let x = params[i] as f64;
+        want_loss += 0.5 * lam * x * x / dim as f64;
+        let want_g = lam * x / dim as f64;
+        assert!(
+            (grads[i] as f64 - want_g).abs() < 1e-4 * want_g.abs() + 1e-6,
+            "grad[{i}]"
+        );
+    }
+    assert!(
+        (loss as f64 - want_loss).abs() < 1e-3 * want_loss,
+        "loss {loss} vs {want_loss}"
+    );
+}
+
+#[test]
+fn optimizer_artifacts_match_native_mirrors() {
+    let Some((m, eng)) = setup() else { return };
+    let d = 4096; // quad preset's flat_len
+    let opt = m.optim_for(d).expect("optim graphs for d=4096");
+
+    let mut rng = slowmo::rng::Xoshiro256::seed_from(11);
+    let mut x = vec![0.0f32; d];
+    let mut h = vec![0.0f32; d];
+    let mut g = vec![0.0f32; d];
+    rng.fill_normal(&mut x, 1.0);
+    rng.fill_normal(&mut h, 0.5);
+    rng.fill_normal(&mut g, 1.0);
+    let sc = |v: f32| vec![v];
+
+    // nesterov
+    let exe = eng.load(&opt.graphs["nesterov"]).unwrap();
+    let out = exe
+        .exec(&[
+            Arg::F32(&x, &[d]),
+            Arg::F32(&h, &[d]),
+            Arg::F32(&g, &[d]),
+            Arg::F32(&sc(0.1), &[1]),
+            Arg::F32(&sc(0.9), &[1]),
+            Arg::F32(&sc(1e-4), &[1]),
+        ])
+        .unwrap();
+    let mut xn = x.clone();
+    let mut hn = h.clone();
+    optim::nesterov_step(&mut xn, &mut hn, &g, 0.1, 0.9, 1e-4);
+    assert!(allclose(&out[0], &xn, 1e-5, 1e-6), "nesterov x");
+    assert!(allclose(&out[1], &hn, 1e-5, 1e-6), "nesterov h");
+
+    // adam
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 0.5);
+    for val in v.iter_mut() {
+        *val = val.abs();
+    }
+    let exe = eng.load(&opt.graphs["adam"]).unwrap();
+    let out = exe
+        .exec(&[
+            Arg::F32(&x, &[d]),
+            Arg::F32(&h, &[d]),
+            Arg::F32(&v, &[d]),
+            Arg::F32(&g, &[d]),
+            Arg::F32(&sc(1e-3), &[1]),
+            Arg::F32(&sc(0.9), &[1]),
+            Arg::F32(&sc(0.98), &[1]),
+            Arg::F32(&sc(1e-8), &[1]),
+            Arg::F32(&sc(5.0), &[1]),
+        ])
+        .unwrap();
+    let (mut xa, mut ha, mut va) = (x.clone(), h.clone(), v.clone());
+    optim::adam_step(&mut xa, &mut ha, &mut va, &g, 1e-3, 0.9, 0.98, 1e-8,
+                     5.0);
+    assert!(allclose(&out[0], &xa, 1e-5, 1e-6), "adam x");
+    assert!(allclose(&out[1], &ha, 1e-5, 1e-6), "adam h");
+    assert!(allclose(&out[2], &va, 1e-5, 1e-6), "adam v");
+
+    // slowmo
+    let exe = eng.load(&opt.graphs["slowmo"]).unwrap();
+    let out = exe
+        .exec(&[
+            Arg::F32(&x, &[d]),
+            Arg::F32(&g, &[d]), // reuse g as "xt"
+            Arg::F32(&h, &[d]), // reuse h as "u"
+            Arg::F32(&sc(0.05), &[1]),
+            Arg::F32(&sc(1.0), &[1]),
+            Arg::F32(&sc(0.7), &[1]),
+        ])
+        .unwrap();
+    let mut xs = x.clone();
+    let mut us = h.clone();
+    optim::slowmo_update(&mut xs, &g, &mut us, 0.05, 1.0, 0.7);
+    assert!(allclose(&out[0], &xs, 1e-4, 1e-5), "slowmo x");
+    assert!(allclose(&out[1], &us, 1e-4, 1e-4), "slowmo u");
+
+    // axpy
+    let exe = eng.load(&opt.graphs["axpy"]).unwrap();
+    let out = exe
+        .exec(&[
+            Arg::F32(&x, &[d]),
+            Arg::F32(&g, &[d]),
+            Arg::F32(&sc(0.25), &[1]),
+            Arg::F32(&sc(0.75), &[1]),
+        ])
+        .unwrap();
+    let mut z = vec![0.0f32; d];
+    optim::axpy_mix(&mut z, &x, &g, 0.25, 0.75);
+    assert!(allclose(&out[0], &z, 1e-6, 1e-7), "axpy");
+}
+
+#[test]
+fn lm_tiny_train_step_descends() {
+    let Some((m, eng)) = setup() else { return };
+    let p = m.preset("lm-tiny").expect("lm-tiny preset");
+    let exe = eng.load(&p.train).unwrap();
+    let d = p.flat_len;
+    let (vocab, seq, batch) = match p.data {
+        slowmo::runtime::DataDesc::Lm { vocab, seq_len, batch } => {
+            (vocab, seq_len, batch)
+        }
+        _ => panic!(),
+    };
+    let mut params = m.load_init(p).unwrap();
+    let mut rng = slowmo::rng::Xoshiro256::seed_from(3);
+    let tokens: Vec<i32> = (0..batch * seq)
+        .map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    let targets = tokens.clone();
+    let shape = [batch, seq];
+    let run = |params: &[f32]| {
+        let out = exe
+            .exec(&[
+                Arg::F32(params, &[d]),
+                Arg::I32(&tokens, &shape),
+                Arg::I32(&targets, &shape),
+            ])
+            .unwrap();
+        (out[0][0], out[1].clone())
+    };
+    let (loss0, grads) = run(&params);
+    assert!(loss0.is_finite());
+    // Initial loss near log(vocab) = log(256) ≈ 5.55.
+    assert!((loss0 - (vocab as f32).ln()).abs() < 1.0, "loss0 {loss0}");
+    for (p, g) in params.iter_mut().zip(&grads) {
+        *p -= 0.5 * g;
+    }
+    let (loss1, _) = run(&params);
+    assert!(loss1 < loss0, "{loss1} !< {loss0}");
+}
+
+#[test]
+fn engine_caches_compiled_executables() {
+    let Some((m, eng)) = setup() else { return };
+    let p = m.preset("quad").unwrap();
+    let before = eng.cached_count();
+    let _a = eng.load(&p.eval).unwrap();
+    let _b = eng.load(&p.eval).unwrap();
+    assert_eq!(eng.cached_count(), before + 1);
+}
+
+#[test]
+fn engine_rejects_bad_args() {
+    let Some((m, eng)) = setup() else { return };
+    let p = m.preset("quad").unwrap();
+    let exe = eng.load(&p.train).unwrap();
+    // Wrong arity.
+    assert!(exe.exec(&[]).is_err());
+    // Wrong element count.
+    let tiny = vec![0.0f32; 3];
+    assert!(exe
+        .exec(&[
+            Arg::F32(&tiny, &[3]),
+            Arg::F32(&tiny, &[3]),
+            Arg::F32(&tiny, &[3])
+        ])
+        .is_err());
+}
+
+#[test]
+fn concurrent_execution_from_worker_threads() {
+    let Some((m, eng)) = setup() else { return };
+    let p = m.preset("quad").unwrap();
+    let exe = eng.load(&p.eval).unwrap();
+    let d = p.flat_len;
+    let dim = 4096;
+    let params = m.load_init(p).unwrap();
+    let zeros = vec![0.0f32; dim];
+    let results = slowmo::exec::run_workers(4, |_| {
+        let out = exe
+            .exec(&[
+                Arg::F32(&params, &[d]),
+                Arg::F32(&zeros, &[dim]),
+                Arg::F32(&zeros, &[dim]),
+            ])
+            .unwrap();
+        out[0][0]
+    });
+    for r in &results[1..] {
+        assert_eq!(*r, results[0]);
+    }
+}
