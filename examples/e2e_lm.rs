@@ -6,20 +6,19 @@
 //! the optimizer artifacts) is AOT-compiled to HLO, loaded by the Rust
 //! Layer-3 coordinator, and trained with **Local Adam + SlowMo (BMUF-Adam,
 //! the paper's WMT'16 configuration: maintain buffers, α=1)** across m
-//! workers on a synthetic Markov-chain corpus. The loss curve is printed
-//! and appended to results/e2e_lm.jsonl; EXPERIMENTS.md records a
-//! reference run.
+//! workers on a synthetic Markov-chain corpus — configured through the
+//! canonical [`Session`]/`TrainBuilder` API, with a `RunObserver`
+//! streaming progress mid-run. The loss curve is printed and appended to
+//! results/e2e_lm.jsonl; EXPERIMENTS.md records a reference run.
 //!
 //! Run with:
 //!   cargo run --release --example e2e_lm                (wmt-lm, ~2M)
 //!   cargo run --release --example e2e_lm -- lm-tiny 120 (CI-speed)
 //!   make e2e && cargo run --release --example e2e_lm -- lm-e2e (12.6M)
 
-use slowmo::net::CostModel;
-use slowmo::optim::kernels::InnerOpt;
-use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
-use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
+use slowmo::trainer::ProgressPrinter;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -30,38 +29,26 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(240);
     let m: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
 
-    let dir = artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu(&dir)?;
-    let info = manifest.preset(&preset)?;
+    let session = Session::open()?;
+    let info = session.manifest().preset(&preset)?;
     println!(
         "e2e: transformer LM preset={} ({} params), m={m}, {steps} steps",
         preset, info.raw_len
     );
 
     let tau = 12;
-    let cfg = TrainCfg {
-        preset: preset.clone(),
-        m,
-        steps,
-        seed: 0,
-        algo: AlgoSpec::Local(InnerOpt::adam_default()),
-        slowmo: Some(
+    let mut progress = ProgressPrinter { every: (steps / 10).max(1) };
+    let r = session
+        .train(&preset)
+        .algo("local-adam")
+        .workers(m)
+        .steps(steps)
+        .slowmo_cfg(
             SlowMoCfg::new(1.0, 0.5, tau)
                 .with_buffers(BufferStrategy::Maintain),
-        ),
-        sched: Schedule::lm_default(2e-3, steps),
-        heterogeneity: 0.5,
-        eval_every: (steps / 10).max(1),
-        eval_batches: 8,
-        force_pjrt: false,
-        native_kernels: true,
-        cost: CostModel::ethernet_10g(),
-        compute_time_s: 0.0,
-        record_gradnorm: false,
-    };
-
-    let r = train(&cfg, &manifest, Some(&engine))?;
+        )
+        .eval_every((steps / 10).max(1))
+        .run_observed(&mut progress)?;
 
     println!("\ntraining loss curve (per outer iteration, τ={tau}):");
     for (step, loss) in &r.train_curve {

@@ -6,19 +6,17 @@
 //! with and without SlowMo, showing the gap widening as shards become
 //! non-iid — the regime the paper's experiments live in.
 //!
+//! The sweep runs through one shared [`Session`] (the canonical entry
+//! point): the model executor is built once and reused by all six cells.
+//!
 //! Run with:  cargo run --release --example heterogeneity
 
-use slowmo::net::CostModel;
 use slowmo::optim::kernels::InnerOpt;
-use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
-use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
 
 fn main() -> anyhow::Result<()> {
-    let dir = artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu(&dir)?;
-    let steps = 240;
+    let session = Session::open()?;
     let tau = 12;
     println!("Local SGD vs +SlowMo across data heterogeneity (m=4, τ=12)\n");
     println!("{:<6} {:>16} {:>16} {:>8}", "het", "acc(local)",
@@ -33,27 +31,16 @@ fn main() -> anyhow::Result<()> {
             } else {
                 SlowMoCfg::new(1.0, beta, tau)
             };
-            let cfg = TrainCfg {
-                preset: "cifar-mlp".into(),
-                m: 4,
-                steps,
-                seed: 3,
-                algo: AlgoSpec::Local(InnerOpt::Nesterov {
-                    beta0: 0.9,
-                    wd: 1e-4,
-                }),
-                slowmo: Some(slowmo),
-                sched: Schedule::image_default(0.1, steps),
-                heterogeneity: het,
-                eval_every: 0,
-                eval_batches: 8,
-                force_pjrt: false,
-                native_kernels: true,
-                cost: CostModel::ethernet_10g(),
-                compute_time_s: 0.0,
-                record_gradnorm: false,
-            };
-            let r = train(&cfg, &manifest, Some(&engine))?;
+            let r = session
+                .train("cifar-mlp")
+                .algo("local")
+                .inner(InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 })
+                .workers(4)
+                .steps(240)
+                .seed(3)
+                .slowmo_cfg(slowmo)
+                .heterogeneity(het)
+                .run()?;
             accs.push(r.best_eval_metric);
         }
         println!(

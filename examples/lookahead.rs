@@ -3,39 +3,35 @@
 //! back". Compares plain SGD, Lookahead α=0.5 and SlowMo's α=1 anchor on
 //! the CIFAR-analog task, single worker, no communication at all.
 //!
+//! Every variant is one chained `TrainBuilder` off a shared [`Session`]
+//! (the canonical entry point — the engine and model build are paid once
+//! for all four runs).
+//!
 //! Run with:  cargo run --release --example lookahead
 
 use slowmo::net::CostModel;
 use slowmo::optim::kernels::InnerOpt;
-use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
-use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
+use slowmo::trainer::Schedule;
 
 fn run(
-    manifest: &Manifest,
-    engine: &Engine,
+    session: &Session,
     slowmo: Option<SlowMoCfg>,
     label: &str,
 ) -> anyhow::Result<()> {
-    let steps = 300;
-    let cfg = TrainCfg {
-        preset: "cifar-mlp".into(),
-        m: 1, // single worker: the Lookahead regime
-        steps,
-        seed: 7,
-        algo: AlgoSpec::Local(InnerOpt::Nesterov { beta0: 0.0, wd: 1e-4 }),
-        slowmo,
-        sched: Schedule::Const(0.08),
-        heterogeneity: 0.0,
-        eval_every: 0,
-        eval_batches: 8,
-        force_pjrt: false,
-        native_kernels: true,
-        cost: CostModel::free(),
-        compute_time_s: 0.0,
-        record_gradnorm: false,
-    };
-    let r = train(&cfg, manifest, Some(engine))?;
+    let r = session
+        .train("cifar-mlp")
+        .algo("local")
+        .inner(InnerOpt::Nesterov { beta0: 0.0, wd: 1e-4 })
+        .workers(1) // single worker: the Lookahead regime
+        .steps(300)
+        .seed(7)
+        .slowmo_opt(slowmo)
+        .schedule(Schedule::Const(0.08))
+        .heterogeneity(0.0)
+        .cost(CostModel::free())
+        .run()?;
     println!(
         "{label:<24} best train {:.4}   val acc {:.2}%",
         r.best_train_loss,
@@ -45,16 +41,13 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let dir = artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu(&dir)?;
+    let session = Session::open()?;
     println!("Lookahead as SlowMo(m=1, beta=0) — paper §2 special case\n");
-    // Plain SGD: τ=1, α=1, β=0 is the identity wrapper.
-    run(&manifest, &engine, None, "sgd")?;
+    // Plain SGD: no wrapper at all.
+    run(&session, None, "sgd")?;
     // Lookahead: k=6 fast steps, pull back halfway (α=0.5).
     run(
-        &manifest,
-        &engine,
+        &session,
         Some(
             SlowMoCfg::new(0.5, 0.0, 6)
                 .with_buffers(BufferStrategy::Maintain),
@@ -64,8 +57,7 @@ fn main() -> anyhow::Result<()> {
     // α=1 anchor: adopting the fast weights exactly (= plain SGD dynamics
     // in the m=1, β=0 case — sanity anchor).
     run(
-        &manifest,
-        &engine,
+        &session,
         Some(
             SlowMoCfg::new(1.0, 0.0, 6)
                 .with_buffers(BufferStrategy::Maintain),
@@ -74,8 +66,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     // Slow momentum on a single node (BMUF-style m=1).
     run(
-        &manifest,
-        &engine,
+        &session,
         Some(
             SlowMoCfg::new(1.0, 0.5, 6)
                 .with_buffers(BufferStrategy::Maintain),

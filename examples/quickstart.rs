@@ -1,48 +1,41 @@
-//! Quickstart: train a model with SGP + SlowMo in ~30 lines.
+//! Quickstart: train a model with SGP + SlowMo through the canonical
+//! session/builder API in a dozen lines.
+//!
+//! A [`Session`] loads the AOT artifacts and brings up the PJRT engine
+//! once (models/kernels/inits are cached across runs); the fluent
+//! `TrainBuilder` describes the run; a `RunObserver` streams progress
+//! while it trains.
 //!
 //! Run with:  cargo run --release --example quickstart
 //! Requires:  make artifacts   (AOT-lowers the JAX/Pallas graphs first)
 
-use slowmo::bench::Scale;
-use slowmo::net::CostModel;
-use slowmo::optim::kernels::InnerOpt;
-use slowmo::runtime::{artifacts_dir, Engine, Manifest};
-use slowmo::slowmo::SlowMoCfg;
-use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
+use slowmo::session::Session;
+use slowmo::trainer::ProgressPrinter;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the AOT artifacts (HLO text lowered from JAX once, at build
-    //    time) and bring up the PJRT CPU engine.
-    let dir = artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu(&dir)?;
-    println!("engine: {}", engine.platform());
+    // 1. One Session per process: manifest + PJRT CPU engine + caches.
+    let session = Session::open()?;
+    println!("engine: {}",
+             session.engine().expect("pjrt engine").platform());
 
-    // 2. Configure: 4 workers running SGP (push-sum gossip over the
-    //    exponential graph), wrapped in SlowMo with τ=12, β=0.7 —
-    //    the paper's CIFAR-10 configuration.
-    let steps = 240;
-    let cfg = TrainCfg {
-        preset: "cifar-mlp".into(),
-        m: 4,
-        steps,
-        seed: 0,
-        algo: AlgoSpec::Sgp(InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 }),
-        slowmo: Some(SlowMoCfg::new(1.0, 0.7, 12)),
-        sched: Schedule::image_default(0.1, steps),
-        heterogeneity: 0.8,
-        eval_every: 60,
-        eval_batches: 8,
-        force_pjrt: false,
-        native_kernels: true,
-        cost: CostModel::ethernet_10g(),
-        compute_time_s: 0.0,
-        record_gradnorm: false,
-    };
+    // 2. Describe the run: 4 workers running SGP (push-sum gossip over
+    //    the exponential graph), wrapped in SlowMo with τ=12, β=0.7 —
+    //    the paper's CIFAR-10 configuration. Everything not set here
+    //    keeps a typed default (seed 0, auto LR schedule, 10G-Ethernet
+    //    cost model, ...).
+    let mut progress = ProgressPrinter { every: 60 };
+    let result = session
+        .train("cifar-mlp")
+        .algo("sgp")
+        .slowmo(0.7, 12)
+        .workers(4)
+        .steps(240)
+        .heterogeneity(0.8)
+        .eval_every(60)
+        .run_observed(&mut progress)?;
 
-    // 3. Train and inspect.
-    let result = train(&cfg, &manifest, Some(&engine))?;
-    println!("\nvalidation curve (mean across {} workers):", cfg.m);
+    // 3. Inspect.
+    println!("\nvalidation curve (mean across {} workers):", result.m);
     for p in &result.eval_curve {
         println!(
             "  step {:>4}  loss {:.4}  acc {:.2}%  [{:.4}, {:.4}]",

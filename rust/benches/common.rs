@@ -7,7 +7,7 @@ use slowmo::bench::{Env, Scale};
 pub fn env() -> Env {
     let scale = std::env::var("SLOWMO_SCALE")
         .ok()
-        .and_then(|s| Scale::parse(&s))
+        .and_then(|s| s.parse::<Scale>().ok())
         .unwrap_or(Scale::Ci);
     Env::load(scale).expect("run `make artifacts` first")
 }

@@ -18,12 +18,14 @@ mod allreduce;
 mod double_avg;
 mod dpsgd;
 mod local;
+pub mod registry;
 mod sgp;
 
 pub use allreduce::AllReduce;
 pub use double_avg::DoubleAvg;
 pub use dpsgd::Dpsgd;
 pub use local::Local;
+pub use registry::{AlgoCtx, AlgoRegistry, AlgoSel};
 pub use sgp::Sgp;
 
 use crate::net::{Fabric, GossipMsg};

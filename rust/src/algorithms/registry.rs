@@ -1,0 +1,405 @@
+//! String-keyed registry of [`BaseAlgorithm`] factories.
+//!
+//! The registry replaces the old closed `AlgoSpec` enum (and its
+//! triple-maintained `parse`/`build`/match arms): every algorithm registers
+//! one factory under a string key, and the same key is reachable from the
+//! CLI (`--algo`), TOML configs, the bench harness, and
+//! [`crate::session::TrainBuilder`]. Algorithms defined outside this crate
+//! register through [`AlgoRegistry::register`] on a
+//! [`crate::session::Session`] and are immediately runnable by key.
+
+use super::{AllReduce, BaseAlgorithm, DoubleAvg, Dpsgd, Local, Sgp};
+use crate::optim::kernels::InnerOpt;
+use crate::topology::ExponentialGraph;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Everything a factory may consult when instantiating an algorithm.
+pub struct AlgoCtx {
+    pub inner: InnerOpt,
+    /// Number of workers in the run (topology sizing).
+    pub m: usize,
+    /// Optional `:n` argument from the spec string (e.g. double-avg τ).
+    pub arg: Option<u64>,
+}
+
+/// A parsed algorithm selection: registry key + inner optimizer + optional
+/// numeric argument. [`AlgoRegistry::build`] turns it into a live
+/// [`BaseAlgorithm`] for a concrete worker count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlgoSel {
+    pub key: String,
+    pub inner: InnerOpt,
+    pub arg: Option<u64>,
+}
+
+impl AlgoSel {
+    /// Select `key` with the default Nesterov-SGD inner optimizer.
+    pub fn new(key: &str) -> Self {
+        Self::with_inner(key, InnerOpt::nesterov_default())
+    }
+
+    pub fn with_inner(key: &str, inner: InnerOpt) -> Self {
+        Self {
+            key: key.to_string(),
+            inner,
+            arg: None,
+        }
+    }
+
+    pub fn arg(mut self, arg: u64) -> Self {
+        self.arg = Some(arg);
+        self
+    }
+
+    /// The spec-string form ("doubleavg:24", "local-adam").
+    pub fn spec(&self) -> String {
+        let mut s = self.key.clone();
+        if self.inner.uses_second_moment() {
+            s.push_str("-adam");
+        }
+        if let Some(a) = self.arg {
+            s.push(':');
+            s.push_str(&a.to_string());
+        }
+        s
+    }
+}
+
+struct AlgoEntry {
+    factory: Box<dyn Fn(&AlgoCtx) -> Arc<dyn BaseAlgorithm> + Send + Sync>,
+    help: String,
+    takes_arg: bool,
+}
+
+/// The registry itself: canonical key -> factory, plus aliases.
+pub struct AlgoRegistry {
+    entries: BTreeMap<String, AlgoEntry>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl Default for AlgoRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+impl AlgoRegistry {
+    /// An empty registry (no algorithms).
+    pub fn empty() -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            aliases: BTreeMap::new(),
+        }
+    }
+
+    /// The paper's baselines, pre-registered.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register(
+            "local",
+            "no inner-loop communication (Local SGD / Local Adam)",
+            false,
+            |c: &AlgoCtx| Arc::new(Local::new(c.inner)) as Arc<dyn BaseAlgorithm>,
+        );
+        r.register(
+            "sgp",
+            "stochastic gradient push over the exponential graph (Alg. 2)",
+            false,
+            |c: &AlgoCtx| {
+                Arc::new(Sgp::new(c.inner, Arc::new(ExponentialGraph::new(c.m))))
+                    as Arc<dyn BaseAlgorithm>
+            },
+        );
+        r.register(
+            "osgp",
+            "overlapped SGP: communication hidden behind compute (Alg. 3)",
+            false,
+            |c: &AlgoCtx| {
+                Arc::new(Sgp::overlap(c.inner, Arc::new(ExponentialGraph::new(c.m))))
+                    as Arc<dyn BaseAlgorithm>
+            },
+        );
+        r.register(
+            "dpsgd",
+            "decentralized parallel SGD over a symmetric ring",
+            false,
+            |c: &AlgoCtx| Arc::new(Dpsgd::new(c.inner, c.m)) as Arc<dyn BaseAlgorithm>,
+        );
+        r.register(
+            "ar",
+            "gradient allreduce every step (AR-SGD / AR-Adam)",
+            false,
+            |c: &AlgoCtx| Arc::new(AllReduce::new(c.inner)) as Arc<dyn BaseAlgorithm>,
+        );
+        r.alias("allreduce", "ar");
+        r.register(
+            "doubleavg",
+            "double-averaging momentum (Yu et al. 2019, Alg. 5); \
+             ':n' sets the averaging period tau (default 12)",
+            true,
+            |c: &AlgoCtx| {
+                Arc::new(DoubleAvg::new(c.inner, c.arg.unwrap_or(12)))
+                    as Arc<dyn BaseAlgorithm>
+            },
+        );
+        r
+    }
+
+    /// Register a factory under `key`. `takes_arg` controls whether the
+    /// spec string accepts a `:n` suffix. Re-registering a key replaces
+    /// the previous factory.
+    pub fn register(
+        &mut self,
+        key: &str,
+        help: &str,
+        takes_arg: bool,
+        factory: impl Fn(&AlgoCtx) -> Arc<dyn BaseAlgorithm> + Send + Sync + 'static,
+    ) {
+        self.entries.insert(
+            key.to_string(),
+            AlgoEntry {
+                factory: Box::new(factory),
+                help: help.to_string(),
+                takes_arg,
+            },
+        );
+    }
+
+    /// Register `alias` as another name for the existing `key`.
+    pub fn alias(&mut self, alias: &str, key: &str) {
+        assert!(
+            self.entries.contains_key(key),
+            "alias target {key:?} not registered"
+        );
+        self.aliases.insert(alias.to_string(), key.to_string());
+    }
+
+    /// Canonical keys, sorted.
+    pub fn keys(&self) -> Vec<&str> {
+        self.entries.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.canonical(key).is_some()
+    }
+
+    fn canonical(&self, key: &str) -> Option<&str> {
+        if let Some((k, _)) = self.entries.get_key_value(key) {
+            return Some(k.as_str());
+        }
+        self.aliases.get(key).map(|k| k.as_str())
+    }
+
+    /// Human-readable list of valid spec forms, for error messages and
+    /// CLI help.
+    pub fn valid_forms(&self) -> String {
+        let forms: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(k, e)| {
+                if e.takes_arg {
+                    format!("{k}[:n]")
+                } else {
+                    k.clone()
+                }
+            })
+            .collect();
+        format!(
+            "{} (append -adam for an Adam inner optimizer{})",
+            forms.join("|"),
+            if self.aliases.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "; aliases: {}",
+                    self.aliases
+                        .iter()
+                        .map(|(a, k)| format!("{a}={k}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            }
+        )
+    }
+
+    /// One line per algorithm, for `--help`-style output.
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        for (k, e) in &self.entries {
+            s.push_str(&format!("  {:<12} {}\n", k, e.help));
+        }
+        s
+    }
+
+    /// Parse a spec string such as "sgp", "local-adam" or "doubleavg:24".
+    ///
+    /// Unlike the old `AlgoSpec::parse`, every malformed input is a hard
+    /// error (no silent defaulting): unknown keys, `:n` suffixes that are
+    /// not unsigned integers, and `:n` suffixes on algorithms that take no
+    /// argument all fail with a message listing the valid forms.
+    pub fn parse(&self, spec: &str) -> Result<AlgoSel> {
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (spec, None),
+        };
+        let (base, inner) = match name.strip_suffix("-adam") {
+            Some(b) => (b, InnerOpt::adam_default()),
+            None => (name, InnerOpt::nesterov_default()),
+        };
+        let Some(key) = self.canonical(base) else {
+            bail!(
+                "unknown algorithm {spec:?}; valid forms: {}",
+                self.valid_forms()
+            );
+        };
+        let entry = &self.entries[key];
+        let arg = match rest {
+            None => None,
+            Some(r) => {
+                if !entry.takes_arg {
+                    bail!(
+                        "algorithm {base:?} takes no ':' argument \
+                         (got {spec:?}); valid forms: {}",
+                        self.valid_forms()
+                    );
+                }
+                Some(r.parse::<u64>().map_err(|_| {
+                    anyhow!(
+                        "malformed argument {r:?} in {spec:?}: expected an \
+                         unsigned integer (e.g. \"{base}:12\"); valid \
+                         forms: {}",
+                        self.valid_forms()
+                    )
+                })?)
+            }
+        };
+        Ok(AlgoSel {
+            key: key.to_string(),
+            inner,
+            arg,
+        })
+    }
+
+    /// Instantiate the algorithm `sel` names for an `m`-worker run.
+    pub fn build(&self, sel: &AlgoSel, m: usize) -> Result<Arc<dyn BaseAlgorithm>> {
+        let key = self.canonical(&sel.key).ok_or_else(|| {
+            anyhow!(
+                "unknown algorithm key {:?}; registered: {}",
+                sel.key,
+                self.keys().join(", ")
+            )
+        })?;
+        let entry = &self.entries[key];
+        Ok((entry.factory)(&AlgoCtx {
+            inner: sel.inner,
+            m,
+            arg: sel.arg,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_key_round_trips() {
+        let r = AlgoRegistry::builtin();
+        assert!(!r.keys().is_empty());
+        for key in r.keys() {
+            let sel = r.parse(key).unwrap();
+            assert_eq!(sel.key, key);
+            let algo = r.build(&sel, 4).unwrap();
+            assert!(
+                algo.name().starts_with(key),
+                "{} !~ {key}",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn adam_suffix_selects_adam_inner() {
+        let r = AlgoRegistry::builtin();
+        let sel = r.parse("local-adam").unwrap();
+        assert_eq!(sel.key, "local");
+        assert!(sel.inner.uses_second_moment());
+        let sel = r.parse("sgp").unwrap();
+        assert!(!sel.inner.uses_second_moment());
+    }
+
+    #[test]
+    fn arg_suffix_parses_and_reaches_factory() {
+        let r = AlgoRegistry::builtin();
+        let sel = r.parse("doubleavg:24").unwrap();
+        assert_eq!(sel.arg, Some(24));
+        let name = r.build(&sel, 4).unwrap().name();
+        assert!(name.contains("tau24"), "{name}");
+        // Default τ when no argument is given.
+        let sel = r.parse("doubleavg").unwrap();
+        assert_eq!(sel.arg, None);
+        assert!(r.build(&sel, 4).unwrap().name().contains("tau12"));
+    }
+
+    #[test]
+    fn malformed_arg_is_a_hard_error() {
+        let r = AlgoRegistry::builtin();
+        for bad in ["doubleavg:abc", "doubleavg:", "doubleavg:-3",
+                    "doubleavg:1.5"] {
+            let e = r.parse(bad).unwrap_err().to_string();
+            assert!(e.contains("doubleavg"), "{bad}: {e}");
+            assert!(e.contains("valid forms"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn arg_on_argless_algorithm_is_an_error() {
+        let r = AlgoRegistry::builtin();
+        let e = r.parse("sgp:3").unwrap_err().to_string();
+        assert!(e.contains("takes no"), "{e}");
+    }
+
+    #[test]
+    fn unknown_key_lists_valid_forms() {
+        let r = AlgoRegistry::builtin();
+        let e = r.parse("bogus").unwrap_err().to_string();
+        assert!(e.contains("sgp"), "{e}");
+        let e = r
+            .build(&AlgoSel::new("bogus"), 4)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("registered"), "{e}");
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_key() {
+        let r = AlgoRegistry::builtin();
+        let sel = r.parse("allreduce").unwrap();
+        assert_eq!(sel.key, "ar");
+        assert!(r.contains("allreduce") && r.contains("ar"));
+    }
+
+    #[test]
+    fn custom_registration_and_replacement() {
+        let mut r = AlgoRegistry::builtin();
+        r.register("mylocal", "test-only", false, |c: &AlgoCtx| {
+            Arc::new(Local::new(c.inner)) as Arc<dyn BaseAlgorithm>
+        });
+        let sel = r.parse("mylocal").unwrap();
+        assert!(r.build(&sel, 2).unwrap().name().starts_with("local"));
+        assert!(r.valid_forms().contains("mylocal"));
+        assert!(r.help_text().contains("test-only"));
+    }
+
+    #[test]
+    fn sel_spec_round_trips() {
+        let r = AlgoRegistry::builtin();
+        for spec in ["local", "sgp", "local-adam", "doubleavg:24"] {
+            let sel = r.parse(spec).unwrap();
+            assert_eq!(sel.spec(), spec);
+            assert_eq!(r.parse(&sel.spec()).unwrap(), sel);
+        }
+    }
+}

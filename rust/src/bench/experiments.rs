@@ -13,12 +13,13 @@
 //! - [`theory`]    — Theorem 1 / Corollaries 1-2 empirical validation
 
 use super::{Env, Scale};
+use crate::algorithms::AlgoSel;
 use crate::benchkit::Table;
 use crate::net::WorkloadTiming;
 use crate::optim::kernels::InnerOpt;
+use crate::session::TrainBuilder;
 use crate::slowmo::{BufferStrategy, SlowMoCfg};
-use crate::trainer::{train, AlgoSpec, Schedule, SeedAggregate, TrainCfg,
-                     TrainResult};
+use crate::trainer::{Schedule, SeedAggregate, TrainResult};
 use anyhow::Result;
 
 /// Task descriptor: which preset stands in for which paper dataset, and
@@ -83,43 +84,39 @@ impl TaskSpec {
     }
 }
 
-/// Build the TrainCfg for one (task, algo, slowmo) cell.
-pub fn cell_cfg(
-    env: &Env,
+/// Builder for one (task, algo, slowmo) cell. The harnesses chain further
+/// overrides onto this before handing it to [`run_cell`].
+///
+/// §Perf note: the optimizer kernels default to the native mirrors — on
+/// CPU-PJRT the artifacts are literal-copy bound (~50x at d=2M, see the
+/// micro bench) and the math is identical (equivalence-tested); PJRT
+/// kernels stay available through `.pjrt_kernels()`.
+pub fn cell<'e>(
+    env: &'e Env,
     task: &TaskSpec,
-    algo: AlgoSpec,
+    algo: AlgoSel,
     slowmo: Option<SlowMoCfg>,
     seed: u64,
-) -> TrainCfg {
+) -> TrainBuilder<'e> {
     let s = env.scale;
-    TrainCfg {
-        preset: task.preset.clone(),
-        m: s.m(),
-        steps: s.steps(),
-        seed,
-        algo,
-        slowmo,
-        sched: (task.sched)(s.steps()),
-        heterogeneity: 0.5,
-        eval_every: s.eval_every(),
-        eval_batches: s.eval_batches(),
-        force_pjrt: false,
-        // §Perf: on CPU-PJRT the optimizer artifacts are literal-copy
-        // bound (~50x the native mirrors at d=2M, see micro bench); the
-        // math is identical (equivalence-tested), so the coordinator
-        // defaults to the native mirrors and keeps PJRT as an option.
-        native_kernels: true,
-        cost: env.cost(),
-        compute_time_s: 0.0,
-        record_gradnorm: false,
-    }
+    env.session
+        .train(&task.preset)
+        .algo_sel(algo)
+        .workers(s.m())
+        .steps(s.steps())
+        .seed(seed)
+        .slowmo_opt(slowmo)
+        .schedule((task.sched)(s.steps()))
+        .eval_every(s.eval_every())
+        .eval_batches(s.eval_batches())
+        .cost(env.cost())
 }
 
-fn run_cell(env: &Env, cfg: &TrainCfg) -> Result<TrainResult> {
-    let r = train(cfg, &env.manifest, Some(&env.engine))?;
+fn run_cell(env: &Env, builder: TrainBuilder) -> Result<TrainResult> {
+    let r = builder.run()?;
     crate::info!(
         "{} / {}: train {:.4} metric {:.4} ({:.1}s wall)",
-        cfg.preset, r.algo, r.best_train_loss, r.best_eval_metric,
+        r.preset, r.algo, r.best_train_loss, r.best_eval_metric,
         r.wall_time
     );
     r.append_jsonl(&env.out_path("runs.jsonl"))?;
@@ -152,10 +149,13 @@ pub fn table1(env: &Env, tasks: &[TaskSpec]) -> Result<Table> {
     );
     for task in tasks {
         let adam = task.inner.uses_second_moment();
-        let rows: Vec<(&str, AlgoSpec, u64)> = vec![
-            ("Local", AlgoSpec::Local(task.inner), env.scale.tau_local()),
-            ("OSGP", AlgoSpec::Osgp(task.inner), env.scale.tau_gossip()),
-            ("SGP", AlgoSpec::Sgp(task.inner), env.scale.tau_gossip()),
+        let rows: Vec<(&str, AlgoSel, u64)> = vec![
+            ("Local", AlgoSel::with_inner("local", task.inner),
+             env.scale.tau_local()),
+            ("OSGP", AlgoSel::with_inner("osgp", task.inner),
+             env.scale.tau_gossip()),
+            ("SGP", AlgoSel::with_inner("sgp", task.inner),
+             env.scale.tau_gossip()),
         ];
         for (name, algo, tau) in rows {
             if adam && name == "OSGP" {
@@ -163,19 +163,18 @@ pub fn table1(env: &Env, tasks: &[TaskSpec]) -> Result<Table> {
             }
             // Baseline: Local runs as SlowMo(α=1, β=0) — that *is* Local
             // SGD (periodic averaging); gossip baselines run bare.
-            let orig_cfg = match &algo {
-                AlgoSpec::Local(_) => cell_cfg(
-                    env, task, algo.clone(),
-                    Some(SlowMoCfg::new(1.0, 0.0, tau)
-                        .with_buffers(BufferStrategy::Maintain)),
-                    0,
-                ),
-                _ => cell_cfg(env, task, algo.clone(), None, 0),
+            let orig_slowmo = if algo.key == "local" {
+                Some(SlowMoCfg::new(1.0, 0.0, tau)
+                    .with_buffers(BufferStrategy::Maintain))
+            } else {
+                None
             };
-            let orig = run_cell(env, &orig_cfg)?;
-            let slow_cfg = cell_cfg(env, task, algo.clone(),
-                                    Some(slowmo_for(task, tau)), 0);
-            let slow = run_cell(env, &slow_cfg)?;
+            let orig =
+                run_cell(env, cell(env, task, algo.clone(), orig_slowmo, 0))?;
+            let slow = run_cell(
+                env,
+                cell(env, task, algo.clone(), Some(slowmo_for(task, tau)), 0),
+            )?;
             table.row(&[
                 task.paper_name.to_string(),
                 name.to_string(),
@@ -190,7 +189,7 @@ pub fn table1(env: &Env, tasks: &[TaskSpec]) -> Result<Table> {
         // AR baseline (no SlowMo column in the paper).
         let ar = run_cell(
             env,
-            &cell_cfg(env, task, AlgoSpec::AllReduce(task.inner), None, 0),
+            cell(env, task, AlgoSel::with_inner("ar", task.inner), None, 0),
         )?;
         table.row(&[
             task.paper_name.to_string(),
@@ -264,11 +263,12 @@ pub fn table2(env: &Env) -> Result<Table> {
 pub fn fig2(env: &Env, tasks: &[TaskSpec]) -> Result<()> {
     for task in tasks {
         let tau = env.scale.tau_local(); // paper fixes τ=12 for Fig. 2
-        let base = cell_cfg(env, task, AlgoSpec::Sgp(task.inner), None, 0);
-        let slow = cell_cfg(env, task, AlgoSpec::Sgp(task.inner),
-                            Some(slowmo_for(task, tau)), 0);
-        let r0 = run_cell(env, &base)?;
-        let r1 = run_cell(env, &slow)?;
+        let sgp = AlgoSel::with_inner("sgp", task.inner);
+        let r0 = run_cell(env, cell(env, task, sgp.clone(), None, 0))?;
+        let r1 = run_cell(
+            env,
+            cell(env, task, sgp, Some(slowmo_for(task, tau)), 0),
+        )?;
         let obj = crate::jsonx::Json::obj(vec![
             ("task", crate::jsonx::Json::str(task.paper_name)),
             ("sgp", r0.to_json()),
@@ -311,9 +311,11 @@ pub fn fig3(env: &Env, task: &TaskSpec) -> Result<Table> {
         WorkloadTiming::imagenet()
     };
     for &tau in &taus {
-        let cfg = cell_cfg(env, task, AlgoSpec::Sgp(task.inner),
-                           Some(slowmo_for(task, tau)), 0);
-        let r = run_cell(env, &cfg)?;
+        let r = run_cell(
+            env,
+            cell(env, task, AlgoSel::with_inner("sgp", task.inner),
+                 Some(slowmo_for(task, tau)), 0),
+        )?;
         let t_iter = wt.iter_sgp() + wt.slowmo_overhead(tau as usize, false);
         table.row(&[
             tau.to_string(),
@@ -338,16 +340,15 @@ pub fn figb2(env: &Env, task: &TaskSpec, alphas: &[f32], betas: &[f32])
     );
     let tau = env.scale.tau_local();
     let base = if task.inner.uses_second_moment() {
-        AlgoSpec::Local(task.inner) // SlowMo-Adam sweep (Fig. B.2b)
+        AlgoSel::with_inner("local", task.inner) // SlowMo-Adam (Fig. B.2b)
     } else {
-        AlgoSpec::Osgp(task.inner) // OSGP base (Fig. B.2a)
+        AlgoSel::with_inner("osgp", task.inner) // OSGP base (Fig. B.2a)
     };
     for &alpha in alphas {
         for &beta in betas {
             let s = SlowMoCfg::new(alpha, beta, tau)
                 .with_buffers(task.buffers);
-            let cfg = cell_cfg(env, task, base.clone(), Some(s), 0);
-            let r = run_cell(env, &cfg)?;
+            let r = run_cell(env, cell(env, task, base.clone(), Some(s), 0))?;
             table.row(&[
                 format!("{alpha}"),
                 format!("{beta}"),
@@ -373,9 +374,11 @@ pub fn tableb23(env: &Env, task: &TaskSpec) -> Result<Table> {
     for strat in [BufferStrategy::Average, BufferStrategy::Reset,
                   BufferStrategy::Maintain] {
         let s = SlowMoCfg::new(1.0, task.beta, tau).with_buffers(strat);
-        let cfg = cell_cfg(env, task, AlgoSpec::Local(task.inner),
-                           Some(s), 0);
-        let r = run_cell(env, &cfg)?;
+        let r = run_cell(
+            env,
+            cell(env, task, AlgoSel::with_inner("local", task.inner),
+                 Some(s), 0),
+        )?;
         table.row(&[
             strat.name().to_string(),
             fmt4(r.best_train_loss),
@@ -398,10 +401,13 @@ pub fn tableb4(env: &Env, task: &TaskSpec) -> Result<Table> {
         &["baseline", "orig", "w/ SlowMo"],
     );
     let seeds = env.scale.seeds();
-    let rows: Vec<(&str, AlgoSpec, u64)> = vec![
-        ("Local", AlgoSpec::Local(task.inner), env.scale.tau_local()),
-        ("OSGP", AlgoSpec::Osgp(task.inner), env.scale.tau_gossip()),
-        ("SGP", AlgoSpec::Sgp(task.inner), env.scale.tau_gossip()),
+    let rows: Vec<(&str, AlgoSel, u64)> = vec![
+        ("Local", AlgoSel::with_inner("local", task.inner),
+         env.scale.tau_local()),
+        ("OSGP", AlgoSel::with_inner("osgp", task.inner),
+         env.scale.tau_gossip()),
+        ("SGP", AlgoSel::with_inner("sgp", task.inner),
+         env.scale.tau_gossip()),
     ];
     let agg = |runs: &[TrainResult]| {
         let a = SeedAggregate::from_runs(runs);
@@ -415,20 +421,20 @@ pub fn tableb4(env: &Env, task: &TaskSpec) -> Result<Table> {
         let mut orig_runs = Vec::new();
         let mut slow_runs = Vec::new();
         for seed in 0..seeds {
-            let orig_cfg = match &algo {
-                AlgoSpec::Local(_) => cell_cfg(
-                    env, task, algo.clone(),
-                    Some(SlowMoCfg::new(1.0, 0.0, tau)
-                        .with_buffers(BufferStrategy::Maintain)),
-                    seed,
-                ),
-                _ => cell_cfg(env, task, algo.clone(), None, seed),
+            let orig_slowmo = if algo.key == "local" {
+                Some(SlowMoCfg::new(1.0, 0.0, tau)
+                    .with_buffers(BufferStrategy::Maintain))
+            } else {
+                None
             };
-            orig_runs.push(run_cell(env, &orig_cfg)?);
+            orig_runs.push(run_cell(
+                env,
+                cell(env, task, algo.clone(), orig_slowmo, seed),
+            )?);
             slow_runs.push(run_cell(
                 env,
-                &cell_cfg(env, task, algo.clone(),
-                          Some(slowmo_for(task, tau)), seed),
+                cell(env, task, algo.clone(),
+                     Some(slowmo_for(task, tau)), seed),
             )?);
         }
         table.row(&[name.to_string(), agg(&orig_runs), agg(&slow_runs)]);
@@ -451,13 +457,15 @@ pub fn doubleavg(env: &Env, task: &TaskSpec) -> Result<Table> {
     // Local SGD + double averaging.
     let da = run_cell(
         env,
-        &cell_cfg(env, task, AlgoSpec::DoubleAvg(task.inner, tau), None, 0),
+        cell(env, task,
+             AlgoSel::with_inner("doubleavg", task.inner).arg(tau),
+             None, 0),
     )?;
     // Local SGD + SlowMo.
     let sm = run_cell(
         env,
-        &cell_cfg(env, task, AlgoSpec::Local(task.inner),
-                  Some(slowmo_for(task, tau)), 0),
+        cell(env, task, AlgoSel::with_inner("local", task.inner),
+             Some(slowmo_for(task, tau)), 0),
     )?;
     let t_da = wt.compute_s
         + 2.0 * wt.net.allreduce_time(wt.params, wt.m) / tau as f64;
@@ -498,9 +506,11 @@ pub fn noaverage(env: &Env, task: &TaskSpec) -> Result<Table> {
          wt.iter_sgp()),
     ];
     for (name, s, t_iter) in variants {
-        let cfg = cell_cfg(env, task, AlgoSpec::Sgp(task.inner),
-                           Some(s), 0);
-        let r = run_cell(env, &cfg)?;
+        let r = run_cell(
+            env,
+            cell(env, task, AlgoSel::with_inner("sgp", task.inner),
+                 Some(s), 0),
+        )?;
         table.row(&[
             name.to_string(),
             fmt_pct(r.best_eval_metric),
@@ -526,25 +536,25 @@ pub fn theory(env: &Env) -> Result<Table> {
     let steps = 2048u64;
     let run_quad = |m: usize, tau: u64, alpha: f32, beta: f32,
                     seed: u64| -> Result<f64> {
-        let cfg = TrainCfg {
-            preset: "quad".into(),
-            m,
-            steps,
-            seed,
-            algo: AlgoSpec::Local(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }),
-            slowmo: Some(SlowMoCfg::new(alpha, beta, tau)
-                .with_buffers(BufferStrategy::Maintain)),
-            sched: Schedule::Const(0.3),
-            heterogeneity: 1.0,
-            eval_every: 0,
-            eval_batches: 1,
-            force_pjrt: false,
-            native_kernels: true,
-            cost: crate::net::CostModel::free(),
-            compute_time_s: 1e-6,
-            record_gradnorm: true,
-        };
-        let r = train(&cfg, &env.manifest, None)?;
+        let r = env
+            .session
+            .train("quad")
+            .algo_sel(AlgoSel::with_inner(
+                "local",
+                InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 },
+            ))
+            .workers(m)
+            .steps(steps)
+            .seed(seed)
+            .slowmo_cfg(SlowMoCfg::new(alpha, beta, tau)
+                .with_buffers(BufferStrategy::Maintain))
+            .schedule(Schedule::Const(0.3))
+            .heterogeneity(1.0)
+            .eval_batches(1)
+            .cost(crate::net::CostModel::free())
+            .compute_time(1e-6)
+            .record_gradnorm(true)
+            .run()?;
         let tail: Vec<f64> = r
             .gradnorm_curve
             .iter()

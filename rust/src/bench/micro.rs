@@ -20,11 +20,11 @@ pub fn run(env: &Env) -> Result<Bench> {
 
     // ---- model train step (the dominant per-iteration cost) ----
     for preset in ["cifar-mlp", "lm-tiny", "quad"] {
-        let info = env.manifest.preset(preset)?;
-        let model = model_exec::build(Some(&env.engine), &env.manifest,
+        let info = env.manifest().preset(preset)?;
+        let model = model_exec::build(Some(env.engine()), env.manifest(),
                                       preset, true)?;
         let task = task_for(&info.data, 1, 0, 0.0);
-        let params = env.manifest.load_init(info)?;
+        let params = env.manifest().load_init(info)?;
         let batch = task.train_batch(0, 0);
         b.run(&format!("train-step/{preset}/pjrt"), || {
             model.train_step(&params, &batch).unwrap();
@@ -32,10 +32,10 @@ pub fn run(env: &Env) -> Result<Bench> {
     }
     // Native quad fast path for comparison.
     {
-        let info = env.manifest.preset("quad")?;
-        let model = model_exec::build(None, &env.manifest, "quad", false)?;
+        let info = env.manifest().preset("quad")?;
+        let model = model_exec::build(None, env.manifest(), "quad", false)?;
         let task = task_for(&info.data, 1, 0, 0.0);
-        let params = env.manifest.load_init(info)?;
+        let params = env.manifest().load_init(info)?;
         let batch = task.train_batch(0, 0);
         b.run("train-step/quad/native", || {
             model.train_step(&params, &batch).unwrap();
@@ -44,10 +44,10 @@ pub fn run(env: &Env) -> Result<Bench> {
 
     // ---- optimizer kernels: PJRT artifact vs native mirror ----
     for &d in &[4096usize, 1988736] {
-        if env.manifest.optim_for(d).is_err() {
+        if env.manifest().optim_for(d).is_err() {
             continue;
         }
-        let pjrt = Kernels::pjrt(&env.engine, &env.manifest, d)?;
+        let pjrt = Kernels::pjrt(env.engine(), env.manifest(), d)?;
         let native = Kernels::Native;
         let inner = InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 };
         let mut rng = crate::rng::Xoshiro256::seed_from(1);
@@ -85,8 +85,8 @@ pub fn run(env: &Env) -> Result<Bench> {
     // ---- raw PJRT execute overhead (tiny graph: the axpy kernel) ----
     {
         let d = 4096;
-        let opt = env.manifest.optim_for(d)?;
-        let exe = env.engine.load(&opt.graphs["axpy"])?;
+        let opt = env.manifest().optim_for(d)?;
+        let exe = env.engine().load(&opt.graphs["axpy"])?;
         let x = vec![1.0f32; d];
         let y = vec![2.0f32; d];
         b.run("pjrt-execute-overhead/axpy-4k", || {

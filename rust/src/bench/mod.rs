@@ -10,9 +10,9 @@ pub mod experiments;
 pub mod micro;
 
 use crate::net::CostModel;
-use crate::runtime::{artifacts_dir, Engine, Manifest};
+use crate::runtime::{Engine, Manifest};
+use crate::session::Session;
 use anyhow::Result;
-use std::sync::Arc;
 
 /// Experiment scale. The paper's full workloads (90 epochs of ImageNet on
 /// 256 GPUs) are far beyond a single-core CI budget; `quick` reproduces
@@ -27,17 +27,24 @@ pub enum Scale {
     Full,
 }
 
-impl Scale {
-    pub fn parse(s: &str) -> Option<Self> {
+impl std::str::FromStr for Scale {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
-            "ci" => Some(Self::Ci),
-            "quick" => Some(Self::Quick),
-            "standard" => Some(Self::Standard),
-            "full" => Some(Self::Full),
-            _ => None,
+            "ci" => Ok(Self::Ci),
+            "quick" => Ok(Self::Quick),
+            "standard" => Ok(Self::Standard),
+            "full" => Ok(Self::Full),
+            other => {
+                Err(format!("unknown scale {other:?} \
+                             (expected ci|quick|standard|full)"))
+            }
         }
     }
+}
 
+impl Scale {
     /// Workers.
     pub fn m(&self) -> usize {
         match self {
@@ -99,25 +106,29 @@ impl Scale {
     }
 }
 
-/// Shared context for the harnesses.
+/// Shared context for the harnesses: one [`Session`] (manifest + engine +
+/// caches, shared by every cell of a sweep) plus the scale and output dir.
 pub struct Env {
-    pub manifest: Manifest,
-    pub engine: Arc<Engine>,
+    pub session: Session,
     pub scale: Scale,
     pub out_dir: String,
 }
 
 impl Env {
     pub fn load(scale: Scale) -> Result<Self> {
-        let dir = artifacts_dir();
-        let manifest = Manifest::load(&dir)?;
-        let engine = Engine::cpu(&dir)?;
         Ok(Self {
-            manifest,
-            engine,
+            session: Session::open()?,
             scale,
             out_dir: "results".to_string(),
         })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.session.manifest()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.session.engine().expect("Env sessions own a PJRT engine")
     }
 
     pub fn cost(&self) -> CostModel {
@@ -135,10 +146,11 @@ mod tests {
 
     #[test]
     fn scale_parse_and_params() {
-        assert_eq!(Scale::parse("quick"), Some(Scale::Quick));
-        assert_eq!(Scale::parse("standard"), Some(Scale::Standard));
-        assert_eq!(Scale::parse("full"), Some(Scale::Full));
-        assert_eq!(Scale::parse("x"), None);
+        assert_eq!("quick".parse(), Ok(Scale::Quick));
+        assert_eq!("standard".parse(), Ok(Scale::Standard));
+        assert_eq!("full".parse(), Ok(Scale::Full));
+        let e = "x".parse::<Scale>().unwrap_err();
+        assert!(e.contains("ci|quick|standard|full"), "{e}");
         assert!(Scale::Quick.steps() < Scale::Full.steps());
         assert!(Scale::Quick.steps() / Scale::Quick.tau_gossip() >= 10);
         assert_eq!(Scale::Full.seeds(), 5);

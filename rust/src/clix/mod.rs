@@ -84,12 +84,20 @@ impl Args {
         matches!(self.get(name), Some("true"))
     }
 
-    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+    /// Parse a flag value with any [`std::str::FromStr`] type; the error
+    /// names the flag and carries the parser's own message, so domain
+    /// types (Schedule, BufferStrategy, Scale, ...) surface their valid
+    /// forms uniformly.
+    pub fn get_parsed<T>(&self, name: &str) -> Result<T, String>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
         let raw = self
             .get(name)
             .ok_or_else(|| format!("missing --{name}"))?;
         raw.parse()
-            .map_err(|_| format!("--{name}: cannot parse {raw:?}"))
+            .map_err(|e: T::Err| format!("--{name}: cannot parse {raw:?}: {e}"))
     }
 
     pub fn usize(&self, name: &str) -> usize {

@@ -12,6 +12,36 @@
 //! - **Layer 1** — Pallas kernels for the optimizer/attention hot-spots
 //!   (`python/compile/kernels/`), lowered into the same HLO.
 //!
+//! ## Running experiments
+//!
+//! The canonical entry point is the [`session`] API: a
+//! [`session::Session`] loads the artifacts once (manifest, PJRT engine,
+//! model executors, optimizer kernels, init vectors are all cached across
+//! runs) and the fluent [`session::TrainBuilder`] describes each run:
+//!
+//! ```no_run
+//! use slowmo::session::Session;
+//!
+//! let session = Session::open()?;
+//! let result = session
+//!     .train("cifar-mlp")          // preset from `slowmo info`
+//!     .algo("sgp")                 // any key in the AlgoRegistry
+//!     .slowmo(0.7, 12)             // β=0.7, τ=12 (α=1, paper default)
+//!     .workers(8)
+//!     .run()?;
+//! println!("{}: best loss {:.4}", result.algo, result.best_train_loss);
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Base algorithms live in a string-keyed
+//! [`algorithms::AlgoRegistry`] — registering a new
+//! [`algorithms::BaseAlgorithm`] factory under a key makes it reachable
+//! from the CLI (`--algo`), TOML configs, the bench harness and the
+//! builder (see ROADMAP.md "Adding an algorithm"). Live runs stream
+//! through the [`trainer::RunObserver`] trait (`on_step`,
+//! `on_outer_boundary`, `on_eval`) for progress reporting, metric
+//! streaming and early stopping.
+//!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -27,6 +57,7 @@ pub mod net;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod session;
 pub mod slowmo;
 pub mod testkit;
 pub mod topology;

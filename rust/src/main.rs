@@ -4,20 +4,25 @@
 //!   train  — run one training job (preset × algorithm × SlowMo config)
 //!   exp    — regenerate a paper table/figure (see DESIGN.md §4)
 //!   micro  — hot-path micro-benchmarks
-//!   info   — show manifest / artifacts status
+//!   info   — show manifest / artifacts / algorithm-registry status
+//!
+//! All training runs go through the session/builder API
+//! ([`slowmo::session::Session`]); the `--algo` spec strings resolve
+//! against the [`slowmo::algorithms::AlgoRegistry`].
 //!
 //! Examples:
 //!   slowmo train --preset cifar-mlp --algo sgp --slowmo --tau 12 --beta 0.7
+//!   slowmo train --config experiments/cifar.toml --progress 20
 //!   slowmo exp table1 --scale quick
 //!   slowmo exp fig3 --scale standard
 
 use slowmo::bench::{experiments, micro, Env, Scale};
 use slowmo::clix::{App, Command, Flag};
-use slowmo::net::CostModel;
-use slowmo::optim::kernels::InnerOpt;
-use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::configx::Config;
+use slowmo::runtime::{artifacts_dir, Manifest};
+use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
-use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
+use slowmo::trainer::{ProgressPrinter, Schedule};
 
 fn app() -> App {
     App::new("slowmo", "SlowMo (ICLR 2020) reproduction — rust/JAX/Pallas")
@@ -25,8 +30,9 @@ fn app() -> App {
             Command::new("train", "run one training job")
                 .flag(Flag::opt("preset", "cifar-mlp", "model preset (see `slowmo info`)"))
                 .flag(Flag::opt("algo", "sgp",
-                                "local|sgp|osgp|dpsgd|ar|doubleavg[:tau], \
-                                 add -adam for Adam"))
+                                "algorithm registry spec: \
+                                 local|sgp|osgp|dpsgd|ar|doubleavg[:tau], \
+                                 add -adam for Adam (see `slowmo info`)"))
                 .flag(Flag::opt("m", "4", "number of workers"))
                 .flag(Flag::opt("steps", "240", "inner steps per worker"))
                 .flag(Flag::opt("seed", "0", "RNG seed"))
@@ -38,6 +44,9 @@ fn app() -> App {
                                 "reset|maintain|average buffer strategy"))
                 .flag(Flag::switch("no-average", "skip the exact average (§6)"))
                 .flag(Flag::opt("lr", "0.1", "base/peak fast learning rate"))
+                .flag(Flag::opt("sched", "auto",
+                                "auto|const:<g>|image:<base>@<total>|\
+                                 lm:<peak>@<total>"))
                 .flag(Flag::opt("het", "0.5", "data heterogeneity (0..1)"))
                 .flag(Flag::opt("eval-every", "0", "eval period (0 = end only)"))
                 .flag(Flag::opt("eval-batches", "8", "batches per eval"))
@@ -45,6 +54,13 @@ fn app() -> App {
                                    "run optimizer kernels via the PJRT \
                                     artifacts instead of the native \
                                     mirrors (slower on CPU; see §Perf)"))
+                .flag(Flag::opt("progress", "0",
+                                "stream a progress line every N steps \
+                                 (0 = off)"))
+                .flag(Flag::opt("config", "",
+                                "TOML experiment file; replaces the \
+                                 flag-based run configuration (--out and \
+                                 --progress still apply)"))
                 .flag(Flag::opt("out", "results/runs.jsonl",
                                 "append JSONL result here")),
         )
@@ -81,56 +97,58 @@ fn main() {
 }
 
 fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
-    let dir = artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    let engine = Engine::cpu(&dir)?;
-    let algo = AlgoSpec::parse(&args.string("algo"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --algo"))?;
-    let slowmo = if args.get_bool("slowmo") {
-        let buffers = BufferStrategy::parse(&args.string("buffers"))
-            .ok_or_else(|| anyhow::anyhow!("unknown --buffers"))?;
-        let mut s = SlowMoCfg::new(args.f32("alpha"), args.f32("beta"),
-                                   args.u64("tau"))
-            .with_buffers(buffers);
-        if args.get_bool("no-average") {
-            s = s.no_average();
-        }
-        Some(s)
+    let session = Session::open()?;
+    let config_path = args.string("config");
+    let builder = if !config_path.is_empty() {
+        let text = std::fs::read_to_string(&config_path)?;
+        let conf = Config::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{config_path}: {e}"))?;
+        session.train(&args.string("preset")).config(&conf)?
     } else {
-        None
+        let mut b = session
+            .train(&args.string("preset"))
+            .algo(&args.string("algo"))
+            .workers(args.usize("m"))
+            .steps(args.u64("steps"))
+            .seed(args.u64("seed"))
+            .lr(args.f32("lr"))
+            .heterogeneity(args.f64("het"))
+            .eval_every(args.u64("eval-every"))
+            .eval_batches(args.u64("eval-batches"))
+            .native_kernels(!args.get_bool("pjrt-kernels"));
+        if args.string("sched") != "auto" {
+            b = b.schedule(
+                args.get_parsed::<Schedule>("sched")
+                    .map_err(anyhow::Error::msg)?,
+            );
+        }
+        if args.get_bool("slowmo") {
+            b = b
+                .slowmo_cfg(SlowMoCfg::new(
+                    args.f32("alpha"),
+                    args.f32("beta"),
+                    args.u64("tau"),
+                ))
+                .buffers(
+                    args.get_parsed::<BufferStrategy>("buffers")
+                        .map_err(anyhow::Error::msg)?,
+                );
+            if args.get_bool("no-average") {
+                b = b.no_average();
+            }
+        }
+        b
     };
-    let steps = args.u64("steps");
-    let is_adam = matches!(
-        algo,
-        AlgoSpec::Local(InnerOpt::Adam { .. })
-            | AlgoSpec::Sgp(InnerOpt::Adam { .. })
-            | AlgoSpec::Osgp(InnerOpt::Adam { .. })
-            | AlgoSpec::AllReduce(InnerOpt::Adam { .. })
-    );
-    let lr = args.f32("lr");
-    let cfg = TrainCfg {
-        preset: args.string("preset"),
-        m: args.usize("m"),
-        steps,
-        seed: args.u64("seed"),
-        algo,
-        slowmo,
-        sched: if is_adam {
-            Schedule::lm_default(lr, steps)
-        } else {
-            Schedule::image_default(lr, steps)
-        },
-        heterogeneity: args.f64("het"),
-        eval_every: args.u64("eval-every"),
-        eval_batches: args.u64("eval-batches"),
-        force_pjrt: false,
-        native_kernels: !args.get_bool("pjrt-kernels"),
-        cost: CostModel::ethernet_10g(),
-        compute_time_s: 0.0,
-        record_gradnorm: false,
+    let cfg = builder.build_cfg()?;
+    println!("training {} / {} ...", cfg.preset, cfg.algo.spec());
+    let r = match args.u64("progress") {
+        0 => session.run(&cfg)?,
+        every => {
+            let mut obs = ProgressPrinter { every };
+            session.run_observed(&cfg, Some(&mut obs))?
+        }
     };
-    println!("training {} / {} ...", cfg.preset, cfg.algo_name());
-    let r = train(&cfg, &manifest, Some(&engine))?;
+    println!("algo                {}", r.algo);
     println!("best train loss     {:.4}", r.best_train_loss);
     println!("best val metric     {:.4}", r.best_eval_metric);
     println!("final val loss      {:.4}", r.final_eval_loss);
@@ -143,8 +161,8 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
 }
 
 fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
-    let scale = Scale::parse(&args.string("scale"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --scale"))?;
+    let scale: Scale =
+        args.get_parsed("scale").map_err(anyhow::Error::msg)?;
     let which = args
         .positionals
         .first()
@@ -240,5 +258,7 @@ fn cmd_info() -> anyhow::Result<()> {
     }
     println!("optimizer graph dims: {:?}",
              manifest.optim.keys().collect::<Vec<_>>());
+    println!("algorithms (--algo):");
+    print!("{}", slowmo::algorithms::AlgoRegistry::builtin().help_text());
     Ok(())
 }

@@ -1,0 +1,699 @@
+//! Session/builder experiment API — the canonical way to run training.
+//!
+//! A [`Session`] loads the artifacts [`Manifest`], brings up the PJRT
+//! [`Engine`] once, and caches model executors, optimizer kernels and
+//! init vectors across runs, so sweep workloads (the bench harness, α×β
+//! grids, multi-seed cells) stop paying per-run rebuild cost. Runs are
+//! described with the fluent [`TrainBuilder`]:
+//!
+//! ```no_run
+//! use slowmo::session::Session;
+//!
+//! let session = Session::open()?;
+//! let result = session
+//!     .train("cifar-mlp")
+//!     .algo("sgp")
+//!     .slowmo(0.7, 12)
+//!     .workers(8)
+//!     .run()?;
+//! println!("{}: {:.4}", result.algo, result.best_train_loss);
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Algorithms resolve through the session's string-keyed
+//! [`AlgoRegistry`], so a new [`crate::algorithms::BaseAlgorithm`]
+//! registered with [`Session::registry_mut`] is immediately reachable
+//! from the CLI spec syntax, TOML configs and the builder. Attach a
+//! [`RunObserver`] via [`TrainBuilder::run_observed`] for progress
+//! streaming and early stopping.
+
+use crate::algorithms::{AlgoRegistry, AlgoSel};
+use crate::configx::Config;
+use crate::net::CostModel;
+use crate::optim::kernels::{InnerOpt, Kernels};
+use crate::runtime::{artifacts_dir, Engine, Manifest};
+use crate::slowmo::{BufferStrategy, SlowMoCfg};
+use crate::trainer::{
+    self, model_exec, ModelExec, RunObserver, Schedule, TrainCfg,
+    TrainResult,
+};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// One loaded experiment environment: manifest + engine + caches +
+/// algorithm registry.
+pub struct Session {
+    manifest: Manifest,
+    engine: Option<Arc<Engine>>,
+    registry: AlgoRegistry,
+    /// (preset, force_pjrt) -> model executor.
+    models: Mutex<BTreeMap<(String, bool), Arc<ModelExec>>>,
+    /// Flat length d -> PJRT optimizer kernels.
+    pjrt_kernels: Mutex<BTreeMap<usize, Arc<Kernels>>>,
+    /// Preset -> initial parameter vector.
+    inits: Mutex<BTreeMap<String, Arc<Vec<f32>>>>,
+}
+
+impl Session {
+    /// Open the default artifacts directory (`SLOWMO_ARTIFACTS` or the
+    /// nearest `artifacts/`) and bring up the PJRT CPU engine.
+    pub fn open() -> Result<Self> {
+        Self::open_at(&artifacts_dir())
+    }
+
+    pub fn open_at(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let engine = Engine::cpu(dir)?;
+        Ok(Self::from_parts(manifest, Some(engine)))
+    }
+
+    /// Open without a PJRT engine: only presets with a native model path
+    /// (the quad theory workload) can run. Used by the equivalence tests
+    /// and theory benches, which are engine-free by construction.
+    pub fn native_only() -> Result<Self> {
+        Self::native_only_at(&artifacts_dir())
+    }
+
+    pub fn native_only_at(dir: &str) -> Result<Self> {
+        Ok(Self::from_parts(Manifest::load(dir)?, None))
+    }
+
+    fn from_parts(manifest: Manifest, engine: Option<Arc<Engine>>) -> Self {
+        Self {
+            manifest,
+            engine,
+            registry: AlgoRegistry::builtin(),
+            models: Mutex::new(BTreeMap::new()),
+            pjrt_kernels: Mutex::new(BTreeMap::new()),
+            inits: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn engine(&self) -> Option<&Engine> {
+        self.engine.as_deref()
+    }
+
+    pub fn registry(&self) -> &AlgoRegistry {
+        &self.registry
+    }
+
+    /// Mutable registry access, e.g. to register a custom algorithm:
+    /// `session.registry_mut().register("demo", ..., factory)`.
+    pub fn registry_mut(&mut self) -> &mut AlgoRegistry {
+        &mut self.registry
+    }
+
+    /// Start describing a run of `preset`. See [`TrainBuilder`] for the
+    /// knobs and their defaults.
+    pub fn train(&self, preset: &str) -> TrainBuilder<'_> {
+        TrainBuilder::bound(self, preset)
+    }
+
+    /// Execute a fully-resolved configuration (normally produced by
+    /// [`TrainBuilder::build_cfg`]).
+    pub fn run(&self, cfg: &TrainCfg) -> Result<TrainResult> {
+        self.run_observed(cfg, None)
+    }
+
+    pub fn run_observed(
+        &self,
+        cfg: &TrainCfg,
+        observer: Option<&mut dyn RunObserver>,
+    ) -> Result<TrainResult> {
+        let info = self.manifest.preset(&cfg.preset)?;
+        let d = info.flat_len;
+        let desc = info.data.clone();
+        let init = self.init(&cfg.preset)?;
+        let model = self.model(&cfg.preset, cfg.force_pjrt)?;
+        let kernels = self.kernels(d, cfg.native_kernels)?;
+        let algo = self.registry.build(&cfg.algo, cfg.m)?;
+        trainer::run_prepared(cfg, algo, &init, &desc, &model, &kernels,
+                              observer)
+    }
+
+    /// Cached model executor for `preset` (build-once across runs).
+    pub fn model(&self, preset: &str, force_pjrt: bool)
+                 -> Result<Arc<ModelExec>> {
+        let key = (preset.to_string(), force_pjrt);
+        if let Some(m) = self.models.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(m));
+        }
+        let built = Arc::new(model_exec::build(
+            self.engine.as_deref(),
+            &self.manifest,
+            preset,
+            force_pjrt,
+        )?);
+        self.models
+            .lock()
+            .unwrap()
+            .insert(key, Arc::clone(&built));
+        Ok(built)
+    }
+
+    /// Cached optimizer kernels for flat length `d`. `native` (or an
+    /// engine-free session) selects the pure-Rust mirrors.
+    pub fn kernels(&self, d: usize, native: bool) -> Result<Arc<Kernels>> {
+        let Some(engine) = self.engine.as_deref().filter(|_| !native)
+        else {
+            return Ok(Arc::new(Kernels::Native));
+        };
+        if let Some(k) = self.pjrt_kernels.lock().unwrap().get(&d) {
+            return Ok(Arc::clone(k));
+        }
+        let built = Arc::new(Kernels::pjrt(engine, &self.manifest, d)?);
+        self.pjrt_kernels
+            .lock()
+            .unwrap()
+            .insert(d, Arc::clone(&built));
+        Ok(built)
+    }
+
+    /// Cached initial parameter vector for `preset`.
+    pub fn init(&self, preset: &str) -> Result<Arc<Vec<f32>>> {
+        if let Some(v) = self.inits.lock().unwrap().get(preset) {
+            return Ok(Arc::clone(v));
+        }
+        let info = self.manifest.preset(preset)?;
+        let v = Arc::new(self.manifest.load_init(info)?);
+        self.inits
+            .lock()
+            .unwrap()
+            .insert(preset.to_string(), Arc::clone(&v));
+        Ok(v)
+    }
+}
+
+/// Fluent description of one training run, with typed defaults:
+/// 4 workers, 240 steps, seed 0, SGP base, no SlowMo, auto schedule
+/// (image warmup+decay for SGD bases, LM inverse-sqrt for Adam bases),
+/// heterogeneity 0.5, eval at the end only, native optimizer kernels,
+/// 10G-Ethernet cost model.
+#[derive(Clone)]
+pub struct TrainBuilder<'s> {
+    session: Option<&'s Session>,
+    cfg: TrainCfg,
+    algo_spec: Option<String>,
+    inner: Option<InnerOpt>,
+    lr: Option<f32>,
+    sched: Option<Schedule>,
+    buffers: Option<BufferStrategy>,
+    no_average: bool,
+}
+
+impl<'s> TrainBuilder<'s> {
+    /// A builder not bound to a [`Session`]: `build_cfg` works (against
+    /// the built-in registry), `run` does not. Prefer `session.train(..)`.
+    pub fn new(preset: &str) -> Self {
+        Self {
+            session: None,
+            cfg: TrainCfg::defaults(preset),
+            algo_spec: None,
+            inner: None,
+            lr: None,
+            sched: None,
+            buffers: None,
+            no_average: false,
+        }
+    }
+
+    fn bound(session: &'s Session, preset: &str) -> Self {
+        let mut b = Self::new(preset);
+        b.session = Some(session);
+        b
+    }
+
+    /// Select the algorithm by registry spec string, e.g. "sgp",
+    /// "local-adam", "doubleavg:24". Parsed (and validated) when the run
+    /// is built.
+    pub fn algo(mut self, spec: &str) -> Self {
+        self.algo_spec = Some(spec.to_string());
+        self
+    }
+
+    /// Select a pre-parsed algorithm (key + inner optimizer + argument).
+    pub fn algo_sel(mut self, sel: AlgoSel) -> Self {
+        self.cfg.algo = sel;
+        self.algo_spec = None;
+        self
+    }
+
+    /// Override the inner optimizer independently of the algo spec.
+    pub fn inner(mut self, inner: InnerOpt) -> Self {
+        self.inner = Some(inner);
+        self
+    }
+
+    pub fn workers(mut self, m: usize) -> Self {
+        self.cfg.m = m;
+        self
+    }
+
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.cfg.steps = steps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Wrap the base algorithm in SlowMo with α=1 (the paper's setting),
+    /// slow momentum `beta` and inner-loop length `tau`.
+    pub fn slowmo(self, beta: f32, tau: u64) -> Self {
+        self.slowmo_cfg(SlowMoCfg::new(1.0, beta, tau))
+    }
+
+    pub fn slowmo_cfg(mut self, s: SlowMoCfg) -> Self {
+        self.cfg.slowmo = Some(s);
+        self
+    }
+
+    pub fn slowmo_opt(mut self, s: Option<SlowMoCfg>) -> Self {
+        self.cfg.slowmo = s;
+        self
+    }
+
+    /// Buffer strategy at outer boundaries (applies when SlowMo is on).
+    pub fn buffers(mut self, b: BufferStrategy) -> Self {
+        self.buffers = Some(b);
+        self
+    }
+
+    /// Skip the exact average (SGP-SlowMo-noaverage, paper §6).
+    pub fn no_average(mut self) -> Self {
+        self.no_average = true;
+        self
+    }
+
+    /// Base/peak fast learning rate for the auto schedule. Ignored when
+    /// an explicit [`TrainBuilder::schedule`] is set.
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn schedule(mut self, s: Schedule) -> Self {
+        self.sched = Some(s);
+        self
+    }
+
+    pub fn heterogeneity(mut self, h: f64) -> Self {
+        self.cfg.heterogeneity = h;
+        self
+    }
+
+    pub fn eval_every(mut self, every: u64) -> Self {
+        self.cfg.eval_every = every;
+        self
+    }
+
+    pub fn eval_batches(mut self, batches: u64) -> Self {
+        self.cfg.eval_batches = batches;
+        self
+    }
+
+    pub fn force_pjrt(mut self, on: bool) -> Self {
+        self.cfg.force_pjrt = on;
+        self
+    }
+
+    pub fn native_kernels(mut self, on: bool) -> Self {
+        self.cfg.native_kernels = on;
+        self
+    }
+
+    /// Run the optimizer kernels through the AOT PJRT artifacts instead
+    /// of the native mirrors.
+    pub fn pjrt_kernels(self) -> Self {
+        self.native_kernels(false)
+    }
+
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.cfg.cost = cost;
+        self
+    }
+
+    pub fn compute_time(mut self, seconds: f64) -> Self {
+        self.cfg.compute_time_s = seconds;
+        self
+    }
+
+    pub fn record_gradnorm(mut self, on: bool) -> Self {
+        self.cfg.record_gradnorm = on;
+        self
+    }
+
+    /// Observer early-stop granularity (see `trainer::observer`).
+    pub fn stop_check_every(mut self, steps: u64) -> Self {
+        self.cfg.stop_check_every = Some(steps);
+        self
+    }
+
+    /// Apply a parsed TOML experiment [`Config`] (the configx→builder
+    /// bridge). Recognized keys, all optional:
+    ///
+    /// ```toml
+    /// [train]
+    /// preset = "cifar-mlp"
+    /// algo = "sgp"              # registry spec string
+    /// m = 4
+    /// steps = 240
+    /// seed = 0
+    /// lr = 0.1
+    /// sched = "const:0.05"      # overrides lr-based auto schedule
+    /// heterogeneity = 0.5
+    /// eval_every = 60
+    /// eval_batches = 8
+    /// native_kernels = true
+    /// force_pjrt = false
+    ///
+    /// [slowmo]                  # section presence enables SlowMo
+    /// alpha = 1.0
+    /// beta = 0.7
+    /// tau = 12
+    /// buffers = "reset"
+    /// exact_average = true
+    /// ```
+    pub fn config(mut self, c: &Config) -> Result<Self> {
+        if let Some(v) = c.get("train", "preset").and_then(|v| v.as_str()) {
+            self.cfg.preset = v.to_string();
+        }
+        if let Some(v) = c.get("train", "algo").and_then(|v| v.as_str()) {
+            self.algo_spec = Some(v.to_string());
+        }
+        if let Some(v) = c.get("train", "m").and_then(|v| v.as_f64()) {
+            self.cfg.m = v as usize;
+        }
+        if let Some(v) = c.get("train", "steps").and_then(|v| v.as_f64()) {
+            self.cfg.steps = v as u64;
+        }
+        if let Some(v) = c.get("train", "seed").and_then(|v| v.as_f64()) {
+            self.cfg.seed = v as u64;
+        }
+        if let Some(v) = c.get("train", "lr").and_then(|v| v.as_f64()) {
+            self.lr = Some(v as f32);
+        }
+        if let Some(v) = c.get("train", "sched").and_then(|v| v.as_str()) {
+            self.sched =
+                Some(v.parse::<Schedule>().map_err(|e| anyhow!("{e}"))?);
+        }
+        if let Some(v) =
+            c.get("train", "heterogeneity").and_then(|v| v.as_f64())
+        {
+            self.cfg.heterogeneity = v;
+        }
+        if let Some(v) =
+            c.get("train", "eval_every").and_then(|v| v.as_f64())
+        {
+            self.cfg.eval_every = v as u64;
+        }
+        if let Some(v) =
+            c.get("train", "eval_batches").and_then(|v| v.as_f64())
+        {
+            self.cfg.eval_batches = v as u64;
+        }
+        if let Some(v) =
+            c.get("train", "native_kernels").and_then(|v| v.as_bool())
+        {
+            self.cfg.native_kernels = v;
+        }
+        if let Some(v) =
+            c.get("train", "force_pjrt").and_then(|v| v.as_bool())
+        {
+            self.cfg.force_pjrt = v;
+        }
+        if c.sections.contains_key("slowmo") {
+            let alpha = c.f64_or("slowmo", "alpha", 1.0) as f32;
+            let beta = c.f64_or("slowmo", "beta", 0.0) as f32;
+            let tau = c.f64_or("slowmo", "tau", 12.0) as u64;
+            ensure!(tau >= 1, "[slowmo] tau must be >= 1 (got {tau})");
+            let mut s = SlowMoCfg::new(alpha, beta, tau);
+            if let Some(b) =
+                c.get("slowmo", "buffers").and_then(|v| v.as_str())
+            {
+                s = s.with_buffers(
+                    b.parse::<BufferStrategy>()
+                        .map_err(|e| anyhow!("[slowmo] buffers: {e}"))?,
+                );
+            }
+            if !c.bool_or("slowmo", "exact_average", true) {
+                s = s.no_average();
+            }
+            self.cfg.slowmo = Some(s);
+        }
+        Ok(self)
+    }
+
+    fn resolve(self, registry: &AlgoRegistry) -> Result<TrainCfg> {
+        let mut cfg = self.cfg;
+        if let Some(spec) = &self.algo_spec {
+            cfg.algo = registry
+                .parse(spec)
+                .with_context(|| format!("resolving algo {spec:?}"))?;
+        }
+        if let Some(inner) = self.inner {
+            cfg.algo.inner = inner;
+        }
+        if let Some(s) = &mut cfg.slowmo {
+            if let Some(b) = self.buffers {
+                s.buffers = b;
+            }
+            if self.no_average {
+                s.exact_average = false;
+            }
+        }
+        cfg.sched = match self.sched {
+            Some(s) => s,
+            None => {
+                if cfg.algo.inner.uses_second_moment() {
+                    Schedule::lm_default(self.lr.unwrap_or(2e-3), cfg.steps)
+                } else {
+                    Schedule::image_default(self.lr.unwrap_or(0.1),
+                                            cfg.steps)
+                }
+            }
+        };
+        Ok(cfg)
+    }
+
+    /// Resolve to a [`TrainCfg`]: parses the algo spec against the bound
+    /// session's registry (or the built-in registry when detached) and
+    /// materializes the auto schedule.
+    pub fn build_cfg(self) -> Result<TrainCfg> {
+        match self.session {
+            Some(s) => {
+                let registry = s.registry();
+                self.resolve(registry)
+            }
+            None => self.resolve(&AlgoRegistry::builtin()),
+        }
+    }
+
+    /// Resolve against an explicit registry (detached-builder use).
+    pub fn build_cfg_with(self, registry: &AlgoRegistry)
+                          -> Result<TrainCfg> {
+        self.resolve(registry)
+    }
+
+    pub fn run(self) -> Result<TrainResult> {
+        self.run_inner(None)
+    }
+
+    /// Run with a [`RunObserver`] attached (progress streaming, early
+    /// stopping). Callbacks fire on worker 0.
+    pub fn run_observed(self, observer: &mut dyn RunObserver)
+                        -> Result<TrainResult> {
+        self.run_inner(Some(observer))
+    }
+
+    fn run_inner(self, observer: Option<&mut dyn RunObserver>)
+                 -> Result<TrainResult> {
+        let session = self.session.ok_or_else(|| {
+            anyhow!(
+                "TrainBuilder is not bound to a Session; start from \
+                 session.train(preset)"
+            )
+        })?;
+        let cfg = self.resolve(session.registry())?;
+        session.run_observed(&cfg, observer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults() {
+        let cfg = TrainBuilder::new("quad").build_cfg().unwrap();
+        assert_eq!(cfg.preset, "quad");
+        assert_eq!(cfg.m, 4);
+        assert_eq!(cfg.steps, 240);
+        assert_eq!(cfg.seed, 0);
+        assert_eq!(cfg.algo.key, "sgp");
+        assert!(!cfg.algo.inner.uses_second_moment());
+        assert!(cfg.slowmo.is_none());
+        assert!(cfg.native_kernels);
+        assert!(!cfg.force_pjrt);
+        assert_eq!(cfg.eval_every, 0);
+        // Auto schedule: image warmup+decay shaped around 240 steps.
+        assert!(cfg.sched.gamma(0) < 0.1);
+        assert!((cfg.sched.gamma(100) - 0.1).abs() < 1e-6);
+        assert!(cfg.sched.gamma(239) < 1e-3);
+    }
+
+    #[test]
+    fn builder_overrides_beat_defaults() {
+        let cfg = TrainBuilder::new("quad")
+            .algo("doubleavg:24")
+            .workers(8)
+            .steps(100)
+            .seed(7)
+            .slowmo(0.6, 12)
+            .buffers(BufferStrategy::Maintain)
+            .no_average()
+            .schedule(Schedule::Const(0.3))
+            .heterogeneity(1.0)
+            .eval_every(25)
+            .eval_batches(2)
+            .pjrt_kernels()
+            .compute_time(1e-6)
+            .record_gradnorm(true)
+            .stop_check_every(5)
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.algo.key, "doubleavg");
+        assert_eq!(cfg.algo.arg, Some(24));
+        assert_eq!(cfg.m, 8);
+        assert_eq!(cfg.steps, 100);
+        assert_eq!(cfg.seed, 7);
+        let s = cfg.slowmo.as_ref().unwrap();
+        assert_eq!(s.tau, 12);
+        assert_eq!(s.buffers, BufferStrategy::Maintain);
+        assert!(!s.exact_average);
+        assert_eq!(cfg.sched.gamma(50), 0.3);
+        assert_eq!(cfg.heterogeneity, 1.0);
+        assert_eq!(cfg.eval_every, 25);
+        assert!(!cfg.native_kernels);
+        assert_eq!(cfg.compute_time_s, 1e-6);
+        assert!(cfg.record_gradnorm);
+        assert_eq!(cfg.stop_check_every, Some(5));
+    }
+
+    #[test]
+    fn adam_algo_selects_lm_auto_schedule() {
+        let cfg = TrainBuilder::new("lm-tiny")
+            .algo("local-adam")
+            .steps(1000)
+            .build_cfg()
+            .unwrap();
+        assert!(cfg.algo.inner.uses_second_moment());
+        // Inverse-sqrt shape: decays past warmup.
+        assert!(cfg.sched.gamma(999) < cfg.sched.gamma(99));
+    }
+
+    #[test]
+    fn explicit_inner_overrides_spec_suffix() {
+        let cfg = TrainBuilder::new("quad")
+            .algo("sgp")
+            .inner(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 })
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.algo.inner,
+                   InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+    }
+
+    #[test]
+    fn bad_algo_spec_fails_at_build() {
+        let e = TrainBuilder::new("quad")
+            .algo("doubleavg:abc")
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("doubleavg"), "{e}");
+        assert!(TrainBuilder::new("quad").algo("nope").build_cfg().is_err());
+    }
+
+    #[test]
+    fn detached_builder_cannot_run() {
+        let e = TrainBuilder::new("quad").run().unwrap_err().to_string();
+        assert!(e.contains("not bound"), "{e}");
+    }
+
+    #[test]
+    fn config_bridge_applies_train_and_slowmo_sections() {
+        let toml = r#"
+[train]
+preset = "cifar-mlp"
+algo = "local-adam"
+m = 8
+steps = 120
+seed = 3
+sched = "const:0.02"
+heterogeneity = 0.9
+eval_every = 30
+eval_batches = 4
+native_kernels = false
+
+[slowmo]
+alpha = 1.0
+beta = 0.5
+tau = 6
+buffers = "maintain"
+exact_average = false
+"#;
+        let c = Config::parse(toml).unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.preset, "cifar-mlp");
+        assert_eq!(cfg.algo.key, "local");
+        assert!(cfg.algo.inner.uses_second_moment());
+        assert_eq!(cfg.m, 8);
+        assert_eq!(cfg.steps, 120);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.sched.gamma(10), 0.02);
+        assert_eq!(cfg.heterogeneity, 0.9);
+        assert_eq!(cfg.eval_every, 30);
+        assert_eq!(cfg.eval_batches, 4);
+        assert!(!cfg.native_kernels);
+        let s = cfg.slowmo.unwrap();
+        assert_eq!(s.tau, 6);
+        assert_eq!(s.beta, 0.5);
+        assert_eq!(s.buffers, BufferStrategy::Maintain);
+        assert!(!s.exact_average);
+    }
+
+    #[test]
+    fn config_bridge_rejects_bad_values() {
+        let c = Config::parse("[slowmo]\ntau = 0").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        let c = Config::parse("[slowmo]\nbuffers = \"bogus\"").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        let c = Config::parse("[train]\nsched = \"wat\"").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+    }
+
+    #[test]
+    fn config_bridge_leaves_unset_fields_at_defaults() {
+        let c = Config::parse("[train]\nsteps = 64").unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.steps, 64);
+        assert_eq!(cfg.preset, "quad");
+        assert_eq!(cfg.m, 4);
+        assert!(cfg.slowmo.is_none());
+    }
+}

@@ -31,16 +31,23 @@ pub enum BufferStrategy {
     Average,
 }
 
-impl BufferStrategy {
-    pub fn parse(s: &str) -> Option<Self> {
+impl std::str::FromStr for BufferStrategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
-            "reset" => Some(Self::Reset),
-            "maintain" => Some(Self::Maintain),
-            "average" => Some(Self::Average),
-            _ => None,
+            "reset" => Ok(Self::Reset),
+            "maintain" => Ok(Self::Maintain),
+            "average" => Ok(Self::Average),
+            other => Err(format!(
+                "unknown buffer strategy {other:?} \
+                 (expected reset|maintain|average)"
+            )),
         }
     }
+}
 
+impl BufferStrategy {
     pub fn name(&self) -> &'static str {
         match self {
             Self::Reset => "reset",
@@ -333,14 +340,12 @@ mod tests {
     }
 
     #[test]
-    fn buffer_strategy_parse() {
-        assert_eq!(BufferStrategy::parse("reset"),
-                   Some(BufferStrategy::Reset));
-        assert_eq!(BufferStrategy::parse("maintain"),
-                   Some(BufferStrategy::Maintain));
-        assert_eq!(BufferStrategy::parse("average"),
-                   Some(BufferStrategy::Average));
-        assert_eq!(BufferStrategy::parse("bogus"), None);
+    fn buffer_strategy_from_str() {
+        assert_eq!("reset".parse(), Ok(BufferStrategy::Reset));
+        assert_eq!("maintain".parse(), Ok(BufferStrategy::Maintain));
+        assert_eq!("average".parse(), Ok(BufferStrategy::Average));
+        let e = "bogus".parse::<BufferStrategy>().unwrap_err();
+        assert!(e.contains("reset|maintain|average"), "{e}");
         assert_eq!(BufferStrategy::Reset.name(), "reset");
     }
 }

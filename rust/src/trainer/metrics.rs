@@ -39,6 +39,9 @@ pub struct TrainResult {
     pub preset: String,
     pub m: usize,
     pub steps: u64,
+    /// Steps actually executed per worker (< `steps` when a
+    /// [`super::RunObserver`] stopped the run early).
+    pub steps_run: u64,
     pub seed: u64,
     /// Per-outer-iteration mean training loss (averaged over workers).
     pub train_curve: Vec<(u64, f64)>,
@@ -75,6 +78,7 @@ impl TrainResult {
             ("preset", Json::str(&self.preset)),
             ("m", Json::num(self.m as f64)),
             ("steps", Json::num(self.steps as f64)),
+            ("steps_run", Json::num(self.steps_run as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("best_train_loss", Json::num(self.best_train_loss)),
             ("best_eval_metric", Json::num(self.best_eval_metric)),
@@ -153,6 +157,7 @@ mod tests {
             preset: "p".into(),
             m: 2,
             steps: 100,
+            steps_run: 100,
             seed,
             train_curve: vec![(10, 1.0), (20, loss)],
             eval_curve: vec![],

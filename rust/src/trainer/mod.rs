@@ -3,84 +3,40 @@
 //! Spawns one thread per worker, wires the data tasks, the base algorithm,
 //! the optional SlowMo controller, the fabric, and the model executor
 //! together, and records the metrics every experiment harness consumes.
+//!
+//! Runs are configured and launched through the [`crate::session`] API
+//! (`Session::train(..) -> TrainBuilder -> run()`); [`TrainCfg`] is the
+//! resolved configuration the builder produces. Attach a [`RunObserver`]
+//! to stream per-step/per-eval events and to stop a run early.
 
 pub mod metrics;
 pub mod model_exec;
+pub mod observer;
 pub mod schedule;
 
 pub use metrics::{EvalPoint, SeedAggregate, TrainResult};
 pub use model_exec::ModelExec;
+pub use observer::{
+    EvalEarlyStop, EvalEvent, OuterEvent, ProgressPrinter, Recorder,
+    RunControl, RunObserver, StepEvent,
+};
 pub use schedule::Schedule;
 
-use crate::algorithms::{
-    AllReduce, BaseAlgorithm, Ctx, DoubleAvg, Dpsgd, Local, Sgp, WorkerState,
-};
+use crate::algorithms::{AlgoSel, BaseAlgorithm, Ctx, WorkerState};
 use crate::data::{task_for, Task};
 use crate::net::{CostModel, Fabric};
-use crate::optim::kernels::{InnerOpt, Kernels};
-use crate::runtime::{DataDesc, Engine, Manifest};
-use crate::slowmo::{OuterState, SlowMoCfg};
-use crate::topology::ExponentialGraph;
+use crate::optim::kernels::Kernels;
+use crate::runtime::DataDesc;
+use crate::slowmo::{outer_update, OuterState, SlowMoCfg};
 use anyhow::Result;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Which base algorithm to construct (flat spec, CLI/config friendly).
-#[derive(Clone, Debug)]
-pub enum AlgoSpec {
-    Local(InnerOpt),
-    Sgp(InnerOpt),
-    Osgp(InnerOpt),
-    Dpsgd(InnerOpt),
-    AllReduce(InnerOpt),
-    DoubleAvg(InnerOpt, u64),
-}
-
-impl AlgoSpec {
-    pub fn build(&self, m: usize) -> Arc<dyn BaseAlgorithm> {
-        match self {
-            AlgoSpec::Local(i) => Arc::new(Local::new(*i)),
-            AlgoSpec::Sgp(i) => {
-                Arc::new(Sgp::new(*i, Arc::new(ExponentialGraph::new(m))))
-            }
-            AlgoSpec::Osgp(i) => {
-                Arc::new(Sgp::overlap(*i, Arc::new(ExponentialGraph::new(m))))
-            }
-            AlgoSpec::Dpsgd(i) => Arc::new(Dpsgd::new(*i, m)),
-            AlgoSpec::AllReduce(i) => Arc::new(AllReduce::new(*i)),
-            AlgoSpec::DoubleAvg(i, tau) => Arc::new(DoubleAvg::new(*i, *tau)),
-        }
-    }
-
-    /// Parse e.g. "sgp", "local-adam", "doubleavg:12".
-    pub fn parse(s: &str) -> Option<Self> {
-        let (name, rest) = match s.split_once(':') {
-            Some((n, r)) => (n, Some(r)),
-            None => (s, None),
-        };
-        let adam = name.ends_with("-adam");
-        let base = name.trim_end_matches("-adam");
-        let inner = if adam {
-            InnerOpt::adam_default()
-        } else {
-            InnerOpt::nesterov_default()
-        };
-        match base {
-            "local" => Some(AlgoSpec::Local(inner)),
-            "sgp" => Some(AlgoSpec::Sgp(inner)),
-            "osgp" => Some(AlgoSpec::Osgp(inner)),
-            "dpsgd" => Some(AlgoSpec::Dpsgd(inner)),
-            "ar" | "allreduce" => Some(AlgoSpec::AllReduce(inner)),
-            "doubleavg" => {
-                let tau = rest.and_then(|r| r.parse().ok()).unwrap_or(12);
-                Some(AlgoSpec::DoubleAvg(inner, tau))
-            }
-            _ => None,
-        }
-    }
-}
-
-/// Full training configuration for one run.
+/// Full training configuration for one run. Construct through
+/// [`crate::session::TrainBuilder`] — the builder owns the defaults and
+/// resolves the algorithm key against the session's
+/// [`crate::algorithms::AlgoRegistry`].
 #[derive(Clone, Debug)]
 pub struct TrainCfg {
     pub preset: String,
@@ -88,7 +44,8 @@ pub struct TrainCfg {
     /// Total inner steps per worker.
     pub steps: u64,
     pub seed: u64,
-    pub algo: AlgoSpec,
+    /// Registry key + inner optimizer + optional argument.
+    pub algo: AlgoSel,
     /// `None` = run the base algorithm bare (e.g. plain SGP baseline).
     pub slowmo: Option<SlowMoCfg>,
     pub sched: Schedule,
@@ -108,48 +65,47 @@ pub struct TrainCfg {
     pub compute_time_s: f64,
     /// Record grad-norm² trajectories (theory benches).
     pub record_gradnorm: bool,
+    /// Observer early-stop granularity in steps; `None` = the SlowMo τ,
+    /// or 16 without SlowMo. Stops only take effect at multiples of this.
+    pub stop_check_every: Option<u64>,
 }
 
 impl TrainCfg {
-    pub fn quick(preset: &str, algo: AlgoSpec, steps: u64) -> Self {
+    /// The builder's starting point (see `TrainBuilder` for the knobs).
+    pub(crate) fn defaults(preset: &str) -> Self {
         Self {
             preset: preset.to_string(),
             m: 4,
-            steps,
+            steps: 240,
             seed: 0,
-            algo,
+            algo: AlgoSel::new("sgp"),
             slowmo: None,
-            sched: Schedule::Const(0.05),
+            sched: Schedule::Const(0.1),
             heterogeneity: 0.5,
             eval_every: 0,
-            eval_batches: 4,
+            eval_batches: 8,
             force_pjrt: false,
-            native_kernels: false,
-            cost: CostModel::free(),
+            native_kernels: true,
+            cost: CostModel::ethernet_10g(),
             compute_time_s: 0.0,
             record_gradnorm: false,
+            stop_check_every: None,
         }
     }
+}
 
-    pub fn with_slowmo(mut self, s: SlowMoCfg) -> Self {
-        self.slowmo = Some(s);
-        self
-    }
-
-    /// Display name: "sgp+slowmo(t48,b0.6)" etc.
-    pub fn algo_name(&self) -> String {
-        let base = self.algo.build(self.m).name();
-        match &self.slowmo {
-            None => base,
-            Some(s) => format!(
-                "{base}+slowmo(t{},a{},b{}{}{})",
-                s.tau,
-                s.alpha,
-                s.beta,
-                if s.exact_average { "" } else { ",noavg" },
-                format_args!(",{}", s.buffers.name()),
-            ),
-        }
+/// Display name for a run: "sgp-nesterov-sgd+slowmo(t48,a1,b0.6,reset)".
+pub fn display_name(base: &str, slowmo: &Option<SlowMoCfg>) -> String {
+    match slowmo {
+        None => base.to_string(),
+        Some(s) => format!(
+            "{base}+slowmo(t{},a{},b{}{}{})",
+            s.tau,
+            s.alpha,
+            s.beta,
+            if s.exact_average { "" } else { ",noavg" },
+            format_args!(",{}", s.buffers.name()),
+        ),
     }
 }
 
@@ -158,30 +114,82 @@ struct WorkerOut {
     gradnorms: Vec<f64>,
     evals: Vec<(u64, f32, f32, f64)>, // (step, loss, metric, clock)
     clock: f64,
+    steps_run: u64,
 }
 
-/// Run one training job. `engine` may be `None` only for presets with a
-/// native model path (quad).
-pub fn train(
+/// Checkpoint rendezvous for observed runs: like a cyclic barrier, but a
+/// worker that exits with an error calls [`CheckpointGate::depart`] so the
+/// remaining workers are released instead of deadlocking (the error then
+/// propagates when the results are joined).
+struct CheckpointGate {
+    m: usize,
+    state: std::sync::Mutex<GateState>,
+    cv: std::sync::Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    arrived: usize,
+    departed: usize,
+    generation: u64,
+}
+
+impl CheckpointGate {
+    fn new(m: usize) -> Self {
+        Self {
+            m,
+            state: std::sync::Mutex::new(GateState::default()),
+            cv: std::sync::Condvar::new(),
+        }
+    }
+
+    /// Block until every still-active worker arrives.
+    fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.arrived += 1;
+        if st.arrived + st.departed >= self.m {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+        } else {
+            let gen = st.generation;
+            while st.generation == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Permanently leave the gate (worker errored out); releases the
+    /// current generation if this departure completes it.
+    fn depart(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.departed += 1;
+        if st.arrived > 0 && st.arrived + st.departed >= self.m {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Run one training job whose resources (model executor, kernels, built
+/// algorithm, init vector) have already been prepared by the
+/// [`crate::session::Session`]. Observer callbacks fire on worker 0; see
+/// [`observer`] for the early-stop synchronization contract.
+pub(crate) fn run_prepared(
     cfg: &TrainCfg,
-    manifest: &Manifest,
-    engine: Option<&Engine>,
+    algo: Arc<dyn BaseAlgorithm>,
+    init: &[f32],
+    desc: &DataDesc,
+    model: &ModelExec,
+    kernels: &Kernels,
+    observer: Option<&mut dyn RunObserver>,
 ) -> Result<TrainResult> {
     let t_wall = Instant::now();
-    let info = manifest.preset(&cfg.preset)?;
-    let init = manifest.load_init(info)?;
-    let d = info.flat_len;
     let task: Box<dyn Task> =
-        task_for(&info.data, cfg.m, cfg.seed, cfg.heterogeneity);
-    let model =
-        model_exec::build(engine, manifest, &cfg.preset, cfg.force_pjrt)?;
-    let kernels = if cfg.native_kernels || engine.is_none() {
-        Kernels::Native
-    } else {
-        Kernels::pjrt(engine.unwrap(), manifest, d)?
-    };
-    let algo = cfg.algo.build(cfg.m);
+        task_for(desc, cfg.m, cfg.seed, cfg.heterogeneity);
     let fabric = Fabric::new(cfg.m, cfg.cost.clone());
+    let algo_name = display_name(&algo.name(), &cfg.slowmo);
 
     let eval_points: Vec<u64> = {
         let mut pts = Vec::new();
@@ -196,14 +204,27 @@ pub fn train(
         pts
     };
 
+    // Early-stop plumbing (active only when an observer is attached).
+    // Stops take effect at checkpoint steps where all workers rendezvous
+    // and read the same decision, keeping lockstep collectives aligned.
+    let check = cfg
+        .stop_check_every
+        .unwrap_or_else(|| cfg.slowmo.as_ref().map(|s| s.tau).unwrap_or(16))
+        .max(1);
+    let stop_at = AtomicU64::new(u64::MAX);
+    let observing = observer.is_some();
+    let observer = observer.map(Mutex::new);
+    let gate = CheckpointGate::new(cfg.m);
+
     let outs: Vec<Result<WorkerOut>> = crate::exec::run_workers(cfg.m, |w| {
-        let mut state = WorkerState::new(&init, algo.inner());
-        let mut outer = cfg.slowmo.as_ref().map(|_| OuterState::new(&init));
+        let body = || -> Result<WorkerOut> {
+        let mut state = WorkerState::new(init, algo.inner());
+        let mut outer = cfg.slowmo.as_ref().map(|_| OuterState::new(init));
         let mut ctx = Ctx {
             worker: w,
             m: cfg.m,
             fabric: &fabric,
-            kernels: &kernels,
+            kernels,
             clock: 0.0,
         };
         let mut out = WorkerOut {
@@ -211,10 +232,17 @@ pub fn train(
             gradnorms: Vec::new(),
             evals: Vec::new(),
             clock: 0.0,
+            steps_run: 0,
         };
         let mut eval_idx = 0;
         let mut gamma_outer = cfg.sched.gamma(0);
         for k in 0..cfg.steps {
+            if observing && k > 0 && k % check == 0 {
+                gate.wait();
+                if k >= stop_at.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
             let gamma = cfg.sched.gamma(k);
             if let Some(s) = &cfg.slowmo {
                 if k % s.tau == 0 {
@@ -237,13 +265,41 @@ pub fn train(
                 out.gradnorms.push(crate::util::sqnorm(&grads));
             }
             algo.step(&mut ctx, &mut state, &grads, gamma, k)?;
+            out.steps_run += 1;
+            let mut stop_req = false;
+            if w == 0 {
+                if let Some(obs) = &observer {
+                    let ev = StepEvent {
+                        step: k,
+                        loss,
+                        gamma,
+                        clock: ctx.clock,
+                    };
+                    stop_req |= obs.lock().unwrap().on_step(&ev)
+                        == RunControl::Stop;
+                }
+            }
             if let (Some(scfg), Some(outer)) = (&cfg.slowmo, outer.as_mut())
             {
                 if scfg.is_boundary(k) {
-                    ctx.clock = crate::slowmo::outer_update(
-                        scfg, algo.as_ref(), &fabric, &kernels, w,
+                    ctx.clock = outer_update(
+                        scfg, algo.as_ref(), &fabric, kernels, w,
                         &mut state, outer, gamma_outer, ctx.clock,
                     )?;
+                    if w == 0 {
+                        if let Some(obs) = &observer {
+                            let ev = OuterEvent {
+                                step: k,
+                                outer_t: outer.t,
+                                clock: ctx.clock,
+                            };
+                            stop_req |= obs
+                                .lock()
+                                .unwrap()
+                                .on_outer_boundary(&ev)
+                                == RunControl::Stop;
+                        }
+                    }
                 }
             }
             // Evaluation checkpoints.
@@ -251,21 +307,47 @@ pub fn train(
                 && k + 1 == eval_points[eval_idx]
             {
                 let (l, mtr) =
-                    run_eval(&model, &*task, algo.eval_params(&state),
+                    run_eval(model, &*task, algo.eval_params(&state),
                              cfg.eval_batches)?;
                 out.evals.push((k + 1, l, mtr, ctx.clock));
+                if w == 0 {
+                    if let Some(obs) = &observer {
+                        let ev = EvalEvent {
+                            step: k + 1,
+                            loss: l,
+                            metric: mtr,
+                            clock: ctx.clock,
+                        };
+                        stop_req |= obs.lock().unwrap().on_eval(&ev)
+                            == RunControl::Stop;
+                    }
+                }
                 eval_idx += 1;
+            }
+            if stop_req {
+                // Effective at the next checkpoint after k; every worker
+                // reads it behind the checkpoint barrier.
+                stop_at.fetch_min((k / check + 1) * check,
+                                  Ordering::SeqCst);
             }
         }
         out.clock = ctx.clock;
         Ok(out)
+        };
+        let res = body();
+        if res.is_err() {
+            // Release peers blocked at a checkpoint so the error can
+            // propagate instead of deadlocking the join below.
+            gate.depart();
+        }
+        res
     });
     let mut workers = Vec::with_capacity(cfg.m);
     for o in outs {
         workers.push(o?);
     }
 
-    Ok(assemble(cfg, info.data.clone(), workers, &fabric,
+    Ok(assemble(cfg, algo_name, desc.clone(), workers, &fabric,
                 t_wall.elapsed().as_secs_f64()))
 }
 
@@ -292,6 +374,7 @@ fn run_eval(
 
 fn assemble(
     cfg: &TrainCfg,
+    algo_name: String,
     desc: DataDesc,
     workers: Vec<WorkerOut>,
     fabric: &Fabric,
@@ -303,8 +386,19 @@ fn assemble(
         .map(|s| s.tau)
         .unwrap_or(16)
         .max(1) as usize;
+    // Steps every worker completed (== cfg.steps unless an observer
+    // stopped the run early).
+    let steps = workers
+        .iter()
+        .map(|w| w.losses.len())
+        .min()
+        .unwrap_or(0);
+    let steps_run = workers
+        .iter()
+        .map(|w| w.steps_run)
+        .min()
+        .unwrap_or(0);
     // Train curve: per-window mean over steps and workers.
-    let steps = cfg.steps as usize;
     let mut train_curve = Vec::new();
     let mut best_train = f64::INFINITY;
     let mut i = 0;
@@ -343,30 +437,34 @@ fn assemble(
     }
     // Eval curve: combine workers per step.
     let mut eval_curve = Vec::new();
-    if let Some(first) = workers.first() {
-        for (idx, &(step, ..)) in first.evals.iter().enumerate() {
-            let losses: Vec<f64> = workers
-                .iter()
-                .map(|w| w.evals[idx].1 as f64)
-                .collect();
-            let metrics: Vec<f64> = workers
-                .iter()
-                .map(|w| w.evals[idx].2 as f64)
-                .collect();
-            let clock = workers
-                .iter()
-                .map(|w| w.evals[idx].3)
-                .fold(0.0f64, f64::max);
-            eval_curve.push(EvalPoint {
-                step,
-                loss_mean: crate::util::mean(&losses),
-                loss_min: losses.iter().cloned().fold(f64::INFINITY, f64::min),
-                loss_max: losses.iter().cloned().fold(f64::NEG_INFINITY,
-                                                      f64::max),
-                metric_mean: crate::util::mean(&metrics),
-                sim_time: clock,
-            });
-        }
+    let n_evals = workers
+        .iter()
+        .map(|w| w.evals.len())
+        .min()
+        .unwrap_or(0);
+    for idx in 0..n_evals {
+        let step = workers[0].evals[idx].0;
+        let losses: Vec<f64> = workers
+            .iter()
+            .map(|w| w.evals[idx].1 as f64)
+            .collect();
+        let metrics: Vec<f64> = workers
+            .iter()
+            .map(|w| w.evals[idx].2 as f64)
+            .collect();
+        let clock = workers
+            .iter()
+            .map(|w| w.evals[idx].3)
+            .fold(0.0f64, f64::max);
+        eval_curve.push(EvalPoint {
+            step,
+            loss_mean: crate::util::mean(&losses),
+            loss_min: losses.iter().cloned().fold(f64::INFINITY, f64::min),
+            loss_max: losses.iter().cloned().fold(f64::NEG_INFINITY,
+                                                  f64::max),
+            metric_mean: crate::util::mean(&metrics),
+            sim_time: clock,
+        });
     }
     // Higher-is-better for classifier/LM accuracy; lower for quad gsq.
     let metric_better_high = !matches!(desc, DataDesc::Quad { .. });
@@ -385,10 +483,11 @@ fn assemble(
         eval_curve.last().map(|p| p.loss_mean).unwrap_or(f64::NAN);
     let sim_time = workers.iter().map(|w| w.clock).fold(0.0f64, f64::max);
     TrainResult {
-        algo: cfg.algo_name(),
+        algo: algo_name,
         preset: cfg.preset.clone(),
         m: cfg.m,
         steps: cfg.steps,
+        steps_run,
         seed: cfg.seed,
         train_curve,
         eval_curve,
@@ -405,38 +504,62 @@ fn assemble(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::slowmo::BufferStrategy;
 
     #[test]
-    fn algo_spec_parse() {
-        assert!(matches!(AlgoSpec::parse("local"),
-                         Some(AlgoSpec::Local(_))));
-        assert!(matches!(AlgoSpec::parse("sgp"), Some(AlgoSpec::Sgp(_))));
-        assert!(matches!(AlgoSpec::parse("osgp"), Some(AlgoSpec::Osgp(_))));
-        assert!(matches!(AlgoSpec::parse("dpsgd"),
-                         Some(AlgoSpec::Dpsgd(_))));
-        assert!(matches!(AlgoSpec::parse("ar"),
-                         Some(AlgoSpec::AllReduce(_))));
-        match AlgoSpec::parse("doubleavg:24") {
-            Some(AlgoSpec::DoubleAvg(_, 24)) => {}
-            other => panic!("{other:?}"),
-        }
-        match AlgoSpec::parse("local-adam") {
-            Some(AlgoSpec::Local(InnerOpt::Adam { .. })) => {}
-            other => panic!("{other:?}"),
-        }
-        assert!(AlgoSpec::parse("bogus").is_none());
-    }
-
-    #[test]
-    fn algo_name_formats() {
-        let cfg = TrainCfg::quick("quad", AlgoSpec::parse("sgp").unwrap(), 10)
-            .with_slowmo(crate::slowmo::SlowMoCfg::new(1.0, 0.6, 48));
-        let n = cfg.algo_name();
+    fn display_name_formats() {
+        let s = Some(crate::slowmo::SlowMoCfg::new(1.0, 0.6, 48));
+        let n = display_name("sgp-nesterov-sgd", &s);
         assert!(n.contains("sgp"), "{n}");
         assert!(n.contains("t48"), "{n}");
         assert!(n.contains("b0.6"), "{n}");
-        let bare =
-            TrainCfg::quick("quad", AlgoSpec::parse("local").unwrap(), 10);
-        assert_eq!(bare.algo_name(), "local-nesterov-sgd");
+        assert!(n.contains("reset"), "{n}");
+        assert_eq!(display_name("local-nesterov-sgd", &None),
+                   "local-nesterov-sgd");
+        let noavg = Some(
+            crate::slowmo::SlowMoCfg::new(1.0, 0.5, 8)
+                .with_buffers(BufferStrategy::Maintain)
+                .no_average(),
+        );
+        let n = display_name("sgp", &noavg);
+        assert!(n.contains("noavg"), "{n}");
+        assert!(n.contains("maintain"), "{n}");
+    }
+
+    #[test]
+    fn checkpoint_gate_departure_releases_waiters() {
+        // Two of three workers rendezvous repeatedly; the third departs
+        // (as an erroring worker would) — the others must not deadlock.
+        let gate = CheckpointGate::new(3);
+        let out = crate::exec::run_workers(3, |w| {
+            if w == 2 {
+                gate.depart();
+                return 0u32;
+            }
+            for _ in 0..5 {
+                gate.wait();
+            }
+            1u32
+        });
+        assert_eq!(out, vec![1, 1, 0]);
+    }
+
+    #[test]
+    fn checkpoint_gate_single_worker_never_blocks() {
+        let gate = CheckpointGate::new(1);
+        gate.wait();
+        gate.wait();
+    }
+
+    #[test]
+    fn cfg_defaults_are_sane() {
+        let cfg = TrainCfg::defaults("quad");
+        assert_eq!(cfg.preset, "quad");
+        assert_eq!(cfg.m, 4);
+        assert_eq!(cfg.algo.key, "sgp");
+        assert!(cfg.slowmo.is_none());
+        assert!(cfg.native_kernels);
+        assert!(!cfg.force_pjrt);
+        assert_eq!(cfg.stop_check_every, None);
     }
 }

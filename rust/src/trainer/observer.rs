@@ -1,0 +1,249 @@
+//! Streaming run observation: progress reporting, early stopping and
+//! mid-run metric streaming without post-hoc `TrainResult` surgery.
+//!
+//! A [`RunObserver`] is attached to a run through
+//! `TrainBuilder::run_observed` (or `Session::run_observed`). The trainer
+//! invokes it **on worker 0 only**, synchronously inside the training
+//! loop:
+//!
+//! - [`RunObserver::on_step`] after every inner step,
+//! - [`RunObserver::on_outer_boundary`] after every SlowMo outer update,
+//! - [`RunObserver::on_eval`] after every evaluation checkpoint (with
+//!   worker 0's eval values).
+//!
+//! Returning [`RunControl::Stop`] from any callback requests early
+//! termination. The stop takes effect at the next *checkpoint step* (a
+//! multiple of the run's `stop_check_every`, default = the SlowMo τ, or
+//! 16 without SlowMo), where all workers rendezvous on a barrier and read
+//! the same decision — this keeps lockstep collectives (gossip, ring
+//! allreduce, the SlowMo exact average) aligned, so no worker can block
+//! on a peer that already stopped.
+
+/// What an observer callback tells the trainer to do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunControl {
+    Continue,
+    /// Halt the run at the next checkpoint step.
+    Stop,
+}
+
+/// Emitted after every inner step (worker 0's view).
+#[derive(Clone, Copy, Debug)]
+pub struct StepEvent {
+    /// Global inner step index k (0-based).
+    pub step: u64,
+    /// Worker 0's training loss at this step.
+    pub loss: f32,
+    /// Fast learning rate γ_k in effect.
+    pub gamma: f32,
+    /// Worker 0's simulated clock.
+    pub clock: f64,
+}
+
+/// Emitted after every SlowMo outer update.
+#[derive(Clone, Copy, Debug)]
+pub struct OuterEvent {
+    /// Inner step k at which the boundary fired.
+    pub step: u64,
+    /// Outer iterations completed (1-based after the first update).
+    pub outer_t: u64,
+    pub clock: f64,
+}
+
+/// Emitted after every evaluation checkpoint (worker 0's values).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalEvent {
+    /// 1-based step count at which the eval ran.
+    pub step: u64,
+    pub loss: f32,
+    pub metric: f32,
+    pub clock: f64,
+}
+
+/// Observer of a live training run. All methods default to
+/// [`RunControl::Continue`], so implementors override only what they need.
+pub trait RunObserver: Send {
+    fn on_step(&mut self, _ev: &StepEvent) -> RunControl {
+        RunControl::Continue
+    }
+
+    fn on_outer_boundary(&mut self, _ev: &OuterEvent) -> RunControl {
+        RunControl::Continue
+    }
+
+    fn on_eval(&mut self, _ev: &EvalEvent) -> RunControl {
+        RunControl::Continue
+    }
+}
+
+/// Prints a progress line every `every` steps and at every eval point.
+pub struct ProgressPrinter {
+    pub every: u64,
+}
+
+impl RunObserver for ProgressPrinter {
+    fn on_step(&mut self, ev: &StepEvent) -> RunControl {
+        if self.every > 0 && (ev.step + 1) % self.every == 0 {
+            println!(
+                "[step {:>6}] loss {:.4}  gamma {:.4}  t_sim {:.2}s",
+                ev.step + 1,
+                ev.loss,
+                ev.gamma,
+                ev.clock
+            );
+        }
+        RunControl::Continue
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent) -> RunControl {
+        println!(
+            "[eval {:>6}] loss {:.4}  metric {:.4}",
+            ev.step, ev.loss, ev.metric
+        );
+        RunControl::Continue
+    }
+}
+
+/// Stops the run after `patience` consecutive evals without the eval loss
+/// improving by at least `min_delta`.
+pub struct EvalEarlyStop {
+    pub patience: usize,
+    pub min_delta: f64,
+    best: f64,
+    bad: usize,
+}
+
+impl EvalEarlyStop {
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        Self {
+            patience,
+            min_delta,
+            best: f64::INFINITY,
+            bad: 0,
+        }
+    }
+
+    /// Evals seen since the last improvement.
+    pub fn evals_since_best(&self) -> usize {
+        self.bad
+    }
+}
+
+impl RunObserver for EvalEarlyStop {
+    fn on_eval(&mut self, ev: &EvalEvent) -> RunControl {
+        if (ev.loss as f64) < self.best - self.min_delta {
+            self.best = ev.loss as f64;
+            self.bad = 0;
+        } else {
+            self.bad += 1;
+        }
+        if self.bad > self.patience {
+            RunControl::Stop
+        } else {
+            RunControl::Continue
+        }
+    }
+}
+
+/// Records every event (metric streaming / testing).
+#[derive(Default)]
+pub struct Recorder {
+    pub steps: Vec<StepEvent>,
+    pub outers: Vec<OuterEvent>,
+    pub evals: Vec<EvalEvent>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RunObserver for Recorder {
+    fn on_step(&mut self, ev: &StepEvent) -> RunControl {
+        self.steps.push(*ev);
+        RunControl::Continue
+    }
+
+    fn on_outer_boundary(&mut self, ev: &OuterEvent) -> RunControl {
+        self.outers.push(*ev);
+        RunControl::Continue
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent) -> RunControl {
+        self.evals.push(*ev);
+        RunControl::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval(step: u64, loss: f32) -> EvalEvent {
+        EvalEvent {
+            step,
+            loss,
+            metric: 0.0,
+            clock: 0.0,
+        }
+    }
+
+    #[test]
+    fn early_stop_fires_after_patience_exhausted() {
+        let mut es = EvalEarlyStop::new(2, 0.0);
+        assert_eq!(es.on_eval(&eval(10, 1.0)), RunControl::Continue);
+        assert_eq!(es.on_eval(&eval(20, 0.5)), RunControl::Continue);
+        // Three non-improving evals > patience of 2.
+        assert_eq!(es.on_eval(&eval(30, 0.6)), RunControl::Continue);
+        assert_eq!(es.on_eval(&eval(40, 0.6)), RunControl::Continue);
+        assert_eq!(es.evals_since_best(), 2);
+        assert_eq!(es.on_eval(&eval(50, 0.6)), RunControl::Stop);
+    }
+
+    #[test]
+    fn early_stop_resets_on_improvement() {
+        let mut es = EvalEarlyStop::new(1, 0.0);
+        assert_eq!(es.on_eval(&eval(1, 1.0)), RunControl::Continue);
+        assert_eq!(es.on_eval(&eval(2, 1.0)), RunControl::Continue);
+        assert_eq!(es.on_eval(&eval(3, 0.9)), RunControl::Continue);
+        assert_eq!(es.on_eval(&eval(4, 0.95)), RunControl::Continue);
+        assert_eq!(es.on_eval(&eval(5, 0.95)), RunControl::Stop);
+    }
+
+    #[test]
+    fn recorder_accumulates_all_event_kinds() {
+        let mut r = Recorder::new();
+        r.on_step(&StepEvent {
+            step: 0,
+            loss: 1.0,
+            gamma: 0.1,
+            clock: 0.0,
+        });
+        r.on_outer_boundary(&OuterEvent {
+            step: 11,
+            outer_t: 1,
+            clock: 0.0,
+        });
+        r.on_eval(&eval(12, 0.5));
+        assert_eq!(r.steps.len(), 1);
+        assert_eq!(r.outers.len(), 1);
+        assert_eq!(r.evals.len(), 1);
+    }
+
+    #[test]
+    fn default_impls_continue() {
+        struct Nop;
+        impl RunObserver for Nop {}
+        let mut n = Nop;
+        assert_eq!(
+            n.on_step(&StepEvent {
+                step: 0,
+                loss: 0.0,
+                gamma: 0.0,
+                clock: 0.0
+            }),
+            RunControl::Continue
+        );
+    }
+}

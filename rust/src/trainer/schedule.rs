@@ -66,6 +66,37 @@ impl Schedule {
     }
 }
 
+/// Spec-string form, used by `--sched` and TOML configs:
+/// `const:<g>`, `image:<base>@<total>` (warmup + step decay), or
+/// `lm:<peak>@<total>` (warmup + inverse-sqrt).
+impl std::str::FromStr for Schedule {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let bad = || {
+            format!(
+                "bad schedule {s:?}: expected const:<g>, \
+                 image:<base>@<total>, or lm:<peak>@<total>"
+            )
+        };
+        let (kind, rest) = s.split_once(':').ok_or_else(bad)?;
+        match kind {
+            "const" => rest.parse::<f32>().map(Schedule::Const).map_err(|_| bad()),
+            "image" | "lm" => {
+                let (lr, total) = rest.split_once('@').ok_or_else(bad)?;
+                let lr: f32 = lr.parse().map_err(|_| bad())?;
+                let total: u64 = total.parse().map_err(|_| bad())?;
+                Ok(if kind == "image" {
+                    Schedule::image_default(lr, total)
+                } else {
+                    Schedule::lm_default(lr, total)
+                })
+            }
+            _ => Err(bad()),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +144,26 @@ mod tests {
         let later = s.gamma(399);
         assert!((later - 5e-4).abs() < 1e-5, "{later}"); // sqrt(100/400)
         assert!(s.gamma(1000) < later);
+    }
+
+    #[test]
+    fn from_str_parses_every_form() {
+        let c: Schedule = "const:0.05".parse().unwrap();
+        assert_eq!(c.gamma(0), 0.05);
+        let img: Schedule = "image:0.1@4000".parse().unwrap();
+        assert!((img.gamma(1000) - 0.1).abs() < 1e-6);
+        assert!(img.gamma(2000) < 0.05);
+        let lm: Schedule = "lm:2e-3@1000".parse().unwrap();
+        assert!(lm.gamma(999) < 2e-3);
+    }
+
+    #[test]
+    fn from_str_rejects_malformed() {
+        for bad in ["", "const", "const:x", "image:0.1", "image:0.1@x",
+                    "step:1@2", "lm:@100"] {
+            let e = bad.parse::<Schedule>().unwrap_err();
+            assert!(e.contains("expected"), "{bad}: {e}");
+        }
     }
 
     #[test]

@@ -1,57 +1,60 @@
 //! Framework-equivalence tests (paper §2): the special cases the SlowMo
 //! framework must recover *exactly*, plus determinism guarantees. All run
-//! on the native quad fast path (no PJRT needed) so they are fast and
-//! bit-deterministic.
+//! on the native quad fast path through an engine-free
+//! [`Session`] (no PJRT needed) so they are fast and bit-deterministic.
 
+use slowmo::algorithms::AlgoSel;
 use slowmo::net::CostModel;
 use slowmo::optim::kernels::InnerOpt;
-use slowmo::runtime::{artifacts_dir, Manifest};
+use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
-use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg, TrainResult};
+use slowmo::trainer::{Schedule, TrainResult};
 
-fn manifest() -> Option<Manifest> {
-    Manifest::load(&artifacts_dir()).ok()
-}
-
-fn quad_cfg(m: usize, steps: u64, algo: AlgoSpec,
-            slowmo: Option<SlowMoCfg>) -> TrainCfg {
-    TrainCfg {
-        preset: "quad".into(),
-        m,
-        steps,
-        seed: 11,
-        algo,
-        slowmo,
-        sched: Schedule::Const(0.2),
-        heterogeneity: 1.0,
-        eval_every: 0,
-        eval_batches: 1,
-        force_pjrt: false,
-        native_kernels: true,
-        cost: CostModel::free(),
-        compute_time_s: 1e-6,
-        record_gradnorm: false,
+fn session() -> Option<Session> {
+    match Session::native_only() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("SKIP: no artifacts");
+            None
+        }
     }
 }
 
-fn run(cfg: &TrainCfg) -> TrainResult {
-    train(cfg, &manifest().unwrap(), None).unwrap()
+fn quad(
+    s: &Session,
+    m: usize,
+    steps: u64,
+    algo: AlgoSel,
+    slowmo: Option<SlowMoCfg>,
+) -> TrainResult {
+    s.train("quad")
+        .algo_sel(algo)
+        .workers(m)
+        .steps(steps)
+        .seed(11)
+        .slowmo_opt(slowmo)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::free())
+        .compute_time(1e-6)
+        .run()
+        .unwrap()
 }
 
 fn sgd() -> InnerOpt {
     InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }
 }
 
+fn local() -> AlgoSel {
+    AlgoSel::with_inner("local", sgd())
+}
+
 #[test]
 fn runs_are_bit_deterministic() {
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    let cfg = quad_cfg(4, 64, AlgoSpec::Local(sgd()),
-                       Some(SlowMoCfg::new(1.0, 0.7, 8)));
-    let a = run(&cfg);
-    let b = run(&cfg);
+    let Some(s) = session() else { return };
+    let a = quad(&s, 4, 64, local(), Some(SlowMoCfg::new(1.0, 0.7, 8)));
+    let b = quad(&s, 4, 64, local(), Some(SlowMoCfg::new(1.0, 0.7, 8)));
     assert_eq!(a.train_curve, b.train_curve);
     assert_eq!(a.best_train_loss, b.best_train_loss);
 }
@@ -61,16 +64,13 @@ fn slowmo_tau1_beta0_equals_allreduce_sgd() {
     // Paper §2: base=SGD (no local momentum), τ=1, α=1, β=0 recovers
     // large mini-batch (AR) SGD. Parameter-averaging every step with
     // identical starting points == gradient-averaging every step.
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    let a = run(&quad_cfg(
-        4, 48, AlgoSpec::Local(sgd()),
+    let Some(s) = session() else { return };
+    let a = quad(
+        &s, 4, 48, local(),
         Some(SlowMoCfg::new(1.0, 0.0, 1)
             .with_buffers(BufferStrategy::Maintain)),
-    ));
-    let b = run(&quad_cfg(4, 48, AlgoSpec::AllReduce(sgd()), None));
+    );
+    let b = quad(&s, 4, 48, AlgoSel::with_inner("ar", sgd()), None);
     // The two runs window their train curves differently (τ=1 vs the
     // default 16), but over 48 steps both are means of the same per-step
     // loss sequence — compare the global means and the best losses.
@@ -87,21 +87,12 @@ fn slowmo_tau1_beta0_equals_allreduce_sgd() {
 fn slowmo_beta0_equals_local_sgd_baseline() {
     // SlowMo(α=1, β=0) over Local SGD == Local SGD with periodic
     // averaging (Alg. 4): adding the wrapper with β=0 must not change
-    // anything vs the direct characterization.
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    // Direct Local SGD with period τ via DoubleAvg with only param
-    // averaging... (no such direct impl — the framework equivalence IS the
-    // implementation). Instead verify: τ=1 vs τ=8 differ, and β=0 vs β>0
-    // differ — i.e. the wrapper's knobs are live.
-    let t1 = run(&quad_cfg(4, 64, AlgoSpec::Local(sgd()),
-                           Some(SlowMoCfg::new(1.0, 0.0, 1))));
-    let t8 = run(&quad_cfg(4, 64, AlgoSpec::Local(sgd()),
-                           Some(SlowMoCfg::new(1.0, 0.0, 8))));
-    let t8b = run(&quad_cfg(4, 64, AlgoSpec::Local(sgd()),
-                            Some(SlowMoCfg::new(1.0, 0.7, 8))));
+    // anything vs the direct characterization. Verify the wrapper's
+    // knobs are live: τ=1 vs τ=8 differ, and β=0 vs β>0 differ.
+    let Some(s) = session() else { return };
+    let t1 = quad(&s, 4, 64, local(), Some(SlowMoCfg::new(1.0, 0.0, 1)));
+    let t8 = quad(&s, 4, 64, local(), Some(SlowMoCfg::new(1.0, 0.0, 8)));
+    let t8b = quad(&s, 4, 64, local(), Some(SlowMoCfg::new(1.0, 0.7, 8)));
     assert_ne!(t1.train_curve, t8.train_curve);
     assert_ne!(t8.train_curve, t8b.train_curve);
 }
@@ -111,21 +102,18 @@ fn slowmo_improves_local_sgd_on_heterogeneous_quad() {
     // The BMUF effect (paper Table 1 Local SGD rows): with heterogeneous
     // worker objectives and sparse averaging, slow momentum reaches a
     // lower loss for the same step budget.
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
+    let Some(s) = session() else { return };
     let tau = 16;
-    let base = run(&quad_cfg(
-        8, 512, AlgoSpec::Local(sgd()),
+    let base = quad(
+        &s, 8, 512, local(),
         Some(SlowMoCfg::new(1.0, 0.0, tau)
             .with_buffers(BufferStrategy::Maintain)),
-    ));
-    let slow = run(&quad_cfg(
-        8, 512, AlgoSpec::Local(sgd()),
+    );
+    let slow = quad(
+        &s, 8, 512, local(),
         Some(SlowMoCfg::new(1.0, 0.6, tau)
             .with_buffers(BufferStrategy::Maintain)),
-    ));
+    );
     assert!(
         slow.best_train_loss < base.best_train_loss,
         "slowmo {} !< base {}",
@@ -136,15 +124,12 @@ fn slowmo_improves_local_sgd_on_heterogeneous_quad() {
 
 #[test]
 fn single_worker_lookahead_converges() {
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    let r = run(&quad_cfg(
-        1, 256, AlgoSpec::Local(sgd()),
+    let Some(s) = session() else { return };
+    let r = quad(
+        &s, 1, 256, local(),
         Some(SlowMoCfg::new(0.5, 0.0, 8)
             .with_buffers(BufferStrategy::Maintain)),
-    ));
+    );
     let first = r.train_curve.first().unwrap().1;
     let last = r.train_curve.last().unwrap().1;
     // The quad spectrum spans 1..100 over 4096 dims, so the low-λ tail
@@ -154,39 +139,30 @@ fn single_worker_lookahead_converges() {
 
 #[test]
 fn all_base_algorithms_decrease_quad_loss() {
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    for algo in [
-        AlgoSpec::Local(sgd()),
-        AlgoSpec::Sgp(sgd()),
-        AlgoSpec::Osgp(sgd()),
-        AlgoSpec::Dpsgd(sgd()),
-        AlgoSpec::AllReduce(sgd()),
-        AlgoSpec::DoubleAvg(sgd(), 8),
-    ] {
-        let name = format!("{algo:?}");
-        let r = run(&quad_cfg(4, 128, algo, None));
+    // Every registered spec string builds through the registry and
+    // descends on the quad workload.
+    let Some(s) = session() else { return };
+    for spec in ["local", "sgp", "osgp", "dpsgd", "ar", "doubleavg:8"] {
+        let mut sel = s.registry().parse(spec).unwrap();
+        sel.inner = sgd();
+        let r = quad(&s, 4, 128, sel, None);
         let first = r.train_curve.first().unwrap().1;
         let last = r.train_curve.last().unwrap().1;
-        assert!(last < first, "{name}: {first} -> {last}");
+        assert!(last < first, "{spec}: {first} -> {last}");
     }
 }
 
 #[test]
 fn noaverage_variant_close_to_full_slowmo_on_quad() {
     // §6: removing the exact average degrades only slightly.
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    let full = run(&quad_cfg(4, 256, AlgoSpec::Sgp(sgd()),
-                             Some(SlowMoCfg::new(1.0, 0.6, 16))));
-    let noavg = run(&quad_cfg(
-        4, 256, AlgoSpec::Sgp(sgd()),
+    let Some(s) = session() else { return };
+    let sgp = AlgoSel::with_inner("sgp", sgd());
+    let full = quad(&s, 4, 256, sgp.clone(),
+                    Some(SlowMoCfg::new(1.0, 0.6, 16)));
+    let noavg = quad(
+        &s, 4, 256, sgp,
         Some(SlowMoCfg::new(1.0, 0.6, 16).no_average()),
-    ));
+    );
     // Both converge; noaverage within 3x of full's loss.
     assert!(noavg.best_train_loss < 3.0 * full.best_train_loss + 1e-6,
             "noavg {} vs full {}", noavg.best_train_loss,
@@ -195,28 +171,32 @@ fn noaverage_variant_close_to_full_slowmo_on_quad() {
 
 #[test]
 fn gossip_sends_fewer_bytes_than_allreduce() {
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    let sgp = run(&quad_cfg(4, 64, AlgoSpec::Sgp(sgd()), None));
-    let ar = run(&quad_cfg(4, 64, AlgoSpec::AllReduce(sgd()), None));
+    let Some(s) = session() else { return };
+    let sgp = quad(&s, 4, 64, AlgoSel::with_inner("sgp", sgd()), None);
+    let ar = quad(&s, 4, 64, AlgoSel::with_inner("ar", sgd()), None);
     assert!(sgp.bytes_sent < ar.bytes_sent,
             "sgp {} !< ar {}", sgp.bytes_sent, ar.bytes_sent);
 }
 
 #[test]
 fn sim_time_reflects_cost_model() {
-    if manifest().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    let mut cfg = quad_cfg(4, 32, AlgoSpec::AllReduce(sgd()), None);
-    cfg.cost = CostModel { latency_s: 1e-3, bandwidth_bps: 1e9 };
-    cfg.compute_time_s = 0.01;
-    let r = train(&cfg, &manifest().unwrap(), None).unwrap();
+    let Some(s) = session() else { return };
+    let cost = CostModel { latency_s: 1e-3, bandwidth_bps: 1e9 };
+    let r = s
+        .train("quad")
+        .algo_sel(AlgoSel::with_inner("ar", sgd()))
+        .workers(4)
+        .steps(32)
+        .seed(11)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(cost.clone())
+        .compute_time(0.01)
+        .run()
+        .unwrap();
     // 32 steps × (10 ms compute + allreduce(4096 f32, m=4)).
-    let per = cfg.cost.allreduce_time(4096, 4) + 0.01;
+    let per = cost.allreduce_time(4096, 4) + 0.01;
     let want = 32.0 * per;
     assert!((r.sim_time - want).abs() < 0.2 * want,
             "sim {} vs want {}", r.sim_time, want);

@@ -1,0 +1,242 @@
+//! Integration tests for the session/builder API surface: registry
+//! round-trips from *outside* the crate, custom algorithm registration by
+//! string key, and observer-driven streaming / early stopping. Runs use
+//! the native quad fast path (engine-free session), skipping when no
+//! artifacts are exported.
+
+use slowmo::algorithms::{AlgoCtx, BaseAlgorithm, Ctx, WorkerState};
+use slowmo::net::CostModel;
+use slowmo::optim::kernels::InnerOpt;
+use slowmo::session::{Session, TrainBuilder};
+use slowmo::slowmo::SlowMoCfg;
+use slowmo::trainer::{
+    OuterEvent, Recorder, RunControl, RunObserver, Schedule, StepEvent,
+};
+use std::sync::Arc;
+
+fn session() -> Option<Session> {
+    match Session::native_only() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("SKIP: no artifacts");
+            None
+        }
+    }
+}
+
+fn quad<'s>(s: &'s Session, steps: u64) -> TrainBuilder<'s> {
+    s.train("quad")
+        .algo_sel(slowmo::algorithms::AlgoSel::with_inner(
+            "local",
+            InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 },
+        ))
+        .workers(2)
+        .steps(steps)
+        .seed(5)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::free())
+        .compute_time(1e-6)
+}
+
+#[test]
+fn every_registered_key_builds_and_runs_name_round_trip() {
+    let Some(s) = session() else { return };
+    for key in s.registry().keys() {
+        let sel = s.registry().parse(key).unwrap();
+        let algo = s.registry().build(&sel, 4).unwrap();
+        assert!(
+            algo.name().starts_with(key),
+            "{} does not round-trip key {key}",
+            algo.name()
+        );
+    }
+}
+
+/// A deliberately simple out-of-crate algorithm: plain SGD on `state.x`,
+/// no communication. Proves the registry's factory surface is sufficient
+/// for algorithms defined outside the crate (the DeMo-style extension
+/// path).
+struct Anchor {
+    inner: InnerOpt,
+}
+
+impl BaseAlgorithm for Anchor {
+    fn name(&self) -> String {
+        "anchor-sgd".into()
+    }
+
+    fn inner(&self) -> &InnerOpt {
+        &self.inner
+    }
+
+    fn step(
+        &self,
+        _ctx: &mut Ctx,
+        state: &mut WorkerState,
+        g: &[f32],
+        gamma: f32,
+        _k: u64,
+    ) -> anyhow::Result<()> {
+        for (x, gi) in state.x.iter_mut().zip(g) {
+            *x -= gamma * gi;
+        }
+        state.z.copy_from_slice(&state.x);
+        Ok(())
+    }
+
+    fn lockstep(&self) -> bool {
+        false
+    }
+
+    fn comm_elems_per_step(&self, _d: usize) -> usize {
+        0
+    }
+}
+
+#[test]
+fn custom_out_of_crate_algorithm_runs_by_string_key() {
+    let Some(mut s) = session() else { return };
+    s.registry_mut().register(
+        "anchor",
+        "test-only plain SGD defined outside the crate",
+        false,
+        |c: &AlgoCtx| Arc::new(Anchor { inner: c.inner }) as Arc<dyn BaseAlgorithm>,
+    );
+    // Reachable through the spec-string path, exactly like built-ins.
+    let r = s
+        .train("quad")
+        .algo("anchor")
+        .workers(2)
+        .steps(64)
+        .seed(5)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::free())
+        .compute_time(1e-6)
+        .run()
+        .unwrap();
+    assert!(r.algo.starts_with("anchor"), "{}", r.algo);
+    let first = r.train_curve.first().unwrap().1;
+    let last = r.train_curve.last().unwrap().1;
+    assert!(last < first, "{first} -> {last}");
+    // And it wraps in SlowMo like any other base algorithm.
+    let r = s
+        .train("quad")
+        .algo("anchor")
+        .workers(2)
+        .steps(64)
+        .slowmo(0.5, 8)
+        .schedule(Schedule::Const(0.2))
+        .cost(CostModel::free())
+        .compute_time(1e-6)
+        .run()
+        .unwrap();
+    assert!(r.algo.contains("slowmo"), "{}", r.algo);
+}
+
+struct StopAfter {
+    after: u64,
+    seen: u64,
+}
+
+impl RunObserver for StopAfter {
+    fn on_step(&mut self, _ev: &StepEvent) -> RunControl {
+        self.seen += 1;
+        if self.seen >= self.after {
+            RunControl::Stop
+        } else {
+            RunControl::Continue
+        }
+    }
+}
+
+#[test]
+fn observer_early_stop_halts_quad_run() {
+    let Some(s) = session() else { return };
+    let full = quad(&s, 200).run().unwrap();
+    assert_eq!(full.steps_run, 200);
+    assert_eq!(full.steps, 200);
+
+    let mut obs = StopAfter { after: 25, seen: 0 };
+    let stopped = quad(&s, 200).run_observed(&mut obs).unwrap();
+    // The stop lands at the next checkpoint (default granularity 16
+    // without SlowMo): strictly fewer steps than requested, but at least
+    // as many as the observer saw.
+    assert!(stopped.steps_run < 200,
+            "run was not halted: {}", stopped.steps_run);
+    assert!(stopped.steps_run >= 25);
+    assert!(obs.seen < 200, "observer saw {} steps", obs.seen);
+    assert_eq!(stopped.steps, 200); // requested budget is preserved
+    assert!(stopped.train_curve.len() < full.train_curve.len());
+}
+
+#[test]
+fn observer_early_stop_respects_custom_granularity() {
+    let Some(s) = session() else { return };
+    let mut obs = StopAfter { after: 10, seen: 0 };
+    let r = quad(&s, 100)
+        .stop_check_every(20)
+        .run_observed(&mut obs)
+        .unwrap();
+    assert_eq!(r.steps_run, 20);
+}
+
+#[test]
+fn observer_early_stop_with_slowmo_collectives_stays_aligned() {
+    // Lockstep-sensitive variant: the SlowMo exact average is a blocking
+    // collective, so a misaligned stop would deadlock or panic. Four
+    // workers, stop requested from an outer-boundary callback.
+    struct StopAtOuter(u64);
+    impl RunObserver for StopAtOuter {
+        fn on_outer_boundary(&mut self, ev: &OuterEvent) -> RunControl {
+            if ev.outer_t >= self.0 {
+                RunControl::Stop
+            } else {
+                RunControl::Continue
+            }
+        }
+    }
+    let Some(s) = session() else { return };
+    let mut obs = StopAtOuter(2);
+    let r = quad(&s, 160)
+        .workers(4)
+        .slowmo_cfg(SlowMoCfg::new(1.0, 0.5, 8))
+        .run_observed(&mut obs)
+        .unwrap();
+    // Second boundary fires at k=15; the stop lands at the next τ
+    // checkpoint (k=16).
+    assert_eq!(r.steps_run, 16);
+}
+
+#[test]
+fn observer_streams_all_event_kinds() {
+    let Some(s) = session() else { return };
+    let mut rec = Recorder::new();
+    let r = quad(&s, 40)
+        .slowmo_cfg(SlowMoCfg::new(1.0, 0.5, 10))
+        .eval_every(10)
+        .run_observed(&mut rec)
+        .unwrap();
+    assert_eq!(r.steps_run, 40);
+    assert_eq!(rec.steps.len(), 40);
+    assert_eq!(rec.outers.len(), 4); // k = 9, 19, 29, 39
+    assert_eq!(rec.evals.len(), 4); // steps 10, 20, 30, 40
+    assert_eq!(rec.evals.last().unwrap().step, 40);
+    // Streamed losses match what the worker recorded.
+    assert!(rec.steps.iter().all(|e| e.loss.is_finite()));
+    assert!(rec.steps.windows(2).all(|w| w[1].step == w[0].step + 1));
+}
+
+#[test]
+fn session_caches_models_and_inits_across_runs() {
+    let Some(s) = session() else { return };
+    let m1 = s.model("quad", false).unwrap();
+    let m2 = s.model("quad", false).unwrap();
+    assert!(Arc::ptr_eq(&m1, &m2), "model executor must be cached");
+    let i1 = s.init("quad").unwrap();
+    let i2 = s.init("quad").unwrap();
+    assert!(Arc::ptr_eq(&i1, &i2), "init vector must be cached");
+}

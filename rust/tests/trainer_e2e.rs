@@ -1,53 +1,55 @@
 //! End-to-end trainer integration over the real PJRT artifacts: tiny
 //! budgets, every model family, PJRT kernels, gossip + SlowMo combined.
+//! All runs go through the session/builder API.
 
-use slowmo::net::CostModel;
+use slowmo::algorithms::AlgoSel;
 use slowmo::optim::kernels::InnerOpt;
-use slowmo::runtime::{artifacts_dir, Engine, Manifest};
+use slowmo::session::{Session, TrainBuilder};
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
-use slowmo::trainer::{train, AlgoSpec, Schedule, TrainCfg};
-use std::sync::Arc;
+use slowmo::trainer::Schedule;
 
-fn setup() -> Option<(Manifest, Arc<Engine>)> {
-    let dir = artifacts_dir();
-    let Ok(m) = Manifest::load(&dir) else {
-        eprintln!("SKIP: no artifacts at {dir}");
-        return None;
-    };
-    Some((m, Engine::cpu(&dir).unwrap()))
+fn setup() -> Option<Session> {
+    match Session::open() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e:#})");
+            None
+        }
+    }
 }
 
-fn base_cfg(preset: &str, algo: AlgoSpec, steps: u64) -> TrainCfg {
-    TrainCfg {
-        preset: preset.into(),
-        m: 2,
-        steps,
-        seed: 0,
-        algo,
-        slowmo: None,
-        sched: Schedule::Const(0.05),
-        heterogeneity: 0.5,
-        eval_every: 0,
-        eval_batches: 2,
-        force_pjrt: true,
-        native_kernels: false,
-        cost: CostModel::ethernet_10g(),
-        compute_time_s: 0.0,
-        record_gradnorm: false,
-    }
+fn base<'s>(
+    s: &'s Session,
+    preset: &str,
+    algo: AlgoSel,
+    steps: u64,
+) -> TrainBuilder<'s> {
+    s.train(preset)
+        .algo_sel(algo)
+        .workers(2)
+        .steps(steps)
+        .schedule(Schedule::Const(0.05))
+        .eval_batches(2)
+        .force_pjrt(true)
+        .pjrt_kernels()
 }
 
 #[test]
 fn mlp_sgp_slowmo_descends_via_pjrt() {
-    let Some((m, e)) = setup() else { return };
-    let mut cfg = base_cfg(
+    let Some(s) = setup() else { return };
+    let r = base(
+        &s,
         "cifar-mlp",
-        AlgoSpec::Sgp(InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 }),
+        AlgoSel::with_inner(
+            "sgp",
+            InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 },
+        ),
         24,
-    );
-    cfg.slowmo = Some(SlowMoCfg::new(1.0, 0.7, 6));
-    cfg.sched = Schedule::Const(0.08);
-    let r = train(&cfg, &m, Some(&e)).unwrap();
+    )
+    .slowmo(0.7, 6)
+    .schedule(Schedule::Const(0.08))
+    .run()
+    .unwrap();
     let first = r.train_curve.first().unwrap().1;
     let last = r.train_curve.last().unwrap().1;
     assert!(last < first, "{first} -> {last}");
@@ -56,17 +58,19 @@ fn mlp_sgp_slowmo_descends_via_pjrt() {
 
 #[test]
 fn cnn_local_adam_descends() {
-    let Some((m, e)) = setup() else { return };
-    let mut cfg = base_cfg(
+    let Some(s) = setup() else { return };
+    let r = base(
+        &s,
         "cifar-cnn",
-        AlgoSpec::Local(InnerOpt::adam_default()),
+        AlgoSel::with_inner("local", InnerOpt::adam_default()),
         16,
-    );
-    cfg.slowmo = Some(
+    )
+    .slowmo_cfg(
         SlowMoCfg::new(1.0, 0.5, 4).with_buffers(BufferStrategy::Maintain),
-    );
-    cfg.sched = Schedule::Const(2e-3);
-    let r = train(&cfg, &m, Some(&e)).unwrap();
+    )
+    .schedule(Schedule::Const(2e-3))
+    .run()
+    .unwrap();
     let first = r.train_curve.first().unwrap().1;
     let last = r.train_curve.last().unwrap().1;
     assert!(last < first, "{first} -> {last}");
@@ -74,15 +78,17 @@ fn cnn_local_adam_descends() {
 
 #[test]
 fn lm_eval_metric_in_range() {
-    let Some((m, e)) = setup() else { return };
-    let mut cfg = base_cfg(
+    let Some(s) = setup() else { return };
+    let r = base(
+        &s,
         "lm-tiny",
-        AlgoSpec::Local(InnerOpt::adam_default()),
+        AlgoSel::with_inner("local", InnerOpt::adam_default()),
         12,
-    );
-    cfg.sched = Schedule::Const(1e-3);
-    cfg.eval_every = 6;
-    let r = train(&cfg, &m, Some(&e)).unwrap();
+    )
+    .schedule(Schedule::Const(1e-3))
+    .eval_every(6)
+    .run()
+    .unwrap();
     assert!(r.eval_curve.len() >= 2);
     for p in &r.eval_curve {
         assert!(p.loss_mean.is_finite());
@@ -97,18 +103,19 @@ fn pallas_attention_artifact_trains_and_matches_dense_variant() {
     // lm-tiny vs lm-tiny-pallas share init + data; one train step must
     // produce near-identical losses (the Pallas attention kernel is
     // numerically equivalent to the dense path).
-    let Some((m, e)) = setup() else { return };
-    let mut dense = base_cfg(
-        "lm-tiny",
-        AlgoSpec::Local(InnerOpt::adam_default()),
-        4,
-    );
-    dense.m = 1;
-    dense.sched = Schedule::Const(1e-3);
-    let mut pallas = dense.clone();
-    pallas.preset = "lm-tiny-pallas".into();
-    let rd = train(&dense, &m, Some(&e)).unwrap();
-    let rp = train(&pallas, &m, Some(&e)).unwrap();
+    let Some(s) = setup() else { return };
+    let mk = |preset: &str| {
+        base(
+            &s,
+            preset,
+            AlgoSel::with_inner("local", InnerOpt::adam_default()),
+            4,
+        )
+        .workers(1)
+        .schedule(Schedule::Const(1e-3))
+    };
+    let rd = mk("lm-tiny").run().unwrap();
+    let rp = mk("lm-tiny-pallas").run().unwrap();
     for (a, b) in rd.train_curve.iter().zip(&rp.train_curve) {
         assert!((a.1 - b.1).abs() < 2e-3 * (a.1.abs() + 1.0),
                 "dense {a:?} vs pallas {b:?}");
@@ -117,20 +124,23 @@ fn pallas_attention_artifact_trains_and_matches_dense_variant() {
 
 #[test]
 fn pjrt_and_native_optimizer_kernels_agree_end_to_end() {
-    let Some((m, e)) = setup() else { return };
+    let Some(s) = setup() else { return };
     let mk = |native: bool| {
-        let mut cfg = base_cfg(
+        base(
+            &s,
             "cifar-cnn",
-            AlgoSpec::Local(InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 }),
+            AlgoSel::with_inner(
+                "local",
+                InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 },
+            ),
             12,
-        );
-        cfg.slowmo = Some(SlowMoCfg::new(1.0, 0.6, 4));
-        cfg.native_kernels = native;
-        cfg.sched = Schedule::Const(0.05);
-        cfg
+        )
+        .slowmo(0.6, 4)
+        .native_kernels(native)
+        .schedule(Schedule::Const(0.05))
     };
-    let a = train(&mk(false), &m, Some(&e)).unwrap();
-    let b = train(&mk(true), &m, Some(&e)).unwrap();
+    let a = mk(false).run().unwrap();
+    let b = mk(true).run().unwrap();
     for (x, y) in a.train_curve.iter().zip(&b.train_curve) {
         assert!(
             (x.1 - y.1).abs() < 1e-4 * (y.1.abs() + 1.0),
@@ -141,21 +151,24 @@ fn pjrt_and_native_optimizer_kernels_agree_end_to_end() {
 
 #[test]
 fn quad_pjrt_matches_native_model_path() {
-    let Some((m, e)) = setup() else { return };
+    let Some(s) = setup() else { return };
     let mk = |force_pjrt: bool| {
-        let mut cfg = base_cfg(
+        base(
+            &s,
             "quad",
-            AlgoSpec::Local(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }),
+            AlgoSel::with_inner(
+                "local",
+                InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 },
+            ),
             16,
-        );
-        cfg.force_pjrt = force_pjrt;
-        cfg.native_kernels = true;
-        cfg.sched = Schedule::Const(0.3);
-        cfg.heterogeneity = 1.0;
-        cfg
+        )
+        .force_pjrt(force_pjrt)
+        .native_kernels(true)
+        .schedule(Schedule::Const(0.3))
+        .heterogeneity(1.0)
     };
-    let a = train(&mk(true), &m, Some(&e)).unwrap();
-    let b = train(&mk(false), &m, Some(&e)).unwrap();
+    let a = mk(true).run().unwrap();
+    let b = mk(false).run().unwrap();
     for (x, y) in a.train_curve.iter().zip(&b.train_curve) {
         assert!(
             (x.1 - y.1).abs() < 1e-4 * (y.1.abs() + 1.0),
@@ -166,16 +179,21 @@ fn quad_pjrt_matches_native_model_path() {
 
 #[test]
 fn eval_every_produces_expected_checkpoints() {
-    let Some((m, e)) = setup() else { return };
-    let mut cfg = base_cfg(
+    let Some(s) = setup() else { return };
+    let r = base(
+        &s,
         "quad",
-        AlgoSpec::Local(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }),
+        AlgoSel::with_inner(
+            "local",
+            InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 },
+        ),
         20,
-    );
-    cfg.force_pjrt = false;
-    cfg.native_kernels = true;
-    cfg.eval_every = 8;
-    let r = train(&cfg, &m, Some(&e)).unwrap();
+    )
+    .force_pjrt(false)
+    .native_kernels(true)
+    .eval_every(8)
+    .run()
+    .unwrap();
     let steps: Vec<u64> = r.eval_curve.iter().map(|p| p.step).collect();
     assert_eq!(steps, vec![8, 16, 20]);
 }
