@@ -161,10 +161,12 @@ def export_optim(d: int, out_dir: str, manifest: dict) -> None:
     print(f"  optimizer graphs for d={d}")
 
 
-def export_golden(out_dir: str) -> None:
+def export_golden(out_dir: str, seed: int = 1234) -> None:
     """Small golden vectors so the Rust mirror optimizers can be verified
-    bit-for-bit against the jnp oracle without a Python runtime."""
-    rng = np.random.RandomState(1234)
+    bit-for-bit against the jnp oracle without a Python runtime. The seed
+    is threaded through --golden-seed so rust/tests/golden.rs fixtures can
+    be regenerated (or re-rolled) with one documented command."""
+    rng = np.random.RandomState(seed)
     d = 16
 
     def vec():
@@ -216,6 +218,9 @@ def main() -> None:
                     choices=sorted(presets.GROUPS))
     ap.add_argument("--preset", action="append", default=[],
                     help="extra presets to export (repeatable)")
+    ap.add_argument("--golden-seed", type=int, default=1234,
+                    help="RNG seed for the golden.json fixtures "
+                         "(1234 is the committed baseline)")
     args = ap.parse_args()
 
     os.makedirs(args.out_dir, exist_ok=True)
@@ -235,7 +240,7 @@ def main() -> None:
         dims.add(export_preset(name, args.out_dir, manifest))
     for d in sorted(dims):
         export_optim(d, args.out_dir, manifest)
-    export_golden(args.out_dir)
+    export_golden(args.out_dir, args.golden_seed)
 
     with open(manifest_path, "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)

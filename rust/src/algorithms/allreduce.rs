@@ -7,7 +7,7 @@
 //! SGD/Adam" and the τ=1 anchor of the SlowMo framework.
 
 use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
-use crate::net::ring_allreduce_mean;
+use crate::net::ring_allreduce_mean_group;
 use crate::optim::kernels::InnerOpt;
 use anyhow::Result;
 
@@ -36,11 +36,14 @@ impl BaseAlgorithm for AllReduce {
         state: &mut WorkerState,
         g: &[f32],
         gamma: f32,
-        _k: u64,
+        k: u64,
     ) -> Result<()> {
         let mut avg = g.to_vec();
-        ctx.clock =
-            ring_allreduce_mean(ctx.fabric, ctx.worker, &mut avg, ctx.clock);
+        let group: Vec<usize> = (0..ctx.m).collect();
+        // coll_id = k keys the chaos delay stream per step.
+        ctx.clock = ring_allreduce_mean_group(
+            ctx.fabric, ctx.worker, &group, &mut avg, ctx.clock, k,
+        );
         apply_inner(ctx, &self.inner, state, &avg, gamma)?;
         state.z.copy_from_slice(&state.x);
         Ok(())

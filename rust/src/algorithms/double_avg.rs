@@ -10,7 +10,7 @@
 //! This algorithm is used standalone (not wrapped in SlowMo).
 
 use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
-use crate::net::ring_allreduce_mean;
+use crate::net::ring_allreduce_mean_group;
 use crate::optim::kernels::InnerOpt;
 use anyhow::Result;
 
@@ -46,15 +46,20 @@ impl BaseAlgorithm for DoubleAvg {
         apply_inner(ctx, &self.inner, state, g, gamma)?;
         if (k + 1) % self.tau == 0 && ctx.m > 1 {
             // Alg. 5 lines 6-7: average params AND momentum buffers.
-            ctx.clock = ring_allreduce_mean(
-                ctx.fabric, ctx.worker, &mut state.x, ctx.clock,
+            // coll_ids 3k..3k+2 key the chaos delay streams per collective.
+            let group: Vec<usize> = (0..ctx.m).collect();
+            ctx.clock = ring_allreduce_mean_group(
+                ctx.fabric, ctx.worker, &group, &mut state.x, ctx.clock,
+                3 * k,
             );
-            ctx.clock = ring_allreduce_mean(
-                ctx.fabric, ctx.worker, &mut state.h, ctx.clock,
+            ctx.clock = ring_allreduce_mean_group(
+                ctx.fabric, ctx.worker, &group, &mut state.h, ctx.clock,
+                3 * k + 1,
             );
             if !state.v.is_empty() {
-                ctx.clock = ring_allreduce_mean(
-                    ctx.fabric, ctx.worker, &mut state.v, ctx.clock,
+                ctx.clock = ring_allreduce_mean_group(
+                    ctx.fabric, ctx.worker, &group, &mut state.v, ctx.clock,
+                    3 * k + 2,
                 );
             }
         }

@@ -73,10 +73,8 @@ impl BaseAlgorithm for Dpsgd {
         let mut stash_idx = 0;
         while consumed < expect {
             if stash_idx < state.stash.len() {
-                if state.stash[stash_idx].step == k {
-                    let msg = state.stash.remove(stash_idx);
-                    let arrival = msg.send_time
-                        + ctx.fabric.cost.xfer_time(msg.payload.len());
+                if state.stash[stash_idx].0.step == k {
+                    let (msg, arrival) = state.stash.remove(stash_idx);
                     crate::optim::add_assign(&mut state.x, &msg.payload);
                     ctx.clock = ctx.clock.max(arrival);
                     consumed += 1;
@@ -91,7 +89,7 @@ impl BaseAlgorithm for Dpsgd {
                 ctx.clock = ctx.clock.max(arrival);
                 consumed += 1;
             } else {
-                state.stash.push(msg);
+                state.stash.push((msg, arrival));
             }
         }
         state.z.copy_from_slice(&state.x);

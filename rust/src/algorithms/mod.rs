@@ -48,8 +48,9 @@ pub struct WorkerState {
     pub z: Vec<f32>,
     /// 1-based Adam step counter l (paper Table C.1).
     pub adam_step: u64,
-    /// Blocking-gossip stash: early messages from faster senders.
-    pub stash: Vec<GossipMsg>,
+    /// Blocking-gossip stash: early messages from faster senders, kept
+    /// with their simulated arrival time (preserves chaos delays).
+    pub stash: Vec<(GossipMsg, f64)>,
     /// OSGP: consecutive steps with an empty inbox (Alg. 3
     /// `count_since_last`).
     pub pending_count: u64,

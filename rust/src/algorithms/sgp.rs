@@ -152,10 +152,8 @@ impl BaseAlgorithm for Sgp {
             while consumed < expect {
                 // First check the stash for step-k messages.
                 if stash_idx < state.stash.len() {
-                    if state.stash[stash_idx].step == k {
-                        let msg = state.stash.remove(stash_idx);
-                        let arrival = msg.send_time
-                            + ctx.fabric.cost.xfer_time(msg.payload.len());
+                    if state.stash[stash_idx].0.step == k {
+                        let (msg, arrival) = state.stash.remove(stash_idx);
                         Self::merge(state, &msg);
                         ctx.clock = ctx.clock.max(arrival);
                         consumed += 1;
@@ -170,7 +168,7 @@ impl BaseAlgorithm for Sgp {
                     ctx.clock = ctx.clock.max(arrival);
                     consumed += 1;
                 } else {
-                    state.stash.push(msg);
+                    state.stash.push((msg, arrival));
                 }
             }
         }

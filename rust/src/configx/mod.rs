@@ -36,6 +36,13 @@ impl Value {
             _ => None,
         }
     }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
 }
 
 /// Parsed config: section -> key -> value. Top-level keys live in "".
@@ -185,6 +192,8 @@ beta = 0.7
             Value::Arr(v) => assert_eq!(v.len(), 3),
             _ => panic!(),
         }
+        assert_eq!(taus.as_arr().map(|v| v.len()), Some(3));
+        assert!(c.get("train", "steps").unwrap().as_arr().is_none());
     }
 
     #[test]

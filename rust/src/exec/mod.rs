@@ -4,6 +4,8 @@
 //! execute calls) maps naturally onto one OS thread per worker with
 //! channel-based message passing, which is what this module provides.
 
+use std::collections::HashMap;
+use std::hash::Hash;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -135,6 +137,39 @@ impl Drop for ThreadPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// Keyed mutable state shared across worker threads (per-link chaos
+/// counters etc.): a lazily-populated map guarded by one mutex. A single
+/// lock is plenty for the fabric's per-send access pattern and keeps the
+/// access order deterministic per key (each key is only ever touched by
+/// one sender thread).
+pub struct KeyedState<K, V> {
+    inner: Mutex<HashMap<K, V>>,
+}
+
+impl<K: Eq + Hash, V> KeyedState<K, V> {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Run `f` on the entry for `key`, inserting `default()` first if the
+    /// key is new.
+    pub fn with_mut<R>(
+        &self,
+        key: K,
+        default: impl FnOnce() -> V,
+        f: impl FnOnce(&mut V) -> R,
+    ) -> R {
+        let mut map = self.inner.lock().unwrap();
+        f(map.entry(key).or_insert_with(default))
+    }
+}
+
+impl<K: Eq + Hash, V> Default for KeyedState<K, V> {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -271,6 +306,31 @@ mod tests {
     fn pool_wait_idle_on_empty_pool() {
         let pool = ThreadPool::new(2);
         pool.wait_idle(); // must not deadlock
+    }
+
+    #[test]
+    fn keyed_state_counts_per_key() {
+        let ks: KeyedState<(usize, usize), u64> = KeyedState::new();
+        for _ in 0..3 {
+            ks.with_mut((0, 1), || 0, |v| *v += 1);
+        }
+        ks.with_mut((1, 0), || 10, |v| *v += 1);
+        assert_eq!(ks.with_mut((0, 1), || 0, |v| *v), 3);
+        assert_eq!(ks.with_mut((1, 0), || 0, |v| *v), 11);
+        assert_eq!(ks.with_mut((2, 2), || 7, |v| *v), 7);
+    }
+
+    #[test]
+    fn keyed_state_cross_thread() {
+        let ks: Arc<KeyedState<usize, u64>> = Arc::new(KeyedState::new());
+        run_workers(4, |i| {
+            for _ in 0..100 {
+                ks.with_mut(i, || 0, |v| *v += 1);
+            }
+        });
+        for i in 0..4 {
+            assert_eq!(ks.with_mut(i, || 0, |v| *v), 100);
+        }
     }
 
     #[test]

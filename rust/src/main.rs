@@ -19,6 +19,7 @@
 use slowmo::bench::{experiments, micro, Env, Scale};
 use slowmo::clix::{App, Command, Flag};
 use slowmo::configx::Config;
+use slowmo::net::ChaosCfg;
 use slowmo::runtime::{artifacts_dir, Manifest};
 use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
@@ -54,6 +55,11 @@ fn app() -> App {
                                    "run optimizer kernels via the PJRT \
                                     artifacts instead of the native \
                                     mirrors (slower on CPU; see §Perf)"))
+                .flag(Flag::opt("chaos", "",
+                                "deterministic network degradation spec: \
+                                 seed=N,delay=2ms,delay-max=20ms,\
+                                 drop=0.05,rto=1ms,retries=3,reorder=4,\
+                                 straggle=W:F,fault=W@T..R (empty = off)"))
                 .flag(Flag::opt("progress", "0",
                                 "stream a progress line every N steps \
                                  (0 = off)"))
@@ -139,6 +145,16 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         }
         b
     };
+    let chaos_spec = args.string("chaos");
+    let builder = if chaos_spec.is_empty() {
+        builder
+    } else {
+        builder.chaos(
+            chaos_spec
+                .parse::<ChaosCfg>()
+                .map_err(anyhow::Error::msg)?,
+        )
+    };
     let cfg = builder.build_cfg()?;
     println!("training {} / {} ...", cfg.preset, cfg.algo.spec());
     let r = match args.u64("progress") {
@@ -155,6 +171,9 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
     println!("simulated time/iter {}",
              slowmo::util::fmt_secs(r.sim_time_per_iter()));
     println!("fabric bytes sent   {}", slowmo::util::fmt_bytes(r.bytes_sent));
+    if r.retransmits > 0 {
+        println!("chaos retransmits   {}", r.retransmits);
+    }
     println!("wall time           {}", slowmo::util::fmt_secs(r.wall_time));
     r.append_jsonl(&args.string("out"))?;
     Ok(())

@@ -1,0 +1,721 @@
+//! Deterministic chaos fabric: seeded network degradation for SlowMo runs.
+//!
+//! A [`ChaosPlan`] wraps the [`super::Fabric`] and injects, fully
+//! deterministically given [`ChaosCfg::seed`]:
+//!
+//! - **per-link delays** — truncated-exponential extra latency per message,
+//!   drawn from an [`crate::rng::stream`] keyed by `(seed, from, to, idx)`;
+//! - **probabilistic drop with retransmit accounting** — a lost
+//!   transmission attempt is retried after an RTO; the message always
+//!   arrives (delivery semantics never change), the retries are charged as
+//!   simulated time and counted in [`ChaosPlan::retransmits`];
+//! - **bounded reordering** — within each window of `reorder_window`
+//!   consecutive messages on a link, earlier sends receive the larger
+//!   delays, so arrival *times* invert within the window (bounded
+//!   overtaking in the simulated-time domain);
+//! - **stragglers** — per-worker compute slowdown factors applied by the
+//!   trainer to each inner step's compute charge;
+//! - **fault windows** — elastic membership at SlowMo outer boundaries: a
+//!   worker that is down for boundary `t` is excluded from the outer
+//!   allreduce (the ring is rebuilt over survivors by
+//!   [`super::ring_allreduce_mean_group`]); at its first live boundary it
+//!   rejoins by pulling the averaged parameters from a survivor.
+//!
+//! Chaos never changes *what* is computed — only simulated time and the
+//! retransmit counters — except for fault windows, which change membership
+//! at outer boundaries. Two runs with the same seed are bit-identical.
+
+use crate::exec::KeyedState;
+use crate::net::cost::CostModel;
+use crate::rng::stream;
+use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One outage: `worker` is down for outer boundaries `fail_at <= t <
+/// rejoin_at` and rejoins (pulling the averaged state) at boundary
+/// `rejoin_at`. `rejoin_at == u64::MAX` means the worker never returns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultWindow {
+    pub worker: usize,
+    pub fail_at: u64,
+    pub rejoin_at: u64,
+}
+
+/// Declarative chaos configuration (see the module docs). All knobs are
+/// off by default; `seed` makes every sampled decision reproducible.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosCfg {
+    pub seed: u64,
+    /// Mean extra per-message delay in seconds (exponential; 0 = off).
+    pub delay_mean_s: f64,
+    /// Truncation bound for sampled delays (0 = `10 * delay_mean_s`).
+    pub delay_max_s: f64,
+    /// Probability that one transmission attempt is lost.
+    pub drop_prob: f64,
+    /// Retransmission timeout charged per lost attempt
+    /// (0 = [`CostModel::retransmit_timeout`]).
+    pub rto_s: f64,
+    /// Cap on counted retries per message.
+    pub max_retries: u32,
+    /// Bounded-reordering window (1 = no reordering).
+    pub reorder_window: usize,
+    /// `(worker, factor)` compute slowdowns; factor multiplies the
+    /// simulated compute charge of every inner step on that worker.
+    pub stragglers: Vec<(usize, f64)>,
+    pub faults: Vec<FaultWindow>,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            delay_mean_s: 0.0,
+            delay_max_s: 0.0,
+            drop_prob: 0.0,
+            rto_s: 0.0,
+            max_retries: 3,
+            reorder_window: 1,
+            stragglers: Vec::new(),
+            faults: Vec::new(),
+        }
+    }
+}
+
+fn parse_secs(s: &str) -> Result<f64, String> {
+    let s = s.trim();
+    let (num, mult) = if let Some(x) = s.strip_suffix("ms") {
+        (x, 1e-3)
+    } else if let Some(x) = s.strip_suffix("us") {
+        (x, 1e-6)
+    } else if let Some(x) = s.strip_suffix('s') {
+        (x, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    num.trim()
+        .parse::<f64>()
+        .map(|v| v * mult)
+        .map_err(|_| format!("bad duration {s:?} (expected e.g. 2ms, 50us, 0.5s)"))
+}
+
+impl ChaosCfg {
+    /// Parse one straggler entry, e.g. `"1:4.0"` (worker 1 runs 4x slower).
+    pub fn parse_straggler(s: &str) -> Result<(usize, f64), String> {
+        let (w, f) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad straggler {s:?} (expected worker:factor)"))?;
+        let w = w
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("bad straggler worker in {s:?}"))?;
+        let f = f
+            .trim()
+            .parse::<f64>()
+            .map_err(|_| format!("bad straggler factor in {s:?}"))?;
+        Ok((w, f))
+    }
+
+    /// Parse one fault entry, e.g. `"2@3..5"` (worker 2 fails at outer
+    /// boundary 3, rejoins at boundary 5) or `"2@3"` (never rejoins).
+    pub fn parse_fault(s: &str) -> Result<FaultWindow, String> {
+        let (w, rest) = s
+            .split_once('@')
+            .ok_or_else(|| format!("bad fault {s:?} (expected worker@fail..rejoin)"))?;
+        let worker = w
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("bad fault worker in {s:?}"))?;
+        let (fail, rejoin) = match rest.split_once("..") {
+            Some((a, b)) => (
+                a.trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad fault boundary in {s:?}"))?,
+                b.trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad rejoin boundary in {s:?}"))?,
+            ),
+            None => (
+                rest.trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad fault boundary in {s:?}"))?,
+                u64::MAX,
+            ),
+        };
+        Ok(FaultWindow { worker, fail_at: fail, rejoin_at: rejoin })
+    }
+}
+
+/// Spec-string form (the CLI's `--chaos` value): comma-separated `key=value`
+/// pairs. Keys: `seed`, `delay`, `delay-max`, `drop`, `rto`, `retries`,
+/// `reorder`, `straggle` (repeatable, `worker:factor`), `fault`
+/// (repeatable, `worker@fail..rejoin`). Durations take `ms`/`us`/`s`
+/// suffixes. An empty spec (or `"on"`) is a no-op plan with seed 0.
+impl std::str::FromStr for ChaosCfg {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let mut cfg = ChaosCfg::default();
+        let s = s.trim();
+        if s.is_empty() || s == "on" {
+            return Ok(cfg);
+        }
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                format!("chaos spec: expected key=value, got {part:?}")
+            })?;
+            let v = v.trim();
+            match k.trim() {
+                "seed" => {
+                    cfg.seed = v
+                        .parse()
+                        .map_err(|_| format!("chaos seed: bad u64 {v:?}"))?;
+                }
+                "delay" => cfg.delay_mean_s = parse_secs(v)?,
+                "delay-max" | "delay_max" => cfg.delay_max_s = parse_secs(v)?,
+                "drop" => {
+                    cfg.drop_prob = v
+                        .parse()
+                        .map_err(|_| format!("chaos drop: bad prob {v:?}"))?;
+                }
+                "rto" => cfg.rto_s = parse_secs(v)?,
+                "retries" => {
+                    cfg.max_retries = v
+                        .parse()
+                        .map_err(|_| format!("chaos retries: bad u32 {v:?}"))?;
+                }
+                "reorder" => {
+                    cfg.reorder_window = v.parse().map_err(|_| {
+                        format!("chaos reorder: bad window {v:?}")
+                    })?;
+                }
+                "straggle" => cfg.stragglers.push(Self::parse_straggler(v)?),
+                "fault" => cfg.faults.push(Self::parse_fault(v)?),
+                other => {
+                    return Err(format!(
+                        "chaos spec: unknown key {other:?} (seed|delay|\
+                         delay-max|drop|rto|retries|reorder|straggle|fault)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Per-link sampler state: next message index + the current reorder block.
+struct LinkState {
+    idx: u64,
+    block: Vec<f64>,
+}
+
+/// A validated, executable chaos plan for `m` workers. Cheap to share
+/// (`Arc`) between the fabric and the trainer.
+pub struct ChaosPlan {
+    cfg: ChaosCfg,
+    m: usize,
+    delay_max_s: f64,
+    rto_s: f64,
+    links: KeyedState<(usize, usize), LinkState>,
+    retransmits: AtomicU64,
+    retrans_bytes: AtomicU64,
+}
+
+impl ChaosPlan {
+    /// Validate `cfg` against `m` workers and resolve defaults (`delay_max`,
+    /// RTO from `cost`).
+    pub fn new(cfg: ChaosCfg, m: usize, cost: &CostModel) -> Result<Self> {
+        ensure!(m > 0, "chaos: m must be > 0");
+        ensure!(
+            (0.0..1.0).contains(&cfg.drop_prob),
+            "chaos: drop_prob must be in [0, 1) (got {})",
+            cfg.drop_prob
+        );
+        ensure!(
+            cfg.delay_mean_s >= 0.0 && cfg.delay_mean_s.is_finite(),
+            "chaos: delay_mean_s must be finite and >= 0"
+        );
+        ensure!(cfg.delay_max_s >= 0.0, "chaos: delay_max_s must be >= 0");
+        ensure!(cfg.rto_s >= 0.0, "chaos: rto_s must be >= 0");
+        ensure!(
+            cfg.reorder_window >= 1,
+            "chaos: reorder_window must be >= 1"
+        );
+        for &(w, f) in &cfg.stragglers {
+            ensure!(w < m, "chaos: straggler worker {w} out of range (m={m})");
+            ensure!(
+                f.is_finite() && f > 0.0,
+                "chaos: straggler factor for worker {w} must be > 0"
+            );
+        }
+        let mut by_worker: Vec<Vec<FaultWindow>> = vec![Vec::new(); m];
+        for f in &cfg.faults {
+            ensure!(
+                f.worker < m,
+                "chaos: fault worker {} out of range (m={m})",
+                f.worker
+            );
+            ensure!(
+                f.fail_at < f.rejoin_at,
+                "chaos: fault for worker {} must fail before it rejoins",
+                f.worker
+            );
+            by_worker[f.worker].push(*f);
+        }
+        for (w, wins) in by_worker.iter_mut().enumerate() {
+            wins.sort_by_key(|f| f.fail_at);
+            for pair in wins.windows(2) {
+                ensure!(
+                    pair[0].rejoin_at <= pair[1].fail_at,
+                    "chaos: overlapping fault windows for worker {w}"
+                );
+            }
+        }
+        let plan = Self {
+            delay_max_s: if cfg.delay_max_s > 0.0 {
+                cfg.delay_max_s
+            } else {
+                10.0 * cfg.delay_mean_s
+            },
+            rto_s: if cfg.rto_s > 0.0 {
+                cfg.rto_s
+            } else {
+                cost.retransmit_timeout()
+            },
+            links: KeyedState::new(),
+            retransmits: AtomicU64::new(0),
+            retrans_bytes: AtomicU64::new(0),
+            m,
+            cfg,
+        };
+        // Membership can only change at fault edges; every such boundary
+        // needs at least one contributor to lead the group collective.
+        let mut critical: Vec<u64> = Vec::new();
+        for f in &plan.cfg.faults {
+            critical.push(f.fail_at);
+            if f.rejoin_at != u64::MAX {
+                critical.push(f.rejoin_at);
+            }
+        }
+        for &t in &critical {
+            if plan.contributors(t).is_empty() {
+                bail!(
+                    "chaos: no live contributor at outer boundary {t} \
+                     (every boundary needs at least one survivor)"
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn cfg(&self) -> &ChaosCfg {
+        &self.cfg
+    }
+
+    pub fn has_faults(&self) -> bool {
+        !self.cfg.faults.is_empty()
+    }
+
+    /// Compute slowdown for `worker` (1.0 = nominal speed).
+    pub fn compute_factor(&self, worker: usize) -> f64 {
+        self.cfg
+            .stragglers
+            .iter()
+            .find(|&&(w, _)| w == worker)
+            .map(|&(_, f)| f)
+            .unwrap_or(1.0)
+    }
+
+    fn sample_delay(&self, rng: &mut crate::rng::Xoshiro256) -> f64 {
+        if self.cfg.delay_mean_s <= 0.0 {
+            return 0.0;
+        }
+        let u = rng.next_f64();
+        (-self.cfg.delay_mean_s * (1.0 - u).ln()).min(self.delay_max_s)
+    }
+
+    fn sample_block(&self, from: u64, to: u64, block: u64) -> Vec<f64> {
+        let w = self.cfg.reorder_window;
+        let mut rng = stream(self.cfg.seed, "chaos.delay", from, to, block);
+        let mut v: Vec<f64> = (0..w).map(|_| self.sample_delay(&mut rng)).collect();
+        if w > 1 {
+            // Bounded reordering: earlier sends in the window get the
+            // larger delays, so arrival times invert within the window.
+            v.sort_by(|a, b| b.total_cmp(a));
+        }
+        v
+    }
+
+    /// Count lost transmission attempts: geometric in `drop_prob`, capped
+    /// at `max_retries`. Shared by the per-message and per-round charges
+    /// so the two retry semantics can never diverge.
+    fn sample_retries(&self, rng: &mut crate::rng::Xoshiro256) -> u32 {
+        let mut n = 0;
+        while n < self.cfg.max_retries && rng.next_f64() < self.cfg.drop_prob
+        {
+            n += 1;
+        }
+        n
+    }
+
+    fn sample_drops(&self, from: u64, to: u64, idx: u64) -> u32 {
+        if self.cfg.drop_prob <= 0.0 {
+            return 0;
+        }
+        let mut rng = stream(self.cfg.seed, "chaos.drop", from, to, idx);
+        self.sample_retries(&mut rng)
+    }
+
+    /// Extra simulated seconds for the next message on link `from -> to`
+    /// carrying `elems` f32 values. Advances the link's deterministic
+    /// message counter and the retransmit accounting.
+    pub fn link_extra(&self, from: usize, to: usize, elems: usize) -> f64 {
+        if self.cfg.delay_mean_s <= 0.0 && self.cfg.drop_prob <= 0.0 {
+            // Faults-only / no-op plans: skip the per-link counter lock on
+            // the gossip hot path — with both knobs off the counter is
+            // unobservable and every sample is 0.
+            return 0.0;
+        }
+        let (idx, delay) = self.links.with_mut(
+            (from, to),
+            || LinkState { idx: 0, block: Vec::new() },
+            |st| {
+                let w = self.cfg.reorder_window as u64;
+                let pos = (st.idx % w) as usize;
+                if pos == 0 {
+                    st.block =
+                        self.sample_block(from as u64, to as u64, st.idx / w);
+                }
+                let d = st.block.get(pos).copied().unwrap_or(0.0);
+                let idx = st.idx;
+                st.idx += 1;
+                (idx, d)
+            },
+        );
+        let drops = self.sample_drops(from as u64, to as u64, idx);
+        if drops > 0 {
+            self.retransmits
+                .fetch_add(u64::from(drops), Ordering::Relaxed);
+            self.retrans_bytes
+                .fetch_add(u64::from(drops) * elems as u64 * 4, Ordering::Relaxed);
+        }
+        delay + f64::from(drops) * self.rto_s
+    }
+
+    /// Extra simulated seconds for a `rounds`-round collective identified
+    /// by `coll_id`. Pure function of the plan seed, so every participant
+    /// charges the same completion time (retransmit counters untouched —
+    /// per-message accounting only applies to the point-to-point lanes).
+    pub fn collective_extra(&self, coll_id: u64, rounds: usize) -> f64 {
+        if self.cfg.delay_mean_s <= 0.0 && self.cfg.drop_prob <= 0.0 {
+            return 0.0;
+        }
+        let mut rng = stream(self.cfg.seed, "chaos.coll", coll_id, 0, 0);
+        let mut extra = 0.0;
+        for _ in 0..rounds {
+            extra += self.sample_delay(&mut rng);
+            if self.cfg.drop_prob > 0.0 {
+                extra += f64::from(self.sample_retries(&mut rng))
+                    * self.rto_s;
+            }
+        }
+        extra
+    }
+
+    /// Is `worker` down (mid-outage) at outer boundary `t`?
+    pub fn down(&self, worker: usize, t: u64) -> bool {
+        self.cfg
+            .faults
+            .iter()
+            .any(|f| f.worker == worker && f.fail_at <= t && t < f.rejoin_at)
+    }
+
+    /// Is boundary `t` this worker's first live boundary after an outage
+    /// (i.e. it must pull the averaged state instead of contributing)?
+    pub fn is_rejoiner(&self, worker: usize, t: u64) -> bool {
+        t > 0 && !self.down(worker, t) && self.down(worker, t - 1)
+    }
+
+    /// Workers contributing to the outer collective at boundary `t`
+    /// (sorted; excludes down workers and rejoiners).
+    pub fn contributors(&self, t: u64) -> Vec<usize> {
+        (0..self.m)
+            .filter(|&w| !self.down(w, t) && !self.is_rejoiner(w, t))
+            .collect()
+    }
+
+    /// Workers rejoining at boundary `t` (sorted).
+    pub fn rejoiners(&self, t: u64) -> Vec<usize> {
+        (0..self.m).filter(|&w| self.is_rejoiner(w, t)).collect()
+    }
+
+    /// Contributor count at the previous boundary (`m` before the first).
+    pub fn contributor_count_before(&self, t: u64) -> usize {
+        if t == 0 {
+            self.m
+        } else {
+            self.contributors(t - 1).len()
+        }
+    }
+
+    /// Total retransmitted point-to-point messages so far.
+    pub fn retransmits(&self) -> u64 {
+        self.retransmits.load(Ordering::Relaxed)
+    }
+
+    /// Total retransmitted point-to-point bytes so far.
+    pub fn retransmitted_bytes(&self) -> u64 {
+        self.retrans_bytes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(cfg: ChaosCfg, m: usize) -> ChaosPlan {
+        ChaosPlan::new(cfg, m, &CostModel::ethernet_10g()).unwrap()
+    }
+
+    fn delays_cfg() -> ChaosCfg {
+        ChaosCfg {
+            seed: 7,
+            delay_mean_s: 2e-3,
+            drop_prob: 0.2,
+            ..ChaosCfg::default()
+        }
+    }
+
+    #[test]
+    fn link_extra_is_deterministic_across_plans() {
+        let a = plan(delays_cfg(), 4);
+        let b = plan(delays_cfg(), 4);
+        for i in 0..50 {
+            assert_eq!(
+                a.link_extra(0, 1, 16),
+                b.link_extra(0, 1, 16),
+                "msg {i}"
+            );
+        }
+        assert_eq!(a.retransmits(), b.retransmits());
+        assert_eq!(a.retransmitted_bytes(), b.retransmitted_bytes());
+    }
+
+    #[test]
+    fn links_have_independent_streams() {
+        let p = plan(delays_cfg(), 4);
+        let a: Vec<f64> = (0..8).map(|_| p.link_extra(0, 1, 4)).collect();
+        let b: Vec<f64> = (0..8).map(|_| p.link_extra(1, 0, 4)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn zero_cfg_adds_nothing() {
+        let p = plan(ChaosCfg::default(), 2);
+        assert_eq!(p.link_extra(0, 1, 100), 0.0);
+        assert_eq!(p.collective_extra(3, 6), 0.0);
+        assert_eq!(p.retransmits(), 0);
+        assert_eq!(p.compute_factor(0), 1.0);
+    }
+
+    #[test]
+    fn delays_are_positive_and_truncated() {
+        let cfg = ChaosCfg {
+            seed: 1,
+            delay_mean_s: 1e-3,
+            delay_max_s: 5e-3,
+            ..ChaosCfg::default()
+        };
+        let p = plan(cfg, 2);
+        for _ in 0..200 {
+            let d = p.link_extra(0, 1, 1);
+            assert!((0.0..=5e-3).contains(&d), "delay {d}");
+        }
+    }
+
+    #[test]
+    fn reorder_window_inverts_within_blocks() {
+        let cfg = ChaosCfg {
+            seed: 3,
+            delay_mean_s: 1e-3,
+            reorder_window: 4,
+            ..ChaosCfg::default()
+        };
+        let p = plan(cfg, 2);
+        let d: Vec<f64> = (0..12).map(|_| p.link_extra(0, 1, 1)).collect();
+        for block in d.chunks(4) {
+            for pair in block.windows(2) {
+                assert!(pair[0] >= pair[1], "block not descending: {block:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn drops_charge_time_and_count_retransmits() {
+        let cfg = ChaosCfg {
+            seed: 9,
+            drop_prob: 0.9,
+            rto_s: 1e-3,
+            max_retries: 3,
+            ..ChaosCfg::default()
+        };
+        let p = plan(cfg, 2);
+        let mut total = 0.0;
+        for _ in 0..50 {
+            total += p.link_extra(0, 1, 10);
+        }
+        assert!(p.retransmits() > 0);
+        assert_eq!(p.retransmitted_bytes(), p.retransmits() * 40);
+        assert!((total - p.retransmits() as f64 * 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collective_extra_same_for_all_callers() {
+        let p = plan(delays_cfg(), 4);
+        let a = p.collective_extra(5, 6);
+        let b = p.collective_extra(5, 6);
+        assert_eq!(a, b);
+        assert!(a > 0.0);
+        assert_ne!(a, p.collective_extra(6, 6));
+    }
+
+    #[test]
+    fn membership_timeline_roles() {
+        let cfg = ChaosCfg {
+            faults: vec![FaultWindow { worker: 2, fail_at: 1, rejoin_at: 3 }],
+            ..ChaosCfg::default()
+        };
+        let p = plan(cfg, 4);
+        assert!(!p.down(2, 0) && !p.is_rejoiner(2, 0));
+        assert!(p.down(2, 1) && p.down(2, 2));
+        assert!(!p.down(2, 3) && p.is_rejoiner(2, 3));
+        assert!(!p.is_rejoiner(2, 4));
+        assert_eq!(p.contributors(0), vec![0, 1, 2, 3]);
+        assert_eq!(p.contributors(1), vec![0, 1, 3]);
+        assert_eq!(p.contributors(3), vec![0, 1, 3]);
+        assert_eq!(p.rejoiners(3), vec![2]);
+        assert_eq!(p.contributors(4), vec![0, 1, 2, 3]);
+        assert_eq!(p.contributor_count_before(0), 4);
+        assert_eq!(p.contributor_count_before(2), 3);
+    }
+
+    #[test]
+    fn never_rejoining_worker_stays_out() {
+        let cfg = ChaosCfg {
+            faults: vec![FaultWindow {
+                worker: 1,
+                fail_at: 2,
+                rejoin_at: u64::MAX,
+            }],
+            ..ChaosCfg::default()
+        };
+        let p = plan(cfg, 2);
+        assert!(p.down(1, 1_000_000));
+        assert_eq!(p.contributors(5), vec![0]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_plans() {
+        let cost = CostModel::free();
+        let bad_drop = ChaosCfg { drop_prob: 1.0, ..ChaosCfg::default() };
+        assert!(ChaosPlan::new(bad_drop, 2, &cost).is_err());
+        let bad_worker = ChaosCfg {
+            stragglers: vec![(5, 2.0)],
+            ..ChaosCfg::default()
+        };
+        assert!(ChaosPlan::new(bad_worker, 2, &cost).is_err());
+        let bad_window = ChaosCfg {
+            faults: vec![FaultWindow { worker: 0, fail_at: 3, rejoin_at: 3 }],
+            ..ChaosCfg::default()
+        };
+        assert!(ChaosPlan::new(bad_window, 2, &cost).is_err());
+        let overlap = ChaosCfg {
+            faults: vec![
+                FaultWindow { worker: 0, fail_at: 0, rejoin_at: 4 },
+                FaultWindow { worker: 0, fail_at: 2, rejoin_at: 6 },
+            ],
+            ..ChaosCfg::default()
+        };
+        assert!(ChaosPlan::new(overlap, 2, &cost).is_err());
+        // Both workers down at boundary 1: nobody left to lead.
+        let all_down = ChaosCfg {
+            faults: vec![
+                FaultWindow { worker: 0, fail_at: 1, rejoin_at: 3 },
+                FaultWindow { worker: 1, fail_at: 1, rejoin_at: 3 },
+            ],
+            ..ChaosCfg::default()
+        };
+        assert!(ChaosPlan::new(all_down, 2, &cost).is_err());
+        let zero_reorder =
+            ChaosCfg { reorder_window: 0, ..ChaosCfg::default() };
+        assert!(ChaosPlan::new(zero_reorder, 2, &cost).is_err());
+    }
+
+    #[test]
+    fn rto_defaults_from_cost_model() {
+        let cost = CostModel { latency_s: 1e-3, bandwidth_bps: 1e9 };
+        let cfg = ChaosCfg {
+            drop_prob: 0.5,
+            max_retries: 1,
+            seed: 2,
+            ..ChaosCfg::default()
+        };
+        let p = ChaosPlan::new(cfg, 2, &cost).unwrap();
+        assert!((p.rto_s - cost.retransmit_timeout()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn spec_string_round_trip() {
+        let cfg: ChaosCfg =
+            "seed=7, delay=2ms, delay-max=20ms, drop=0.05, rto=1ms, \
+             retries=5, reorder=4, straggle=1:4.0, fault=2@3..5, fault=0@9"
+                .parse()
+                .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert!((cfg.delay_mean_s - 2e-3).abs() < 1e-12);
+        assert!((cfg.delay_max_s - 20e-3).abs() < 1e-12);
+        assert!((cfg.drop_prob - 0.05).abs() < 1e-12);
+        assert!((cfg.rto_s - 1e-3).abs() < 1e-12);
+        assert_eq!(cfg.max_retries, 5);
+        assert_eq!(cfg.reorder_window, 4);
+        assert_eq!(cfg.stragglers, vec![(1, 4.0)]);
+        assert_eq!(
+            cfg.faults,
+            vec![
+                FaultWindow { worker: 2, fail_at: 3, rejoin_at: 5 },
+                FaultWindow { worker: 0, fail_at: 9, rejoin_at: u64::MAX },
+            ]
+        );
+        assert_eq!("".parse::<ChaosCfg>().unwrap(), ChaosCfg::default());
+        assert_eq!("on".parse::<ChaosCfg>().unwrap(), ChaosCfg::default());
+    }
+
+    #[test]
+    fn spec_string_errors_name_the_problem() {
+        let e = "nope=1".parse::<ChaosCfg>().unwrap_err();
+        assert!(e.contains("unknown key"), "{e}");
+        let e = "delay=xyz".parse::<ChaosCfg>().unwrap_err();
+        assert!(e.contains("duration"), "{e}");
+        let e = "straggle=9".parse::<ChaosCfg>().unwrap_err();
+        assert!(e.contains("worker:factor"), "{e}");
+        let e = "fault=2".parse::<ChaosCfg>().unwrap_err();
+        assert!(e.contains("worker@fail"), "{e}");
+        assert!("seed".parse::<ChaosCfg>().is_err());
+    }
+
+    #[test]
+    fn duration_suffixes() {
+        assert!((parse_secs("2ms").unwrap() - 2e-3).abs() < 1e-15);
+        assert!((parse_secs("50us").unwrap() - 50e-6).abs() < 1e-18);
+        assert!((parse_secs("0.5s").unwrap() - 0.5).abs() < 1e-15);
+        assert!((parse_secs("0.25").unwrap() - 0.25).abs() < 1e-15);
+        assert!(parse_secs("fast").is_err());
+    }
+}

@@ -7,9 +7,10 @@
 //! fully-reduced chunks. Every worker ends with the exact elementwise mean.
 //!
 //! Must be called by **all m worker threads concurrently** (it is a
-//! collective). Message ordering: each worker only receives chunks from its
-//! ring predecessor, and mpsc channels are FIFO per sender, so rounds
-//! cannot interleave incorrectly; tags are debug checks.
+//! collective). Message ordering: chunks are routed by globally-unique
+//! tags (`coll_id << 32 | round`) through [`Fabric::chunk_recv_tag`], so
+//! rounds cannot interleave incorrectly even when elastic membership
+//! changes a worker's ring predecessor between collectives.
 
 use super::fabric::Fabric;
 
@@ -39,23 +40,53 @@ pub fn ring_allreduce_mean(
     x: &mut [f32],
     now: f64,
 ) -> f64 {
-    let m = fabric.m();
-    if m == 1 {
+    let group: Vec<usize> = (0..fabric.m()).collect();
+    ring_allreduce_mean_group(fabric, worker, &group, x, now, 0)
+}
+
+/// In-place ring allreduce-mean of `x` over an arbitrary subgroup of
+/// workers — the elastic-membership primitive: the ring is rebuilt over
+/// `group` (sorted, non-empty, must contain `worker`) and every member
+/// ends with the exact elementwise mean over the group. Must be called by
+/// **all group members** concurrently; non-members stay silent.
+///
+/// `coll_id` keys both the chunk-routing tags and the chaos layer's
+/// per-collective delay stream (so all members charge the same extra
+/// simulated time). Collectives that can be concurrently in flight —
+/// consecutive boundaries around a membership change — must use distinct
+/// ids; derive `coll_id` from the step or outer-boundary index and keep
+/// it below 2^31 so the tag encoding `coll_id << 32 | round` never
+/// collides with the rejoin-transfer tag space (bit 63).
+pub fn ring_allreduce_mean_group(
+    fabric: &Fabric,
+    worker: usize,
+    group: &[usize],
+    x: &mut [f32],
+    now: f64,
+    coll_id: u64,
+) -> f64 {
+    let n = group.len();
+    assert!(n > 0, "empty collective group");
+    let rank = group
+        .iter()
+        .position(|&g| g == worker)
+        .expect("worker not in collective group");
+    if n == 1 {
         return now;
     }
-    let ranges = chunk_ranges(x.len(), m);
-    let next = (worker + 1) % m;
+    let ranges = chunk_ranges(x.len(), n);
+    let next = group[(rank + 1) % n];
+    let tag_base = coll_id << 32;
 
-    // Reduce-scatter: after round r, worker w owns the full sum of chunk
+    // Reduce-scatter: after round r, rank w owns the full sum of chunk
     // (w - r - 1 + ... ) — standard schedule: in round r, send chunk
-    // (w - r) mod m, receive + accumulate chunk (w - r - 1) mod m.
-    for r in 0..m - 1 {
-        let send_idx = (worker + m - r) % m;
+    // (w - r) mod n, receive + accumulate chunk (w - r - 1) mod n.
+    for r in 0..n - 1 {
+        let send_idx = (rank + n - r) % n;
         let (s, e) = ranges[send_idx];
-        fabric.chunk_send(next, r, x[s..e].to_vec());
-        let (tag, data) = fabric.chunk_recv(worker);
-        debug_assert_eq!(tag, r);
-        let recv_idx = (worker + m - r - 1) % m;
+        fabric.chunk_send(next, tag_base | r as u64, x[s..e].to_vec());
+        let data = fabric.chunk_recv_tag(worker, tag_base | r as u64);
+        let recv_idx = (rank + n - r - 1) % n;
         let (s, e) = ranges[recv_idx];
         debug_assert_eq!(data.len(), e - s);
         for (dst, src) in x[s..e].iter_mut().zip(&data) {
@@ -63,21 +94,24 @@ pub fn ring_allreduce_mean(
         }
     }
     // Allgather: circulate the reduced chunks.
-    for r in 0..m - 1 {
-        let send_idx = (worker + 1 + m - r) % m;
+    for r in 0..n - 1 {
+        let send_idx = (rank + 1 + n - r) % n;
         let (s, e) = ranges[send_idx];
-        fabric.chunk_send(next, m + r, x[s..e].to_vec());
-        let (tag, data) = fabric.chunk_recv(worker);
-        debug_assert_eq!(tag, m + r);
-        let recv_idx = (worker + m - r) % m;
+        fabric.chunk_send(next, tag_base | (n + r) as u64, x[s..e].to_vec());
+        let data = fabric.chunk_recv_tag(worker, tag_base | (n + r) as u64);
+        let recv_idx = (rank + n - r) % n;
         let (s, e) = ranges[recv_idx];
         x[s..e].copy_from_slice(&data);
     }
-    let inv_m = 1.0 / m as f32;
+    let inv_n = 1.0 / n as f32;
     for v in x.iter_mut() {
-        *v *= inv_m;
+        *v *= inv_n;
     }
-    now + fabric.cost.allreduce_time(x.len(), m)
+    let mut done = now + fabric.cost.allreduce_time(x.len(), n);
+    if let Some(plan) = fabric.chaos() {
+        done += plan.collective_extra(coll_id, 2 * (n - 1));
+    }
+    done
 }
 
 #[cfg(test)]
@@ -184,6 +218,71 @@ mod tests {
         }
         // Bytes: 2(m-1) rounds × m senders × ~chunk bytes.
         assert!(fabric.bytes_sent() > 0);
+    }
+
+    #[test]
+    fn group_allreduce_means_over_survivors_only() {
+        // 5 workers, but only {0, 2, 3} form the ring; the others idle.
+        let m = 5;
+        let group = vec![0usize, 2, 3];
+        let fabric = Fabric::new(m, CostModel::free());
+        let outs = run_workers(m, |w| {
+            let mut x = vec![w as f32; 7];
+            if group.contains(&w) {
+                ring_allreduce_mean_group(&fabric, w, &group, &mut x, 0.0, 9);
+            }
+            x
+        });
+        let want = vec![(0.0 + 2.0 + 3.0) / 3.0; 7];
+        for &g in &group {
+            assert!(allclose(&outs[g], &want, 1e-6, 1e-6), "worker {g}");
+        }
+        // Non-members are untouched.
+        assert_eq!(outs[1], vec![1.0; 7]);
+        assert_eq!(outs[4], vec![4.0; 7]);
+    }
+
+    #[test]
+    fn group_allreduce_singleton_is_identity() {
+        let fabric = Fabric::new(3, CostModel::free());
+        let mut x = vec![5.0f32, 6.0];
+        let t = ring_allreduce_mean_group(&fabric, 2, &[2], &mut x, 1.5, 0);
+        assert_eq!(x, vec![5.0, 6.0]);
+        assert_eq!(t, 1.5);
+        assert_eq!(fabric.msgs_sent(), 0);
+    }
+
+    #[test]
+    fn chaos_charges_collective_extra_uniformly() {
+        use crate::net::chaos::{ChaosCfg, ChaosPlan};
+        use std::sync::Arc;
+        let m = 4;
+        let cost = CostModel { latency_s: 0.001, bandwidth_bps: 1e6 };
+        let cfg = ChaosCfg {
+            seed: 21,
+            delay_mean_s: 2e-3,
+            ..ChaosCfg::default()
+        };
+        let plan = Arc::new(ChaosPlan::new(cfg, m, &cost).unwrap());
+        let fabric = Fabric::with_chaos(m, cost.clone(), plan);
+        let done = run_workers(m, |w| {
+            let mut x = vec![1.0f32; 64];
+            let group: Vec<usize> = (0..m).collect();
+            ring_allreduce_mean_group(&fabric, w, &group, &mut x, 0.0, 3)
+        });
+        let base = cost.allreduce_time(64, m);
+        for t in &done {
+            assert!(*t > base, "chaos extra missing: {t} vs base {base}");
+            assert_eq!(*t, done[0], "all members must agree on completion");
+        }
+        // Math is untouched: the mean of all-ones is one.
+        let fabric2 = Fabric::new(m, cost);
+        let outs = run_workers(m, |w| {
+            let mut x = vec![1.0f32; 64];
+            ring_allreduce_mean(&fabric2, w, &mut x, 0.0);
+            x
+        });
+        assert!(outs.iter().all(|x| x.iter().all(|&v| v == 1.0)));
     }
 
     #[test]

@@ -35,6 +35,13 @@ impl CostModel {
         self.latency_s + (elems as f64 * 4.0) / self.bandwidth_bps
     }
 
+    /// Default retransmission timeout for the chaos layer when the plan
+    /// does not set one: a few RTTs on this network, floored at 1 ms
+    /// (so drops cost time even on the idealized free network).
+    pub fn retransmit_timeout(&self) -> f64 {
+        (4.0 * self.latency_s).max(1e-3)
+    }
+
     /// Ring-allreduce time for `elems` f32 values over `m` nodes.
     pub fn allreduce_time(&self, elems: usize, m: usize) -> f64 {
         if m <= 1 {
@@ -160,6 +167,13 @@ mod tests {
         let c = CostModel::free();
         assert_eq!(c.xfer_time(1_000_000), 0.0);
         assert_eq!(c.allreduce_time(1_000_000, 32), 0.0);
+    }
+
+    #[test]
+    fn retransmit_timeout_scales_with_latency_with_floor() {
+        assert_eq!(CostModel::free().retransmit_timeout(), 1e-3);
+        let slow = CostModel { latency_s: 1e-3, bandwidth_bps: 1e9 };
+        assert!((slow.retransmit_timeout() - 4e-3).abs() < 1e-15);
     }
 
     #[test]

@@ -1,9 +1,17 @@
 //! The in-process message fabric: typed point-to-point messages between
 //! worker threads with byte accounting and simulated-time stamps.
+//!
+//! A fabric built with [`Fabric::with_chaos`] routes every gossip message
+//! through a [`ChaosPlan`]: the plan's deterministic per-link delay,
+//! retransmit, and bounded-reordering charges are stamped onto the message
+//! at send time, so both endpoints observe the same simulated arrival.
+//! Chaos never changes what is delivered — only when (in simulated time).
 
 use crate::exec::Mailboxes;
+use crate::net::chaos::ChaosPlan;
 use crate::net::cost::CostModel;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// One gossip message (SGP/OSGP/D-PSGD payload).
 #[derive(Clone, Debug)]
@@ -24,10 +32,17 @@ pub struct GossipMsg {
 /// collectives + counters.
 pub struct Fabric {
     m: usize,
-    gossip: Mailboxes<GossipMsg>,
-    /// Collective lanes (ring allreduce chunks etc.).
-    chunks: Mailboxes<(usize, Vec<f32>)>,
+    /// Gossip lane: messages tagged with their chaos extra-delay (0.0 on a
+    /// calm fabric) so receive-side arrival math matches the send side.
+    gossip: Mailboxes<(GossipMsg, f64)>,
+    /// Collective lanes (ring allreduce chunks, rejoin transfers). Tags
+    /// are globally-unique routing keys — see [`Fabric::chunk_recv_tag`].
+    chunks: Mailboxes<(u64, Vec<f32>)>,
+    /// Per-worker stash of early chunks (only the owning worker thread
+    /// touches its slot; the mutex is for the `&self` API).
+    chunk_stash: Vec<Mutex<Vec<(u64, Vec<f32>)>>>,
     pub cost: CostModel,
+    chaos: Option<Arc<ChaosPlan>>,
     bytes_sent: AtomicU64,
     msgs_sent: AtomicU64,
 }
@@ -38,14 +53,27 @@ impl Fabric {
             m,
             gossip: Mailboxes::new(m),
             chunks: Mailboxes::new(m),
+            chunk_stash: (0..m).map(|_| Mutex::new(Vec::new())).collect(),
             cost,
+            chaos: None,
             bytes_sent: AtomicU64::new(0),
             msgs_sent: AtomicU64::new(0),
         }
     }
 
+    /// A fabric whose messages are degraded by a deterministic chaos plan.
+    pub fn with_chaos(m: usize, cost: CostModel, plan: Arc<ChaosPlan>) -> Self {
+        let mut f = Self::new(m, cost);
+        f.chaos = Some(plan);
+        f
+    }
+
     pub fn m(&self) -> usize {
         self.m
+    }
+
+    pub fn chaos(&self) -> Option<&ChaosPlan> {
+        self.chaos.as_deref()
     }
 
     fn account(&self, elems: usize) {
@@ -54,19 +82,28 @@ impl Fabric {
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Send a gossip message; returns the simulated arrival time.
+    fn arrival(&self, msg: &GossipMsg, extra: f64) -> f64 {
+        msg.send_time + self.cost.xfer_time(msg.payload.len()) + extra
+    }
+
+    /// Send a gossip message; returns the simulated arrival time
+    /// (send_time + transfer + any chaos delay/retransmit charge).
     pub fn gossip_send(&self, to: usize, msg: GossipMsg) -> f64 {
-        let arrival = msg.send_time + self.cost.xfer_time(msg.payload.len());
+        let extra = match &self.chaos {
+            Some(plan) => plan.link_extra(msg.from, to, msg.payload.len()),
+            None => 0.0,
+        };
+        let arrival = self.arrival(&msg, extra);
         self.account(msg.payload.len());
-        self.gossip.send(to, msg);
+        self.gossip.send(to, (msg, extra));
         arrival
     }
 
     /// Blocking gossip receive for `worker`. Returns the message and its
-    /// simulated arrival time (send_time + transfer).
+    /// simulated arrival time (send_time + transfer + chaos extra).
     pub fn gossip_recv(&self, worker: usize) -> (GossipMsg, f64) {
-        let msg = self.gossip.recv(worker);
-        let arrival = msg.send_time + self.cost.xfer_time(msg.payload.len());
+        let (msg, extra) = self.gossip.recv(worker);
+        let arrival = self.arrival(&msg, extra);
         (msg, arrival)
     }
 
@@ -77,8 +114,8 @@ impl Fabric {
         worker: usize,
         timeout: std::time::Duration,
     ) -> Option<(GossipMsg, f64)> {
-        let msg = self.gossip.recv_timeout(worker, timeout)?;
-        let arrival = msg.send_time + self.cost.xfer_time(msg.payload.len());
+        let (msg, extra) = self.gossip.recv_timeout(worker, timeout)?;
+        let arrival = self.arrival(&msg, extra);
         Some((msg, arrival))
     }
 
@@ -88,24 +125,44 @@ impl Fabric {
         self.gossip
             .drain(worker)
             .into_iter()
-            .map(|msg| {
-                let arrival =
-                    msg.send_time + self.cost.xfer_time(msg.payload.len());
+            .map(|(msg, extra)| {
+                let arrival = self.arrival(&msg, extra);
                 (msg, arrival)
             })
             .collect()
     }
 
-    /// Collective lane: send one tagged chunk.
-    pub(crate) fn chunk_send(&self, to: usize, tag: usize, data: Vec<f32>) {
+    /// Collective lane: send one tagged chunk. Tags must be globally
+    /// unique per logical message (collective id × round, or a rejoin
+    /// transfer id) so receivers can route them.
+    pub(crate) fn chunk_send(&self, to: usize, tag: u64, data: Vec<f32>) {
         self.account(data.len());
         self.chunks.send(to, (tag, data));
     }
 
-    /// Collective lane: blocking receive (chunks from a single predecessor
-    /// arrive in FIFO order, so tags are sanity checks).
-    pub(crate) fn chunk_recv(&self, worker: usize) -> (usize, Vec<f32>) {
-        self.chunks.recv(worker)
+    /// Collective lane: blocking receive of the chunk tagged `want`.
+    ///
+    /// With static membership every worker receives chunks from a single
+    /// ring predecessor, whose mpsc channel is FIFO — arrival order always
+    /// matches program order. Elastic membership breaks that: a worker's
+    /// predecessor can change between collectives (a rejoiner inserted, a
+    /// failed worker removed), so a fast new predecessor's first chunk can
+    /// arrive while this worker still waits inside the previous collective
+    /// (or for its rejoin transfer). Early chunks are stashed by tag and
+    /// handed out when their collective comes up, which makes the math
+    /// independent of thread interleaving.
+    pub(crate) fn chunk_recv_tag(&self, worker: usize, want: u64) -> Vec<f32> {
+        let mut stash = self.chunk_stash[worker].lock().unwrap();
+        if let Some(pos) = stash.iter().position(|&(tag, _)| tag == want) {
+            return stash.swap_remove(pos).1;
+        }
+        loop {
+            let (tag, data) = self.chunks.recv(worker);
+            if tag == want {
+                return data;
+            }
+            stash.push((tag, data));
+        }
     }
 
     pub fn bytes_sent(&self) -> u64 {
@@ -176,6 +233,62 @@ mod tests {
         let msgs = f.gossip_drain(0);
         assert_eq!(msgs.len(), 3);
         assert!(f.gossip_drain(0).is_empty());
+    }
+
+    #[test]
+    fn chaos_delay_shifts_arrival_on_both_ends() {
+        use crate::net::chaos::{ChaosCfg, ChaosPlan};
+        let cfg = ChaosCfg {
+            seed: 11,
+            delay_mean_s: 1e-3,
+            ..ChaosCfg::default()
+        };
+        let cost = CostModel::free();
+        let plan =
+            Arc::new(ChaosPlan::new(cfg, 2, &cost).unwrap());
+        let f = Fabric::with_chaos(2, cost, plan);
+        let msg = GossipMsg {
+            from: 0,
+            step: 0,
+            payload: vec![1.0; 4],
+            weight: 1.0,
+            send_time: 2.0,
+        };
+        let eta = f.gossip_send(1, msg);
+        assert!(eta > 2.0, "chaos delay must push arrival past send time");
+        let (_, arrival) = f.gossip_recv(1);
+        assert_eq!(arrival, eta, "send and recv must agree on arrival");
+    }
+
+    #[test]
+    fn chaos_drops_never_lose_messages() {
+        use crate::net::chaos::{ChaosCfg, ChaosPlan};
+        let cfg = ChaosCfg {
+            seed: 5,
+            drop_prob: 0.9,
+            rto_s: 1e-3,
+            ..ChaosCfg::default()
+        };
+        let cost = CostModel::free();
+        let plan = Arc::new(ChaosPlan::new(cfg, 2, &cost).unwrap());
+        let f = Fabric::with_chaos(2, cost, plan);
+        for step in 0..20 {
+            f.gossip_send(
+                0,
+                GossipMsg {
+                    from: 1,
+                    step,
+                    payload: vec![step as f32],
+                    weight: 0.5,
+                    send_time: 0.0,
+                },
+            );
+        }
+        // Every message is delivered (drops only cost simulated time).
+        assert_eq!(f.gossip_drain(0).len(), 20);
+        assert!(f.chaos().unwrap().retransmits() > 0);
+        // Goodput accounting is unchanged by retransmissions.
+        assert_eq!(f.bytes_sent(), 20 * 4);
     }
 
     #[test]

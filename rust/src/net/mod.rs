@@ -6,11 +6,17 @@
 //! what time passes (an α-β cost model integrated per worker as simulated
 //! wall-clock). The accuracy experiments depend only on the former; the
 //! timing tables (Table 2, Fig. 3 right axes) depend only on the latter.
+//!
+//! The [`chaos`] module layers deterministic, seeded network degradation
+//! (delays, drops with retransmit accounting, bounded reordering,
+//! stragglers, fault windows with elastic membership) on top of the fabric.
 
+pub mod chaos;
 pub mod collectives;
 pub mod cost;
 pub mod fabric;
 
-pub use collectives::ring_allreduce_mean;
+pub use chaos::{ChaosCfg, ChaosPlan, FaultWindow};
+pub use collectives::{ring_allreduce_mean, ring_allreduce_mean_group};
 pub use cost::{CostModel, WorkloadTiming};
 pub use fabric::{Fabric, GossipMsg};

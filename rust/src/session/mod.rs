@@ -29,7 +29,7 @@
 
 use crate::algorithms::{AlgoRegistry, AlgoSel};
 use crate::configx::Config;
-use crate::net::CostModel;
+use crate::net::{ChaosCfg, CostModel};
 use crate::optim::kernels::{InnerOpt, Kernels};
 use crate::runtime::{artifacts_dir, Engine, Manifest};
 use crate::slowmo::{BufferStrategy, SlowMoCfg};
@@ -356,6 +356,27 @@ impl<'s> TrainBuilder<'s> {
         self
     }
 
+    /// Attach a deterministic chaos plan: seeded per-link delays, drops
+    /// with retransmit accounting, bounded reordering, stragglers, and
+    /// fault windows with elastic membership at outer boundaries (see
+    /// [`crate::net::chaos`]).
+    pub fn chaos(mut self, c: ChaosCfg) -> Self {
+        self.cfg.chaos = Some(c);
+        self
+    }
+
+    pub fn chaos_opt(mut self, c: Option<ChaosCfg>) -> Self {
+        self.cfg.chaos = c;
+        self
+    }
+
+    /// Record worker 0's final parameters into the [`TrainResult`]
+    /// (used to assert chaos moves time, never math).
+    pub fn record_params(mut self, on: bool) -> Self {
+        self.cfg.record_final_params = on;
+        self
+    }
+
     /// Apply a parsed TOML experiment [`Config`] (the configx→builder
     /// bridge). Recognized keys, all optional:
     ///
@@ -380,6 +401,17 @@ impl<'s> TrainBuilder<'s> {
     /// tau = 12
     /// buffers = "reset"
     /// exact_average = true
+    ///
+    /// [chaos]                   # section presence enables chaos
+    /// seed = 7
+    /// delay_ms = 2.0            # mean per-message extra delay
+    /// delay_max_ms = 20.0
+    /// drop_prob = 0.05
+    /// rto_ms = 1.0              # 0 = derive from the cost model
+    /// max_retries = 3
+    /// reorder_window = 4
+    /// stragglers = ["1:4.0"]    # worker:compute-slowdown-factor
+    /// faults = ["2@3..5"]       # worker@fail-boundary..rejoin-boundary
     /// ```
     pub fn config(mut self, c: &Config) -> Result<Self> {
         if let Some(v) = c.get("train", "preset").and_then(|v| v.as_str()) {
@@ -447,6 +479,100 @@ impl<'s> TrainBuilder<'s> {
                 s = s.no_average();
             }
             self.cfg.slowmo = Some(s);
+        }
+        if c.sections.contains_key("chaos") {
+            // Seeds are full 64-bit values; an f64 TOML number silently
+            // loses precision above 2^53, so also accept the exact string
+            // form `seed = "18446744073709551557"`.
+            let seed = match c.get("chaos", "seed") {
+                None => 0,
+                Some(v) => {
+                    if let Some(s) = v.as_str() {
+                        s.parse::<u64>().map_err(|_| {
+                            anyhow!("[chaos] seed: bad u64 {s:?}")
+                        })?
+                    } else {
+                        let f = v.as_f64().ok_or_else(|| {
+                            anyhow!("[chaos] seed must be an integer or \
+                                     a u64 string")
+                        })?;
+                        ensure!(
+                            f >= 0.0 && f.fract() == 0.0 && f <= 2f64.powi(53),
+                            "[chaos] seed {f} is not exactly representable; \
+                             use the string form, e.g. seed = \"{f:.0}\""
+                        );
+                        f as u64
+                    }
+                }
+            };
+            // A present-but-wrong-typed knob must be a hard error, not a
+            // silent default (a chaos run that quietly measures the calm
+            // network lies); same philosophy as the seed handling above.
+            let num_or = |key: &str, default: f64| -> Result<f64> {
+                match c.get("chaos", key) {
+                    None => Ok(default),
+                    Some(v) => v.as_f64().ok_or_else(|| {
+                        anyhow!("[chaos] {key} must be a number")
+                    }),
+                }
+            };
+            // `as` casts also silently saturate negatives and truncate
+            // fractions — reject those too.
+            let uint_or = |key: &str, default: f64| -> Result<f64> {
+                let v = num_or(key, default)?;
+                ensure!(
+                    v >= 0.0 && v.fract() == 0.0 && v <= f64::from(u32::MAX),
+                    "[chaos] {key} must be an integer in 0..=u32::MAX \
+                     (got {v})"
+                );
+                Ok(v)
+            };
+            let mut ch = ChaosCfg {
+                seed,
+                delay_mean_s: num_or("delay_ms", 0.0)? * 1e-3,
+                delay_max_s: num_or("delay_max_ms", 0.0)? * 1e-3,
+                drop_prob: num_or("drop_prob", 0.0)?,
+                rto_s: num_or("rto_ms", 0.0)? * 1e-3,
+                max_retries: uint_or("max_retries", 3.0)? as u32,
+                reorder_window: uint_or("reorder_window", 1.0)? as usize,
+                stragglers: Vec::new(),
+                faults: Vec::new(),
+            };
+            if let Some(v) = c.get("chaos", "stragglers") {
+                let arr = v.as_arr().ok_or_else(|| {
+                    anyhow!(
+                        "[chaos] stragglers must be an array of \
+                         \"worker:factor\" strings"
+                    )
+                })?;
+                for e in arr {
+                    let s = e.as_str().ok_or_else(|| {
+                        anyhow!("[chaos] stragglers entries must be strings")
+                    })?;
+                    ch.stragglers.push(
+                        ChaosCfg::parse_straggler(s)
+                            .map_err(|e| anyhow!("[chaos] stragglers: {e}"))?,
+                    );
+                }
+            }
+            if let Some(v) = c.get("chaos", "faults") {
+                let arr = v.as_arr().ok_or_else(|| {
+                    anyhow!(
+                        "[chaos] faults must be an array of \
+                         \"worker@fail..rejoin\" strings"
+                    )
+                })?;
+                for e in arr {
+                    let s = e.as_str().ok_or_else(|| {
+                        anyhow!("[chaos] faults entries must be strings")
+                    })?;
+                    ch.faults.push(
+                        ChaosCfg::parse_fault(s)
+                            .map_err(|e| anyhow!("[chaos] faults: {e}"))?,
+                    );
+                }
+            }
+            self.cfg.chaos = Some(ch);
         }
         Ok(self)
     }
@@ -671,6 +797,123 @@ exact_average = false
         assert_eq!(s.beta, 0.5);
         assert_eq!(s.buffers, BufferStrategy::Maintain);
         assert!(!s.exact_average);
+    }
+
+    #[test]
+    fn builder_chaos_and_record_params() {
+        use crate::net::FaultWindow;
+        let chaos: ChaosCfg =
+            "seed=9,delay=1ms,fault=2@2..4".parse().unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .chaos(chaos)
+            .record_params(true)
+            .build_cfg()
+            .unwrap();
+        let ch = cfg.chaos.as_ref().unwrap();
+        assert_eq!(ch.seed, 9);
+        assert!((ch.delay_mean_s - 1e-3).abs() < 1e-12);
+        assert_eq!(
+            ch.faults,
+            vec![FaultWindow { worker: 2, fail_at: 2, rejoin_at: 4 }]
+        );
+        assert!(cfg.record_final_params);
+        let cfg = TrainBuilder::new("quad")
+            .chaos_opt(None)
+            .build_cfg()
+            .unwrap();
+        assert!(cfg.chaos.is_none());
+    }
+
+    #[test]
+    fn config_bridge_applies_chaos_section() {
+        use crate::net::FaultWindow;
+        let toml = r#"
+[chaos]
+seed = 11
+delay_ms = 2.0
+delay_max_ms = 20.0
+drop_prob = 0.05
+rto_ms = 1.0
+max_retries = 5
+reorder_window = 4
+stragglers = ["1:4.0", "3:2.5"]
+faults = ["2@3..5"]
+"#;
+        let c = Config::parse(toml).unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        let ch = cfg.chaos.unwrap();
+        assert_eq!(ch.seed, 11);
+        assert!((ch.delay_mean_s - 2e-3).abs() < 1e-12);
+        assert!((ch.delay_max_s - 20e-3).abs() < 1e-12);
+        assert!((ch.drop_prob - 0.05).abs() < 1e-12);
+        assert!((ch.rto_s - 1e-3).abs() < 1e-12);
+        assert_eq!(ch.max_retries, 5);
+        assert_eq!(ch.reorder_window, 4);
+        assert_eq!(ch.stragglers, vec![(1, 4.0), (3, 2.5)]);
+        assert_eq!(
+            ch.faults,
+            vec![FaultWindow { worker: 2, fail_at: 3, rejoin_at: 5 }]
+        );
+    }
+
+    #[test]
+    fn config_bridge_chaos_seed_exactness() {
+        // String form preserves full 64-bit seeds exactly.
+        let c = Config::parse(
+            "[chaos]\nseed = \"18446744073709551557\"",
+        )
+        .unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.chaos.unwrap().seed, 18446744073709551557u64);
+        // Numeric seeds beyond 2^53 (or negative/fractional) are rejected
+        // instead of being silently rounded.
+        for bad in
+            ["seed = 18446744073709551557", "seed = -1", "seed = 1.5"]
+        {
+            let c = Config::parse(&format!("[chaos]\n{bad}")).unwrap();
+            assert!(
+                TrainBuilder::new("quad").config(&c).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn config_bridge_rejects_bad_chaos_entries() {
+        let c =
+            Config::parse("[chaos]\nstragglers = [\"oops\"]").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        let c = Config::parse("[chaos]\nfaults = [3]").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        // Negative / fractional / wrong-typed values are hard errors,
+        // not silent casts or defaults.
+        for bad in ["max_retries = -1", "max_retries = 2.7",
+                    "reorder_window = -2", "reorder_window = 1.5",
+                    "delay_ms = \"2ms\"", "drop_prob = \"high\"",
+                    "max_retries = \"5\""]
+        {
+            let c = Config::parse(&format!("[chaos]\n{bad}")).unwrap();
+            assert!(
+                TrainBuilder::new("quad").config(&c).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+        // Bare section enables a (no-op) plan.
+        let c = Config::parse("[chaos]").unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert!(cfg.chaos.is_some());
     }
 
     #[test]

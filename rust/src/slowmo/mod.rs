@@ -14,9 +14,38 @@
 //! - `exact_average=false` → SGP-SlowMo-noaverage (paper §6)
 
 use crate::algorithms::{BaseAlgorithm, WorkerState};
-use crate::net::{ring_allreduce_mean, Fabric};
+use crate::net::{ring_allreduce_mean_group, ChaosPlan, Fabric};
 use crate::optim::kernels::Kernels;
 use anyhow::Result;
+
+/// Chunk-lane tags for the rejoin state transfer at boundary `t`. Bit 63
+/// separates them from collective tags (`coll_id << 32 | round`, with
+/// coll_id < 2^31), and the boundary index keeps transfers at different
+/// boundaries distinct, so [`Fabric::chunk_recv_tag`] routes them
+/// correctly even when ring chunks from a fast neighbor's next collective
+/// arrive first.
+const REJOIN_FLAG: u64 = 1 << 63;
+
+fn rejoin_tags(t: u64) -> (u64, u64) {
+    (REJOIN_FLAG | (t << 1), REJOIN_FLAG | (t << 1) | 1)
+}
+
+/// The chunk lane carries `Vec<f32>`, but the rejoin transfer must also
+/// convey the leader's f64 clock (the rejoiner's own clock fell behind
+/// while it was down, and simulated time must stay causal: the state
+/// cannot arrive before the leader computed it). Split the f64 bit
+/// pattern across two f32 payload slots — exact round-trip, no rounding.
+fn clock_to_f32s(clock: f64) -> [f32; 2] {
+    let bits = clock.to_bits();
+    [
+        f32::from_bits((bits >> 32) as u32),
+        f32::from_bits(bits as u32),
+    ]
+}
+
+fn clock_from_f32s(hi: f32, lo: f32) -> f64 {
+    f64::from_bits(((hi.to_bits() as u64) << 32) | lo.to_bits() as u64)
+}
 
 /// How base-optimizer buffers are treated at each outer boundary
 /// (paper Alg. 1 line 2; App. B.4 ablation).
@@ -127,6 +156,14 @@ impl OuterState {
 ///
 /// `gamma` is the fast learning rate γ_t used during the inner loop.
 /// Returns the updated simulated clock.
+///
+/// With a [`ChaosPlan`], membership is elastic: a worker whose fault
+/// window covers this boundary is excluded (the ring collective is
+/// rebuilt over survivors and the slow-momentum buffer is rescaled by the
+/// live-count ratio); at its first live boundary after an outage the
+/// worker rejoins by pulling the freshly-updated `(x0, u)` from the
+/// lowest-ranked survivor — its local progress during the outage is lost,
+/// like a real node restart.
 #[allow(clippy::too_many_arguments)]
 pub fn outer_update(
     cfg: &SlowMoCfg,
@@ -138,11 +175,70 @@ pub fn outer_update(
     outer: &mut OuterState,
     gamma: f32,
     mut clock: f64,
+    chaos: Option<&ChaosPlan>,
 ) -> Result<f64> {
-    // Line 6: exact average x_{t,tau} (skip for the noaverage variant).
+    let t = outer.t;
+    let d = state.x.len();
+    if let Some(plan) = chaos {
+        if plan.down(worker, t) {
+            // Mid-outage: excluded from the collective; the outer state
+            // freezes until the rejoin boundary overwrites it.
+            outer.t += 1;
+            return Ok(clock);
+        }
+        if plan.is_rejoiner(worker, t) {
+            // Rejoin by pulling the post-update outer state from the
+            // lowest-ranked contributor. The u payload carries the
+            // leader's clock in its last two slots; the state cannot
+            // arrive before the leader finished computing it.
+            let (tag_x, tag_u) = rejoin_tags(t);
+            let x0 = fabric.chunk_recv_tag(worker, tag_x);
+            let mut u = fabric.chunk_recv_tag(worker, tag_u);
+            debug_assert_eq!(u.len(), d + 2);
+            let lo = u.pop().unwrap_or(0.0);
+            let hi = u.pop().unwrap_or(0.0);
+            let leader_clock = clock_from_f32s(hi, lo);
+            // Two messages: x0 (d elems) and u + packed clock (d + 2).
+            clock = clock.max(leader_clock)
+                + fabric.cost.xfer_time(d)
+                + fabric.cost.xfer_time(d + 2);
+            outer.x0 = x0;
+            outer.u = u;
+            state.x.copy_from_slice(&outer.x0);
+            state.w = 1.0;
+            state.z.copy_from_slice(&state.x);
+            // Buffers from before the outage are stale — always reset.
+            state.reset_buffers();
+            outer.t += 1;
+            return Ok(clock);
+        }
+    }
+    let group: Vec<usize> = match chaos {
+        Some(plan) => plan.contributors(t),
+        None => (0..fabric.m()).collect(),
+    };
+
+    // Line 6: exact average x_{t,tau} over the live group (skip for the
+    // noaverage variant). coll_ids 3t..3t+2 key the chaos delay streams.
     if cfg.exact_average {
-        clock = ring_allreduce_mean(fabric, worker, &mut state.x, clock);
+        clock = ring_allreduce_mean_group(
+            fabric, worker, &group, &mut state.x, clock, 3 * t,
+        );
         algo.on_exact_average(state);
+    }
+
+    // Elastic membership: u aggregates displacement mass over the live
+    // group; rescale by the live-count ratio when membership changed
+    // since the previous boundary.
+    if let Some(plan) = chaos {
+        let live = group.len();
+        let prev = plan.contributor_count_before(t);
+        if live != prev {
+            let f = live as f32 / prev as f32;
+            for v in outer.u.iter_mut() {
+                *v *= f;
+            }
+        }
     }
 
     // Lines 7-8 via the fused L1 kernel: updates (x0, u) in place.
@@ -160,15 +256,35 @@ pub fn outer_update(
     state.w = 1.0;
     state.z.copy_from_slice(&state.x);
 
+    // Ship the fresh outer state to any workers rejoining right now.
+    if let Some(plan) = chaos {
+        let rejoiners = plan.rejoiners(t);
+        if !rejoiners.is_empty() && worker == group[0] {
+            let (tag_x, tag_u) = rejoin_tags(t);
+            let mut u_msg = outer.u.clone();
+            u_msg.extend_from_slice(&clock_to_f32s(clock));
+            for &r in &rejoiners {
+                fabric.chunk_send(r, tag_x, outer.x0.clone());
+                fabric.chunk_send(r, tag_u, u_msg.clone());
+            }
+            clock += (fabric.cost.xfer_time(d)
+                + fabric.cost.xfer_time(d + 2))
+                * rejoiners.len() as f64;
+        }
+    }
+
     // Line 2 (for the next outer iteration): buffer strategy.
     match cfg.buffers {
         BufferStrategy::Reset => state.reset_buffers(),
         BufferStrategy::Maintain => {}
         BufferStrategy::Average => {
-            clock = ring_allreduce_mean(fabric, worker, &mut state.h, clock);
+            clock = ring_allreduce_mean_group(
+                fabric, worker, &group, &mut state.h, clock, 3 * t + 1,
+            );
             if !state.v.is_empty() {
-                clock =
-                    ring_allreduce_mean(fabric, worker, &mut state.v, clock);
+                clock = ring_allreduce_mean_group(
+                    fabric, worker, &group, &mut state.v, clock, 3 * t + 2,
+                );
             }
         }
     }
@@ -199,7 +315,7 @@ mod tests {
             let mut st = states[w].clone();
             let mut ou = outers[w].clone();
             outer_update(cfg, &algo, &fabric, &kernels, w, &mut st, &mut ou,
-                         gamma, 0.0)
+                         gamma, 0.0, None)
                 .unwrap();
             (st, ou)
         })
@@ -315,16 +431,190 @@ mod tests {
         // Inner loop "moved" x down by 1 each outer iteration.
         st.x.iter_mut().for_each(|x| *x -= 1.0);
         outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
-                     gamma, 0.0)
+                     gamma, 0.0, None)
             .unwrap();
         let x1 = ou.x0[0]; // 10 - 1*(1) = 9
         assert!((x1 - 9.0).abs() < 1e-6);
         st.x.iter_mut().for_each(|x| *x -= 1.0);
         outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
-                     gamma, 0.0)
+                     gamma, 0.0, None)
             .unwrap();
         // u = 0.5*1 + 1 = 1.5 -> x = 9 - 1.5 = 7.5
         assert!((ou.x0[0] - 7.5).abs() < 1e-6, "{}", ou.x0[0]);
+    }
+
+    #[test]
+    fn elastic_membership_excludes_down_worker_and_rejoins() {
+        use crate::net::{ChaosCfg, ChaosPlan, FaultWindow};
+        use std::sync::Arc;
+        let m = 4;
+        let d = 6;
+        let cost = CostModel::free();
+        let plan = Arc::new(
+            ChaosPlan::new(
+                ChaosCfg {
+                    faults: vec![FaultWindow {
+                        worker: 3,
+                        fail_at: 0,
+                        rejoin_at: 1,
+                    }],
+                    ..ChaosCfg::default()
+                },
+                m,
+                &cost,
+            )
+            .unwrap(),
+        );
+        let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+        let (states, outers) = mk_states(m, d);
+        // Survivors' exact average at boundary 0: mean over workers 0..2.
+        let want: Vec<f32> = (0..d)
+            .map(|i| (0..3).map(|w| states[w].x[i]).sum::<f32>() / 3.0)
+            .collect();
+        let out = run_workers(m, |w| {
+            let mut st = states[w].clone();
+            let mut ou = outers[w].clone();
+            // Boundary 0: worker 3 is down. Boundary 1: it rejoins.
+            for _ in 0..2 {
+                outer_update(&cfg, &algo, &fabric, &kernels, w, &mut st,
+                             &mut ou, 0.1, 0.0, Some(&*plan))
+                    .unwrap();
+            }
+            (st, ou)
+        });
+        // All four workers advanced two boundaries without deadlock.
+        for (_, ou) in &out {
+            assert_eq!(ou.t, 2);
+        }
+        // After the rejoin boundary every worker holds the identical
+        // outer state, bit for bit.
+        for (st, ou) in &out[1..] {
+            assert_eq!(st.x, out[0].0.x);
+            assert_eq!(ou.x0, out[0].1.x0);
+            assert_eq!(ou.u, out[0].1.u);
+        }
+        // The boundary-0 average was exact over the three survivors:
+        // with alpha=1 the first outer step moves x0 by gamma*u where
+        // u = (x0_init - want)/gamma * ... — verify directly instead via a
+        // single-boundary run below.
+        let single = run_workers(m, |w| {
+            let mut st = states[w].clone();
+            let mut ou = outers[w].clone();
+            let cfg0 = SlowMoCfg::new(1.0, 0.0, 4);
+            outer_update(&cfg0, &algo, &fabric, &kernels, w, &mut st,
+                         &mut ou, 0.1, 0.0, Some(&*plan))
+                .unwrap();
+            st
+        });
+        for (w, st) in single.iter().enumerate().take(3) {
+            assert!(allclose(&st.x, &want, 1e-5, 1e-6), "worker {w}");
+        }
+        // The down worker's parameters were untouched at boundary 0.
+        assert_eq!(single[3].x, states[3].x);
+    }
+
+    #[test]
+    fn membership_change_rescales_slow_momentum() {
+        use crate::net::{ChaosCfg, ChaosPlan, FaultWindow};
+        use std::sync::Arc;
+        let m = 2;
+        let d = 3;
+        let cost = CostModel::free();
+        let plan = Arc::new(
+            ChaosPlan::new(
+                ChaosCfg {
+                    faults: vec![FaultWindow {
+                        worker: 1,
+                        fail_at: 0,
+                        rejoin_at: u64::MAX,
+                    }],
+                    ..ChaosCfg::default()
+                },
+                m,
+                &cost,
+            )
+            .unwrap(),
+        );
+        let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let cfg = SlowMoCfg::new(1.0, 0.5, 1);
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        let init = vec![10.0f32; d];
+        let mut st = WorkerState::new(&init, &inner);
+        let mut ou = OuterState::new(&init);
+        ou.u = vec![2.0; d]; // pre-existing momentum mass from m=2 workers
+        st.x.iter_mut().for_each(|x| *x -= 1.0);
+        // Worker 0 survives alone: live/prev = 1/2 halves u before the
+        // slow update: u = 0.5*(0.5*2) + 1 = 1.5 (gamma=1, alpha=1).
+        outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
+                     1.0, 0.0, Some(&*plan))
+            .unwrap();
+        for &u in &ou.u {
+            assert!((u - 1.5).abs() < 1e-6, "u={u}");
+        }
+    }
+
+    #[test]
+    fn rejoin_clock_encoding_round_trips_exactly() {
+        for clock in [0.0, 1.5e-3, 123.456789, 9.87654321e7] {
+            let [hi, lo] = clock_to_f32s(clock);
+            assert_eq!(clock_from_f32s(hi, lo), clock);
+        }
+    }
+
+    #[test]
+    fn rejoiner_clock_respects_leader_causality() {
+        use crate::net::{ChaosCfg, ChaosPlan, FaultWindow};
+        use std::sync::Arc;
+        let m = 2;
+        let d = 4;
+        // Non-free network so the collective and transfer cost time.
+        let cost = CostModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let plan = Arc::new(
+            ChaosPlan::new(
+                ChaosCfg {
+                    faults: vec![FaultWindow {
+                        worker: 1,
+                        fail_at: 0,
+                        rejoin_at: 1,
+                    }],
+                    ..ChaosCfg::default()
+                },
+                m,
+                &cost,
+            )
+            .unwrap(),
+        );
+        let fabric = Fabric::with_chaos(m, cost.clone(), Arc::clone(&plan));
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+        let init = vec![1.0f32; d];
+        // Leader enters boundary 1 at t=5s; the rejoiner's own clock is
+        // stale at 0 — its rejoin must land after the leader's clock.
+        let clocks = run_workers(m, |w| {
+            let mut st = WorkerState::new(&init, algo.inner());
+            let mut ou = OuterState::new(&init);
+            let mut clock = 0.0;
+            for _ in 0..2 {
+                let start = if w == 0 { clock.max(5.0) } else { clock };
+                clock = outer_update(&cfg, &algo, &fabric, &kernels, w,
+                                     &mut st, &mut ou, 0.1, start,
+                                     Some(&*plan))
+                    .unwrap();
+            }
+            clock
+        });
+        let transfer = cost.xfer_time(d) + cost.xfer_time(d + 2);
+        assert!(
+            clocks[1] >= 5.0 + transfer,
+            "rejoiner clock {} must not precede the leader's send",
+            clocks[1]
+        );
     }
 
     #[test]

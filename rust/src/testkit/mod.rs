@@ -27,10 +27,39 @@ pub fn default_cases() -> usize {
         .unwrap_or(64)
 }
 
+fn env_seed(var: &str) -> Option<u64> {
+    let s = std::env::var(var).ok()?;
+    let s = s.trim();
+    let parsed = if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    };
+    // An explicitly-set-but-garbled seed must fail loudly: silently
+    // falling back to the default would make a "reproduction" run lie.
+    Some(parsed.unwrap_or_else(|| {
+        panic!("{var}={s:?} is not a valid u64 seed (decimal or 0x-hex)")
+    }))
+}
+
+/// Base seed for the property suites (override with SLOWMO_TEST_SEED,
+/// hex `0x...` or decimal). Failure reports print the effective seed, so
+/// a failing CI sweep is reproduced by exporting the same value locally.
+pub fn test_seed() -> u64 {
+    env_seed("SLOWMO_TEST_SEED").unwrap_or(0xC0FFEE)
+}
+
+/// Seed threaded into every `ChaosCfg` the test suites build (override
+/// with SLOWMO_CHAOS_SEED; defaults to [`test_seed`]). Keeping one knob
+/// for both suites means a single env var re-rolls the whole chaos run.
+pub fn chaos_seed() -> u64 {
+    env_seed("SLOWMO_CHAOS_SEED").unwrap_or_else(test_seed)
+}
+
 /// Run `prop` over `cases` generated inputs; panic with a reproducible
 /// report (seed, case index, shrunk input) on the first failure.
 pub fn forall<G: Gen>(name: &str, gen: &G, prop: impl Fn(&G::Item) -> bool) {
-    forall_seeded(name, gen, 0xC0FFEE, default_cases(), prop)
+    forall_seeded(name, gen, test_seed(), default_cases(), prop)
 }
 
 pub fn forall_seeded<G: Gen>(
@@ -203,6 +232,20 @@ impl Gen for WorkerVecs {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn seeds_default_without_env() {
+        // The env vars are unset in CI; the defaults anchor the suites.
+        if std::env::var("SLOWMO_TEST_SEED").is_err() {
+            assert_eq!(test_seed(), 0xC0FFEE);
+        }
+        if std::env::var("SLOWMO_CHAOS_SEED").is_err()
+            && std::env::var("SLOWMO_TEST_SEED").is_err()
+        {
+            assert_eq!(chaos_seed(), 0xC0FFEE);
+        }
+        assert_eq!(env_seed("SLOWMO_NO_SUCH_VAR"), None);
+    }
 
     #[test]
     fn usize_gen_in_range() {

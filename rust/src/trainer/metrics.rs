@@ -58,8 +58,13 @@ pub struct TrainResult {
     pub wall_time: f64,
     /// Total f32 bytes sent over the fabric.
     pub bytes_sent: u64,
+    /// Chaos-layer retransmitted messages (0 without a chaos plan).
+    pub retransmits: u64,
     /// Mean grad-norm^2 trajectory per outer iteration (theory bench).
     pub gradnorm_curve: Vec<(u64, f64)>,
+    /// Worker 0's final (de-biased) parameters — recorded only when
+    /// `TrainCfg::record_final_params` is set; never serialized to JSONL.
+    pub final_params: Option<Vec<f32>>,
 }
 
 impl TrainResult {
@@ -86,6 +91,7 @@ impl TrainResult {
             ("sim_time", Json::num(self.sim_time)),
             ("wall_time", Json::num(self.wall_time)),
             ("bytes_sent", Json::num(self.bytes_sent as f64)),
+            ("retransmits", Json::num(self.retransmits as f64)),
             (
                 "train_curve",
                 Json::Arr(
@@ -167,7 +173,9 @@ mod tests {
             sim_time: 50.0,
             wall_time: 1.0,
             bytes_sent: 42,
+            retransmits: 0,
             gradnorm_curve: vec![],
+            final_params: None,
         }
     }
 

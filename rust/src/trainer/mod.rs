@@ -24,11 +24,11 @@ pub use schedule::Schedule;
 
 use crate::algorithms::{AlgoSel, BaseAlgorithm, Ctx, WorkerState};
 use crate::data::{task_for, Task};
-use crate::net::{CostModel, Fabric};
+use crate::net::{ChaosCfg, ChaosPlan, CostModel, Fabric};
 use crate::optim::kernels::Kernels;
 use crate::runtime::DataDesc;
 use crate::slowmo::{outer_update, OuterState, SlowMoCfg};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -68,6 +68,13 @@ pub struct TrainCfg {
     /// Observer early-stop granularity in steps; `None` = the SlowMo τ,
     /// or 16 without SlowMo. Stops only take effect at multiples of this.
     pub stop_check_every: Option<u64>,
+    /// Deterministic network degradation (delays, drops, stragglers,
+    /// fault windows). `None` = the perfect network.
+    pub chaos: Option<ChaosCfg>,
+    /// Record worker 0's final (de-biased) parameters into the result —
+    /// used by the chaos equivalence tests; off by default (costs one
+    /// `d`-sized copy).
+    pub record_final_params: bool,
 }
 
 impl TrainCfg {
@@ -90,6 +97,8 @@ impl TrainCfg {
             compute_time_s: 0.0,
             record_gradnorm: false,
             stop_check_every: None,
+            chaos: None,
+            record_final_params: false,
         }
     }
 }
@@ -115,6 +124,7 @@ struct WorkerOut {
     evals: Vec<(u64, f32, f32, f64)>, // (step, loss, metric, clock)
     clock: f64,
     steps_run: u64,
+    final_params: Option<Vec<f32>>,
 }
 
 /// Checkpoint rendezvous for observed runs: like a cyclic barrier, but a
@@ -188,8 +198,38 @@ pub(crate) fn run_prepared(
     let t_wall = Instant::now();
     let task: Box<dyn Task> =
         task_for(desc, cfg.m, cfg.seed, cfg.heterogeneity);
-    let fabric = Fabric::new(cfg.m, cfg.cost.clone());
-    let algo_name = display_name(&algo.name(), &cfg.slowmo);
+    let chaos_plan: Option<Arc<ChaosPlan>> = match &cfg.chaos {
+        Some(c) => {
+            let plan = ChaosPlan::new(c.clone(), cfg.m, &cfg.cost)?;
+            if plan.has_faults() {
+                ensure!(
+                    cfg.slowmo.is_some(),
+                    "chaos fault injection needs SlowMo outer boundaries \
+                     (elastic membership happens at the outer allreduce)"
+                );
+                // Probe with a large d: amortized accountings like
+                // doubleavg's `2*buffers*d/tau` round down to 0 for d=1.
+                ensure!(
+                    algo.comm_elems_per_step(1 << 20) == 0,
+                    "chaos fault injection requires a communication-free \
+                     base algorithm (use `local`; got {})",
+                    algo.name()
+                );
+            }
+            Some(Arc::new(plan))
+        }
+        None => None,
+    };
+    let fabric = match &chaos_plan {
+        Some(plan) => {
+            Fabric::with_chaos(cfg.m, cfg.cost.clone(), Arc::clone(plan))
+        }
+        None => Fabric::new(cfg.m, cfg.cost.clone()),
+    };
+    let mut algo_name = display_name(&algo.name(), &cfg.slowmo);
+    if cfg.chaos.is_some() {
+        algo_name.push_str("+chaos");
+    }
 
     let eval_points: Vec<u64> = {
         let mut pts = Vec::new();
@@ -233,7 +273,14 @@ pub(crate) fn run_prepared(
             evals: Vec::new(),
             clock: 0.0,
             steps_run: 0,
+            final_params: None,
         };
+        // Straggler slowdown: a chaos-designated slow worker charges more
+        // simulated time per inner compute step.
+        let slowdown = chaos_plan
+            .as_ref()
+            .map(|p| p.compute_factor(w))
+            .unwrap_or(1.0);
         let mut eval_idx = 0;
         let mut gamma_outer = cfg.sched.gamma(0);
         for k in 0..cfg.steps {
@@ -255,11 +302,12 @@ pub(crate) fn run_prepared(
             let t0 = Instant::now();
             let (loss, grads) =
                 model.train_step(algo.eval_params(&state), &batch)?;
-            ctx.clock += if cfg.compute_time_s > 0.0 {
+            let compute = if cfg.compute_time_s > 0.0 {
                 cfg.compute_time_s
             } else {
                 t0.elapsed().as_secs_f64()
             };
+            ctx.clock += compute * slowdown;
             out.losses.push(loss);
             if cfg.record_gradnorm {
                 out.gradnorms.push(crate::util::sqnorm(&grads));
@@ -285,6 +333,7 @@ pub(crate) fn run_prepared(
                     ctx.clock = outer_update(
                         scfg, algo.as_ref(), &fabric, kernels, w,
                         &mut state, outer, gamma_outer, ctx.clock,
+                        chaos_plan.as_deref(),
                     )?;
                     if w == 0 {
                         if let Some(obs) = &observer {
@@ -332,6 +381,9 @@ pub(crate) fn run_prepared(
             }
         }
         out.clock = ctx.clock;
+        if cfg.record_final_params {
+            out.final_params = Some(algo.eval_params(&state).to_vec());
+        }
         Ok(out)
         };
         let res = body();
@@ -347,8 +399,12 @@ pub(crate) fn run_prepared(
         workers.push(o?);
     }
 
+    let retransmits = chaos_plan
+        .as_ref()
+        .map(|p| p.retransmits())
+        .unwrap_or(0);
     Ok(assemble(cfg, algo_name, desc.clone(), workers, &fabric,
-                t_wall.elapsed().as_secs_f64()))
+                t_wall.elapsed().as_secs_f64(), retransmits))
 }
 
 fn run_eval(
@@ -376,10 +432,13 @@ fn assemble(
     cfg: &TrainCfg,
     algo_name: String,
     desc: DataDesc,
-    workers: Vec<WorkerOut>,
+    mut workers: Vec<WorkerOut>,
     fabric: &Fabric,
     wall: f64,
+    retransmits: u64,
 ) -> TrainResult {
+    let final_params =
+        workers.first_mut().and_then(|w| w.final_params.take());
     let window = cfg
         .slowmo
         .as_ref()
@@ -497,7 +556,9 @@ fn assemble(
         sim_time,
         wall_time: wall,
         bytes_sent: fabric.bytes_sent(),
+        retransmits,
         gradnorm_curve,
+        final_params,
     }
 }
 
@@ -561,5 +622,7 @@ mod tests {
         assert!(cfg.native_kernels);
         assert!(!cfg.force_pjrt);
         assert_eq!(cfg.stop_check_every, None);
+        assert!(cfg.chaos.is_none());
+        assert!(!cfg.record_final_params);
     }
 }

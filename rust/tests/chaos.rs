@@ -1,0 +1,328 @@
+//! Chaos-fabric integration tests: determinism of seeded degradation,
+//! elastic membership at outer boundaries (fail + rejoin without
+//! deadlock, exact survivor averages), and push-sum robustness on the
+//! real threaded fabric under chaos delays.
+//!
+//! The chaos seed threads through `testkit::chaos_seed()`
+//! (SLOWMO_CHAOS_SEED) so the whole suite re-rolls with one env var.
+
+use slowmo::algorithms::{BaseAlgorithm, Ctx, Local, Sgp, WorkerState};
+use slowmo::exec::run_workers;
+use slowmo::net::{ChaosCfg, ChaosPlan, CostModel, Fabric, FaultWindow};
+use slowmo::optim::kernels::{InnerOpt, Kernels};
+use slowmo::session::Session;
+use slowmo::slowmo::{outer_update, OuterState, SlowMoCfg};
+use slowmo::testkit::chaos_seed;
+use slowmo::topology::ExponentialGraph;
+use slowmo::trainer::{Schedule, TrainResult};
+use std::sync::Arc;
+
+fn sgd() -> InnerOpt {
+    InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 }
+}
+
+fn degraded() -> ChaosCfg {
+    ChaosCfg {
+        seed: chaos_seed(),
+        delay_mean_s: 2e-3,
+        delay_max_s: 20e-3,
+        drop_prob: 0.1,
+        reorder_window: 4,
+        stragglers: vec![(1, 3.0)],
+        ..ChaosCfg::default()
+    }
+}
+
+// ------------------------------------------------- membership unit level
+
+/// One boundary with worker 3 down: survivors get the exact mean over
+/// survivors, the down worker is untouched, nobody deadlocks.
+#[test]
+fn outer_average_is_exact_over_survivors() {
+    let m = 4;
+    let d = 16;
+    let cost = CostModel::free();
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![FaultWindow {
+                    worker: 3,
+                    fail_at: 0,
+                    rejoin_at: 2,
+                }],
+                ..ChaosCfg::default()
+            },
+            m,
+            &cost,
+        )
+        .unwrap(),
+    );
+    let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    // alpha=1, beta=0: the boundary adopts the survivor average directly.
+    let cfg = SlowMoCfg::new(1.0, 0.0, 4);
+    let init = vec![1.0f32; d];
+    let inputs: Vec<Vec<f32>> = (0..m)
+        .map(|w| (0..d).map(|i| (w * d + i) as f32 * 0.01).collect())
+        .collect();
+    // Exact survivor mean, computed in f64.
+    let want: Vec<f32> = (0..d)
+        .map(|i| {
+            ((0..3).map(|w| f64::from(inputs[w][i])).sum::<f64>() / 3.0)
+                as f32
+        })
+        .collect();
+    let out = run_workers(m, |w| {
+        let mut st = WorkerState::new(&init, algo.inner());
+        st.x.copy_from_slice(&inputs[w]);
+        let mut ou = OuterState::new(&init);
+        // Seed x0 with the survivor inputs' role: x0 stays `init`; with
+        // alpha=1, beta=0 the update lands exactly on the average.
+        outer_update(&cfg, &algo, &fabric, &kernels, w, &mut st, &mut ou,
+                     0.1, 0.0, Some(&*plan))
+            .unwrap();
+        st
+    });
+    for (w, st) in out.iter().enumerate().take(3) {
+        for (a, b) in st.x.iter().zip(&want) {
+            assert!(
+                (a - b).abs() <= 1e-6 + 1e-5 * b.abs(),
+                "worker {w}: {a} vs {b}"
+            );
+        }
+    }
+    assert_eq!(out[3].x, inputs[3], "down worker must be untouched");
+}
+
+/// Fail at boundary 1, rejoin two boundaries later (boundary 3): the run
+/// completes without deadlock and the rejoiner adopts the survivors'
+/// outer state bit-for-bit.
+#[test]
+fn worker_rejoins_two_boundaries_later() {
+    let m = 4;
+    let d = 8;
+    let cost = CostModel::free();
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![FaultWindow {
+                    worker: 2,
+                    fail_at: 1,
+                    rejoin_at: 3,
+                }],
+                ..ChaosCfg::default()
+            },
+            m,
+            &cost,
+        )
+        .unwrap(),
+    );
+    let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    let cfg = SlowMoCfg::new(1.0, 0.6, 4);
+    let init = vec![2.0f32; d];
+    let out = run_workers(m, |w| {
+        let mut st = WorkerState::new(&init, algo.inner());
+        let mut ou = OuterState::new(&init);
+        for t in 0..4u64 {
+            // Simulate divergent inner progress before each boundary.
+            for (i, x) in st.x.iter_mut().enumerate() {
+                *x -= 0.01 * (w as f32 + 1.0) * (t as f32 + 1.0)
+                    + 0.001 * i as f32;
+            }
+            outer_update(&cfg, &algo, &fabric, &kernels, w, &mut st,
+                         &mut ou, 0.1, 0.0, Some(&*plan))
+                .unwrap();
+        }
+        (st, ou)
+    });
+    for (_, ou) in &out {
+        assert_eq!(ou.t, 4, "all workers advanced all boundaries");
+    }
+    // After the rejoin boundary (t=3) everyone is synchronized again.
+    for (w, (st, ou)) in out.iter().enumerate().skip(1) {
+        assert_eq!(st.x, out[0].0.x, "x diverged on worker {w}");
+        assert_eq!(ou.x0, out[0].1.x0, "x0 diverged on worker {w}");
+        assert_eq!(ou.u, out[0].1.u, "u diverged on worker {w}");
+    }
+}
+
+// ------------------------------------------- push-sum on the real fabric
+
+/// Blocking SGP on a chaos fabric (delays + reordering + drops): push-sum
+/// mass stays m, consensus lands on the initial average, and the chaos
+/// run's consensus matches the calm run's — delays never change the math.
+#[test]
+fn sgp_push_sum_tolerates_chaos_fabric() {
+    let m = 4;
+    let d = 4;
+    let steps = 60;
+    let run = |chaos: Option<Arc<ChaosPlan>>| -> Vec<WorkerState> {
+        let cost = CostModel::free();
+        let fabric = match chaos {
+            Some(plan) => Fabric::with_chaos(m, cost, plan),
+            None => Fabric::new(m, cost),
+        };
+        let topo = Arc::new(ExponentialGraph::new(m));
+        let algo = Sgp::new(sgd(), topo);
+        let kernels = Kernels::Native;
+        run_workers(m, |w| {
+            let init = vec![w as f32; d];
+            let mut st = WorkerState::new(&init, algo.inner());
+            let mut ctx = Ctx {
+                worker: w,
+                m,
+                fabric: &fabric,
+                kernels: &kernels,
+                clock: 0.0,
+            };
+            for k in 0..steps {
+                algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
+            }
+            st
+        })
+    };
+    let cost = CostModel::free();
+    let plan =
+        Arc::new(ChaosPlan::new(degraded(), m, &cost).unwrap());
+    let calm = run(None);
+    let chaotic = run(Some(Arc::clone(&plan)));
+    let mass: f64 = chaotic.iter().map(|s| s.w).sum();
+    assert!((mass - m as f64).abs() < 1e-9, "push-sum mass {mass}");
+    // Zero gradients: gossip only mixes; consensus = mean of inits = 1.5.
+    for (a, b) in calm.iter().zip(&chaotic) {
+        assert_eq!(a.x, b.x, "chaos delays must not change the math");
+        assert_eq!(a.w, b.w);
+        for &z in &b.z {
+            assert!((z - 1.5).abs() < 1e-3, "consensus z={z}");
+        }
+    }
+    assert!(plan.retransmits() > 0, "drop_prob=0.1 must retransmit");
+}
+
+// ------------------------------------------------------------ end-to-end
+
+fn session() -> Option<Session> {
+    match Session::native_only() {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("SKIP: no artifacts");
+            None
+        }
+    }
+}
+
+fn quad_chaos(
+    s: &Session,
+    steps: u64,
+    chaos: Option<ChaosCfg>,
+) -> TrainResult {
+    s.train("quad")
+        .algo("local")
+        .inner(sgd())
+        .workers(4)
+        .steps(steps)
+        .seed(11)
+        .slowmo_cfg(SlowMoCfg::new(1.0, 0.6, 4))
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(1e-4)
+        .record_params(true)
+        .chaos_opt(chaos)
+        .run()
+        .unwrap()
+}
+
+/// Acceptance: a fixed seed is fully deterministic — identical final
+/// parameters, byte counts, retransmits, and simulated times.
+#[test]
+fn chaos_runs_are_bit_deterministic() {
+    let Some(s) = session() else { return };
+    let a = quad_chaos(&s, 32, Some(degraded()));
+    let b = quad_chaos(&s, 32, Some(degraded()));
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.bytes_sent, b.bytes_sent);
+    assert_eq!(a.retransmits, b.retransmits);
+    assert_eq!(a.sim_time, b.sim_time);
+    assert_eq!(a.train_curve, b.train_curve);
+}
+
+/// Acceptance: a worker failing mid-phase and rejoining two boundaries
+/// later completes end-to-end without deadlock, deterministically.
+#[test]
+fn fault_and_rejoin_end_to_end() {
+    let Some(s) = session() else { return };
+    let mut cfg = degraded();
+    cfg.faults = vec![FaultWindow { worker: 2, fail_at: 1, rejoin_at: 3 }];
+    let a = quad_chaos(&s, 32, Some(cfg.clone()));
+    let b = quad_chaos(&s, 32, Some(cfg));
+    assert_eq!(a.steps_run, 32);
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.sim_time, b.sim_time);
+    // The survivor-averaged trajectory differs from the calm run's.
+    let calm = quad_chaos(&s, 32, None);
+    assert_ne!(calm.final_params, a.final_params);
+}
+
+/// Faults require SlowMo boundaries and a communication-free base.
+#[test]
+fn fault_injection_is_validated() {
+    let Some(s) = session() else { return };
+    let cfg = ChaosCfg {
+        faults: vec![FaultWindow { worker: 1, fail_at: 0, rejoin_at: 2 }],
+        ..ChaosCfg::default()
+    };
+    // No SlowMo: rejected.
+    let err = s
+        .train("quad")
+        .algo("local")
+        .inner(sgd())
+        .workers(4)
+        .steps(8)
+        .schedule(Schedule::Const(0.1))
+        .chaos(cfg.clone())
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("SlowMo"), "{err}");
+    // Gossip base: rejected.
+    let err = s
+        .train("quad")
+        .algo("sgp")
+        .inner(sgd())
+        .workers(4)
+        .steps(8)
+        .slowmo_cfg(SlowMoCfg::new(1.0, 0.0, 4))
+        .schedule(Schedule::Const(0.1))
+        .chaos(cfg)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("communication-free"), "{err}");
+}
+
+/// Long soak for the CI chaos job: multiple overlapping-in-time fault
+/// windows across a longer run, still deterministic and deadlock-free.
+#[test]
+#[ignore = "slow chaos soak — run via `cargo test -- --include-ignored`"]
+fn chaos_soak_multiple_fault_windows() {
+    let Some(s) = session() else { return };
+    let mut cfg = degraded();
+    cfg.faults = vec![
+        FaultWindow { worker: 2, fail_at: 1, rejoin_at: 3 },
+        FaultWindow { worker: 3, fail_at: 2, rejoin_at: 6 },
+        FaultWindow { worker: 2, fail_at: 8, rejoin_at: 10 },
+    ];
+    let a = quad_chaos(&s, 256, Some(cfg.clone()));
+    let b = quad_chaos(&s, 256, Some(cfg));
+    assert_eq!(a.steps_run, 256);
+    assert_eq!(a.final_params, b.final_params);
+    assert_eq!(a.sim_time, b.sim_time);
+    // Local base never touches the gossip lane, so there is nothing to
+    // retransmit — the collective chaos charge shows up in sim_time only.
+    assert_eq!(a.retransmits, 0);
+}

@@ -4,10 +4,11 @@
 //! [`Session`] (no PJRT needed) so they are fast and bit-deterministic.
 
 use slowmo::algorithms::AlgoSel;
-use slowmo::net::CostModel;
+use slowmo::net::{ChaosCfg, CostModel};
 use slowmo::optim::kernels::InnerOpt;
 use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
+use slowmo::testkit::chaos_seed;
 use slowmo::trainer::{Schedule, TrainResult};
 
 fn session() -> Option<Session> {
@@ -27,6 +28,17 @@ fn quad(
     algo: AlgoSel,
     slowmo: Option<SlowMoCfg>,
 ) -> TrainResult {
+    quadx(s, m, steps, algo, slowmo, None)
+}
+
+fn quadx(
+    s: &Session,
+    m: usize,
+    steps: u64,
+    algo: AlgoSel,
+    slowmo: Option<SlowMoCfg>,
+    chaos: Option<ChaosCfg>,
+) -> TrainResult {
     s.train("quad")
         .algo_sel(algo)
         .workers(m)
@@ -38,6 +50,8 @@ fn quad(
         .eval_batches(1)
         .cost(CostModel::free())
         .compute_time(1e-6)
+        .record_params(true)
+        .chaos_opt(chaos)
         .run()
         .unwrap()
 }
@@ -176,6 +190,80 @@ fn gossip_sends_fewer_bytes_than_allreduce() {
     let ar = quad(&s, 4, 64, AlgoSel::with_inner("ar", sgd()), None);
     assert!(sgp.bytes_sent < ar.bytes_sent,
             "sgp {} !< ar {}", sgp.bytes_sent, ar.bytes_sent);
+}
+
+// ---------------------------------------------------------------- chaos
+// Delays may only move simulated time, never math: each framework special
+// case must produce bitwise-identical final parameters with a (faultless)
+// ChaosPlan enabled, at a strictly larger simulated wall-clock.
+
+/// Network chaos for cases that communicate (delays, drops, reordering).
+fn net_chaos() -> ChaosCfg {
+    ChaosCfg {
+        seed: chaos_seed(),
+        delay_mean_s: 2e-3,
+        delay_max_s: 20e-3,
+        drop_prob: 0.1,
+        reorder_window: 4,
+        stragglers: vec![(1, 2.0)],
+        ..ChaosCfg::default()
+    }
+}
+
+fn assert_time_only(calm: &TrainResult, chaotic: &TrainResult) {
+    assert_eq!(
+        calm.final_params, chaotic.final_params,
+        "chaos changed the math"
+    );
+    assert!(calm.final_params.is_some());
+    assert_eq!(calm.train_curve, chaotic.train_curve);
+    assert!(
+        chaotic.sim_time > calm.sim_time,
+        "chaos must cost simulated time: {} !> {}",
+        chaotic.sim_time,
+        calm.sim_time
+    );
+}
+
+#[test]
+fn bmuf_is_bitwise_identical_under_chaos() {
+    // BMUF: Local base + slow momentum (paper §2, Chen & Huo 2016).
+    let Some(s) = session() else { return };
+    let slowmo = Some(SlowMoCfg::new(1.0, 0.7, 8));
+    let calm = quadx(&s, 4, 64, local(), slowmo.clone(), None);
+    let chaotic = quadx(&s, 4, 64, local(), slowmo, Some(net_chaos()));
+    assert_time_only(&calm, &chaotic);
+}
+
+#[test]
+fn lookahead_is_bitwise_identical_under_chaos() {
+    // Lookahead: m=1, α∈(0,1], β=0 — no communication at all, so the
+    // chaos charge comes from a straggler slowdown on the only worker.
+    let Some(s) = session() else { return };
+    let slowmo = Some(
+        SlowMoCfg::new(0.5, 0.0, 8)
+            .with_buffers(BufferStrategy::Maintain),
+    );
+    let chaos = ChaosCfg {
+        seed: chaos_seed(),
+        stragglers: vec![(0, 2.5)],
+        ..ChaosCfg::default()
+    };
+    let calm = quadx(&s, 1, 64, local(), slowmo.clone(), None);
+    let chaotic = quadx(&s, 1, 64, local(), slowmo, Some(chaos));
+    assert_time_only(&calm, &chaotic);
+}
+
+#[test]
+fn allreduce_sgd_is_bitwise_identical_under_chaos() {
+    // AR-SGD: gradient allreduce every step (τ=1 anchor).
+    let Some(s) = session() else { return };
+    let ar = AlgoSel::with_inner("ar", sgd());
+    let calm = quadx(&s, 4, 48, ar.clone(), None, None);
+    let chaotic = quadx(&s, 4, 48, ar, None, Some(net_chaos()));
+    assert_time_only(&calm, &chaotic);
+    // Goodput is identical too — retransmissions are counted separately.
+    assert_eq!(calm.bytes_sent, chaotic.bytes_sent);
 }
 
 #[test]

@@ -1,6 +1,11 @@
 //! Golden-vector verification: the Rust mirror optimizers must match the
 //! pure-jnp oracle bit-for-bit-ish (f32 rounding), via the vectors the AOT
 //! exporter dumped into artifacts/golden.json.
+//!
+//! Regenerate the fixtures with one command (seed 1234 is the committed
+//! baseline; see ROADMAP.md "Testing"):
+//!
+//!   python python/compile/aot.py --out-dir artifacts --golden-seed 1234
 
 use slowmo::jsonx::{parse, Json};
 use slowmo::optim;

@@ -1,0 +1,223 @@
+//! Property tests for the collective/partition primitives and the
+//! push-sum delay-tolerance claim, built on the seeded `testkit`
+//! mini-framework (override seeds with SLOWMO_TEST_SEED / case counts
+//! with SLOWMO_PROP_CASES).
+
+use slowmo::exec::run_workers;
+use slowmo::net::collectives::chunk_ranges;
+use slowmo::net::{ring_allreduce_mean, CostModel, Fabric};
+use slowmo::rng::stream;
+use slowmo::testkit::{default_cases, forall_seeded, test_seed, WorkerVecs};
+
+// ------------------------------------------------------------ chunk_ranges
+
+fn is_exact_partition(len: usize, m: usize) -> bool {
+    let r = chunk_ranges(len, m);
+    r.len() == m
+        && r.first().map(|&(s, _)| s == 0).unwrap_or(false)
+        && r.last().map(|&(_, e)| e == len).unwrap_or(false)
+        && r.windows(2).all(|w| w[0].1 == w[1].0)
+        && r.iter().all(|&(s, e)| s <= e)
+}
+
+#[test]
+fn chunk_ranges_always_partition_exactly() {
+    // Exhaustive over the whole small domain — cheaper than sampling.
+    for len in 0..=257 {
+        for m in 1..=12 {
+            assert!(is_exact_partition(len, m), "len={len} m={m}");
+        }
+    }
+}
+
+#[test]
+fn chunk_ranges_m_exceeding_len_yields_empty_chunks() {
+    for (len, m) in [(0usize, 1usize), (0, 8), (3, 7), (1, 2), (5, 8)] {
+        let r = chunk_ranges(len, m);
+        let empties = r.iter().filter(|&&(s, e)| s == e).count();
+        assert_eq!(empties, m.saturating_sub(len), "len={len} m={m}");
+        assert!(r.iter().all(|&(s, e)| e - s <= 1), "len={len} m={m}");
+    }
+}
+
+// ------------------------------------------------- ring allreduce == mean
+
+/// Per-element f64 reference mean and accumulated absolute magnitude
+/// Σ|x| — the right scale for an ulp bound under cancellation.
+fn mean_and_mag(vecs: &[Vec<f32>]) -> (Vec<f64>, Vec<f64>) {
+    let m = vecs.len();
+    let d = vecs.first().map(|v| v.len()).unwrap_or(0);
+    let mut mean = vec![0.0f64; d];
+    let mut mag = vec![0.0f64; d];
+    for v in vecs {
+        for i in 0..d {
+            mean[i] += f64::from(v[i]);
+            mag[i] += f64::from(v[i]).abs();
+        }
+    }
+    for v in mean.iter_mut() {
+        *v /= m as f64;
+    }
+    (mean, mag)
+}
+
+/// The result must be the exact mean up to an ulp-scaled tolerance:
+/// an m-term f32 summation has forward error <= (m-1)·eps·Σ|x|, and the
+/// final 1/m multiply adds <= eps·|mean| <= eps·Σ|x| — so m·eps·Σ|x|
+/// bounds the whole schedule.
+fn within_ulp_bound(out: &[f32], mean: &[f64], mag: &[f64], m: usize) -> bool {
+    out.len() == mean.len()
+        && out.iter().zip(mean.iter().zip(mag)).all(|(&o, (&w, &g))| {
+            let tol =
+                (m as f64) * f64::from(f32::EPSILON) * g.max(1e-6);
+            (f64::from(o) - w).abs() <= tol
+        })
+}
+
+fn allreduce_matches_mean(vecs: &[Vec<f32>]) -> bool {
+    let m = vecs.len();
+    let (mean, mag) = mean_and_mag(vecs);
+    let fabric = Fabric::new(m, CostModel::free());
+    let outs = run_workers(m, |w| {
+        let mut x = vecs[w].clone();
+        ring_allreduce_mean(&fabric, w, &mut x, 0.0);
+        x
+    });
+    outs.iter().all(|out| within_ulp_bound(out, &mean, &mag, m))
+}
+
+#[test]
+fn ring_allreduce_equals_exact_mean_randomized() {
+    let gen = WorkerVecs { m_range: (1, 8), d_range: (0, 257), scale: 2.0 };
+    for (i, seed) in [test_seed(), test_seed() ^ 0x9E37_79B9, 42]
+        .into_iter()
+        .enumerate()
+    {
+        forall_seeded(
+            &format!("ring-allreduce == elementwise mean [sweep {i}]"),
+            &gen,
+            seed,
+            default_cases(), // scaled by SLOWMO_PROP_CASES
+            |vecs| allreduce_matches_mean(vecs),
+        );
+    }
+}
+
+#[test]
+#[ignore = "slow property sweep — run via `cargo test -- --include-ignored`"]
+fn ring_allreduce_equals_exact_mean_exhaustive() {
+    // Heavier sweep for the CI chaos/property job: every m in 1..=8 with
+    // many random lengths (incl. the empty vector and len < m).
+    let gen = WorkerVecs { m_range: (1, 8), d_range: (0, 257), scale: 2.0 };
+    for round in 0..8u64 {
+        forall_seeded(
+            &format!("ring-allreduce exhaustive [round {round}]"),
+            &gen,
+            test_seed().wrapping_add(round),
+            2 * default_cases(), // scaled by SLOWMO_PROP_CASES
+            |vecs| allreduce_matches_mean(vecs),
+        );
+    }
+}
+
+// --------------------------------------------- push-sum delay invariance
+
+/// Single-threaded push-sum simulator over a ring with chaos-style
+/// delivery: each round every node halves its biased mass (p·x, p·w) with
+/// its successor; a message is held for a seeded lag of up to `max_lag`
+/// rounds, and each delivery round merges in a seeded, permuted order
+/// (bounded reordering). Returns the per-node de-biased values after
+/// `rounds` mixing rounds plus a drain.
+fn push_sum(m: usize, rounds: u64, seed: u64, max_lag: u64) -> Vec<f64> {
+    struct Msg {
+        to: usize,
+        x: f64,
+        w: f64,
+        deliver_at: u64,
+    }
+    let mut x: Vec<f64> =
+        (0..m).map(|i| (i as f64) * 1.75 - (m as f64) * 0.5).collect();
+    let total0: f64 = x.iter().sum();
+    let mut wt = vec![1.0f64; m];
+    let mut pending: Vec<Msg> = Vec::new();
+    // A final lag-free tail lets every delayed share land and mix.
+    let tail = 4 * (max_lag + 1) + 64;
+    for k in 0..rounds + tail {
+        for i in 0..m {
+            let lag = if k < rounds && max_lag > 0 {
+                stream(seed, "pushsum.lag", i as u64, k, 0).below(max_lag + 1)
+            } else {
+                0
+            };
+            pending.push(Msg {
+                to: (i + 1) % m,
+                x: x[i] * 0.5,
+                w: wt[i] * 0.5,
+                deliver_at: k + 1 + lag,
+            });
+            x[i] *= 0.5;
+            wt[i] *= 0.5;
+        }
+        // Deliver everything due, in a seeded permuted order.
+        let mut due: Vec<usize> = (0..pending.len())
+            .filter(|&i| pending[i].deliver_at <= k + 1)
+            .collect();
+        let mut rng = stream(seed, "pushsum.perm", k, 0, 0);
+        rng.shuffle(&mut due);
+        for &i in &due {
+            let msg = &pending[i];
+            x[msg.to] += msg.x;
+            wt[msg.to] += msg.w;
+        }
+        pending.retain(|msg| msg.deliver_at > k + 1);
+
+        // Invariants: mass sums to m, value sum is conserved, including
+        // whatever is still in flight.
+        let w_total: f64 = wt.iter().sum::<f64>()
+            + pending.iter().map(|p| p.w).sum::<f64>();
+        assert!(
+            (w_total - m as f64).abs() < 1e-9,
+            "push-sum mass broken at round {k}: {w_total}"
+        );
+        let x_total: f64 = x.iter().sum::<f64>()
+            + pending.iter().map(|p| p.x).sum::<f64>();
+        assert!(
+            (x_total - total0).abs() < 1e-9 * (1.0 + total0.abs()),
+            "push-sum value sum broken at round {k}: {x_total} vs {total0}"
+        );
+    }
+    assert!(pending.is_empty(), "drain left messages in flight");
+    x.iter().zip(&wt).map(|(&xi, &wi)| xi / wi).collect()
+}
+
+#[test]
+fn push_sum_invariant_under_delays_and_reordering() {
+    // The docstring claim in net/fabric.rs: push-sum is correct for
+    // arbitrarily delayed messages. Weights always sum to m (asserted
+    // inside the simulator every round) and the delayed, reordered run
+    // converges to the same average as the undelayed run.
+    for m in [2usize, 3, 5, 8] {
+        let mean = (0..m)
+            .map(|i| (i as f64) * 1.75 - (m as f64) * 0.5)
+            .sum::<f64>()
+            / m as f64;
+        let calm = push_sum(m, 600, test_seed(), 0);
+        let chaotic = push_sum(m, 600, test_seed(), 3);
+        for i in 0..m {
+            assert!(
+                (calm[i] - mean).abs() < 1e-6,
+                "calm node {i}: {} vs {mean}",
+                calm[i]
+            );
+            assert!(
+                (chaotic[i] - mean).abs() < 1e-6,
+                "delayed node {i}: {} vs {mean}",
+                chaotic[i]
+            );
+            assert!(
+                (chaotic[i] - calm[i]).abs() < 1e-6,
+                "delayed vs calm consensus differ at node {i}"
+            );
+        }
+    }
+}
