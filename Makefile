@@ -1,0 +1,16 @@
+# Convenience targets referenced by the examples' SKIP messages, the
+# test-suite skip notes, and ROADMAP.md.
+
+.PHONY: artifacts e2e
+
+# AOT-lower the JAX/Pallas model + optimizer graphs and the golden
+# fixtures into artifacts/ (seed 1234 is the committed golden baseline;
+# see ROADMAP.md "Testing"). Requires jax (Python side only; the Rust
+# training path never runs Python).
+artifacts:
+	python python/compile/aot.py --out-dir artifacts --golden-seed 1234
+
+# Additionally export the ~12.6M-param end-to-end LM preset used by
+# `cargo run --release --example e2e_lm -- lm-e2e`.
+e2e: artifacts
+	python python/compile/aot.py --out-dir artifacts --group e2e

@@ -26,10 +26,16 @@ fn main() -> anyhow::Result<()> {
     let steps: u64 = args
         .get(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(240);
+        .unwrap_or_else(|| slowmo::util::env_u64("SLOWMO_EXAMPLE_STEPS", 240));
     let m: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
 
-    let session = Session::open()?;
+    let session = match Session::open() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not found ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
     let info = session.manifest().preset(&preset)?;
     println!(
         "e2e: transformer LM preset={} ({} params), m={m}, {steps} steps",

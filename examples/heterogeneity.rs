@@ -16,7 +16,14 @@ use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
 
 fn main() -> anyhow::Result<()> {
-    let session = Session::open()?;
+    let session = match Session::open() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not found ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let steps = slowmo::util::env_u64("SLOWMO_EXAMPLE_STEPS", 240);
     let tau = 12;
     println!("Local SGD vs +SlowMo across data heterogeneity (m=4, τ=12)\n");
     println!("{:<6} {:>16} {:>16} {:>8}", "het", "acc(local)",
@@ -36,7 +43,7 @@ fn main() -> anyhow::Result<()> {
                 .algo("local")
                 .inner(InnerOpt::Nesterov { beta0: 0.9, wd: 1e-4 })
                 .workers(4)
-                .steps(240)
+                .steps(steps)
                 .seed(3)
                 .slowmo_cfg(slowmo)
                 .heterogeneity(het)

@@ -1,37 +1,45 @@
 //! Lookahead (Zhang et al. 2019) as a SlowMo special case (paper §2):
 //! m=1 worker, β=0, α ∈ (0,1], base = SGD — "k steps forward, 1 step
-//! back". Compares plain SGD, Lookahead α=0.5 and SlowMo's α=1 anchor on
-//! the CIFAR-analog task, single worker, no communication at all.
+//! back". Selected through the outer-optimizer registry: the `lookahead`
+//! rule is one string key among `slowmo|avg|lookahead|nesterov|adam`
+//! (see ROADMAP.md "Adding an outer optimizer").
 //!
 //! Every variant is one chained `TrainBuilder` off a shared [`Session`]
 //! (the canonical entry point — the engine and model build are paid once
 //! for all four runs).
 //!
 //! Run with:  cargo run --release --example lookahead
+//! CI-sized:  SLOWMO_EXAMPLE_STEPS=30 cargo run --release --example lookahead
 
 use slowmo::net::CostModel;
 use slowmo::optim::kernels::InnerOpt;
 use slowmo::session::Session;
-use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
 use slowmo::trainer::Schedule;
 
 fn run(
     session: &Session,
-    slowmo: Option<SlowMoCfg>,
+    steps: u64,
+    outer: Option<&str>,
     label: &str,
 ) -> anyhow::Result<()> {
-    let r = session
+    let mut b = session
         .train("cifar-mlp")
         .algo("local")
         .inner(InnerOpt::Nesterov { beta0: 0.0, wd: 1e-4 })
         .workers(1) // single worker: the Lookahead regime
-        .steps(300)
+        .steps(steps)
         .seed(7)
-        .slowmo_opt(slowmo)
         .schedule(Schedule::Const(0.08))
         .heterogeneity(0.0)
-        .cost(CostModel::free())
-        .run()?;
+        .cost(CostModel::free());
+    if let Some(spec) = outer {
+        // k=6 fast steps per outer update; buffers kept across pulls.
+        b = b
+            .outer(spec)
+            .tau(6)
+            .buffers(slowmo::slowmo::BufferStrategy::Maintain);
+    }
+    let r = b.run()?;
     println!(
         "{label:<24} best train {:.4}   val acc {:.2}%",
         r.best_train_loss,
@@ -41,37 +49,23 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let session = Session::open()?;
+    let session = match Session::open() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not found ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let steps = slowmo::util::env_u64("SLOWMO_EXAMPLE_STEPS", 300);
     println!("Lookahead as SlowMo(m=1, beta=0) — paper §2 special case\n");
-    // Plain SGD: no wrapper at all.
-    run(&session, None, "sgd")?;
-    // Lookahead: k=6 fast steps, pull back halfway (α=0.5).
-    run(
-        &session,
-        Some(
-            SlowMoCfg::new(0.5, 0.0, 6)
-                .with_buffers(BufferStrategy::Maintain),
-        ),
-        "lookahead(k=6, a=0.5)",
-    )?;
+    // Plain SGD: no outer wrapper at all.
+    run(&session, steps, None, "sgd")?;
+    // Lookahead: pull back halfway (α=0.5) — the `lookahead` outer rule.
+    run(&session, steps, Some("lookahead:0.5"), "lookahead(k=6, a=0.5)")?;
     // α=1 anchor: adopting the fast weights exactly (= plain SGD dynamics
-    // in the m=1, β=0 case — sanity anchor).
-    run(
-        &session,
-        Some(
-            SlowMoCfg::new(1.0, 0.0, 6)
-                .with_buffers(BufferStrategy::Maintain),
-        ),
-        "slowmo(a=1, b=0)",
-    )?;
+    // in the m=1 case — sanity anchor, the `avg` fast path).
+    run(&session, steps, Some("avg"), "avg(a=1, b=0)")?;
     // Slow momentum on a single node (BMUF-style m=1).
-    run(
-        &session,
-        Some(
-            SlowMoCfg::new(1.0, 0.5, 6)
-                .with_buffers(BufferStrategy::Maintain),
-        ),
-        "slowmo(a=1, b=0.5)",
-    )?;
+    run(&session, steps, Some("slowmo:0.5"), "slowmo(a=1, b=0.5)")?;
     Ok(())
 }

@@ -523,6 +523,66 @@ pub fn noaverage(env: &Env, task: &TaskSpec) -> Result<Table> {
     Ok(table)
 }
 
+// ------------------------------------------------------------ outer rules
+
+/// Outer-optimizer sweep: every rule registered in the session's
+/// [`crate::slowmo::OuterRegistry`] (built-ins *and* custom
+/// registrations, each at its default arguments) on one task, same base
+/// algorithm and τ — the DeMo-style ablation the pluggable
+/// [`crate::slowmo::OuterOpt`] API exists for.
+pub fn outers(env: &Env, task: &TaskSpec) -> Result<Table> {
+    let mut table = Table::new(
+        "Outer-optimizer sweep (Local base, fixed tau)",
+        &["outer", "best train loss", "best val metric", "final val loss"],
+    );
+    let tau = env.scale.tau_local();
+    let keys: Vec<String> = env
+        .session
+        .outer_registry()
+        .keys()
+        .iter()
+        .map(|k| k.to_string())
+        .collect();
+    for key in &keys {
+        let sel = env.session.outer_registry().parse(key)?;
+        // A registered rule with a required (no-default) argument cannot
+        // run at its bare key — label it and keep sweeping.
+        let rule = match env.session.outer_registry().build(&sel) {
+            Ok(r) => r,
+            Err(e) => {
+                crate::info!("outers: skipping {key}: {e}");
+                table.row(&[
+                    key.clone(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+        };
+        let s = SlowMoCfg::with_outer(sel, tau).with_buffers(task.buffers);
+        let r = run_cell(
+            env,
+            cell(env, task, AlgoSel::with_inner("local", task.inner),
+                 Some(s), 0),
+        )?;
+        let params = rule.params();
+        table.row(&[
+            if params.is_empty() {
+                key.clone()
+            } else {
+                format!("{key}({params})")
+            },
+            fmt4(r.best_train_loss),
+            fmt_pct(r.best_eval_metric),
+            fmt4(r.final_eval_loss),
+        ]);
+    }
+    table.print();
+    table.write_json(&env.out_path("outers.json"))?;
+    Ok(table)
+}
+
 // ----------------------------------------------------------------- theory
 
 /// Theorem 1 / Corollary 1-2 validation on the quadratic workload

@@ -37,10 +37,15 @@
 //! [`algorithms::AlgoRegistry`] — registering a new
 //! [`algorithms::BaseAlgorithm`] factory under a key makes it reachable
 //! from the CLI (`--algo`), TOML configs, the bench harness and the
-//! builder (see ROADMAP.md "Adding an algorithm"). Live runs stream
-//! through the [`trainer::RunObserver`] trait (`on_step`,
-//! `on_outer_boundary`, `on_eval`) for progress reporting, metric
-//! streaming and early stopping.
+//! builder (see ROADMAP.md "Adding an algorithm"). The outer update rule
+//! applied at SlowMo boundaries is pluggable the same way through the
+//! [`slowmo::OuterRegistry`] (`--outer`, `[outer]` tables,
+//! `TrainBuilder::outer`; see ROADMAP.md "Adding an outer optimizer"):
+//! `slowmo` is the paper's rule, with `avg`, `lookahead`, `nesterov` and
+//! `adam` built in. Live runs stream through the
+//! [`trainer::RunObserver`] trait (`on_step`, `on_outer_boundary`,
+//! `on_eval`) for progress reporting, metric streaming and early
+//! stopping.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.

@@ -38,6 +38,13 @@ fn app() -> App {
                 .flag(Flag::opt("steps", "240", "inner steps per worker"))
                 .flag(Flag::opt("seed", "0", "RNG seed"))
                 .flag(Flag::switch("slowmo", "wrap the base algorithm in SlowMo"))
+                .flag(Flag::opt("outer", "",
+                                "outer-optimizer registry spec: \
+                                 slowmo[:beta,alpha]|avg|\
+                                 lookahead[:alpha]|nesterov[:beta]|\
+                                 adam[:b1,b2] — enables the outer wrapper \
+                                 and overrides --alpha/--beta (see \
+                                 `slowmo info`)"))
                 .flag(Flag::opt("tau", "12", "SlowMo inner-loop length"))
                 .flag(Flag::opt("alpha", "1.0", "slow learning rate"))
                 .flag(Flag::opt("beta", "0.7", "slow momentum"))
@@ -128,7 +135,8 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
                     .map_err(anyhow::Error::msg)?,
             );
         }
-        if args.get_bool("slowmo") {
+        let outer_spec = args.string("outer");
+        if args.get_bool("slowmo") || !outer_spec.is_empty() {
             b = b
                 .slowmo_cfg(SlowMoCfg::new(
                     args.f32("alpha"),
@@ -139,6 +147,10 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
                     args.get_parsed::<BufferStrategy>("buffers")
                         .map_err(anyhow::Error::msg)?,
                 );
+            if !outer_spec.is_empty() {
+                // Replaces the slow-momentum rule, keeps --tau/--buffers.
+                b = b.outer(&outer_spec);
+            }
             if args.get_bool("no-average") {
                 b = b.no_average();
             }
@@ -238,6 +250,9 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         "noaverage" => {
             experiments::noaverage(&env, &tasks[0])?;
         }
+        "outers" => {
+            experiments::outers(&env, &tasks[0])?;
+        }
         "theory" => {
             experiments::theory(&env)?;
         }
@@ -250,7 +265,7 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (table1|table2|fig2|fig3|figb2|\
-             tableb23|tableb4|doubleavg|noaverage|theory|all)"
+             tableb23|tableb4|doubleavg|noaverage|outers|theory|all)"
         ),
     }
     println!("\n[exp {which} done in {}]",
@@ -279,5 +294,7 @@ fn cmd_info() -> anyhow::Result<()> {
              manifest.optim.keys().collect::<Vec<_>>());
     println!("algorithms (--algo):");
     print!("{}", slowmo::algorithms::AlgoRegistry::builtin().help_text());
+    println!("outer optimizers (--outer):");
+    print!("{}", slowmo::slowmo::OuterRegistry::builtin().help_text());
     Ok(())
 }

@@ -170,6 +170,97 @@ impl Kernels {
         }
     }
 
+    /// Outer-Nesterov update on the displacement pseudo-gradient
+    /// (`nesterov` outer rule): updates `x0` and `u` in place. The native
+    /// path runs the fused mirror; the PJRT path materializes the
+    /// pseudo-gradient and reuses the AOT `nesterov` graph with wd=0.
+    pub fn outer_nesterov(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        u: &mut Vec<f32>,
+        gamma: f32,
+        beta: f32,
+    ) -> Result<()> {
+        match self {
+            Kernels::Native => {
+                super::outer_nesterov_step(x0, xt, u, gamma, beta);
+                Ok(())
+            }
+            Kernels::Pjrt { nesterov, .. } => {
+                let d = x0.len();
+                let g: Vec<f32> = x0
+                    .iter()
+                    .zip(xt)
+                    .map(|(a, b)| (a - b) / gamma)
+                    .collect();
+                let out = nesterov.exec(&[
+                    Arg::F32(x0, &[d]),
+                    Arg::F32(u, &[d]),
+                    Arg::F32(&g, &[d]),
+                    Arg::F32(&[gamma], &[1]),
+                    Arg::F32(&[beta], &[1]),
+                    Arg::F32(&[0.0], &[1]),
+                ])?;
+                let mut it = out.into_iter();
+                *x0 = it.next().unwrap();
+                *u = it.next().unwrap();
+                Ok(())
+            }
+        }
+    }
+
+    /// Outer-Adam update on the displacement pseudo-gradient (`adam`
+    /// outer rule): updates `x0` and the two moment buffers in place.
+    /// `step` is the 1-based outer iteration count (bias correction).
+    /// The native path runs the fused mirror; the PJRT path materializes
+    /// the pseudo-gradient and reuses the AOT `adam` graph.
+    #[allow(clippy::too_many_arguments)]
+    pub fn outer_adam(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        gamma: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        step: f32,
+    ) -> Result<()> {
+        match self {
+            Kernels::Native => {
+                super::outer_adam_step(x0, xt, m, v, gamma, beta1, beta2,
+                                       eps, step);
+                Ok(())
+            }
+            Kernels::Pjrt { adam, .. } => {
+                let d = x0.len();
+                let g: Vec<f32> = x0
+                    .iter()
+                    .zip(xt)
+                    .map(|(a, b)| (a - b) / gamma)
+                    .collect();
+                let out = adam.exec(&[
+                    Arg::F32(x0, &[d]),
+                    Arg::F32(m, &[d]),
+                    Arg::F32(v, &[d]),
+                    Arg::F32(&g, &[d]),
+                    Arg::F32(&[gamma], &[1]),
+                    Arg::F32(&[beta1], &[1]),
+                    Arg::F32(&[beta2], &[1]),
+                    Arg::F32(&[eps], &[1]),
+                    Arg::F32(&[step], &[1]),
+                ])?;
+                let mut it = out.into_iter();
+                *x0 = it.next().unwrap();
+                *m = it.next().unwrap();
+                *v = it.next().unwrap();
+                Ok(())
+            }
+        }
+    }
+
     /// Gossip mixing `x <- a*x + b*y`.
     pub fn axpy(
         &self,
@@ -224,6 +315,37 @@ mod tests {
         crate::optim::nesterov_step(&mut x2, &mut h2, &g, 0.1, 0.9, 0.0);
         assert_eq!(x, x2);
         assert_eq!(h, h2);
+    }
+
+    #[test]
+    fn native_outer_kernels_match_direct_calls() {
+        let k = Kernels::Native;
+        let x_init = vec![2.0f32, 1.0, 0.5, -1.0];
+        let xt = vec![1.0f32, 1.0, 0.0, 0.0];
+
+        let mut x = x_init.clone();
+        let mut u = vec![0.1f32; 4];
+        k.outer_nesterov(&mut x, &xt, &mut u, 0.2, 0.7).unwrap();
+        let mut x2 = x_init.clone();
+        let mut u2 = vec![0.1f32; 4];
+        crate::optim::outer_nesterov_step(&mut x2, &xt, &mut u2, 0.2, 0.7);
+        assert_eq!(x, x2);
+        assert_eq!(u, u2);
+
+        let mut x = x_init.clone();
+        let mut m = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        k.outer_adam(&mut x, &xt, &mut m, &mut v, 0.2, 0.9, 0.95, 1e-8,
+                     1.0)
+            .unwrap();
+        let mut x2 = x_init;
+        let mut m2 = vec![0.0f32; 4];
+        let mut v2 = vec![0.0f32; 4];
+        crate::optim::outer_adam_step(&mut x2, &xt, &mut m2, &mut v2, 0.2,
+                                      0.9, 0.95, 1e-8, 1.0);
+        assert_eq!(x, x2);
+        assert_eq!(m, m2);
+        assert_eq!(v, v2);
     }
 
     #[test]

@@ -84,6 +84,60 @@ pub fn slowmo_update(
     }
 }
 
+/// Fused outer-Nesterov update on the displacement pseudo-gradient
+/// `g = (x0 - xt)/gamma` (DeMo-style decoupled momentum), in place:
+/// `u <- beta*u + g`; `x0 <- x0 - gamma*(beta*u + g)`. Same math as
+/// [`nesterov_step`] with wd=0 and `g` never materialized.
+pub fn outer_nesterov_step(
+    x0: &mut [f32],
+    xt: &[f32],
+    u: &mut [f32],
+    gamma: f32,
+    beta: f32,
+) {
+    assert_eq!(x0.len(), xt.len());
+    assert_eq!(x0.len(), u.len());
+    for i in 0..x0.len() {
+        let gi = (x0[i] - xt[i]) / gamma;
+        let un = beta * u[i] + gi;
+        u[i] = un;
+        x0[i] -= gamma * (beta * un + gi);
+    }
+}
+
+/// Fused outer-Adam update on the displacement pseudo-gradient, in place.
+/// Same math as [`adam_step`] with `g = (x0 - xt)/gamma` never
+/// materialized; `step` is the 1-based outer iteration count driving the
+/// bias correction.
+#[allow(clippy::too_many_arguments)]
+pub fn outer_adam_step(
+    x0: &mut [f32],
+    xt: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    gamma: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    step: f32,
+) {
+    assert_eq!(x0.len(), xt.len());
+    assert_eq!(x0.len(), m.len());
+    assert_eq!(x0.len(), v.len());
+    let bc1 = 1.0 - beta1.powf(step);
+    let bc2 = 1.0 - beta2.powf(step);
+    for i in 0..x0.len() {
+        let gi = (x0[i] - xt[i]) / gamma;
+        let hn = beta1 * m[i] + (1.0 - beta1) * gi;
+        let vn = beta2 * v[i] + (1.0 - beta2) * gi * gi;
+        m[i] = hn;
+        v[i] = vn;
+        let h_hat = hn / bc1;
+        let v_hat = vn / bc2;
+        x0[i] -= gamma * h_hat / (v_hat.sqrt() + eps);
+    }
+}
+
 /// `x <- a*x + b*y` (gossip mixing / push-sum combine).
 pub fn axpy_mix_inplace(x: &mut [f32], y: &[f32], a: f32, b: f32) {
     assert_eq!(x.len(), y.len());
@@ -204,6 +258,55 @@ mod tests {
         slowmo_update(&mut x0, &xt, &mut u, 0.1, 1.0, 0.5);
         assert!((u[0] - 1.0).abs() < 1e-6);
         assert!((x0[0] + 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn outer_nesterov_matches_inner_nesterov_on_pseudo_gradient() {
+        // The fused kernel must equal nesterov_step(wd=0) fed the
+        // materialized pseudo-gradient, bit for bit.
+        let d = 16;
+        let gamma = 0.3f32;
+        let beta = 0.7f32;
+        let x0: Vec<f32> = (0..d).map(|i| 1.0 + 0.21 * i as f32).collect();
+        let xt: Vec<f32> =
+            (0..d).map(|i| 0.8 + 0.17 * (i as f32).cos()).collect();
+        let u0: Vec<f32> = (0..d).map(|i| 0.05 * i as f32).collect();
+        let mut xa = x0.clone();
+        let mut ua = u0.clone();
+        outer_nesterov_step(&mut xa, &xt, &mut ua, gamma, beta);
+        let g: Vec<f32> =
+            x0.iter().zip(&xt).map(|(a, b)| (a - b) / gamma).collect();
+        let mut xb = x0;
+        let mut ub = u0;
+        nesterov_step(&mut xb, &mut ub, &g, gamma, beta, 0.0);
+        assert_eq!(xa, xb);
+        assert_eq!(ua, ub);
+    }
+
+    #[test]
+    fn outer_adam_matches_inner_adam_on_pseudo_gradient() {
+        let d = 16;
+        let gamma = 0.2f32;
+        let x0: Vec<f32> = (0..d).map(|i| 1.0 + 0.13 * i as f32).collect();
+        let xt: Vec<f32> =
+            (0..d).map(|i| 0.9 + 0.11 * (i as f32).sin()).collect();
+        let m0: Vec<f32> = (0..d).map(|i| 0.01 * i as f32).collect();
+        let v0: Vec<f32> = (0..d).map(|i| 0.02 * i as f32).collect();
+        let mut xa = x0.clone();
+        let mut ma = m0.clone();
+        let mut va = v0.clone();
+        outer_adam_step(&mut xa, &xt, &mut ma, &mut va, gamma, 0.9, 0.95,
+                        1e-8, 3.0);
+        let g: Vec<f32> =
+            x0.iter().zip(&xt).map(|(a, b)| (a - b) / gamma).collect();
+        let mut xb = x0;
+        let mut mb = m0;
+        let mut vb = v0;
+        adam_step(&mut xb, &mut mb, &mut vb, &g, gamma, 0.9, 0.95, 1e-8,
+                  3.0);
+        assert_eq!(xa, xb);
+        assert_eq!(ma, mb);
+        assert_eq!(va, vb);
     }
 
     #[test]

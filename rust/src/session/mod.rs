@@ -23,30 +23,36 @@
 //! Algorithms resolve through the session's string-keyed
 //! [`AlgoRegistry`], so a new [`crate::algorithms::BaseAlgorithm`]
 //! registered with [`Session::registry_mut`] is immediately reachable
-//! from the CLI spec syntax, TOML configs and the builder. Attach a
-//! [`RunObserver`] via [`TrainBuilder::run_observed`] for progress
-//! streaming and early stopping.
+//! from the CLI spec syntax, TOML configs and the builder. Outer
+//! optimizers (the rule applied at SlowMo boundaries) resolve the same
+//! way through the session's [`OuterRegistry`] —
+//! [`TrainBuilder::outer`]`("adam:0.9,0.95")`, `--outer` on the CLI, or
+//! an `[outer]` TOML table — with [`Session::outer_registry_mut`] for
+//! out-of-crate rules. Attach a [`RunObserver`] via
+//! [`TrainBuilder::run_observed`] for progress streaming and early
+//! stopping.
 
 use crate::algorithms::{AlgoRegistry, AlgoSel};
 use crate::configx::Config;
 use crate::net::{ChaosCfg, CostModel};
 use crate::optim::kernels::{InnerOpt, Kernels};
 use crate::runtime::{artifacts_dir, Engine, Manifest};
-use crate::slowmo::{BufferStrategy, SlowMoCfg};
+use crate::slowmo::{BufferStrategy, OuterRegistry, SlowMoCfg};
 use crate::trainer::{
     self, model_exec, ModelExec, RunObserver, Schedule, TrainCfg,
     TrainResult,
 };
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 /// One loaded experiment environment: manifest + engine + caches +
-/// algorithm registry.
+/// algorithm/outer-optimizer registries.
 pub struct Session {
     manifest: Manifest,
     engine: Option<Arc<Engine>>,
     registry: AlgoRegistry,
+    outers: OuterRegistry,
     /// (preset, force_pjrt) -> model executor.
     models: Mutex<BTreeMap<(String, bool), Arc<ModelExec>>>,
     /// Flat length d -> PJRT optimizer kernels.
@@ -84,6 +90,7 @@ impl Session {
             manifest,
             engine,
             registry: AlgoRegistry::builtin(),
+            outers: OuterRegistry::builtin(),
             models: Mutex::new(BTreeMap::new()),
             pjrt_kernels: Mutex::new(BTreeMap::new()),
             inits: Mutex::new(BTreeMap::new()),
@@ -106,6 +113,18 @@ impl Session {
     /// `session.registry_mut().register("demo", ..., factory)`.
     pub fn registry_mut(&mut self) -> &mut AlgoRegistry {
         &mut self.registry
+    }
+
+    /// The outer-optimizer registry backing `--outer`, the `[outer]` TOML
+    /// table and [`TrainBuilder::outer`].
+    pub fn outer_registry(&self) -> &OuterRegistry {
+        &self.outers
+    }
+
+    /// Mutable outer-registry access, e.g. to register an out-of-crate
+    /// rule: `session.outer_registry_mut().register("demo", ..., f)`.
+    pub fn outer_registry_mut(&mut self) -> &mut OuterRegistry {
+        &mut self.outers
     }
 
     /// Start describing a run of `preset`. See [`TrainBuilder`] for the
@@ -132,8 +151,17 @@ impl Session {
         let model = self.model(&cfg.preset, cfg.force_pjrt)?;
         let kernels = self.kernels(d, cfg.native_kernels)?;
         let algo = self.registry.build(&cfg.algo, cfg.m)?;
-        trainer::run_prepared(cfg, algo, &init, &desc, &model, &kernels,
-                              observer)
+        let outer_rule = match &cfg.slowmo {
+            Some(s) => {
+                s.validate()?;
+                Some(self.outers.build(&s.outer).with_context(|| {
+                    format!("resolving outer {:?}", s.outer.spec())
+                })?)
+            }
+            None => None,
+        };
+        trainer::run_prepared(cfg, algo, outer_rule, &init, &desc, &model,
+                              &kernels, observer)
     }
 
     /// Cached model executor for `preset` (build-once across runs).
@@ -199,6 +227,8 @@ pub struct TrainBuilder<'s> {
     session: Option<&'s Session>,
     cfg: TrainCfg,
     algo_spec: Option<String>,
+    outer_spec: Option<String>,
+    outer_tau: Option<u64>,
     inner: Option<InnerOpt>,
     lr: Option<f32>,
     sched: Option<Schedule>,
@@ -208,12 +238,15 @@ pub struct TrainBuilder<'s> {
 
 impl<'s> TrainBuilder<'s> {
     /// A builder not bound to a [`Session`]: `build_cfg` works (against
-    /// the built-in registry), `run` does not. Prefer `session.train(..)`.
+    /// the built-in registries), `run` does not. Prefer
+    /// `session.train(..)`.
     pub fn new(preset: &str) -> Self {
         Self {
             session: None,
             cfg: TrainCfg::defaults(preset),
             algo_spec: None,
+            outer_spec: None,
+            outer_tau: None,
             inner: None,
             lr: None,
             sched: None,
@@ -265,9 +298,30 @@ impl<'s> TrainBuilder<'s> {
     }
 
     /// Wrap the base algorithm in SlowMo with α=1 (the paper's setting),
-    /// slow momentum `beta` and inner-loop length `tau`.
+    /// slow momentum `beta` and inner-loop length `tau` — a thin alias
+    /// for `outer("slowmo:<beta>")` with that `tau`.
     pub fn slowmo(self, beta: f32, tau: u64) -> Self {
         self.slowmo_cfg(SlowMoCfg::new(1.0, beta, tau))
+    }
+
+    /// Select the outer-optimizer rule by registry spec string, e.g.
+    /// "slowmo:0.7", "avg", "lookahead:0.5", "nesterov:0.9",
+    /// "adam:0.9,0.95". Enables the outer wrapper when no SlowMo config
+    /// is set yet (default τ=12); otherwise replaces the configured rule
+    /// and keeps the structural knobs (τ, buffers, exact average).
+    /// Parsed (and validated) against the session's
+    /// [`OuterRegistry`] when the run is built.
+    pub fn outer(mut self, spec: &str) -> Self {
+        self.outer_spec = Some(spec.to_string());
+        self
+    }
+
+    /// Override the outer-loop length τ. Requires an outer wrapper
+    /// (`slowmo()`, `slowmo_cfg()` or `outer()`); an error at build time
+    /// otherwise.
+    pub fn tau(mut self, tau: u64) -> Self {
+        self.outer_tau = Some(tau);
+        self
     }
 
     pub fn slowmo_cfg(mut self, s: SlowMoCfg) -> Self {
@@ -402,6 +456,11 @@ impl<'s> TrainBuilder<'s> {
     /// buffers = "reset"
     /// exact_average = true
     ///
+    /// [outer]                   # outer-optimizer registry selection;
+    /// rule = "adam:0.9,0.95"    # enables the wrapper on its own, or
+    /// tau = 16                  # overrides [slowmo]'s rule when both
+    ///                           # sections are present
+    ///
     /// [chaos]                   # section presence enables chaos
     /// seed = 7
     /// delay_ms = 2.0            # mean per-message extra delay
@@ -479,6 +538,28 @@ impl<'s> TrainBuilder<'s> {
                 s = s.no_average();
             }
             self.cfg.slowmo = Some(s);
+        }
+        if c.sections.contains_key("outer") {
+            let rule = c
+                .get("outer", "rule")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "[outer] needs rule = \"<key[:args]>\" (e.g. \
+                         rule = \"adam:0.9,0.95\")"
+                    )
+                })?;
+            self.outer_spec = Some(rule.to_string());
+            if let Some(v) = c.get("outer", "tau") {
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow!("[outer] tau must be a number")
+                })?;
+                ensure!(
+                    f >= 1.0 && f.fract() == 0.0,
+                    "[outer] tau must be an integer >= 1 (got {f})"
+                );
+                self.outer_tau = Some(f as u64);
+            }
         }
         if c.sections.contains_key("chaos") {
             // Seeds are full 64-bit values; an f64 TOML number silently
@@ -577,7 +658,11 @@ impl<'s> TrainBuilder<'s> {
         Ok(self)
     }
 
-    fn resolve(self, registry: &AlgoRegistry) -> Result<TrainCfg> {
+    fn resolve(
+        self,
+        registry: &AlgoRegistry,
+        outers: &OuterRegistry,
+    ) -> Result<TrainCfg> {
         let mut cfg = self.cfg;
         if let Some(spec) = &self.algo_spec {
             cfg.algo = registry
@@ -587,6 +672,24 @@ impl<'s> TrainBuilder<'s> {
         if let Some(inner) = self.inner {
             cfg.algo.inner = inner;
         }
+        if let Some(spec) = &self.outer_spec {
+            let sel = outers
+                .parse(spec)
+                .with_context(|| format!("resolving outer {spec:?}"))?;
+            match &mut cfg.slowmo {
+                Some(s) => s.outer = sel,
+                None => cfg.slowmo = Some(SlowMoCfg::with_outer(sel, 12)),
+            }
+        }
+        if let Some(tau) = self.outer_tau {
+            match &mut cfg.slowmo {
+                Some(s) => s.tau = tau,
+                None => bail!(
+                    "tau() requires an outer wrapper — set slowmo(..) or \
+                     outer(..) first"
+                ),
+            }
+        }
         if let Some(s) = &mut cfg.slowmo {
             if let Some(b) = self.buffers {
                 s.buffers = b;
@@ -594,6 +697,16 @@ impl<'s> TrainBuilder<'s> {
             if self.no_average {
                 s.exact_average = false;
             }
+            // Structural validation surfaces here (and again at run) —
+            // never as a constructor panic.
+            s.validate()?;
+            // Fail fast on unknown rules / bad or out-of-range args even
+            // when the cfg came in pre-built (slowmo_cfg with a
+            // hand-rolled OuterSel): a full build runs the factory's own
+            // argument validation, not just the spec grammar.
+            outers.build(&s.outer).with_context(|| {
+                format!("resolving outer {:?}", s.outer.spec())
+            })?;
         }
         cfg.sched = match self.sched {
             Some(s) => s,
@@ -609,23 +722,25 @@ impl<'s> TrainBuilder<'s> {
         Ok(cfg)
     }
 
-    /// Resolve to a [`TrainCfg`]: parses the algo spec against the bound
-    /// session's registry (or the built-in registry when detached) and
-    /// materializes the auto schedule.
+    /// Resolve to a [`TrainCfg`]: parses the algo and outer specs against
+    /// the bound session's registries (or the built-in registries when
+    /// detached) and materializes the auto schedule.
     pub fn build_cfg(self) -> Result<TrainCfg> {
         match self.session {
             Some(s) => {
-                let registry = s.registry();
-                self.resolve(registry)
+                let (algos, outers) = (s.registry(), s.outer_registry());
+                self.resolve(algos, outers)
             }
-            None => self.resolve(&AlgoRegistry::builtin()),
+            None => self.resolve(&AlgoRegistry::builtin(),
+                                 &OuterRegistry::builtin()),
         }
     }
 
-    /// Resolve against an explicit registry (detached-builder use).
+    /// Resolve against an explicit algorithm registry (detached-builder
+    /// use); outer rules resolve against the built-in [`OuterRegistry`].
     pub fn build_cfg_with(self, registry: &AlgoRegistry)
                           -> Result<TrainCfg> {
-        self.resolve(registry)
+        self.resolve(registry, &OuterRegistry::builtin())
     }
 
     pub fn run(self) -> Result<TrainResult> {
@@ -647,7 +762,8 @@ impl<'s> TrainBuilder<'s> {
                  session.train(preset)"
             )
         })?;
-        let cfg = self.resolve(session.registry())?;
+        let cfg =
+            self.resolve(session.registry(), session.outer_registry())?;
         session.run_observed(&cfg, observer)
     }
 }
@@ -794,9 +910,148 @@ exact_average = false
         assert!(!cfg.native_kernels);
         let s = cfg.slowmo.unwrap();
         assert_eq!(s.tau, 6);
-        assert_eq!(s.beta, 0.5);
+        assert_eq!(s.outer, crate::slowmo::OuterSel::slowmo(1.0, 0.5));
         assert_eq!(s.buffers, BufferStrategy::Maintain);
         assert!(!s.exact_average);
+    }
+
+    #[test]
+    fn builder_outer_spec_enables_and_overrides() {
+        use crate::slowmo::OuterSel;
+        // .outer alone enables the wrapper with default tau.
+        let cfg = TrainBuilder::new("quad")
+            .outer("adam:0.9,0.95")
+            .build_cfg()
+            .unwrap();
+        let s = cfg.slowmo.as_ref().unwrap();
+        assert_eq!(s.outer, OuterSel::with_args("adam", &[0.9, 0.95]));
+        assert_eq!(s.tau, 12);
+        // .tau overrides the default; buffers still apply.
+        let cfg = TrainBuilder::new("quad")
+            .outer("nesterov:0.9")
+            .tau(16)
+            .buffers(BufferStrategy::Maintain)
+            .build_cfg()
+            .unwrap();
+        let s = cfg.slowmo.as_ref().unwrap();
+        assert_eq!(s.outer.key, "nesterov");
+        assert_eq!(s.tau, 16);
+        assert_eq!(s.buffers, BufferStrategy::Maintain);
+        // .outer after .slowmo replaces the rule, keeps tau.
+        let cfg = TrainBuilder::new("quad")
+            .slowmo(0.7, 8)
+            .outer("avg")
+            .build_cfg()
+            .unwrap();
+        let s = cfg.slowmo.as_ref().unwrap();
+        assert_eq!(s.outer, OuterSel::new("avg"));
+        assert_eq!(s.tau, 8);
+        // The legacy alias builds outer = slowmo:<beta>.
+        let cfg = TrainBuilder::new("quad")
+            .slowmo(0.7, 8)
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.slowmo.unwrap().outer,
+                   OuterSel::slowmo(1.0, 0.7));
+    }
+
+    #[test]
+    fn bad_outer_spec_fails_at_build() {
+        let e = TrainBuilder::new("quad")
+            .outer("bogus")
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bogus"), "{e}");
+        assert!(TrainBuilder::new("quad")
+            .outer("adam:0.9,nope")
+            .build_cfg()
+            .is_err());
+        // Factory-level argument validation also fires at build_cfg, not
+        // only at run: lookahead alpha and adam betas are range-checked.
+        assert!(TrainBuilder::new("quad")
+            .outer("lookahead:0")
+            .build_cfg()
+            .is_err());
+        assert!(TrainBuilder::new("quad")
+            .outer("adam:1,0.95")
+            .build_cfg()
+            .is_err());
+        // tau() without a wrapper is an error, not a silent no-op.
+        let e = TrainBuilder::new("quad")
+            .tau(8)
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("outer"), "{e}");
+    }
+
+    #[test]
+    fn invalid_tau_is_an_err_not_a_panic() {
+        // The satellite contract: TrainBuilder::slowmo(0.5, 0) fails at
+        // build/run like the TOML path does, instead of aborting.
+        let e = TrainBuilder::new("quad")
+            .slowmo(0.5, 0)
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tau"), "{e}");
+        assert!(TrainBuilder::new("quad")
+            .outer("avg")
+            .tau(0)
+            .build_cfg()
+            .is_err());
+    }
+
+    #[test]
+    fn config_bridge_applies_outer_section() {
+        use crate::slowmo::OuterSel;
+        let toml = r#"
+[outer]
+rule = "nesterov:0.8"
+tau = 24
+"#;
+        let c = Config::parse(toml).unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        let s = cfg.slowmo.unwrap();
+        assert_eq!(s.outer, OuterSel::with_args("nesterov", &[0.8]));
+        assert_eq!(s.tau, 24);
+        // [outer] overrides [slowmo]'s rule but inherits its knobs.
+        let toml = r#"
+[slowmo]
+beta = 0.7
+tau = 6
+buffers = "maintain"
+
+[outer]
+rule = "adam"
+"#;
+        let c = Config::parse(toml).unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        let s = cfg.slowmo.unwrap();
+        assert_eq!(s.outer, OuterSel::new("adam"));
+        assert_eq!(s.tau, 6);
+        assert_eq!(s.buffers, BufferStrategy::Maintain);
+        // Bad sections are hard errors.
+        let c = Config::parse("[outer]").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        let c = Config::parse("[outer]\nrule = \"avg\"\ntau = 0").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        let c =
+            Config::parse("[outer]\nrule = \"nope\"").unwrap();
+        assert!(TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .is_err());
     }
 
     #[test]

@@ -2,21 +2,36 @@
 //!
 //! Wraps any [`BaseAlgorithm`]: after every τ inner steps it
 //! (1) exact-averages worker parameters with the ring allreduce (line 6),
-//! (2) applies the slow-momentum update (lines 7–8) through the Layer-1
-//! `slowmo_update` kernel, and (3) applies the configured base-optimizer
-//! buffer strategy (line 2; App. B.4).
+//! (2) applies the configured [`OuterOpt`] update rule (lines 7–8 for the
+//! default slow-momentum rule, through the Layer-1 `slowmo_update`
+//! kernel), and (3) applies the configured base-optimizer buffer strategy
+//! (line 2; App. B.4).
+//!
+//! [`outer_update`] is the *framework shell*: boundary membership, the
+//! exact average, elastic rejoin state transfer and the buffer strategy.
+//! The update rule itself — and the state it owns — is pluggable through
+//! the [`outer`] module's [`OuterOpt`] trait and string-keyed
+//! [`OuterRegistry`] (`slowmo`, `avg`, `lookahead`, `nesterov`, `adam`,
+//! plus out-of-crate registrations).
 //!
 //! Framework special cases (all covered by tests):
-//! - α=1, β=0, base=Local  → Local SGD
+//! - α=1, β=0, base=Local  → Local SGD (also the `avg` outer rule)
 //! - β>0, base=Local       → BMUF
 //! - τ=1, α=1, β=0         → AR-SGD (up to gradient- vs param-averaging)
-//! - m=1, β=0, α∈(0,1]     → Lookahead
+//! - m=1, β=0, α∈(0,1]     → Lookahead (also the `lookahead` outer rule)
 //! - `exact_average=false` → SGP-SlowMo-noaverage (paper §6)
+
+pub mod outer;
+
+pub use outer::{
+    AdamRule, AvgRule, LookaheadRule, NesterovRule, OuterOpt, OuterOptState,
+    OuterRegistry, OuterSel, SlowMoRule,
+};
 
 use crate::algorithms::{BaseAlgorithm, WorkerState};
 use crate::net::{ring_allreduce_mean_group, ChaosPlan, Fabric};
 use crate::optim::kernels::Kernels;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Chunk-lane tags for the rejoin state transfer at boundary `t`. Bit 63
 /// separates them from collective tags (`coll_id << 32 | round`, with
@@ -86,13 +101,14 @@ impl BufferStrategy {
     }
 }
 
-/// SlowMo hyperparameters.
+/// Outer-loop configuration: which [`OuterOpt`] rule runs at boundaries
+/// (by registry selection), how often, and how the framework shell treats
+/// base-optimizer buffers and the exact average.
 #[derive(Clone, Debug)]
 pub struct SlowMoCfg {
-    /// Slow learning rate α (paper fixes α=1 throughout).
-    pub alpha: f32,
-    /// Slow momentum β (paper tunes 0.4–0.8).
-    pub beta: f32,
+    /// Outer update rule, as a registry selection (key + args). Resolved
+    /// against the session's [`OuterRegistry`] when the run starts.
+    pub outer: OuterSel,
     /// Inner steps per outer iteration τ.
     pub tau: u64,
     pub buffers: BufferStrategy,
@@ -101,11 +117,22 @@ pub struct SlowMoCfg {
 }
 
 impl SlowMoCfg {
+    /// The paper's slow-momentum rule — a thin alias for
+    /// `outer = slowmo:<beta>[,<alpha>]` (α=1, the paper's setting, is
+    /// omitted from the spec).
+    ///
+    /// Invalid values (τ=0) are *not* rejected here: validation surfaces
+    /// as an `Err` when the run is built (`TrainBuilder::run`/`build_cfg`
+    /// and `Session::run`), matching the TOML config path, instead of
+    /// aborting the process.
     pub fn new(alpha: f32, beta: f32, tau: u64) -> Self {
-        assert!(tau >= 1, "tau must be >= 1");
+        Self::with_outer(OuterSel::slowmo(alpha, beta), tau)
+    }
+
+    /// Any registered outer rule.
+    pub fn with_outer(outer: OuterSel, tau: u64) -> Self {
         Self {
-            alpha,
-            beta,
+            outer,
             tau,
             buffers: BufferStrategy::Reset,
             exact_average: true,
@@ -122,51 +149,73 @@ impl SlowMoCfg {
         self
     }
 
+    /// Structural validation (run before any boundary arithmetic).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.tau >= 1,
+            "slowmo tau must be >= 1 (got {})",
+            self.tau
+        );
+        Ok(())
+    }
+
     /// Is `k+1` (1-based step count) an outer boundary?
     pub fn is_boundary(&self, k: u64) -> bool {
         (k + 1) % self.tau == 0
     }
 }
 
-/// Per-worker outer-loop state: the slow momentum buffer u_t and the outer
-/// iterate x_{t,0}. After every exact average these are identical across
+/// Per-worker outer-loop state: the outer iterate x_{t,0} plus whatever
+/// buffers the configured [`OuterOpt`] rule owns (the slow momentum u for
+/// the default rule; two moments for outer Adam; nothing for `avg` /
+/// `lookahead`). After every exact average these are identical across
 /// workers (paper's "always synchronized" invariant — asserted in tests);
 /// under the noaverage variant they may drift.
 #[derive(Clone, Debug)]
 pub struct OuterState {
-    pub u: Vec<f32>,
     pub x0: Vec<f32>,
+    /// Rule-owned state buffers (shape decided by [`OuterOpt::init`]).
+    pub opt: OuterOptState,
     /// Outer iterations completed.
     pub t: u64,
 }
 
 impl OuterState {
-    pub fn new(init: &[f32]) -> Self {
+    pub fn new(init: &[f32], rule: &dyn OuterOpt) -> Self {
         Self {
-            u: vec![0.0; init.len()],
             x0: init.to_vec(),
+            opt: rule.init(init.len()),
             t: 0,
         }
+    }
+
+    /// The slow-momentum buffer, for rules carrying exactly one state
+    /// buffer (test/inspection convenience; panics otherwise).
+    pub fn u(&self) -> &Vec<f32> {
+        assert_eq!(self.opt.bufs.len(), 1, "rule has no single u buffer");
+        &self.opt.bufs[0]
     }
 }
 
 /// Execute one outer boundary (paper Alg. 1 lines 6–8 + line 2 for the
-/// next iteration) for `worker`. Must be called by all workers
-/// concurrently when `exact_average` or `buffers == Average` (collectives).
+/// next iteration) for `worker`: the framework shell around the pluggable
+/// [`OuterOpt`] `rule`. Must be called by all workers concurrently when
+/// `exact_average` or `buffers == Average` (collectives).
 ///
 /// `gamma` is the fast learning rate γ_t used during the inner loop.
 /// Returns the updated simulated clock.
 ///
 /// With a [`ChaosPlan`], membership is elastic: a worker whose fault
 /// window covers this boundary is excluded (the ring collective is
-/// rebuilt over survivors and the slow-momentum buffer is rescaled by the
-/// live-count ratio); at its first live boundary after an outage the
-/// worker rejoins by pulling the freshly-updated `(x0, u)` from the
-/// lowest-ranked survivor — its local progress during the outage is lost,
-/// like a real node restart.
+/// rebuilt over survivors and the rule's state is rescaled via
+/// [`OuterOpt::scale_state`] by the live-count ratio); at its first live
+/// boundary after an outage the worker rejoins by pulling the
+/// freshly-updated `(x0, state)` from the lowest-ranked survivor — its
+/// local progress during the outage is lost, like a real node restart.
 #[allow(clippy::too_many_arguments)]
 pub fn outer_update(
     cfg: &SlowMoCfg,
+    rule: &dyn OuterOpt,
     algo: &dyn BaseAlgorithm,
     fabric: &Fabric,
     kernels: &Kernels,
@@ -179,6 +228,10 @@ pub fn outer_update(
 ) -> Result<f64> {
     let t = outer.t;
     let d = state.x.len();
+    // Rejoin wire format, rule-agnostic: message 1 is x0 (d elems),
+    // message 2 is every rule state buffer concatenated plus the packed
+    // leader clock (n_bufs*d + 2 elems).
+    let state_msg_len = rule.n_bufs() * d + 2;
     if let Some(plan) = chaos {
         if plan.down(worker, t) {
             // Mid-outage: excluded from the collective; the outer state
@@ -188,22 +241,36 @@ pub fn outer_update(
         }
         if plan.is_rejoiner(worker, t) {
             // Rejoin by pulling the post-update outer state from the
-            // lowest-ranked contributor. The u payload carries the
+            // lowest-ranked contributor. The state payload carries the
             // leader's clock in its last two slots; the state cannot
             // arrive before the leader finished computing it.
             let (tag_x, tag_u) = rejoin_tags(t);
             let x0 = fabric.chunk_recv_tag(worker, tag_x);
-            let mut u = fabric.chunk_recv_tag(worker, tag_u);
-            debug_assert_eq!(u.len(), d + 2);
-            let lo = u.pop().unwrap_or(0.0);
-            let hi = u.pop().unwrap_or(0.0);
+            let mut payload = fabric.chunk_recv_tag(worker, tag_u);
+            // A short (or otherwise misshaped) payload would silently
+            // zero-fill the clock and corrupt the rule state — hard error
+            // instead, naming the worker and boundary.
+            ensure!(
+                x0.len() == d && payload.len() == state_msg_len,
+                "rejoin state transfer corrupt at worker {worker}, outer \
+                 boundary {t}: got x0 {} / state {} elems, want {d} / {} \
+                 (outer rule {:?} carries {} buffer(s))",
+                x0.len(),
+                payload.len(),
+                state_msg_len,
+                rule.key(),
+                rule.n_bufs()
+            );
+            let lo = payload.pop().expect("payload length checked");
+            let hi = payload.pop().expect("payload length checked");
             let leader_clock = clock_from_f32s(hi, lo);
-            // Two messages: x0 (d elems) and u + packed clock (d + 2).
             clock = clock.max(leader_clock)
                 + fabric.cost.xfer_time(d)
-                + fabric.cost.xfer_time(d + 2);
+                + fabric.cost.xfer_time(state_msg_len);
             outer.x0 = x0;
-            outer.u = u;
+            for (i, buf) in outer.opt.bufs.iter_mut().enumerate() {
+                buf.copy_from_slice(&payload[i * d..(i + 1) * d]);
+            }
             state.x.copy_from_slice(&outer.x0);
             state.w = 1.0;
             state.z.copy_from_slice(&state.x);
@@ -227,29 +294,19 @@ pub fn outer_update(
         algo.on_exact_average(state);
     }
 
-    // Elastic membership: u aggregates displacement mass over the live
-    // group; rescale by the live-count ratio when membership changed
-    // since the previous boundary.
+    // Elastic membership: the rule state aggregates displacement mass
+    // over the live group; rescale by the live-count ratio when
+    // membership changed since the previous boundary.
     if let Some(plan) = chaos {
         let live = group.len();
         let prev = plan.contributor_count_before(t);
         if live != prev {
-            let f = live as f32 / prev as f32;
-            for v in outer.u.iter_mut() {
-                *v *= f;
-            }
+            rule.scale_state(&mut outer.opt, live as f32 / prev as f32);
         }
     }
 
-    // Lines 7-8 via the fused L1 kernel: updates (x0, u) in place.
-    kernels.slowmo_update(
-        &mut outer.x0,
-        &state.x,
-        &mut outer.u,
-        gamma,
-        cfg.alpha,
-        cfg.beta,
-    )?;
+    // Lines 7-8: the pluggable outer update (fused L1 kernels), in place.
+    rule.step(&mut outer.x0, &state.x, &mut outer.opt, gamma, t, kernels)?;
 
     // Adopt the new outer iterate as the inner starting point.
     state.x.copy_from_slice(&outer.x0);
@@ -261,14 +318,17 @@ pub fn outer_update(
         let rejoiners = plan.rejoiners(t);
         if !rejoiners.is_empty() && worker == group[0] {
             let (tag_x, tag_u) = rejoin_tags(t);
-            let mut u_msg = outer.u.clone();
-            u_msg.extend_from_slice(&clock_to_f32s(clock));
+            let mut msg = Vec::with_capacity(state_msg_len);
+            for buf in &outer.opt.bufs {
+                msg.extend_from_slice(buf);
+            }
+            msg.extend_from_slice(&clock_to_f32s(clock));
             for &r in &rejoiners {
                 fabric.chunk_send(r, tag_x, outer.x0.clone());
-                fabric.chunk_send(r, tag_u, u_msg.clone());
+                fabric.chunk_send(r, tag_u, msg.clone());
             }
             clock += (fabric.cost.xfer_time(d)
-                + fabric.cost.xfer_time(d + 2))
+                + fabric.cost.xfer_time(state_msg_len))
                 * rejoiners.len() as f64;
         }
     }
@@ -301,6 +361,11 @@ mod tests {
     use crate::optim::kernels::InnerOpt;
     use crate::util::allclose;
 
+    /// Build the configured outer rule (registry path, like the session).
+    fn rule_of(cfg: &SlowMoCfg) -> std::sync::Arc<dyn OuterOpt> {
+        OuterRegistry::builtin().build(&cfg.outer).unwrap()
+    }
+
     fn run_outer(
         cfg: &SlowMoCfg,
         m: usize,
@@ -311,11 +376,12 @@ mod tests {
         let fabric = Fabric::new(m, CostModel::free());
         let algo = Local::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
         let kernels = Kernels::Native;
+        let rule = rule_of(cfg);
         run_workers(m, |w| {
             let mut st = states[w].clone();
             let mut ou = outers[w].clone();
-            outer_update(cfg, &algo, &fabric, &kernels, w, &mut st, &mut ou,
-                         gamma, 0.0, None)
+            outer_update(cfg, &*rule, &algo, &fabric, &kernels, w, &mut st,
+                         &mut ou, gamma, 0.0, None)
                 .unwrap();
             (st, ou)
         })
@@ -324,6 +390,7 @@ mod tests {
     fn mk_states(m: usize, d: usize) -> (Vec<WorkerState>, Vec<OuterState>) {
         let inner = InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 };
         let init = vec![1.0f32; d];
+        let slowmo_shape = SlowMoRule { alpha: 1.0, beta: 0.0 };
         let mut states = Vec::new();
         let mut outers = Vec::new();
         for w in 0..m {
@@ -334,7 +401,7 @@ mod tests {
             }
             s.h = vec![w as f32; d];
             states.push(s);
-            outers.push(OuterState::new(&init));
+            outers.push(OuterState::new(&init, &slowmo_shape));
         }
         (states, outers)
     }
@@ -367,7 +434,7 @@ mod tests {
         let out = run_outer(&cfg, m, states, outers, 0.05);
         for (st, ou) in &out[1..] {
             assert_eq!(st.x, out[0].0.x, "x must be identical");
-            assert_eq!(ou.u, out[0].1.u, "u must be identical");
+            assert_eq!(ou.u(), out[0].1.u(), "u must be identical");
         }
         assert_eq!(out[0].1.t, 1);
     }
@@ -421,23 +488,24 @@ mod tests {
         // farther (u compounds).
         let d = 4;
         let cfg = SlowMoCfg::new(1.0, 0.5, 1);
+        let rule = rule_of(&cfg);
         let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
         let kernels = Kernels::Native;
         let fabric = Fabric::new(1, CostModel::free());
         let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
         let mut st = WorkerState::new(&vec![10.0; d], &inner);
-        let mut ou = OuterState::new(&vec![10.0; d]);
+        let mut ou = OuterState::new(&vec![10.0; d], &*rule);
         let gamma = 1.0;
         // Inner loop "moved" x down by 1 each outer iteration.
         st.x.iter_mut().for_each(|x| *x -= 1.0);
-        outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
-                     gamma, 0.0, None)
+        outer_update(&cfg, &*rule, &algo, &fabric, &kernels, 0, &mut st,
+                     &mut ou, gamma, 0.0, None)
             .unwrap();
         let x1 = ou.x0[0]; // 10 - 1*(1) = 9
         assert!((x1 - 9.0).abs() < 1e-6);
         st.x.iter_mut().for_each(|x| *x -= 1.0);
-        outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
-                     gamma, 0.0, None)
+        outer_update(&cfg, &*rule, &algo, &fabric, &kernels, 0, &mut st,
+                     &mut ou, gamma, 0.0, None)
             .unwrap();
         // u = 0.5*1 + 1 = 1.5 -> x = 9 - 1.5 = 7.5
         assert!((ou.x0[0] - 7.5).abs() < 1e-6, "{}", ou.x0[0]);
@@ -469,6 +537,7 @@ mod tests {
         let algo = Local::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
         let kernels = Kernels::Native;
         let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+        let rule = rule_of(&cfg);
         let (states, outers) = mk_states(m, d);
         // Survivors' exact average at boundary 0: mean over workers 0..2.
         let want: Vec<f32> = (0..d)
@@ -479,8 +548,8 @@ mod tests {
             let mut ou = outers[w].clone();
             // Boundary 0: worker 3 is down. Boundary 1: it rejoins.
             for _ in 0..2 {
-                outer_update(&cfg, &algo, &fabric, &kernels, w, &mut st,
-                             &mut ou, 0.1, 0.0, Some(&*plan))
+                outer_update(&cfg, &*rule, &algo, &fabric, &kernels, w,
+                             &mut st, &mut ou, 0.1, 0.0, Some(&*plan))
                     .unwrap();
             }
             (st, ou)
@@ -494,18 +563,19 @@ mod tests {
         for (st, ou) in &out[1..] {
             assert_eq!(st.x, out[0].0.x);
             assert_eq!(ou.x0, out[0].1.x0);
-            assert_eq!(ou.u, out[0].1.u);
+            assert_eq!(ou.u(), out[0].1.u());
         }
         // The boundary-0 average was exact over the three survivors:
         // with alpha=1 the first outer step moves x0 by gamma*u where
         // u = (x0_init - want)/gamma * ... — verify directly instead via a
         // single-boundary run below.
+        let cfg0 = SlowMoCfg::new(1.0, 0.0, 4);
+        let rule0 = rule_of(&cfg0);
         let single = run_workers(m, |w| {
             let mut st = states[w].clone();
             let mut ou = outers[w].clone();
-            let cfg0 = SlowMoCfg::new(1.0, 0.0, 4);
-            outer_update(&cfg0, &algo, &fabric, &kernels, w, &mut st,
-                         &mut ou, 0.1, 0.0, Some(&*plan))
+            outer_update(&cfg0, &*rule0, &algo, &fabric, &kernels, w,
+                         &mut st, &mut ou, 0.1, 0.0, Some(&*plan))
                 .unwrap();
             st
         });
@@ -542,18 +612,20 @@ mod tests {
         let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
         let kernels = Kernels::Native;
         let cfg = SlowMoCfg::new(1.0, 0.5, 1);
+        let rule = rule_of(&cfg);
         let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
         let init = vec![10.0f32; d];
         let mut st = WorkerState::new(&init, &inner);
-        let mut ou = OuterState::new(&init);
-        ou.u = vec![2.0; d]; // pre-existing momentum mass from m=2 workers
+        let mut ou = OuterState::new(&init, &*rule);
+        // Pre-existing momentum mass from m=2 workers.
+        ou.opt.bufs[0] = vec![2.0; d];
         st.x.iter_mut().for_each(|x| *x -= 1.0);
         // Worker 0 survives alone: live/prev = 1/2 halves u before the
         // slow update: u = 0.5*(0.5*2) + 1 = 1.5 (gamma=1, alpha=1).
-        outer_update(&cfg, &algo, &fabric, &kernels, 0, &mut st, &mut ou,
-                     1.0, 0.0, Some(&*plan))
+        outer_update(&cfg, &*rule, &algo, &fabric, &kernels, 0, &mut st,
+                     &mut ou, 1.0, 0.0, Some(&*plan))
             .unwrap();
-        for &u in &ou.u {
+        for &u in ou.u() {
             assert!((u - 1.5).abs() < 1e-6, "u={u}");
         }
     }
@@ -593,18 +665,19 @@ mod tests {
         let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
         let kernels = Kernels::Native;
         let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+        let rule = rule_of(&cfg);
         let init = vec![1.0f32; d];
         // Leader enters boundary 1 at t=5s; the rejoiner's own clock is
         // stale at 0 — its rejoin must land after the leader's clock.
         let clocks = run_workers(m, |w| {
             let mut st = WorkerState::new(&init, algo.inner());
-            let mut ou = OuterState::new(&init);
+            let mut ou = OuterState::new(&init, &*rule);
             let mut clock = 0.0;
             for _ in 0..2 {
                 let start = if w == 0 { clock.max(5.0) } else { clock };
-                clock = outer_update(&cfg, &algo, &fabric, &kernels, w,
-                                     &mut st, &mut ou, 0.1, start,
-                                     Some(&*plan))
+                clock = outer_update(&cfg, &*rule, &algo, &fabric,
+                                     &kernels, w, &mut st, &mut ou, 0.1,
+                                     start, Some(&*plan))
                     .unwrap();
             }
             clock
@@ -615,6 +688,119 @@ mod tests {
             "rejoiner clock {} must not precede the leader's send",
             clocks[1]
         );
+    }
+
+    #[test]
+    fn truncated_rejoin_payload_is_a_hard_error() {
+        use crate::net::{ChaosCfg, ChaosPlan, FaultWindow};
+        use std::sync::Arc;
+        let m = 2;
+        let d = 6;
+        let cost = CostModel::free();
+        let plan = Arc::new(
+            ChaosPlan::new(
+                ChaosCfg {
+                    faults: vec![FaultWindow {
+                        worker: 1,
+                        fail_at: 0,
+                        rejoin_at: 1,
+                    }],
+                    ..ChaosCfg::default()
+                },
+                m,
+                &cost,
+            )
+            .unwrap(),
+        );
+        let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+        let rule = rule_of(&cfg);
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        let init = vec![1.0f32; d];
+        let mut st = WorkerState::new(&init, &inner);
+        let mut ou = OuterState::new(&init, &*rule);
+        ou.t = 1; // worker 1's rejoin boundary
+        let (tag_x, tag_u) = rejoin_tags(1);
+        fabric.chunk_send(1, tag_x, vec![0.0; d]);
+        // Truncated state payload: u without the packed clock slots.
+        fabric.chunk_send(1, tag_u, vec![0.0; d]);
+        let e = outer_update(&cfg, &*rule, &algo, &fabric, &kernels, 1,
+                             &mut st, &mut ou, 0.1, 0.0, Some(&*plan))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("worker 1"), "{e}");
+        assert!(e.contains("boundary 1"), "{e}");
+        assert!(e.contains("corrupt"), "{e}");
+    }
+
+    #[test]
+    fn rejoin_transfers_multi_buffer_state_bitwise() {
+        // Outer Adam carries two moment buffers; a fail-and-rejoin cycle
+        // must re-synchronize x0 and both moments, bit for bit.
+        use crate::net::{ChaosCfg, ChaosPlan, FaultWindow};
+        use std::sync::Arc;
+        let m = 3;
+        let d = 5;
+        let cost = CostModel::free();
+        let plan = Arc::new(
+            ChaosPlan::new(
+                ChaosCfg {
+                    faults: vec![FaultWindow {
+                        worker: 2,
+                        fail_at: 0,
+                        rejoin_at: 1,
+                    }],
+                    ..ChaosCfg::default()
+                },
+                m,
+                &cost,
+            )
+            .unwrap(),
+        );
+        let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let cfg = SlowMoCfg::with_outer(
+            OuterSel::with_args("adam", &[0.9, 0.95]),
+            4,
+        );
+        let rule = rule_of(&cfg);
+        assert_eq!(rule.n_bufs(), 2);
+        let init = vec![1.0f32; d];
+        let out = run_workers(m, |w| {
+            let mut st = WorkerState::new(&init, algo.inner());
+            let mut ou = OuterState::new(&init, &*rule);
+            for t in 0..2u64 {
+                // Divergent inner progress before each boundary.
+                for (i, x) in st.x.iter_mut().enumerate() {
+                    *x -= 0.01 * (w as f32 + 1.0) * (t as f32 + 1.0)
+                        + 0.001 * i as f32;
+                }
+                outer_update(&cfg, &*rule, &algo, &fabric, &kernels, w,
+                             &mut st, &mut ou, 0.1, 0.0, Some(&*plan))
+                    .unwrap();
+            }
+            ou
+        });
+        for ou in &out {
+            assert_eq!(ou.t, 2);
+        }
+        for ou in &out[1..] {
+            assert_eq!(ou.x0, out[0].x0);
+            assert_eq!(ou.opt, out[0].opt, "moment buffers diverged");
+        }
+    }
+
+    #[test]
+    fn tau_zero_is_an_error_not_a_panic() {
+        // The old constructor assert is gone: invalid τ surfaces as a
+        // validation Err at run/build time instead of aborting.
+        let cfg = SlowMoCfg::new(0.5, 0.0, 0);
+        let e = cfg.validate().unwrap_err().to_string();
+        assert!(e.contains("tau"), "{e}");
+        assert!(SlowMoCfg::new(1.0, 0.5, 1).validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,830 @@
+//! Pluggable outer optimizers: the update rule applied at each SlowMo
+//! outer boundary (paper Alg. 1 lines 7–8) as a first-class API.
+//!
+//! The paper frames SlowMo as *base algorithm + periodic outer update*,
+//! with BMUF, Lookahead and Local SGD as special cases of the slow-momentum
+//! rule. Recent decoupled-momentum work (DeMo-style outer Nesterov, outer
+//! Adam) varies exactly this slot, so the rule is factored out of
+//! [`super::outer_update`] into the [`OuterOpt`] trait: a rule owns only
+//! its math and its state buffers, while the framework shell keeps
+//! boundary detection, the exact average, elastic membership and the
+//! buffer strategy.
+//!
+//! Rules are selected through the string-keyed [`OuterRegistry`]
+//! (mirroring [`crate::algorithms::AlgoRegistry`]): the same
+//! `key[:a,b]` spec grammar works from
+//! [`crate::session::TrainBuilder::outer`], `--outer` on the CLI, the
+//! `[outer]` TOML table and the bench harness, with hard parse errors for
+//! unknown keys and malformed arguments. Out-of-crate rules register via
+//! [`crate::session::Session::outer_registry_mut`].
+//!
+//! Built-ins:
+//! - `slowmo[:beta,alpha]` — the paper's slow-momentum rule (the default);
+//! - `avg`                 — α=1, β=0 stateless fast path (Local SGD /
+//!   post-local SGD), bitwise-identical to `slowmo:0`;
+//! - `lookahead[:alpha]`   — Zhang et al. 2019, `x0 ← (1-α)x0 + α x̄`;
+//! - `nesterov[:beta]`     — outer Nesterov momentum on the displacement
+//!   pseudo-gradient (DeMo-style decoupled momentum);
+//! - `adam[:b1,b2]`        — outer Adam on the pseudo-gradient (two moment
+//!   buffers, bias correction driven by the outer iteration count).
+
+use crate::optim::kernels::Kernels;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// State owned by an outer rule: zero or more `d`-length f32 buffers
+/// (slow momentum `u`, Adam moments, ...). Keeping the shape explicit —
+/// rather than hardcoding one `u` vector — lets the elastic-membership
+/// rescale and the rejoin wire format stay rule-agnostic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OuterOptState {
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl OuterOptState {
+    pub fn zeros(n_bufs: usize, d: usize) -> Self {
+        Self {
+            bufs: vec![vec![0.0; d]; n_bufs],
+        }
+    }
+
+    /// Total f32 elements across all buffers (rejoin payload sizing).
+    pub fn flat_len(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// One outer-optimizer rule. Implementations are stateless descriptors
+/// (hyperparameters only); per-run state lives in [`OuterOptState`] so the
+/// framework can ship and rescale it without knowing the rule.
+pub trait OuterOpt: Send + Sync {
+    /// Registry key this rule answers to ("slowmo", "adam", ...).
+    fn key(&self) -> String;
+
+    /// Hyperparameter fragment for display names ("a1,b0.7",
+    /// "b1=0.9,b2=0.95"); empty for parameterless rules.
+    fn params(&self) -> String;
+
+    /// Number of `d`-length state buffers the rule owns.
+    fn n_bufs(&self) -> usize;
+
+    /// Fresh (zeroed) state for flat length `d`.
+    fn init(&self, d: usize) -> OuterOptState {
+        OuterOptState::zeros(self.n_bufs(), d)
+    }
+
+    /// Apply the outer update at boundary `t`: consume the (averaged)
+    /// fast weights `xt`, update the outer iterate `x0` and `state` in
+    /// place. `gamma` is the fast learning rate in effect for the outer
+    /// iteration (paper Eq. 2).
+    fn step(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        state: &mut OuterOptState,
+        gamma: f32,
+        t: u64,
+        kernels: &Kernels,
+    ) -> Result<()>;
+
+    /// Rescale state for an elastic-membership change by the live/prev
+    /// worker-count ratio (the state aggregates displacement mass over the
+    /// live group). Default: scale every buffer linearly; rules with
+    /// quadratic buffers (Adam's second moment) override.
+    fn scale_state(&self, state: &mut OuterOptState, factor: f32) {
+        for b in &mut state.bufs {
+            for v in b.iter_mut() {
+                *v *= factor;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- built-ins
+
+/// The paper's slow-momentum rule (Alg. 1 lines 7–8):
+/// `u ← βu + (x0 - x̄)/γ`; `x0 ← x0 - αγu`. One state buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct SlowMoRule {
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl OuterOpt for SlowMoRule {
+    fn key(&self) -> String {
+        "slowmo".into()
+    }
+
+    fn params(&self) -> String {
+        format!("a{},b{}", self.alpha, self.beta)
+    }
+
+    fn n_bufs(&self) -> usize {
+        1
+    }
+
+    fn step(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        state: &mut OuterOptState,
+        gamma: f32,
+        _t: u64,
+        kernels: &Kernels,
+    ) -> Result<()> {
+        kernels.slowmo_update(x0, xt, &mut state.bufs[0], gamma, self.alpha,
+                              self.beta)
+    }
+}
+
+/// α=1, β=0 stateless fast path: adopt the exact average (Local SGD /
+/// post-local SGD). The arithmetic mirrors the slow-momentum kernel with
+/// α=1, β=0 operation for operation on *both* backends (the PJRT arm
+/// runs the same AOT `slowmo` graph with a zero scratch buffer), so
+/// `avg` is bitwise-identical to `slowmo:0` (asserted in
+/// `rust/tests/equivalences.rs`) while carrying no persistent state
+/// buffer, no membership rescale and no rejoin payload beyond the clock.
+#[derive(Clone, Copy, Debug)]
+pub struct AvgRule;
+
+impl OuterOpt for AvgRule {
+    fn key(&self) -> String {
+        "avg".into()
+    }
+
+    fn params(&self) -> String {
+        String::new()
+    }
+
+    fn n_bufs(&self) -> usize {
+        0
+    }
+
+    fn step(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        _state: &mut OuterOptState,
+        gamma: f32,
+        _t: u64,
+        kernels: &Kernels,
+    ) -> Result<()> {
+        ensure!(x0.len() == xt.len(), "avg: length mismatch");
+        match kernels {
+            Kernels::Native => {
+                // Same fp ops as slowmo_update with u=0, beta=0, alpha=1 —
+                // NOT a plain copy: gamma*((x0-xt)/gamma) != (x0-xt) in
+                // general, and the bitwise contract with `slowmo:0` wins
+                // over the shortcut.
+                for i in 0..x0.len() {
+                    let un = (x0[i] - xt[i]) / gamma;
+                    x0[i] -= gamma * un;
+                }
+                Ok(())
+            }
+            pjrt @ Kernels::Pjrt { .. } => {
+                let mut scratch = vec![0.0f32; x0.len()];
+                pjrt.slowmo_update(x0, xt, &mut scratch, gamma, 1.0, 0.0)
+            }
+        }
+    }
+}
+
+/// Lookahead (Zhang et al. 2019): `x0 ← (1-α)x0 + α x̄` — "τ steps
+/// forward, one step back". Stateless; equals the slow-momentum rule with
+/// β=0 and slow rate α (up to fp association).
+#[derive(Clone, Copy, Debug)]
+pub struct LookaheadRule {
+    pub alpha: f32,
+}
+
+impl OuterOpt for LookaheadRule {
+    fn key(&self) -> String {
+        "lookahead".into()
+    }
+
+    fn params(&self) -> String {
+        format!("a{}", self.alpha)
+    }
+
+    fn n_bufs(&self) -> usize {
+        0
+    }
+
+    fn step(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        _state: &mut OuterOptState,
+        _gamma: f32,
+        _t: u64,
+        kernels: &Kernels,
+    ) -> Result<()> {
+        kernels.axpy(x0, xt, 1.0 - self.alpha, self.alpha)
+    }
+}
+
+/// Outer Nesterov momentum on the displacement pseudo-gradient
+/// `g = (x0 - x̄)/γ` (DeMo-style decoupled momentum):
+/// `u ← βu + g`; `x0 ← x0 - γ(βu + g)`. One state buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct NesterovRule {
+    pub beta: f32,
+}
+
+impl OuterOpt for NesterovRule {
+    fn key(&self) -> String {
+        "nesterov".into()
+    }
+
+    fn params(&self) -> String {
+        format!("b{}", self.beta)
+    }
+
+    fn n_bufs(&self) -> usize {
+        1
+    }
+
+    fn step(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        state: &mut OuterOptState,
+        gamma: f32,
+        _t: u64,
+        kernels: &Kernels,
+    ) -> Result<()> {
+        kernels.outer_nesterov(x0, xt, &mut state.bufs[0], gamma, self.beta)
+    }
+}
+
+/// Outer Adam on the displacement pseudo-gradient, with bias correction
+/// driven by the shared outer iteration count. Two state buffers (first
+/// and second moment); the second moment is quadratic in the displacement,
+/// so membership rescaling squares the factor.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamRule {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl OuterOpt for AdamRule {
+    fn key(&self) -> String {
+        "adam".into()
+    }
+
+    fn params(&self) -> String {
+        format!("b1={},b2={}", self.beta1, self.beta2)
+    }
+
+    fn n_bufs(&self) -> usize {
+        2
+    }
+
+    fn step(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        state: &mut OuterOptState,
+        gamma: f32,
+        t: u64,
+        kernels: &Kernels,
+    ) -> Result<()> {
+        let (m, v) = state.bufs.split_at_mut(1);
+        kernels.outer_adam(
+            x0,
+            xt,
+            &mut m[0],
+            &mut v[0],
+            gamma,
+            self.beta1,
+            self.beta2,
+            self.eps,
+            (t + 1) as f32,
+        )
+    }
+
+    fn scale_state(&self, state: &mut OuterOptState, factor: f32) {
+        for v in state.bufs[0].iter_mut() {
+            *v *= factor;
+        }
+        let f2 = factor * factor;
+        for v in state.bufs[1].iter_mut() {
+            *v *= f2;
+        }
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// A parsed outer-rule selection: canonical registry key + the numeric
+/// arguments given in the spec string (defaults are filled in by
+/// [`OuterRegistry::build`], so the selection round-trips to the exact
+/// spec the user wrote).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OuterSel {
+    pub key: String,
+    pub args: Vec<f32>,
+}
+
+impl OuterSel {
+    pub fn new(key: &str) -> Self {
+        Self {
+            key: key.to_string(),
+            args: Vec::new(),
+        }
+    }
+
+    pub fn with_args(key: &str, args: &[f32]) -> Self {
+        Self {
+            key: key.to_string(),
+            args: args.to_vec(),
+        }
+    }
+
+    /// The paper's slow-momentum rule (`slowmo:<beta>[,<alpha>]`). The
+    /// paper-default α=1 is omitted from the args so the stored spec is
+    /// the canonical "slowmo:<beta>" — identical to what the spec-string
+    /// path produces for the same configuration (keeps
+    /// [`crate::trainer::TrainResult`]'s `outer` field groupable).
+    pub fn slowmo(alpha: f32, beta: f32) -> Self {
+        if alpha == 1.0 {
+            Self::with_args("slowmo", &[beta])
+        } else {
+            Self::with_args("slowmo", &[beta, alpha])
+        }
+    }
+
+    /// The spec-string form ("slowmo:0.7", "adam:0.9,0.95", "avg").
+    pub fn spec(&self) -> String {
+        if self.args.is_empty() {
+            self.key.clone()
+        } else {
+            let args: Vec<String> =
+                self.args.iter().map(|a| a.to_string()).collect();
+            format!("{}:{}", self.key, args.join(","))
+        }
+    }
+}
+
+struct OuterEntry {
+    factory: Box<dyn Fn(&[f32]) -> Result<Arc<dyn OuterOpt>> + Send + Sync>,
+    help: String,
+    /// Positional argument names and defaults; an argument without a
+    /// default is required.
+    args: Vec<(String, Option<f32>)>,
+}
+
+/// String-keyed registry of [`OuterOpt`] factories, with the same
+/// spec-string / hard-parse-error contract as
+/// [`crate::algorithms::AlgoRegistry`].
+pub struct OuterRegistry {
+    entries: BTreeMap<String, OuterEntry>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl Default for OuterRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+impl OuterRegistry {
+    /// An empty registry (no rules).
+    pub fn empty() -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            aliases: BTreeMap::new(),
+        }
+    }
+
+    /// The five built-in rules, pre-registered.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register(
+            "slowmo",
+            "slow momentum u <- b*u + dx/g; x0 -= a*g*u (paper Alg. 1)",
+            &[("beta", Some(0.7)), ("alpha", Some(1.0))],
+            |a: &[f32]| {
+                ensure!(
+                    (0.0..1.0).contains(&a[0]),
+                    "slowmo beta must be in [0,1) (got {})",
+                    a[0]
+                );
+                ensure!(
+                    a[1] > 0.0,
+                    "slowmo alpha must be > 0 (got {})",
+                    a[1]
+                );
+                Ok(Arc::new(SlowMoRule { alpha: a[1], beta: a[0] })
+                    as Arc<dyn OuterOpt>)
+            },
+        );
+        r.register(
+            "avg",
+            "adopt the exact average (a=1, b=0 stateless fast path; \
+             Local SGD / post-local SGD)",
+            &[],
+            |_: &[f32]| Ok(Arc::new(AvgRule) as Arc<dyn OuterOpt>),
+        );
+        r.register(
+            "lookahead",
+            "x0 <- (1-a)*x0 + a*avg (Zhang et al. 2019); alpha in (0,1]",
+            &[("alpha", Some(0.5))],
+            |a: &[f32]| {
+                ensure!(
+                    a[0] > 0.0 && a[0] <= 1.0,
+                    "lookahead alpha must be in (0,1] (got {})",
+                    a[0]
+                );
+                Ok(Arc::new(LookaheadRule { alpha: a[0] })
+                    as Arc<dyn OuterOpt>)
+            },
+        );
+        r.register(
+            "nesterov",
+            "outer Nesterov on the displacement pseudo-gradient \
+             (DeMo-style decoupled momentum)",
+            &[("beta", Some(0.9))],
+            |a: &[f32]| {
+                ensure!(
+                    (0.0..1.0).contains(&a[0]),
+                    "nesterov beta must be in [0,1) (got {})",
+                    a[0]
+                );
+                Ok(Arc::new(NesterovRule { beta: a[0] })
+                    as Arc<dyn OuterOpt>)
+            },
+        );
+        r.register(
+            "adam",
+            "outer Adam on the displacement pseudo-gradient (two moments, \
+             bias-corrected by the outer iteration count)",
+            &[("beta1", Some(0.9)), ("beta2", Some(0.95))],
+            |a: &[f32]| {
+                // beta=1 would zero the bias correction (0/0 -> NaN
+                // parameters); reject degenerate moments up front.
+                ensure!(
+                    (0.0..1.0).contains(&a[0])
+                        && (0.0..1.0).contains(&a[1]),
+                    "adam betas must be in [0,1) (got b1={}, b2={})",
+                    a[0],
+                    a[1]
+                );
+                Ok(Arc::new(AdamRule {
+                    beta1: a[0],
+                    beta2: a[1],
+                    eps: 1e-8,
+                }) as Arc<dyn OuterOpt>)
+            },
+        );
+        r
+    }
+
+    /// Register a factory under `key`. `args` declares the positional
+    /// `:a,b` spec arguments (name, default); an argument without a
+    /// default is required. Re-registering a key replaces the previous
+    /// factory.
+    pub fn register(
+        &mut self,
+        key: &str,
+        help: &str,
+        args: &[(&str, Option<f32>)],
+        factory: impl Fn(&[f32]) -> Result<Arc<dyn OuterOpt>>
+            + Send
+            + Sync
+            + 'static,
+    ) {
+        self.entries.insert(
+            key.to_string(),
+            OuterEntry {
+                factory: Box::new(factory),
+                help: help.to_string(),
+                args: args
+                    .iter()
+                    .map(|(n, d)| (n.to_string(), *d))
+                    .collect(),
+            },
+        );
+    }
+
+    /// Register `alias` as another name for the existing `key`.
+    pub fn alias(&mut self, alias: &str, key: &str) {
+        assert!(
+            self.entries.contains_key(key),
+            "alias target {key:?} not registered"
+        );
+        self.aliases.insert(alias.to_string(), key.to_string());
+    }
+
+    /// Canonical keys, sorted.
+    pub fn keys(&self) -> Vec<&str> {
+        self.entries.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.canonical(key).is_some()
+    }
+
+    fn canonical(&self, key: &str) -> Option<&str> {
+        if let Some((k, _)) = self.entries.get_key_value(key) {
+            return Some(k.as_str());
+        }
+        self.aliases.get(key).map(|k| k.as_str())
+    }
+
+    /// Human-readable list of valid spec forms, for error messages and
+    /// CLI help.
+    pub fn valid_forms(&self) -> String {
+        let forms: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(k, e)| {
+                if e.args.is_empty() {
+                    k.clone()
+                } else {
+                    let names: Vec<&str> =
+                        e.args.iter().map(|(n, _)| n.as_str()).collect();
+                    format!("{k}[:{}]", names.join(","))
+                }
+            })
+            .collect();
+        forms.join("|")
+    }
+
+    /// One line per rule, for `--help`-style output.
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        for (k, e) in &self.entries {
+            s.push_str(&format!("  {:<12} {}\n", k, e.help));
+        }
+        s
+    }
+
+    /// Parse a spec string such as "slowmo:0.7", "adam:0.9,0.95" or
+    /// "avg". Every malformed input is a hard error: unknown keys,
+    /// non-numeric or non-finite arguments, and more arguments than the
+    /// rule declares all fail with a message listing the valid forms.
+    pub fn parse(&self, spec: &str) -> Result<OuterSel> {
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (spec, None),
+        };
+        let Some(key) = self.canonical(name) else {
+            bail!(
+                "unknown outer optimizer {spec:?}; valid forms: {}",
+                self.valid_forms()
+            );
+        };
+        let entry = &self.entries[key];
+        let mut args = Vec::new();
+        if let Some(rest) = rest {
+            for raw in rest.split(',') {
+                let v = raw.parse::<f32>().map_err(|_| {
+                    anyhow!(
+                        "malformed argument {raw:?} in outer spec {spec:?}: \
+                         expected a number; valid forms: {}",
+                        self.valid_forms()
+                    )
+                })?;
+                ensure!(
+                    v.is_finite(),
+                    "non-finite argument {raw:?} in outer spec {spec:?}"
+                );
+                args.push(v);
+            }
+            if entry.args.is_empty() {
+                bail!(
+                    "outer optimizer {name:?} takes no ':' argument (got \
+                     {spec:?}); valid forms: {}",
+                    self.valid_forms()
+                );
+            }
+            if args.len() > entry.args.len() {
+                bail!(
+                    "too many arguments in outer spec {spec:?}: {name:?} \
+                     takes at most {} ({}); valid forms: {}",
+                    entry.args.len(),
+                    entry
+                        .args
+                        .iter()
+                        .map(|(n, _)| n.as_str())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    self.valid_forms()
+                );
+            }
+        }
+        Ok(OuterSel {
+            key: key.to_string(),
+            args,
+        })
+    }
+
+    /// Instantiate the rule `sel` names, filling in defaults for
+    /// arguments the spec omitted.
+    pub fn build(&self, sel: &OuterSel) -> Result<Arc<dyn OuterOpt>> {
+        let key = self.canonical(&sel.key).ok_or_else(|| {
+            anyhow!(
+                "unknown outer optimizer key {:?}; registered: {}",
+                sel.key,
+                self.keys().join(", ")
+            )
+        })?;
+        let entry = &self.entries[key];
+        ensure!(
+            sel.args.len() <= entry.args.len(),
+            "outer optimizer {key:?} takes at most {} argument(s), got {}",
+            entry.args.len(),
+            sel.args.len()
+        );
+        let mut args = sel.args.clone();
+        for (name, default) in entry.args.iter().skip(args.len()) {
+            match default {
+                Some(d) => args.push(*d),
+                None => bail!(
+                    "outer optimizer {key:?} needs argument {name:?} \
+                     (no default); valid forms: {}",
+                    self.valid_forms()
+                ),
+            }
+        }
+        (entry.factory)(&args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native() -> Kernels {
+        Kernels::Native
+    }
+
+    fn demo_vecs(d: usize) -> (Vec<f32>, Vec<f32>) {
+        let x0: Vec<f32> =
+            (0..d).map(|i| 1.0 + 0.37 * i as f32).collect();
+        let xt: Vec<f32> =
+            (0..d).map(|i| 0.9 + 0.31 * (i as f32).sin()).collect();
+        (x0, xt)
+    }
+
+    #[test]
+    fn every_builtin_key_round_trips() {
+        let r = OuterRegistry::builtin();
+        assert_eq!(r.keys(),
+                   vec!["adam", "avg", "lookahead", "nesterov", "slowmo"]);
+        for key in r.keys() {
+            let sel = r.parse(key).unwrap();
+            assert_eq!(sel.key, key);
+            assert_eq!(sel.spec(), key);
+            let rule = r.build(&sel).unwrap();
+            assert_eq!(rule.key(), key);
+        }
+    }
+
+    #[test]
+    fn specs_parse_args_and_fill_defaults() {
+        let r = OuterRegistry::builtin();
+        let sel = r.parse("adam:0.8,0.99").unwrap();
+        assert_eq!(sel.args, vec![0.8, 0.99]);
+        assert_eq!(sel.spec(), "adam:0.8,0.99");
+        let rule = r.build(&sel).unwrap();
+        assert_eq!(rule.params(), "b1=0.8,b2=0.99");
+        // Partial args take defaults for the tail.
+        let rule = r.build(&r.parse("slowmo:0.6").unwrap()).unwrap();
+        assert_eq!(rule.params(), "a1,b0.6");
+        // No args at all: full defaults.
+        let rule = r.build(&r.parse("nesterov").unwrap()).unwrap();
+        assert_eq!(rule.params(), "b0.9");
+    }
+
+    #[test]
+    fn malformed_specs_are_hard_errors() {
+        let r = OuterRegistry::builtin();
+        for bad in ["bogus", "slowmo:abc", "slowmo:", "slowmo:1,2,3",
+                    "avg:1", "adam:0.9,oops", "lookahead:inf",
+                    "lookahead:0", "adam:1,0.95", "adam:0.9,1.5",
+                    "nesterov:1", "slowmo:1", "slowmo:0.5,0"] {
+            let e = r.parse(bad).map(|sel| r.build(&sel));
+            let failed = match e {
+                Err(_) => true,
+                Ok(built) => built.is_err(),
+            };
+            assert!(failed, "{bad} must be rejected");
+        }
+        let e = r.parse("bogus").unwrap_err().to_string();
+        assert!(e.contains("valid forms"), "{e}");
+        assert!(e.contains("slowmo"), "{e}");
+    }
+
+    #[test]
+    fn avg_is_bitwise_identical_to_slowmo_beta0() {
+        let r = OuterRegistry::builtin();
+        let k = native();
+        let slow = r.build(&r.parse("slowmo:0").unwrap()).unwrap();
+        let avg = r.build(&r.parse("avg").unwrap()).unwrap();
+        let d = 33;
+        let (x0, xt) = demo_vecs(d);
+        let mut xa = x0.clone();
+        let mut sa = slow.init(d);
+        // Non-zero momentum carried in from a previous boundary: with
+        // beta=0 it must not affect the update.
+        sa.bufs[0].iter_mut().enumerate().for_each(|(i, u)| {
+            *u = (i as f32 - 16.0) * 0.3;
+        });
+        slow.step(&mut xa, &xt, &mut sa, 0.3, 4, &k).unwrap();
+        let mut xb = x0;
+        let mut sb = avg.init(d);
+        avg.step(&mut xb, &xt, &mut sb, 0.3, 4, &k).unwrap();
+        assert_eq!(xa, xb, "avg must match slowmo(beta=0) bitwise");
+        assert_eq!(sb.flat_len(), 0);
+    }
+
+    #[test]
+    fn lookahead_interpolates() {
+        let r = OuterRegistry::builtin();
+        let rule = r.build(&r.parse("lookahead:0.5").unwrap()).unwrap();
+        let mut x0 = vec![2.0f32; 4];
+        let xt = vec![0.0f32; 4];
+        let mut st = rule.init(4);
+        rule.step(&mut x0, &xt, &mut st, 0.1, 0, &native()).unwrap();
+        assert!(x0.iter().all(|&x| (x - 1.0).abs() < 1e-6), "{x0:?}");
+    }
+
+    #[test]
+    fn nesterov_accumulates_and_scales_linearly() {
+        let rule = NesterovRule { beta: 0.5 };
+        let d = 4;
+        let mut x0 = vec![10.0f32; d];
+        let xt = vec![9.0f32; d]; // displacement 1, gamma 1 -> g = 1
+        let mut st = rule.init(d);
+        rule.step(&mut x0, &xt, &mut st, 1.0, 0, &native()).unwrap();
+        // u = 0.5*0 + 1 = 1; x0 -= 1*(0.5*1 + 1) = 8.5
+        assert!((x0[0] - 8.5).abs() < 1e-6, "{}", x0[0]);
+        assert!((st.bufs[0][0] - 1.0).abs() < 1e-6);
+        rule.scale_state(&mut st, 0.5);
+        assert!((st.bufs[0][0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_scale_state_squares_second_moment() {
+        let rule = AdamRule { beta1: 0.9, beta2: 0.95, eps: 1e-8 };
+        let mut st = rule.init(3);
+        st.bufs[0] = vec![2.0; 3];
+        st.bufs[1] = vec![4.0; 3];
+        rule.scale_state(&mut st, 0.5);
+        assert!(st.bufs[0].iter().all(|&v| (v - 1.0).abs() < 1e-7));
+        assert!(st.bufs[1].iter().all(|&v| (v - 1.0).abs() < 1e-7));
+    }
+
+    #[test]
+    fn adam_moves_against_displacement() {
+        let rule = AdamRule { beta1: 0.9, beta2: 0.95, eps: 1e-8 };
+        let d = 4;
+        let (mut x0, xt) = demo_vecs(d);
+        let before = x0.clone();
+        let mut st = rule.init(d);
+        rule.step(&mut x0, &xt, &mut st, 0.1, 0, &native()).unwrap();
+        // Moves toward xt on every coordinate where x0 > xt.
+        for i in 0..d {
+            if before[i] > xt[i] {
+                assert!(x0[i] < before[i], "coord {i}");
+            }
+        }
+        assert_eq!(st.bufs.len(), 2);
+        assert!(st.bufs[1].iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn custom_registration_and_aliases() {
+        let mut r = OuterRegistry::builtin();
+        r.register("half", "test-only: lookahead 0.5", &[], |_| {
+            Ok(Arc::new(LookaheadRule { alpha: 0.5 })
+                as Arc<dyn OuterOpt>)
+        });
+        r.alias("mean", "avg");
+        let sel = r.parse("half").unwrap();
+        assert_eq!(r.build(&sel).unwrap().key(), "lookahead");
+        assert_eq!(r.parse("mean").unwrap().key, "avg");
+        assert!(r.contains("mean") && r.contains("half"));
+        assert!(r.valid_forms().contains("half"));
+        assert!(r.help_text().contains("test-only"));
+    }
+
+    #[test]
+    fn sel_spec_round_trips() {
+        let r = OuterRegistry::builtin();
+        for spec in ["slowmo:0.7", "avg", "lookahead:0.5",
+                     "nesterov:0.9", "adam:0.9,0.95"] {
+            let sel = r.parse(spec).unwrap();
+            assert_eq!(sel.spec(), spec);
+            assert_eq!(r.parse(&sel.spec()).unwrap(), sel);
+        }
+        // Default alpha is omitted; explicit non-default alpha is kept.
+        assert_eq!(OuterSel::slowmo(1.0, 0.7).spec(), "slowmo:0.7");
+        assert_eq!(OuterSel::slowmo(0.5, 0.7).spec(), "slowmo:0.7,0.5");
+    }
+}

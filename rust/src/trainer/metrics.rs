@@ -36,6 +36,9 @@ impl EvalPoint {
 #[derive(Clone, Debug)]
 pub struct TrainResult {
     pub algo: String,
+    /// Outer-optimizer spec string ("slowmo:0.7", "adam:0.9,0.95") when
+    /// the run wrapped its base algorithm; `None` for bare runs.
+    pub outer: Option<String>,
     pub preset: String,
     pub m: usize,
     pub steps: u64,
@@ -78,7 +81,7 @@ impl TrainResult {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("algo", Json::str(&self.algo)),
             ("preset", Json::str(&self.preset)),
             ("m", Json::num(self.m as f64)),
@@ -112,7 +115,11 @@ impl TrainResult {
                     self.eval_curve.iter().map(|p| p.to_json()).collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(outer) = &self.outer {
+            pairs.push(("outer", Json::str(outer)));
+        }
+        Json::obj(pairs)
     }
 
     /// Append to a JSONL results file.
@@ -160,6 +167,7 @@ mod tests {
     fn dummy(seed: u64, loss: f64, metric: f64) -> TrainResult {
         TrainResult {
             algo: "x".into(),
+            outer: Some("slowmo:0.7".into()),
             preset: "p".into(),
             m: 2,
             steps: 100,
@@ -190,6 +198,7 @@ mod tests {
         let r = dummy(0, 0.5, 0.9);
         let j = r.to_json();
         assert_eq!(j.get("algo").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("outer").unwrap().as_str(), Some("slowmo:0.7"));
         let parsed =
             crate::jsonx::parse(&crate::jsonx::to_string(&j)).unwrap();
         assert_eq!(parsed.get("best_train_loss").unwrap().as_f64(),

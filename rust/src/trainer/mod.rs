@@ -27,7 +27,7 @@ use crate::data::{task_for, Task};
 use crate::net::{ChaosCfg, ChaosPlan, CostModel, Fabric};
 use crate::optim::kernels::Kernels;
 use crate::runtime::DataDesc;
-use crate::slowmo::{outer_update, OuterState, SlowMoCfg};
+use crate::slowmo::{outer_update, OuterOpt, OuterState, SlowMoCfg};
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -103,18 +103,31 @@ impl TrainCfg {
     }
 }
 
-/// Display name for a run: "sgp-nesterov-sgd+slowmo(t48,a1,b0.6,reset)".
-pub fn display_name(base: &str, slowmo: &Option<SlowMoCfg>) -> String {
-    match slowmo {
-        None => base.to_string(),
-        Some(s) => format!(
-            "{base}+slowmo(t{},a{},b{}{}{})",
-            s.tau,
-            s.alpha,
-            s.beta,
-            if s.exact_average { "" } else { ",noavg" },
-            format_args!(",{}", s.buffers.name()),
-        ),
+/// Display name for a run: the base algorithm plus the outer rule's key
+/// and hyperparameters, e.g. "sgp-nesterov-sgd+slowmo(t48,a1,b0.6,reset)"
+/// or "local-nesterov-sgd+adam(t48,b1=0.9,b2=0.95,reset)".
+pub fn display_name(
+    base: &str,
+    slowmo: &Option<SlowMoCfg>,
+    rule: Option<&dyn OuterOpt>,
+) -> String {
+    match (slowmo, rule) {
+        (Some(s), Some(r)) => {
+            let params = r.params();
+            format!(
+                "{base}+{}(t{}{}{}{})",
+                r.key(),
+                s.tau,
+                if params.is_empty() {
+                    String::new()
+                } else {
+                    format!(",{params}")
+                },
+                if s.exact_average { "" } else { ",noavg" },
+                format_args!(",{}", s.buffers.name()),
+            )
+        }
+        _ => base.to_string(),
     }
 }
 
@@ -189,6 +202,7 @@ impl CheckpointGate {
 pub(crate) fn run_prepared(
     cfg: &TrainCfg,
     algo: Arc<dyn BaseAlgorithm>,
+    outer_rule: Option<Arc<dyn OuterOpt>>,
     init: &[f32],
     desc: &DataDesc,
     model: &ModelExec,
@@ -196,6 +210,15 @@ pub(crate) fn run_prepared(
     observer: Option<&mut dyn RunObserver>,
 ) -> Result<TrainResult> {
     let t_wall = Instant::now();
+    if let Some(s) = &cfg.slowmo {
+        s.validate()?;
+        ensure!(
+            outer_rule.is_some(),
+            "slowmo configured without a built outer rule (run through \
+             Session, which resolves cfg.slowmo.outer via its \
+             OuterRegistry)"
+        );
+    }
     let task: Box<dyn Task> =
         task_for(desc, cfg.m, cfg.seed, cfg.heterogeneity);
     let chaos_plan: Option<Arc<ChaosPlan>> = match &cfg.chaos {
@@ -226,7 +249,8 @@ pub(crate) fn run_prepared(
         }
         None => Fabric::new(cfg.m, cfg.cost.clone()),
     };
-    let mut algo_name = display_name(&algo.name(), &cfg.slowmo);
+    let mut algo_name =
+        display_name(&algo.name(), &cfg.slowmo, outer_rule.as_deref());
     if cfg.chaos.is_some() {
         algo_name.push_str("+chaos");
     }
@@ -259,7 +283,8 @@ pub(crate) fn run_prepared(
     let outs: Vec<Result<WorkerOut>> = crate::exec::run_workers(cfg.m, |w| {
         let body = || -> Result<WorkerOut> {
         let mut state = WorkerState::new(init, algo.inner());
-        let mut outer = cfg.slowmo.as_ref().map(|_| OuterState::new(init));
+        let mut outer =
+            outer_rule.as_deref().map(|r| OuterState::new(init, r));
         let mut ctx = Ctx {
             worker: w,
             m: cfg.m,
@@ -327,11 +352,12 @@ pub(crate) fn run_prepared(
                         == RunControl::Stop;
                 }
             }
-            if let (Some(scfg), Some(outer)) = (&cfg.slowmo, outer.as_mut())
+            if let (Some(scfg), Some(rule), Some(outer)) =
+                (&cfg.slowmo, outer_rule.as_deref(), outer.as_mut())
             {
                 if scfg.is_boundary(k) {
                     ctx.clock = outer_update(
-                        scfg, algo.as_ref(), &fabric, kernels, w,
+                        scfg, rule, algo.as_ref(), &fabric, kernels, w,
                         &mut state, outer, gamma_outer, ctx.clock,
                         chaos_plan.as_deref(),
                     )?;
@@ -543,6 +569,7 @@ fn assemble(
     let sim_time = workers.iter().map(|w| w.clock).fold(0.0f64, f64::max);
     TrainResult {
         algo: algo_name,
+        outer: cfg.slowmo.as_ref().map(|s| s.outer.spec()),
         preset: cfg.preset.clone(),
         m: cfg.m,
         steps: cfg.steps,
@@ -565,26 +592,94 @@ fn assemble(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::slowmo::BufferStrategy;
+    use crate::slowmo::{
+        BufferStrategy, OuterOptState, OuterRegistry, OuterSel,
+    };
+    use std::sync::Arc as StdArc;
+
+    fn built(cfg: &SlowMoCfg) -> StdArc<dyn OuterOpt> {
+        OuterRegistry::builtin().build(&cfg.outer).unwrap()
+    }
 
     #[test]
     fn display_name_formats() {
-        let s = Some(crate::slowmo::SlowMoCfg::new(1.0, 0.6, 48));
-        let n = display_name("sgp-nesterov-sgd", &s);
-        assert!(n.contains("sgp"), "{n}");
-        assert!(n.contains("t48"), "{n}");
-        assert!(n.contains("b0.6"), "{n}");
-        assert!(n.contains("reset"), "{n}");
-        assert_eq!(display_name("local-nesterov-sgd", &None),
+        let cfg = crate::slowmo::SlowMoCfg::new(1.0, 0.6, 48);
+        let rule = built(&cfg);
+        let n = display_name("sgp-nesterov-sgd", &Some(cfg), Some(&*rule));
+        // Exact legacy format: the slowmo rule's name is bit-compatible
+        // with pre-registry display names.
+        assert_eq!(n, "sgp-nesterov-sgd+slowmo(t48,a1,b0.6,reset)");
+        assert_eq!(display_name("local-nesterov-sgd", &None, None),
                    "local-nesterov-sgd");
-        let noavg = Some(
-            crate::slowmo::SlowMoCfg::new(1.0, 0.5, 8)
-                .with_buffers(BufferStrategy::Maintain)
-                .no_average(),
+        let noavg = crate::slowmo::SlowMoCfg::new(1.0, 0.5, 8)
+            .with_buffers(BufferStrategy::Maintain)
+            .no_average();
+        let rule = built(&noavg);
+        let n = display_name("sgp", &Some(noavg), Some(&*rule));
+        assert_eq!(n, "sgp+slowmo(t8,a1,b0.5,noavg,maintain)");
+    }
+
+    #[test]
+    fn display_name_covers_every_registered_outer_key() {
+        let reg = OuterRegistry::builtin();
+        for key in reg.keys() {
+            let sel = OuterSel::new(key);
+            let rule = reg.build(&sel).unwrap();
+            let s = Some(SlowMoCfg::with_outer(sel, 48));
+            let n = display_name("local-nesterov-sgd", &s, Some(&*rule));
+            assert!(
+                n.starts_with(&format!("local-nesterov-sgd+{key}(t48")),
+                "{n}"
+            );
+            assert!(n.ends_with(",reset)"), "{n}");
+        }
+        // The avg fast path carries no hyperparameters.
+        let avg = reg.build(&OuterSel::new("avg")).unwrap();
+        let s = Some(SlowMoCfg::with_outer(OuterSel::new("avg"), 8));
+        assert_eq!(
+            display_name("local-nesterov-sgd", &s, Some(&*avg)),
+            "local-nesterov-sgd+avg(t8,reset)"
         );
-        let n = display_name("sgp", &noavg);
-        assert!(n.contains("noavg"), "{n}");
-        assert!(n.contains("maintain"), "{n}");
+        // Outer Adam renders both betas by name.
+        let sel = reg.parse("adam:0.9,0.95").unwrap();
+        let adam = reg.build(&sel).unwrap();
+        let s = Some(SlowMoCfg::with_outer(sel, 48));
+        assert_eq!(
+            display_name("local-nesterov-sgd", &s, Some(&*adam)),
+            "local-nesterov-sgd+adam(t48,b1=0.9,b2=0.95,reset)"
+        );
+    }
+
+    #[test]
+    fn display_name_reports_custom_registered_rule() {
+        struct Whirl;
+        impl OuterOpt for Whirl {
+            fn key(&self) -> String {
+                "whirl".into()
+            }
+            fn params(&self) -> String {
+                "k=3".into()
+            }
+            fn n_bufs(&self) -> usize {
+                0
+            }
+            fn step(
+                &self,
+                _x0: &mut Vec<f32>,
+                _xt: &[f32],
+                _state: &mut OuterOptState,
+                _gamma: f32,
+                _t: u64,
+                _kernels: &Kernels,
+            ) -> Result<()> {
+                Ok(())
+            }
+        }
+        let s = Some(SlowMoCfg::with_outer(OuterSel::new("whirl"), 4));
+        assert_eq!(
+            display_name("local-nesterov-sgd", &s, Some(&Whirl)),
+            "local-nesterov-sgd+whirl(t4,k=3,reset)"
+        );
     }
 
     #[test]

@@ -86,6 +86,16 @@ pub fn now_epoch_secs() -> f64 {
         .unwrap_or(0.0)
 }
 
+/// Read a `u64` from the environment, falling back to `default` when the
+/// variable is unset or unparsable (examples use this for CI-sized runs:
+/// `SLOWMO_EXAMPLE_STEPS=24 cargo run --example quickstart`).
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Minimal leveled logger gated by `SLOWMO_LOG` (error|warn|info|debug).
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub enum Level {

@@ -11,7 +11,7 @@ use slowmo::exec::run_workers;
 use slowmo::net::{ChaosCfg, ChaosPlan, CostModel, Fabric, FaultWindow};
 use slowmo::optim::kernels::{InnerOpt, Kernels};
 use slowmo::session::Session;
-use slowmo::slowmo::{outer_update, OuterState, SlowMoCfg};
+use slowmo::slowmo::{outer_update, OuterRegistry, OuterState, SlowMoCfg};
 use slowmo::testkit::chaos_seed;
 use slowmo::topology::ExponentialGraph;
 use slowmo::trainer::{Schedule, TrainResult};
@@ -62,6 +62,7 @@ fn outer_average_is_exact_over_survivors() {
     let kernels = Kernels::Native;
     // alpha=1, beta=0: the boundary adopts the survivor average directly.
     let cfg = SlowMoCfg::new(1.0, 0.0, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
     let init = vec![1.0f32; d];
     let inputs: Vec<Vec<f32>> = (0..m)
         .map(|w| (0..d).map(|i| (w * d + i) as f32 * 0.01).collect())
@@ -76,11 +77,11 @@ fn outer_average_is_exact_over_survivors() {
     let out = run_workers(m, |w| {
         let mut st = WorkerState::new(&init, algo.inner());
         st.x.copy_from_slice(&inputs[w]);
-        let mut ou = OuterState::new(&init);
+        let mut ou = OuterState::new(&init, &*rule);
         // Seed x0 with the survivor inputs' role: x0 stays `init`; with
         // alpha=1, beta=0 the update lands exactly on the average.
-        outer_update(&cfg, &algo, &fabric, &kernels, w, &mut st, &mut ou,
-                     0.1, 0.0, Some(&*plan))
+        outer_update(&cfg, &*rule, &algo, &fabric, &kernels, w, &mut st,
+                     &mut ou, 0.1, 0.0, Some(&*plan))
             .unwrap();
         st
     });
@@ -122,18 +123,19 @@ fn worker_rejoins_two_boundaries_later() {
     let algo = Local::new(sgd());
     let kernels = Kernels::Native;
     let cfg = SlowMoCfg::new(1.0, 0.6, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
     let init = vec![2.0f32; d];
     let out = run_workers(m, |w| {
         let mut st = WorkerState::new(&init, algo.inner());
-        let mut ou = OuterState::new(&init);
+        let mut ou = OuterState::new(&init, &*rule);
         for t in 0..4u64 {
             // Simulate divergent inner progress before each boundary.
             for (i, x) in st.x.iter_mut().enumerate() {
                 *x -= 0.01 * (w as f32 + 1.0) * (t as f32 + 1.0)
                     + 0.001 * i as f32;
             }
-            outer_update(&cfg, &algo, &fabric, &kernels, w, &mut st,
-                         &mut ou, 0.1, 0.0, Some(&*plan))
+            outer_update(&cfg, &*rule, &algo, &fabric, &kernels, w,
+                         &mut st, &mut ou, 0.1, 0.0, Some(&*plan))
                 .unwrap();
         }
         (st, ou)
@@ -145,7 +147,7 @@ fn worker_rejoins_two_boundaries_later() {
     for (w, (st, ou)) in out.iter().enumerate().skip(1) {
         assert_eq!(st.x, out[0].0.x, "x diverged on worker {w}");
         assert_eq!(ou.x0, out[0].1.x0, "x0 diverged on worker {w}");
-        assert_eq!(ou.u, out[0].1.u, "u diverged on worker {w}");
+        assert_eq!(ou.u(), out[0].1.u(), "u diverged on worker {w}");
     }
 }
 
@@ -266,6 +268,64 @@ fn fault_and_rejoin_end_to_end() {
     // The survivor-averaged trajectory differs from the calm run's.
     let calm = quad_chaos(&s, 32, None);
     assert_ne!(calm.final_params, a.final_params);
+}
+
+/// Acceptance: every registered outer rule — momentum-free, single- and
+/// two-buffer state alike — survives the fail-and-rejoin path
+/// deterministically (the rejoin wire format is state-shape-agnostic).
+#[test]
+fn fault_and_rejoin_every_outer_rule() {
+    let Some(s) = session() else { return };
+    for spec in ["slowmo:0.6", "avg", "lookahead:0.5", "nesterov:0.9",
+                 "adam:0.9,0.95"] {
+        let sel = s.outer_registry().parse(spec).unwrap();
+        let mut chaos = degraded();
+        chaos.faults =
+            vec![FaultWindow { worker: 2, fail_at: 1, rejoin_at: 3 }];
+        let run = || -> TrainResult {
+            s.train("quad")
+                .algo("local")
+                .inner(sgd())
+                .workers(4)
+                .steps(32)
+                .seed(11)
+                .slowmo_cfg(SlowMoCfg::with_outer(sel.clone(), 4))
+                .schedule(Schedule::Const(0.2))
+                .heterogeneity(1.0)
+                .eval_batches(1)
+                .cost(CostModel::ethernet_10g())
+                .compute_time(1e-4)
+                .record_params(true)
+                .chaos(chaos.clone())
+                .run()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.steps_run, 32, "{spec}: run did not complete");
+        assert_eq!(a.final_params, b.final_params,
+                   "{spec}: non-deterministic");
+        assert_eq!(a.sim_time, b.sim_time, "{spec}");
+        assert_eq!(a.outer.as_deref(), Some(spec));
+        // The survivor-averaged trajectory differs from the calm run's.
+        let calm = s
+            .train("quad")
+            .algo("local")
+            .inner(sgd())
+            .workers(4)
+            .steps(32)
+            .seed(11)
+            .slowmo_cfg(SlowMoCfg::with_outer(sel.clone(), 4))
+            .schedule(Schedule::Const(0.2))
+            .heterogeneity(1.0)
+            .eval_batches(1)
+            .cost(CostModel::ethernet_10g())
+            .compute_time(1e-4)
+            .record_params(true)
+            .run()
+            .unwrap();
+        assert_ne!(calm.final_params, a.final_params, "{spec}");
+    }
 }
 
 /// Faults require SlowMo boundaries and a communication-free base.

@@ -7,7 +7,7 @@ use slowmo::algorithms::AlgoSel;
 use slowmo::net::{ChaosCfg, CostModel};
 use slowmo::optim::kernels::InnerOpt;
 use slowmo::session::Session;
-use slowmo::slowmo::{BufferStrategy, SlowMoCfg};
+use slowmo::slowmo::{BufferStrategy, OuterSel, SlowMoCfg};
 use slowmo::testkit::chaos_seed;
 use slowmo::trainer::{Schedule, TrainResult};
 
@@ -181,6 +181,83 @@ fn noaverage_variant_close_to_full_slowmo_on_quad() {
     assert!(noavg.best_train_loss < 3.0 * full.best_train_loss + 1e-6,
             "noavg {} vs full {}", noavg.best_train_loss,
             full.best_train_loss);
+}
+
+// ---------------------------------------------------- outer rule registry
+// The pluggable OuterOpt redesign must not move a single bit: the
+// `slowmo` registry key is the old hardcoded rule, and `avg` is the α=1,
+// β=0 special case implemented with the identical fp operations.
+
+#[test]
+fn outer_slowmo_key_is_bitwise_identical_to_legacy_alias() {
+    let Some(s) = session() else { return };
+    let legacy =
+        quad(&s, 4, 64, local(), Some(SlowMoCfg::new(1.0, 0.7, 8)));
+    let keyed = quad(
+        &s, 4, 64, local(),
+        Some(SlowMoCfg::with_outer(
+            OuterSel::with_args("slowmo", &[0.7]),
+            8,
+        )),
+    );
+    assert_eq!(legacy.final_params, keyed.final_params);
+    assert_eq!(legacy.train_curve, keyed.train_curve);
+    assert_eq!(legacy.sim_time, keyed.sim_time);
+    assert_eq!(legacy.bytes_sent, keyed.bytes_sent);
+    assert_eq!(legacy.algo, keyed.algo, "display names must agree");
+    // The builder's spec-string path lands on the same bits too.
+    let spec = s
+        .train("quad")
+        .algo_sel(local())
+        .workers(4)
+        .steps(64)
+        .seed(11)
+        .outer("slowmo:0.7")
+        .tau(8)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::free())
+        .compute_time(1e-6)
+        .record_params(true)
+        .run()
+        .unwrap();
+    assert_eq!(legacy.final_params, spec.final_params);
+    assert_eq!(legacy.train_curve, spec.train_curve);
+}
+
+#[test]
+fn outer_avg_is_bitwise_identical_to_slowmo_beta0() {
+    let Some(s) = session() else { return };
+    let b0 = quad(&s, 4, 64, local(), Some(SlowMoCfg::new(1.0, 0.0, 8)));
+    let avg = quad(
+        &s, 4, 64, local(),
+        Some(SlowMoCfg::with_outer(OuterSel::new("avg"), 8)),
+    );
+    assert_eq!(b0.final_params, avg.final_params);
+    assert!(b0.final_params.is_some());
+    assert_eq!(b0.train_curve, avg.train_curve);
+    assert_eq!(b0.sim_time, avg.sim_time);
+}
+
+#[test]
+fn all_outer_rules_descend_on_quad() {
+    // Every registered outer rule builds through the registry, completes
+    // a run, reports its spec in the result, and improves on the initial
+    // loss window.
+    let Some(s) = session() else { return };
+    for spec in ["slowmo:0.7", "avg", "lookahead:0.5", "nesterov:0.9",
+                 "adam:0.9,0.95"] {
+        let sel = s.outer_registry().parse(spec).unwrap();
+        let r = quad(&s, 4, 128, local(),
+                     Some(SlowMoCfg::with_outer(sel, 8)));
+        assert_eq!(r.steps_run, 128, "{spec}");
+        assert_eq!(r.outer.as_deref(), Some(spec));
+        let first = r.train_curve.first().unwrap().1;
+        let last = r.train_curve.last().unwrap().1;
+        assert!(last.is_finite(), "{spec}: non-finite loss");
+        assert!(last < first, "{spec}: {first} -> {last}");
+    }
 }
 
 #[test]

@@ -9,7 +9,9 @@
 
 use slowmo::jsonx::{parse, Json};
 use slowmo::optim;
+use slowmo::optim::kernels::Kernels;
 use slowmo::runtime::artifacts_dir;
+use slowmo::slowmo::{OuterRegistry, OuterSel};
 use slowmo::util::allclose;
 
 fn golden() -> Option<Json> {
@@ -48,6 +50,30 @@ fn slowmo_update_matches_jnp_oracle() {
     );
     assert!(allclose(&x0, &vecf(c, "out.x"), 1e-6, 1e-7), "x mismatch");
     assert!(allclose(&u, &vecf(c, "out.u"), 1e-6, 1e-7), "u mismatch");
+}
+
+#[test]
+fn outer_registry_slowmo_rule_matches_jnp_oracle() {
+    // The registry-built `slowmo` rule is the same kernel the oracle
+    // fixtures were generated against — the golden vectors hold
+    // unchanged through the OuterOpt indirection.
+    let Some(g) = golden() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let c = g.get("slowmo").unwrap();
+    let mut x0 = vecf(c, "in.x0");
+    let xt = vecf(c, "in.xt");
+    let sel = OuterSel::slowmo(scalar(c, "in.alpha"), scalar(c, "in.beta"));
+    let rule = OuterRegistry::builtin().build(&sel).unwrap();
+    let mut st = rule.init(x0.len());
+    st.bufs[0] = vecf(c, "in.u");
+    rule.step(&mut x0, &xt, &mut st, scalar(c, "in.gamma"), 0,
+              &Kernels::Native)
+        .unwrap();
+    assert!(allclose(&x0, &vecf(c, "out.x"), 1e-6, 1e-7), "x mismatch");
+    assert!(allclose(&st.bufs[0], &vecf(c, "out.u"), 1e-6, 1e-7),
+            "u mismatch");
 }
 
 #[test]

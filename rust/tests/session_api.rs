@@ -6,9 +6,9 @@
 
 use slowmo::algorithms::{AlgoCtx, BaseAlgorithm, Ctx, WorkerState};
 use slowmo::net::CostModel;
-use slowmo::optim::kernels::InnerOpt;
+use slowmo::optim::kernels::{InnerOpt, Kernels};
 use slowmo::session::{Session, TrainBuilder};
-use slowmo::slowmo::SlowMoCfg;
+use slowmo::slowmo::{OuterOpt, OuterOptState, SlowMoCfg};
 use slowmo::trainer::{
     OuterEvent, Recorder, RunControl, RunObserver, Schedule, StepEvent,
 };
@@ -135,6 +135,80 @@ fn custom_out_of_crate_algorithm_runs_by_string_key() {
         .run()
         .unwrap();
     assert!(r.algo.contains("slowmo"), "{}", r.algo);
+}
+
+/// A deliberately simple out-of-crate outer rule: pull x0 halfway toward
+/// the average, no state buffers. Proves the OuterRegistry's factory
+/// surface is sufficient for rules defined outside the crate (the
+/// DeMo-style extension path, mirroring `Anchor` for base algorithms).
+struct HalfPull;
+
+impl OuterOpt for HalfPull {
+    fn key(&self) -> String {
+        "halfpull".into()
+    }
+
+    fn params(&self) -> String {
+        String::new()
+    }
+
+    fn n_bufs(&self) -> usize {
+        0
+    }
+
+    fn step(
+        &self,
+        x0: &mut Vec<f32>,
+        xt: &[f32],
+        _state: &mut OuterOptState,
+        _gamma: f32,
+        _t: u64,
+        _kernels: &Kernels,
+    ) -> anyhow::Result<()> {
+        for (a, b) in x0.iter_mut().zip(xt) {
+            *a = 0.5 * *a + 0.5 * b;
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn custom_out_of_crate_outer_rule_runs_by_string_key() {
+    let Some(mut s) = session() else { return };
+    s.outer_registry_mut().register(
+        "halfpull",
+        "test-only half-pull rule defined outside the crate",
+        &[],
+        |_| Ok(std::sync::Arc::new(HalfPull) as std::sync::Arc<dyn OuterOpt>),
+    );
+    let r = s
+        .train("quad")
+        .algo("local")
+        .inner(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 })
+        .workers(2)
+        .steps(64)
+        .seed(5)
+        .outer("halfpull")
+        .tau(8)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::free())
+        .compute_time(1e-6)
+        .run()
+        .unwrap();
+    assert!(r.algo.contains("halfpull"), "{}", r.algo);
+    assert_eq!(r.outer.as_deref(), Some("halfpull"));
+    let first = r.train_curve.first().unwrap().1;
+    let last = r.train_curve.last().unwrap().1;
+    assert!(last < first, "{first} -> {last}");
+    // Unknown keys still fail hard through the same path.
+    assert!(s
+        .train("quad")
+        .algo("local")
+        .outer("nope")
+        .run()
+        .is_err());
 }
 
 struct StopAfter {
