@@ -6,8 +6,9 @@
 //! the paper's "traditional Allreduce implementation of parallel
 //! SGD/Adam" and the τ=1 anchor of the SlowMo framework.
 
-use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
-use crate::net::ring_allreduce_mean_group;
+use super::{apply_inner, compress_payload, BaseAlgorithm, Ctx, WorkerState};
+use crate::compress::site;
+use crate::net::ring_allreduce_mean_group_c;
 use crate::optim::kernels::InnerOpt;
 use anyhow::Result;
 
@@ -39,10 +40,21 @@ impl BaseAlgorithm for AllReduce {
         k: u64,
     ) -> Result<()> {
         let mut avg = g.to_vec();
+        // Compress the gradient contribution (EF-SGD style: the residual
+        // at the GRAD site re-injects whatever this step's codec
+        // dropped). A single worker sends nothing, so nothing is lossily
+        // transcoded either — no accuracy cost for bytes never on the
+        // wire.
+        if ctx.m > 1 {
+            compress_payload(
+                ctx.compress, &mut state.comp, &mut avg, site::GRAD,
+            );
+        }
         let group: Vec<usize> = (0..ctx.m).collect();
         // coll_id = k keys the chaos delay stream per step.
-        ctx.clock = ring_allreduce_mean_group(
+        ctx.clock = ring_allreduce_mean_group_c(
             ctx.fabric, ctx.worker, &group, &mut avg, ctx.clock, k,
+            ctx.compress.filter(|c| !c.is_identity()),
         );
         apply_inner(ctx, &self.inner, state, &avg, gamma)?;
         state.z.copy_from_slice(&state.x);

@@ -9,8 +9,9 @@
 //!
 //! This algorithm is used standalone (not wrapped in SlowMo).
 
-use super::{apply_inner, BaseAlgorithm, Ctx, WorkerState};
-use crate::net::ring_allreduce_mean_group;
+use super::{apply_inner, compress_payload, BaseAlgorithm, Ctx, WorkerState};
+use crate::compress::site;
+use crate::net::ring_allreduce_mean_group_c;
 use crate::optim::kernels::InnerOpt;
 use anyhow::Result;
 
@@ -47,19 +48,32 @@ impl BaseAlgorithm for DoubleAvg {
         if (k + 1) % self.tau == 0 && ctx.m > 1 {
             // Alg. 5 lines 6-7: average params AND momentum buffers.
             // coll_ids 3k..3k+2 key the chaos delay streams per collective.
+            // Each buffer is compressed at its own site (independent EF
+            // residuals for x, h and v).
+            let codec = ctx.compress.filter(|c| !c.is_identity());
             let group: Vec<usize> = (0..ctx.m).collect();
-            ctx.clock = ring_allreduce_mean_group(
-                ctx.fabric, ctx.worker, &group, &mut state.x, ctx.clock,
-                3 * k,
+            compress_payload(
+                ctx.compress, &mut state.comp, &mut state.x, site::DAVG_X,
             );
-            ctx.clock = ring_allreduce_mean_group(
+            ctx.clock = ring_allreduce_mean_group_c(
+                ctx.fabric, ctx.worker, &group, &mut state.x, ctx.clock,
+                3 * k, codec,
+            );
+            compress_payload(
+                ctx.compress, &mut state.comp, &mut state.h, site::DAVG_H,
+            );
+            ctx.clock = ring_allreduce_mean_group_c(
                 ctx.fabric, ctx.worker, &group, &mut state.h, ctx.clock,
-                3 * k + 1,
+                3 * k + 1, codec,
             );
             if !state.v.is_empty() {
-                ctx.clock = ring_allreduce_mean_group(
+                compress_payload(
+                    ctx.compress, &mut state.comp, &mut state.v,
+                    site::DAVG_V,
+                );
+                ctx.clock = ring_allreduce_mean_group_c(
                     ctx.fabric, ctx.worker, &group, &mut state.v, ctx.clock,
-                    3 * k + 2,
+                    3 * k + 2, codec,
                 );
             }
         }

@@ -52,9 +52,16 @@ impl BaseAlgorithm for Dpsgd {
 
         let round = self.topo.round(ctx.worker, k);
         for &(peer, p) in &round.out {
-            let payload: Vec<f32> =
+            let mut payload: Vec<f32> =
                 state.x.iter().map(|&v| v * p as f32).collect();
-            ctx.fabric.gossip_send(
+            // Per-link EF residual keyed by the destination peer.
+            let wire = super::compress_payload(
+                ctx.compress,
+                &mut state.comp,
+                &mut payload,
+                crate::compress::site::gossip(peer),
+            );
+            ctx.fabric.gossip_send_wire(
                 peer,
                 GossipMsg {
                     from: ctx.worker,
@@ -63,6 +70,7 @@ impl BaseAlgorithm for Dpsgd {
                     weight: 0.0,
                     send_time: ctx.clock,
                 },
+                wire,
             );
         }
         crate::optim::scale(&mut state.x, round.self_weight as f32);
@@ -123,7 +131,8 @@ mod tests {
         let states = run_workers(m, |w| {
             let mut st = WorkerState::new(&[w as f32; 4], algo.inner());
             let mut ctx = Ctx { worker: w, m, fabric: &fabric,
-                                kernels: &kernels, clock: 0.0 };
+                                kernels: &kernels, compress: None,
+                                clock: 0.0 };
             for k in 0..40 {
                 algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
             }

@@ -80,7 +80,8 @@ mod tests {
         let algo = Local::new(InnerOpt::nesterov_default());
         let kernels = Kernels::Native;
         let mut ctx = Ctx { worker: 0, m: 2, fabric: &fabric,
-                            kernels: &kernels, clock: 0.0 };
+                            kernels: &kernels, compress: None,
+                            clock: 0.0 };
         let mut st = WorkerState::new(&[1.0; 8], algo.inner());
         algo.step(&mut ctx, &mut st, &[0.1; 8], 0.1, 0).unwrap();
         assert_eq!(fabric.msgs_sent(), 0);

@@ -28,6 +28,7 @@ pub use local::Local;
 pub use registry::{AlgoCtx, AlgoRegistry, AlgoSel};
 pub use sgp::Sgp;
 
+use crate::compress::{CompressState, Compressor};
 use crate::net::{Fabric, GossipMsg};
 use crate::optim::kernels::{InnerOpt, Kernels};
 use anyhow::Result;
@@ -54,6 +55,10 @@ pub struct WorkerState {
     /// OSGP: consecutive steps with an empty inbox (Alg. 3
     /// `count_since_last`).
     pub pending_count: u64,
+    /// Communication-compression state: per-link error-feedback residuals
+    /// and deterministic stream counters (see [`crate::compress`]). The
+    /// trainer re-keys it with the run seed and worker rank.
+    pub comp: CompressState,
 }
 
 impl WorkerState {
@@ -72,6 +77,7 @@ impl WorkerState {
             adam_step: 0,
             stash: Vec::new(),
             pending_count: 0,
+            comp: CompressState::default(),
         }
     }
 
@@ -94,6 +100,10 @@ pub struct Ctx<'a> {
     pub m: usize,
     pub fabric: &'a Fabric,
     pub kernels: &'a Kernels,
+    /// Communication compressor for outbound payloads (`None` = raw f32;
+    /// the trainer passes `None` for the identity codec so the default
+    /// path stays bit-identical to the pre-compression code).
+    pub compress: Option<&'a dyn Compressor>,
     /// Simulated wall-clock for this worker (advanced by comm waits; the
     /// trainer adds compute time).
     pub clock: f64,
@@ -139,6 +149,24 @@ pub trait BaseAlgorithm: Send + Sync {
     fn comm_elems_per_step(&self, d: usize) -> usize;
 }
 
+/// Run the configured compressor over an outbound `payload` in place
+/// (error-feedback residual + deterministic stream keyed by `site`),
+/// returning the honest wire byte count — raw `4·len` when no codec is
+/// active, so the default path is untouched. Takes the
+/// [`CompressState`] rather than the whole worker state so callers can
+/// compress one `WorkerState` field against another (disjoint borrows).
+pub(crate) fn compress_payload(
+    compress: Option<&dyn Compressor>,
+    comp: &mut CompressState,
+    payload: &mut [f32],
+    site: u64,
+) -> u64 {
+    match compress {
+        Some(c) if !c.is_identity() => c.transcode(payload, comp, site),
+        _ => payload.len() as u64 * 4,
+    }
+}
+
 /// Run the inner optimizer (nesterov/adam) on (x, h, v) in place.
 pub(crate) fn apply_inner(
     ctx: &mut Ctx,
@@ -180,6 +208,7 @@ pub mod testutil {
                 m,
                 fabric: &fabric,
                 kernels: &kernels,
+                compress: None,
                 clock: 0.0,
             };
             let target = vec![(w + 1) as f32; d];

@@ -94,12 +94,20 @@ impl BaseAlgorithm for Sgp {
         // 1. Local momentum step on the biased parameters x (Alg. 2 l.3-4).
         apply_inner(ctx, &self.inner, state, g, gamma)?;
 
-        // 2. Send scaled (x, w) shares to out-neighbors (Alg. 2 l.5).
+        // 2. Send scaled (x, w) shares to out-neighbors (Alg. 2 l.5),
+        // through the configured compressor (per-link EF residual; the
+        // push-sum weight scalar rides uncompressed).
         let round = self.topo.round(ctx.worker, k);
         for &(peer, p) in &round.out {
-            let payload: Vec<f32> =
+            let mut payload: Vec<f32> =
                 state.x.iter().map(|&v| v * p as f32).collect();
-            ctx.fabric.gossip_send(
+            let wire = super::compress_payload(
+                ctx.compress,
+                &mut state.comp,
+                &mut payload,
+                crate::compress::site::gossip(peer),
+            );
+            ctx.fabric.gossip_send_wire(
                 peer,
                 GossipMsg {
                     from: ctx.worker,
@@ -108,6 +116,7 @@ impl BaseAlgorithm for Sgp {
                     weight: p * state.w,
                     send_time: ctx.clock,
                 },
+                wire,
             );
         }
         // Keep own share (Alg. 2 l.7-8).
@@ -232,7 +241,8 @@ mod tests {
             let init = vec![w as f32; 4]; // worker-specific values
             let mut st = WorkerState::new(&init, algo.inner());
             let mut ctx = Ctx { worker: w, m, fabric: &fabric,
-                                kernels: &kernels, clock: 0.0 };
+                                kernels: &kernels, compress: None,
+                                clock: 0.0 };
             for k in 0..60 {
                 algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
             }

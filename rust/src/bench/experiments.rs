@@ -583,6 +583,87 @@ pub fn outers(env: &Env, task: &TaskSpec) -> Result<Table> {
     Ok(table)
 }
 
+// ------------------------------------------------------------ compression
+
+/// Specs swept by [`compress`]: the byte/accuracy tradeoff ladder from
+/// raw f32 down to ~0.19 B/coord signsgd, with and without error
+/// feedback.
+pub const COMPRESS_SWEEP: &[&str] = &[
+    "none",
+    "bf16",
+    "fp16",
+    "topk:0.25",
+    "topk:0.1",
+    "ef:topk:0.1",
+    "randk:0.1",
+    "ef:randk:0.1",
+    "signsgd",
+    "ef:signsgd",
+];
+
+/// Communication-compression sweep (Local base + SlowMo, fixed τ): every
+/// spec in [`COMPRESS_SWEEP`] on one task, recording the bytes-on-wire vs
+/// final-loss frontier. Besides the printed table (and the usual
+/// `runs.jsonl` rows), emits `BENCH_compress.json` — schema
+/// `bench-compress/v1`, see `results/BENCH_compress.schema.json` — so the
+/// perf trajectory records wire bytes alongside loss.
+pub fn compress(env: &Env, task: &TaskSpec) -> Result<Table> {
+    use crate::jsonx::Json;
+    let mut table = Table::new(
+        "Compression sweep (Local base + SlowMo, fixed tau)",
+        &["compress", "bytes sent", "bytes saved", "best train loss",
+          "final val loss", "sim time (s)"],
+    );
+    let tau = env.scale.tau_local();
+    let mut entries: Vec<Json> = Vec::new();
+    for spec in COMPRESS_SWEEP {
+        // Hard parse errors surface immediately; this also keeps the
+        // sweep honest for out-of-crate registrations replacing built-ins.
+        env.session.compress_registry().parse(spec)?;
+        let s = slowmo_for(task, tau);
+        let r = run_cell(
+            env,
+            cell(env, task, AlgoSel::with_inner("local", task.inner),
+                 Some(s), 0)
+                .compress(spec),
+        )?;
+        table.row(&[
+            spec.to_string(),
+            r.bytes_sent.to_string(),
+            r.bytes_saved.to_string(),
+            fmt4(r.best_train_loss),
+            fmt4(r.final_eval_loss),
+            format!("{:.3}", r.sim_time),
+        ]);
+        entries.push(Json::obj(vec![
+            ("compress", Json::str(spec)),
+            ("bytes_sent", Json::num(r.bytes_sent as f64)),
+            ("bytes_saved", Json::num(r.bytes_saved as f64)),
+            ("best_train_loss", Json::num(r.best_train_loss)),
+            ("final_eval_loss", Json::num(r.final_eval_loss)),
+            ("best_eval_metric", Json::num(r.best_eval_metric)),
+            ("sim_time", Json::num(r.sim_time)),
+        ]));
+    }
+    table.print();
+    table.write_json(&env.out_path("compress.json"))?;
+    let bench = Json::obj(vec![
+        ("schema", Json::str("bench-compress/v1")),
+        ("preset", Json::str(&task.preset)),
+        ("m", Json::num(env.scale.m() as f64)),
+        ("steps", Json::num(env.scale.steps() as f64)),
+        ("tau", Json::num(tau as f64)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = env.out_path("BENCH_compress.json");
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, crate::jsonx::to_string(&bench))?;
+    crate::info!("wrote {path}");
+    Ok(table)
+}
+
 // ----------------------------------------------------------------- theory
 
 /// Theorem 1 / Corollary 1-2 validation on the quadratic workload

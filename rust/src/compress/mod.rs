@@ -1,0 +1,1375 @@
+//! Pluggable communication compression: quantization, sparsification and
+//! error-feedback, applied to every message lane the reproduction owns
+//! (inner gossip, ring collectives, the SlowMo outer average) with
+//! *honest byte accounting* — the fabric, the α-β [`crate::net::CostModel`]
+//! and the chaos retransmit charges all see the compressed wire size,
+//! while the data lane keeps carrying the decoded f32 values so the
+//! simulated math is exactly what a real compressed transport delivers.
+//!
+//! A [`Compressor`] lossily encodes an f32 slice into a [`Wire`] message
+//! (decoded back on the receive side); [`CompressState`] carries the
+//! per-worker, per-link residual buffers for error-feedback and the
+//! deterministic [`crate::rng::stream`] counters for randomized codecs,
+//! so two runs with the same seed are bit-identical. Compressors are
+//! selected through the string-keyed [`CompressRegistry`] — the same
+//! `key[:args]` spec grammar and hard-parse-error contract as
+//! [`crate::algorithms::AlgoRegistry`] and
+//! [`crate::slowmo::OuterRegistry`] — backing `--compress` on the CLI,
+//! the `[compress]` TOML table, `TrainBuilder::compress` and the
+//! `slowmo exp compress` sweep.
+//!
+//! Built-ins:
+//! - `none`            — identity (the default; bit-identical to the
+//!   pre-subsystem path, asserted in `rust/tests/equivalences.rs`);
+//! - `fp16` / `bf16`   — 2-byte quantization (round-to-nearest-even);
+//! - `topk[:frac]`     — keep the `ceil(frac·d)` largest-magnitude
+//!   coordinates (index+value wire format, dense fallback when sparse
+//!   encoding would exceed the raw size);
+//! - `randk[:frac]`    — keep `ceil(frac·d)` uniformly random coordinates
+//!   (unbiased `d/k` rescale; indices drawn from a seeded
+//!   [`crate::rng::stream`], so runs stay deterministic);
+//! - `signsgd[:chunk]` — 1 bit per coordinate plus one f32 scale
+//!   (mean |x|) per `chunk` coordinates; the mean of the decoded
+//!   ±scale vectors acts as the soft majority vote of SIGNSGD-style
+//!   reduces;
+//! - `ef:<inner>`      — error feedback around any other compressor:
+//!   the residual `e = (x + r) - decode(encode(x + r))` is carried per
+//!   link and re-injected into the next message. Residuals at the SlowMo
+//!   outer boundary register with the elastic-membership machinery: they
+//!   rescale with the live-worker ratio and ride the rejoin state
+//!   transfer exactly like [`crate::slowmo::OuterOpt`] buffers.
+
+use crate::rng::{stream, Xoshiro256};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Well-known residual/stream site keys. A *site* identifies one logical
+/// send location on one worker (a gossip out-link, a collective input, the
+/// outer-boundary average), so error-feedback residuals never mix across
+/// lanes and randomized codecs draw from independent deterministic
+/// streams.
+pub mod site {
+    /// The SlowMo outer-boundary exact average (paper Alg. 1 line 6).
+    /// Residuals at this site are rescaled on elastic-membership changes
+    /// and shipped in the rejoin state transfer.
+    pub const OUTER: u64 = 1 << 40;
+    /// Outer-boundary momentum-buffer average (`BufferStrategy::Average`).
+    pub const OUTER_H: u64 = (1 << 40) + 1;
+    /// Outer-boundary second-moment average (`BufferStrategy::Average`).
+    pub const OUTER_V: u64 = (1 << 40) + 2;
+    /// Per-step gradient allreduce (the `ar` base algorithm).
+    pub const GRAD: u64 = 2 << 40;
+    /// Double-averaging periodic parameter / h / v averages.
+    pub const DAVG_X: u64 = 3 << 40;
+    pub const DAVG_H: u64 = (3 << 40) + 1;
+    pub const DAVG_V: u64 = (3 << 40) + 2;
+    /// Gossip out-link to `peer` (SGP / OSGP / D-PSGD).
+    pub fn gossip(peer: usize) -> u64 {
+        (4u64 << 40) | peer as u64
+    }
+}
+
+/// One encoded message: the wire representation (still carried as f32
+/// slots through the in-process fabric) plus the honest byte count a real
+/// transport would move for it.
+#[derive(Clone, Debug)]
+pub struct Wire {
+    /// Codec-specific representation (values, packed index bits, packed
+    /// sign words, per-chunk scales, ...).
+    pub data: Vec<f32>,
+    /// Original (decoded) length.
+    pub d: usize,
+    /// Bytes a real transport would move for this message.
+    pub wire_bytes: u64,
+}
+
+/// Per-worker compression state: error-feedback residuals and stream
+/// counters, keyed by [`site`]. Owned by
+/// [`crate::algorithms::WorkerState`] so it follows the worker through
+/// elastic membership (rescale + rejoin transfer).
+#[derive(Clone, Debug, Default)]
+pub struct CompressState {
+    /// Base seed (the run seed) for deterministic randomized codecs.
+    pub seed: u64,
+    /// This worker's rank (stream namespace).
+    pub worker: u64,
+    residuals: BTreeMap<u64, Vec<f32>>,
+    counters: BTreeMap<u64, u64>,
+}
+
+impl CompressState {
+    pub fn new(seed: u64, worker: u64) -> Self {
+        Self {
+            seed,
+            worker,
+            residuals: BTreeMap::new(),
+            counters: BTreeMap::new(),
+        }
+    }
+
+    /// The residual buffer for `site`, created zeroed (and reset when the
+    /// message length changed, e.g. after an elastic ring rebuild).
+    pub fn residual(&mut self, site: u64, d: usize) -> &mut Vec<f32> {
+        let r = self.residuals.entry(site).or_default();
+        if r.len() != d {
+            *r = vec![0.0; d];
+        }
+        r
+    }
+
+    /// Read-only view of the residual at `site`, if one exists.
+    pub fn residual_opt(&self, site: u64) -> Option<&Vec<f32>> {
+        self.residuals.get(&site)
+    }
+
+    /// Overwrite the residual at `site` (rejoin transfer install path).
+    pub fn set_residual(&mut self, site: u64, buf: Vec<f32>) {
+        self.residuals.insert(site, buf);
+    }
+
+    /// Rescale every residual buffer by `factor` — called by the elastic
+    /// membership machinery when the live worker count changes (residuals
+    /// aggregate displacement mass exactly like outer-optimizer state).
+    pub fn scale_residuals(&mut self, factor: f32) {
+        for buf in self.residuals.values_mut() {
+            for v in buf.iter_mut() {
+                *v *= factor;
+            }
+        }
+    }
+
+    /// Drop every residual buffer. Called for a rejoining worker before
+    /// the leader's state is installed: residuals from before the outage
+    /// are stale (they missed every membership rescale while the worker
+    /// was down) — exactly like base-optimizer buffers, they reset.
+    pub fn clear_residuals(&mut self) {
+        self.residuals.clear();
+    }
+
+    /// A fresh deterministic RNG for the next message at `site`: streams
+    /// derive from `(seed, worker, site, per-site counter)`, so encode
+    /// results never depend on thread interleaving.
+    pub fn next_stream(&mut self, s: u64) -> Xoshiro256 {
+        let c = self.counters.entry(s).or_insert(0);
+        let idx = *c;
+        *c += 1;
+        stream(self.seed, "compress", self.worker, s, idx)
+    }
+}
+
+/// One communication compressor. Implementations are stateless
+/// hyperparameter descriptors (like [`crate::slowmo::OuterOpt`]); all
+/// mutable per-run state lives in [`CompressState`] so the framework can
+/// rescale and ship it without knowing the codec.
+pub trait Compressor: Send + Sync {
+    /// Registry key this codec answers to ("topk", "fp16", ...).
+    fn key(&self) -> String;
+
+    /// Hyperparameter fragment for display names; empty when none.
+    fn params(&self) -> String;
+
+    /// Lossily encode `x`. `site` keys the error-feedback residual and
+    /// the deterministic stream for randomized codecs.
+    fn encode(&self, x: &[f32], st: &mut CompressState, site: u64) -> Wire;
+
+    /// Decode into `out` (length `wire.d`); overwrites every slot.
+    fn decode(&self, wire: &Wire, out: &mut [f32]);
+
+    /// Bytes a real transport moves for a `d`-element message under this
+    /// codec. Used by the α-β cost model and the collective byte
+    /// accounting; must match what [`Compressor::encode`] reports and
+    /// never exceed the raw `4·d` (codecs fall back to dense encoding
+    /// when the sparse form would be larger).
+    fn wire_bytes(&self, d: usize) -> u64;
+
+    /// `true` only for the `none` codec: callers skip the encode/decode
+    /// round-trip entirely so the path stays bit-identical to the
+    /// pre-subsystem code.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Number of `d`-length buffers this codec contributes to the SlowMo
+    /// rejoin state transfer (error-feedback residuals at [`site::OUTER`];
+    /// 0 for stateless codecs). The rejoin wire format is derived from
+    /// this count, the same state-shape-agnostic way it is from
+    /// [`crate::slowmo::OuterOpt::n_bufs`].
+    fn ef_bufs(&self) -> usize {
+        0
+    }
+
+    /// The buffers to ship in a rejoin transfer (exactly
+    /// [`Compressor::ef_bufs`] buffers of length `d`, zero-filled when the
+    /// site has no residual yet).
+    fn rejoin_state(&self, st: &CompressState, d: usize) -> Vec<Vec<f32>> {
+        let _ = (st, d);
+        Vec::new()
+    }
+
+    /// Install buffers received in a rejoin transfer (same order as
+    /// [`Compressor::rejoin_state`]).
+    fn install_rejoin_state(&self, st: &mut CompressState, bufs: &[&[f32]]) {
+        let _ = (st, bufs);
+    }
+
+    /// Encode+decode `x` in place (what every send site calls) and return
+    /// the honest wire byte count.
+    fn transcode(&self, x: &mut [f32], st: &mut CompressState, s: u64) -> u64 {
+        if self.is_identity() {
+            return x.len() as u64 * 4;
+        }
+        let wire = self.encode(x, st, s);
+        self.decode(&wire, x);
+        wire.wire_bytes
+    }
+}
+
+/// Human-readable "key" or "key(params)" fragment for display names.
+pub fn describe(c: &dyn Compressor) -> String {
+    let p = c.params();
+    if p.is_empty() {
+        c.key()
+    } else {
+        format!("{}({p})", c.key())
+    }
+}
+
+// ------------------------------------------------------- f16/bf16 helpers
+
+/// f32 -> IEEE binary16 bit pattern, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (preserve NaN-ness with a quiet payload bit).
+        return sign | 0x7c00 | u16::from(mant != 0) << 9;
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal half (or underflow to zero).
+        if e < -10 {
+            return sign;
+        }
+        let mant = mant | 0x0080_0000; // make the implicit bit explicit
+        let shift = (14 - e) as u32; // 14..=24
+        let half = mant >> shift;
+        let rem = mant & ((1u32 << shift) - 1);
+        let midpoint = 1u32 << (shift - 1);
+        let rounded = if rem > midpoint
+            || (rem == midpoint && (half & 1) == 1)
+        {
+            half + 1
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    let half = mant >> 13;
+    let rem = mant & 0x1fff;
+    let mut out = ((e as u32) << 10) | half;
+    if rem > 0x1000 || (rem == 0x1000 && (out & 1) == 1) {
+        out += 1; // carry may bump the exponent — that is correct
+    }
+    sign | out as u16
+}
+
+/// IEEE binary16 bit pattern -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = u32::from(h & 0x8000) << 16;
+    let exp = u32::from((h >> 10) & 0x1f);
+    let mant = u32::from(h & 0x03ff);
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal half: renormalize into f32.
+            let mut e: u32 = 113; // 127 - 15 + 1
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03ff;
+            sign | (e << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round `x` through bfloat16 (round-to-nearest-even on the top 16 bits).
+pub fn round_bf16(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rem = bits & 0xffff;
+    let mut hi = bits >> 16;
+    if rem > 0x8000 || (rem == 0x8000 && (hi & 1) == 1) {
+        hi += 1; // may round up to inf — correct
+    }
+    f32::from_bits(hi << 16)
+}
+
+/// Round `x` through IEEE binary16.
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+// -------------------------------------------------------------- built-ins
+
+/// Identity codec: the default. Callers short-circuit on
+/// [`Compressor::is_identity`], so this path is bit-identical to the
+/// pre-compression code (equivalence-tested).
+#[derive(Clone, Copy, Debug)]
+pub struct NoneCompressor;
+
+impl Compressor for NoneCompressor {
+    fn key(&self) -> String {
+        "none".into()
+    }
+
+    fn params(&self) -> String {
+        String::new()
+    }
+
+    fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
+        Wire {
+            data: x.to_vec(),
+            d: x.len(),
+            wire_bytes: x.len() as u64 * 4,
+        }
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        out.copy_from_slice(&wire.data);
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        d as u64 * 4
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+}
+
+/// 2-byte quantization: fp16 (IEEE binary16) or bf16 (truncated f32),
+/// both round-to-nearest-even. Wire: 2 bytes per coordinate.
+#[derive(Clone, Copy, Debug)]
+pub struct HalfQuant {
+    /// `true` = bfloat16, `false` = IEEE binary16.
+    pub bf: bool,
+}
+
+impl Compressor for HalfQuant {
+    fn key(&self) -> String {
+        if self.bf { "bf16".into() } else { "fp16".into() }
+    }
+
+    fn params(&self) -> String {
+        String::new()
+    }
+
+    fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
+        let data = x
+            .iter()
+            .map(|&v| if self.bf { round_bf16(v) } else { round_f16(v) })
+            .collect();
+        Wire {
+            data,
+            d: x.len(),
+            wire_bytes: self.wire_bytes(x.len()),
+        }
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        out.copy_from_slice(&wire.data);
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        d as u64 * 2
+    }
+}
+
+fn k_of(frac: f32, d: usize) -> usize {
+    if d == 0 {
+        return 0;
+    }
+    ((frac as f64 * d as f64).ceil() as usize).clamp(1, d)
+}
+
+/// Sparse index+value wire size with dense fallback: `8·k` bytes (u32
+/// index + f32 value per kept coordinate) capped at the raw `4·d`.
+fn sparse_wire_bytes(k: usize, d: usize) -> u64 {
+    (k as u64 * 8).min(d as u64 * 4)
+}
+
+/// Pack kept (index, value) pairs into a [`Wire`]: first `k` slots carry
+/// the index bit patterns, the next `k` the values.
+fn sparse_pack(idx: &[usize], x: &[f32], wire_bytes: u64) -> Wire {
+    let mut data = Vec::with_capacity(idx.len() * 2);
+    data.extend(idx.iter().map(|&i| f32::from_bits(i as u32)));
+    data.extend(idx.iter().map(|&i| x[i]));
+    Wire {
+        data,
+        d: x.len(),
+        wire_bytes,
+    }
+}
+
+fn sparse_unpack(wire: &Wire, out: &mut [f32], scale: f32) {
+    out.fill(0.0);
+    let k = wire.data.len() / 2;
+    for j in 0..k {
+        let i = wire.data[j].to_bits() as usize;
+        debug_assert!(i < out.len(), "sparse index out of range");
+        out[i] = wire.data[k + j] * scale;
+    }
+}
+
+/// Top-k magnitude sparsification: keep the `ceil(frac·d)` coordinates
+/// with the largest |x| (ties broken toward the lower index, so encodes
+/// are deterministic).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    pub frac: f32,
+}
+
+impl Compressor for TopK {
+    fn key(&self) -> String {
+        "topk".into()
+    }
+
+    fn params(&self) -> String {
+        self.frac.to_string()
+    }
+
+    fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
+        let d = x.len();
+        let k = k_of(self.frac, d);
+        let mut order: Vec<usize> = (0..d).collect();
+        // O(d) selection of the k largest-|x| indices (total order with
+        // the index tie-break, so the kept set is deterministic), then
+        // sort just those k for the wire layout.
+        if k > 0 && k < d {
+            order.select_nth_unstable_by(k - 1, |&a, &b| {
+                x[b].abs()
+                    .total_cmp(&x[a].abs())
+                    .then_with(|| a.cmp(&b))
+            });
+            order.truncate(k);
+        }
+        order.sort_unstable();
+        sparse_pack(&order, x, self.wire_bytes(d))
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        sparse_unpack(wire, out, 1.0);
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        sparse_wire_bytes(k_of(self.frac, d), d)
+    }
+}
+
+/// Random-k sparsification with the unbiased `d/k` rescale. Indices come
+/// from the per-site deterministic stream, so two runs with the same seed
+/// pick the same coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct RandK {
+    pub frac: f32,
+}
+
+impl Compressor for RandK {
+    fn key(&self) -> String {
+        "randk".into()
+    }
+
+    fn params(&self) -> String {
+        self.frac.to_string()
+    }
+
+    fn encode(&self, x: &[f32], st: &mut CompressState, s: u64) -> Wire {
+        let d = x.len();
+        let k = k_of(self.frac, d);
+        let mut rng = st.next_stream(s);
+        // Partial Fisher-Yates: k distinct indices.
+        let mut pool: Vec<usize> = (0..d).collect();
+        for j in 0..k {
+            let pick = j + rng.below((d - j) as u64) as usize;
+            pool.swap(j, pick);
+        }
+        let mut kept = pool[..k].to_vec();
+        kept.sort_unstable();
+        // The d/k rescale is applied at decode so the wire carries the raw
+        // values (exact) and EF residuals see the decoded estimate.
+        sparse_pack(&kept, x, self.wire_bytes(d))
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        let k = wire.data.len() / 2;
+        let scale = if k == 0 { 0.0 } else { wire.d as f32 / k as f32 };
+        sparse_unpack(wire, out, scale);
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        sparse_wire_bytes(k_of(self.frac, d), d)
+    }
+}
+
+/// 1-bit SIGNSGD-style quantization: per `chunk` coordinates, one f32
+/// scale (mean |x| over the chunk) plus one sign bit per coordinate
+/// (zero encodes as +). Averaging the decoded ±scale vectors across
+/// workers is the soft majority vote of majority-vote SIGNSGD reduces.
+#[derive(Clone, Copy, Debug)]
+pub struct SignSgd {
+    pub chunk: usize,
+}
+
+impl SignSgd {
+    fn n_chunks(&self, d: usize) -> usize {
+        d.div_ceil(self.chunk)
+    }
+}
+
+impl Compressor for SignSgd {
+    fn key(&self) -> String {
+        "signsgd".into()
+    }
+
+    fn params(&self) -> String {
+        self.chunk.to_string()
+    }
+
+    fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
+        let d = x.len();
+        let n_chunks = self.n_chunks(d);
+        let n_words = d.div_ceil(32);
+        let mut data = Vec::with_capacity(n_chunks + n_words);
+        for c in 0..n_chunks {
+            let lo = c * self.chunk;
+            let hi = (lo + self.chunk).min(d);
+            let mean_abs: f32 = x[lo..hi]
+                .iter()
+                .map(|v| v.abs())
+                .sum::<f32>()
+                / (hi - lo) as f32;
+            data.push(mean_abs);
+        }
+        for w in 0..n_words {
+            let mut word: u32 = 0;
+            for b in 0..32 {
+                let i = w * 32 + b;
+                if i < d && x[i].is_sign_negative() && x[i] != 0.0 {
+                    word |= 1 << b;
+                }
+            }
+            data.push(f32::from_bits(word));
+        }
+        Wire {
+            data,
+            d,
+            wire_bytes: self.wire_bytes(d),
+        }
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        let d = wire.d;
+        let n_chunks = self.n_chunks(d);
+        for (i, o) in out.iter_mut().enumerate() {
+            let scale = wire.data[i / self.chunk];
+            let word = wire.data[n_chunks + i / 32].to_bits();
+            let neg = (word >> (i % 32)) & 1 == 1;
+            *o = if neg { -scale } else { scale };
+        }
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        if d == 0 {
+            return 0;
+        }
+        // One f32 scale per chunk + one sign bit per coordinate.
+        (self.n_chunks(d) as u64 * 4 + d.div_ceil(8) as u64)
+            .min(d as u64 * 4)
+    }
+}
+
+/// Error feedback (Seide et al. 2014; Karimireddy et al. 2019) around any
+/// inner codec: each message sends `compress(x + r)` and keeps the new
+/// residual `r ← (x + r) - decode(compress(x + r))` for this site. With
+/// `topk:1.0` inside (keep everything) the residual is identically zero
+/// and the transcode is value-exact, which the equivalence tests pin.
+pub struct ErrorFeedback {
+    pub inner: Arc<dyn Compressor>,
+}
+
+impl Compressor for ErrorFeedback {
+    fn key(&self) -> String {
+        "ef".into()
+    }
+
+    fn params(&self) -> String {
+        describe(self.inner.as_ref())
+    }
+
+    fn encode(&self, x: &[f32], st: &mut CompressState, s: u64) -> Wire {
+        let d = x.len();
+        let mut e = x.to_vec();
+        {
+            let r = st.residual(s, d);
+            for (ev, rv) in e.iter_mut().zip(r.iter()) {
+                *ev += *rv;
+            }
+        }
+        let wire = self.inner.encode(&e, st, s);
+        let mut dec = vec![0.0f32; d];
+        self.inner.decode(&wire, &mut dec);
+        let r = st.residual(s, d);
+        for ((rv, ev), dv) in r.iter_mut().zip(&e).zip(&dec) {
+            *rv = ev - dv;
+        }
+        wire
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        self.inner.decode(wire, out);
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        self.inner.wire_bytes(d)
+    }
+
+    fn ef_bufs(&self) -> usize {
+        1
+    }
+
+    fn rejoin_state(&self, st: &CompressState, d: usize) -> Vec<Vec<f32>> {
+        vec![match st.residual_opt(site::OUTER) {
+            Some(r) if r.len() == d => r.clone(),
+            _ => vec![0.0; d],
+        }]
+    }
+
+    fn install_rejoin_state(&self, st: &mut CompressState, bufs: &[&[f32]]) {
+        if let Some(buf) = bufs.first() {
+            st.set_residual(site::OUTER, buf.to_vec());
+        }
+    }
+}
+
+// -------------------------------------------------------------- selection
+
+/// A parsed compressor selection: canonical key + numeric args + the
+/// nested inner selection for wrapper codecs (`ef:<inner>`). Round-trips
+/// through [`CompressSel::spec`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressSel {
+    pub key: String,
+    pub args: Vec<f32>,
+    pub inner: Option<Box<CompressSel>>,
+}
+
+impl CompressSel {
+    pub fn none() -> Self {
+        Self::new("none")
+    }
+
+    pub fn new(key: &str) -> Self {
+        Self {
+            key: key.to_string(),
+            args: Vec::new(),
+            inner: None,
+        }
+    }
+
+    pub fn with_args(key: &str, args: &[f32]) -> Self {
+        Self {
+            key: key.to_string(),
+            args: args.to_vec(),
+            inner: None,
+        }
+    }
+
+    pub fn wrapping(key: &str, inner: CompressSel) -> Self {
+        Self {
+            key: key.to_string(),
+            args: Vec::new(),
+            inner: Some(Box::new(inner)),
+        }
+    }
+
+    /// `true` for the identity selection (no compression configured).
+    pub fn is_none(&self) -> bool {
+        self.key == "none"
+    }
+
+    /// The spec-string form ("topk:0.1", "ef:topk:0.1", "none").
+    pub fn spec(&self) -> String {
+        let mut s = self.key.clone();
+        if let Some(inner) = &self.inner {
+            s.push(':');
+            s.push_str(&inner.spec());
+        }
+        if !self.args.is_empty() {
+            s.push(':');
+            let args: Vec<String> =
+                self.args.iter().map(|a| a.to_string()).collect();
+            s.push_str(&args.join(","));
+        }
+        s
+    }
+}
+
+// --------------------------------------------------------------- registry
+
+type CompressFactory = Box<
+    dyn Fn(&[f32], Option<Arc<dyn Compressor>>) -> Result<Arc<dyn Compressor>>
+        + Send
+        + Sync,
+>;
+
+struct CompressEntry {
+    factory: CompressFactory,
+    help: String,
+    /// Positional numeric spec arguments (name, default); an argument
+    /// without a default is required.
+    args: Vec<(String, Option<f32>)>,
+    /// Wrapper codecs (`ef`) take a nested inner spec instead of numbers.
+    takes_inner: bool,
+}
+
+/// String-keyed registry of [`Compressor`] factories with the same
+/// spec-grammar / hard-parse-error contract as
+/// [`crate::algorithms::AlgoRegistry`] and
+/// [`crate::slowmo::OuterRegistry`].
+pub struct CompressRegistry {
+    entries: BTreeMap<String, CompressEntry>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl Default for CompressRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+impl CompressRegistry {
+    /// An empty registry (no codecs).
+    pub fn empty() -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            aliases: BTreeMap::new(),
+        }
+    }
+
+    /// The built-in codecs, pre-registered.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register("none", "no compression (raw f32; the default)", &[],
+                   false, |_, _| {
+            Ok(Arc::new(NoneCompressor) as Arc<dyn Compressor>)
+        });
+        r.register("fp16", "IEEE binary16 quantization (2 B/coord)", &[],
+                   false, |_, _| {
+            Ok(Arc::new(HalfQuant { bf: false }) as Arc<dyn Compressor>)
+        });
+        r.register("bf16", "bfloat16 quantization (2 B/coord)", &[],
+                   false, |_, _| {
+            Ok(Arc::new(HalfQuant { bf: true }) as Arc<dyn Compressor>)
+        });
+        r.register(
+            "topk",
+            "keep the ceil(frac*d) largest-|x| coords (index+value wire)",
+            &[("frac", Some(0.1))],
+            false,
+            |a, _| {
+                ensure!(
+                    a[0] > 0.0 && a[0] <= 1.0,
+                    "topk frac must be in (0,1] (got {})",
+                    a[0]
+                );
+                Ok(Arc::new(TopK { frac: a[0] }) as Arc<dyn Compressor>)
+            },
+        );
+        r.register(
+            "randk",
+            "keep ceil(frac*d) random coords (seeded stream, d/k rescale)",
+            &[("frac", Some(0.1))],
+            false,
+            |a, _| {
+                ensure!(
+                    a[0] > 0.0 && a[0] <= 1.0,
+                    "randk frac must be in (0,1] (got {})",
+                    a[0]
+                );
+                Ok(Arc::new(RandK { frac: a[0] }) as Arc<dyn Compressor>)
+            },
+        );
+        r.register(
+            "signsgd",
+            "1 bit/coord + one f32 scale per chunk (soft majority vote)",
+            &[("chunk", Some(64.0))],
+            false,
+            |a, _| {
+                ensure!(
+                    a[0] >= 1.0 && a[0].fract() == 0.0,
+                    "signsgd chunk must be an integer >= 1 (got {})",
+                    a[0]
+                );
+                Ok(Arc::new(SignSgd { chunk: a[0] as usize })
+                    as Arc<dyn Compressor>)
+            },
+        );
+        r.register(
+            "ef",
+            "error feedback around any inner codec (ef:topk:0.1, ...)",
+            &[],
+            true,
+            |_, inner| {
+                let inner = inner.ok_or_else(|| {
+                    anyhow!("ef needs an inner codec (e.g. ef:topk:0.1)")
+                })?;
+                ensure!(
+                    inner.key() != "ef",
+                    "ef cannot wrap another ef (residuals would share a \
+                     site)"
+                );
+                ensure!(
+                    !inner.is_identity(),
+                    "ef around the identity codec is a no-op; drop the \
+                     ef: prefix or pick a lossy inner codec"
+                );
+                Ok(Arc::new(ErrorFeedback { inner })
+                    as Arc<dyn Compressor>)
+            },
+        );
+        r
+    }
+
+    /// Register a factory under `key`. `args` declares the positional
+    /// numeric spec arguments (name, default); `takes_inner` marks
+    /// wrapper codecs whose `:`-suffix is a nested codec spec instead.
+    /// Re-registering a key replaces the previous factory.
+    pub fn register(
+        &mut self,
+        key: &str,
+        help: &str,
+        args: &[(&str, Option<f32>)],
+        takes_inner: bool,
+        factory: impl Fn(
+                &[f32],
+                Option<Arc<dyn Compressor>>,
+            ) -> Result<Arc<dyn Compressor>>
+            + Send
+            + Sync
+            + 'static,
+    ) {
+        self.entries.insert(
+            key.to_string(),
+            CompressEntry {
+                factory: Box::new(factory),
+                help: help.to_string(),
+                args: args
+                    .iter()
+                    .map(|(n, d)| (n.to_string(), *d))
+                    .collect(),
+                takes_inner,
+            },
+        );
+    }
+
+    /// Register `alias` as another name for the existing `key`.
+    pub fn alias(&mut self, alias: &str, key: &str) {
+        assert!(
+            self.entries.contains_key(key),
+            "alias target {key:?} not registered"
+        );
+        self.aliases.insert(alias.to_string(), key.to_string());
+    }
+
+    /// Canonical keys, sorted.
+    pub fn keys(&self) -> Vec<&str> {
+        self.entries.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.canonical(key).is_some()
+    }
+
+    fn canonical(&self, key: &str) -> Option<&str> {
+        if let Some((k, _)) = self.entries.get_key_value(key) {
+            return Some(k.as_str());
+        }
+        self.aliases.get(key).map(|k| k.as_str())
+    }
+
+    /// Human-readable list of valid spec forms, for error messages and
+    /// CLI help.
+    pub fn valid_forms(&self) -> String {
+        let forms: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(k, e)| {
+                if e.takes_inner {
+                    format!("{k}:<codec>")
+                } else if e.args.is_empty() {
+                    k.clone()
+                } else {
+                    let names: Vec<&str> =
+                        e.args.iter().map(|(n, _)| n.as_str()).collect();
+                    format!("{k}[:{}]", names.join(","))
+                }
+            })
+            .collect();
+        forms.join("|")
+    }
+
+    /// One line per codec, for `--help`-style output.
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        for (k, e) in &self.entries {
+            s.push_str(&format!("  {:<12} {}\n", k, e.help));
+        }
+        s
+    }
+
+    /// Parse a spec string such as "topk:0.1", "ef:topk:0.1", "fp16" or
+    /// "none". Every malformed input is a hard error: unknown keys,
+    /// non-numeric / non-finite arguments, extra arguments, and a missing
+    /// inner codec for wrappers all fail with a message listing the valid
+    /// forms.
+    pub fn parse(&self, spec: &str) -> Result<CompressSel> {
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (spec, None),
+        };
+        let Some(key) = self.canonical(name) else {
+            bail!(
+                "unknown compressor {spec:?}; valid forms: {}",
+                self.valid_forms()
+            );
+        };
+        let entry = &self.entries[key];
+        if entry.takes_inner {
+            let Some(rest) = rest else {
+                bail!(
+                    "compressor {name:?} needs an inner codec (e.g. \
+                     {name}:topk:0.1); valid forms: {}",
+                    self.valid_forms()
+                );
+            };
+            let inner = self.parse(rest)?;
+            return Ok(CompressSel::wrapping(key, inner));
+        }
+        let mut args = Vec::new();
+        if let Some(rest) = rest {
+            if entry.args.is_empty() {
+                bail!(
+                    "compressor {name:?} takes no ':' argument (got \
+                     {spec:?}); valid forms: {}",
+                    self.valid_forms()
+                );
+            }
+            for raw in rest.split(',') {
+                let v = raw.parse::<f32>().map_err(|_| {
+                    anyhow!(
+                        "malformed argument {raw:?} in compress spec \
+                         {spec:?}: expected a number; valid forms: {}",
+                        self.valid_forms()
+                    )
+                })?;
+                ensure!(
+                    v.is_finite(),
+                    "non-finite argument {raw:?} in compress spec {spec:?}"
+                );
+                args.push(v);
+            }
+            if args.len() > entry.args.len() {
+                bail!(
+                    "too many arguments in compress spec {spec:?}: \
+                     {name:?} takes at most {} ({}); valid forms: {}",
+                    entry.args.len(),
+                    entry
+                        .args
+                        .iter()
+                        .map(|(n, _)| n.as_str())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    self.valid_forms()
+                );
+            }
+        }
+        Ok(CompressSel {
+            key: key.to_string(),
+            args,
+            inner: None,
+        })
+    }
+
+    /// Instantiate the codec `sel` names, filling in defaults for
+    /// arguments the spec omitted and building nested inner codecs.
+    pub fn build(&self, sel: &CompressSel) -> Result<Arc<dyn Compressor>> {
+        let key = self.canonical(&sel.key).ok_or_else(|| {
+            anyhow!(
+                "unknown compressor key {:?}; registered: {}",
+                sel.key,
+                self.keys().join(", ")
+            )
+        })?;
+        let entry = &self.entries[key];
+        let inner = match (&sel.inner, entry.takes_inner) {
+            (Some(i), true) => Some(self.build(i)?),
+            (None, _) => None,
+            (Some(i), false) => bail!(
+                "compressor {key:?} does not wrap an inner codec (got \
+                 inner {:?})",
+                i.spec()
+            ),
+        };
+        ensure!(
+            sel.args.len() <= entry.args.len(),
+            "compressor {key:?} takes at most {} argument(s), got {}",
+            entry.args.len(),
+            sel.args.len()
+        );
+        let mut args = sel.args.clone();
+        for (name, default) in entry.args.iter().skip(args.len()) {
+            match default {
+                Some(d) => args.push(*d),
+                None => bail!(
+                    "compressor {key:?} needs argument {name:?} (no \
+                     default); valid forms: {}",
+                    self.valid_forms()
+                ),
+            }
+        }
+        (entry.factory)(&args, inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st() -> CompressState {
+        CompressState::new(7, 0)
+    }
+
+    fn demo(d: usize) -> Vec<f32> {
+        (0..d)
+            .map(|i| ((i as f32 * 0.7).sin() - 0.3) * (1.0 + i as f32 * 0.1))
+            .collect()
+    }
+
+    fn transcoded(c: &dyn Compressor, x: &[f32]) -> (Vec<f32>, u64) {
+        let mut y = x.to_vec();
+        let wire = c.transcode(&mut y, &mut st(), site::GRAD);
+        (y, wire)
+    }
+
+    #[test]
+    fn none_is_identity_bitwise() {
+        let c = NoneCompressor;
+        assert!(c.is_identity());
+        let x = demo(17);
+        let (y, wire) = transcoded(&c, &x);
+        assert_eq!(y, x);
+        assert_eq!(wire, 17 * 4);
+        assert_eq!(c.wire_bytes(17), 68);
+    }
+
+    #[test]
+    fn f16_round_trip_known_values() {
+        for &(x, want) in &[
+            (0.0f32, 0.0f32),
+            (1.0, 1.0),
+            (-2.0, -2.0),
+            (0.5, 0.5),
+            (65504.0, 65504.0), // f16 max
+            (1e-8, 0.0),        // below subnormal range -> flush
+        ] {
+            assert_eq!(round_f16(x), want, "x={x}");
+        }
+        // Overflow saturates to inf.
+        assert!(round_f16(1e6).is_infinite());
+        // Rounding error bounded by 2^-11 relative for normals.
+        for &x in &[0.1f32, 3.14159, -271.8, 0.000061] {
+            let r = round_f16(x);
+            assert!(
+                (r - x).abs() <= x.abs() * 4.9e-4 + 6e-8,
+                "x={x} r={r}"
+            );
+        }
+        // Subnormal halves round-trip through the decoder exactly.
+        let sub = f16_bits_to_f32(0x0001);
+        assert!(sub > 0.0);
+        assert_eq!(round_f16(sub), sub);
+    }
+
+    #[test]
+    fn bf16_round_trip_bounds() {
+        for &x in &[0.1f32, 1.0, -3.5, 1234.5, 1e-20] {
+            let r = round_bf16(x);
+            assert!((r - x).abs() <= x.abs() * 4e-3, "x={x} r={r}");
+        }
+        assert!(round_bf16(f32::NAN).is_nan());
+        let c = HalfQuant { bf: true };
+        assert_eq!(c.key(), "bf16");
+        assert_eq!(c.wire_bytes(10), 20);
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_exactly() {
+        let c = TopK { frac: 0.25 };
+        let x = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0];
+        let (y, wire) = transcoded(&c, &x);
+        // k = 2: keeps -5.0 and 3.0, exactly, zeros elsewhere.
+        assert_eq!(y, vec![0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(wire, 16);
+    }
+
+    #[test]
+    fn topk_full_keep_is_value_exact() {
+        let c = TopK { frac: 1.0 };
+        let x = demo(33);
+        let (y, wire) = transcoded(&c, &x);
+        assert_eq!(y, x);
+        // Dense fallback: never charged more than raw f32.
+        assert_eq!(wire, 33 * 4);
+    }
+
+    #[test]
+    fn topk_tie_break_is_deterministic() {
+        let c = TopK { frac: 0.5 };
+        let x = vec![1.0f32, -1.0, 1.0, -1.0];
+        let (y, _) = transcoded(&c, &x);
+        // Ties broken toward lower indices: keeps 0 and 1.
+        assert_eq!(y, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn randk_is_deterministic_per_site_counter() {
+        let c = RandK { frac: 0.5 };
+        let x = demo(20);
+        let mut s1 = CompressState::new(42, 3);
+        let mut s2 = CompressState::new(42, 3);
+        let w1 = c.encode(&x, &mut s1, site::OUTER);
+        let w2 = c.encode(&x, &mut s2, site::OUTER);
+        assert_eq!(w1.data, w2.data);
+        // The next message at the same site draws a fresh stream.
+        let w3 = c.encode(&x, &mut s1, site::OUTER);
+        assert_ne!(w1.data, w3.data);
+        // Different workers pick different coordinates.
+        let mut s4 = CompressState::new(42, 4);
+        let w4 = c.encode(&x, &mut s4, site::OUTER);
+        assert_ne!(w1.data, w4.data);
+    }
+
+    #[test]
+    fn randk_rescales_unbiased() {
+        let c = RandK { frac: 0.5 };
+        let x = demo(16);
+        let mut state = st();
+        let wire = c.encode(&x, &mut state, site::GRAD);
+        let mut y = vec![0.0; 16];
+        c.decode(&wire, &mut y);
+        let k = 8;
+        let mut nonzero = 0;
+        for i in 0..16 {
+            if y[i] != 0.0 {
+                nonzero += 1;
+                assert_eq!(y[i], x[i] * (16.0 / k as f32), "coord {i}");
+            }
+        }
+        assert!(nonzero <= k);
+        // frac=1.0 keeps everything with scale 1 (value-exact).
+        let c1 = RandK { frac: 1.0 };
+        let (y1, _) = transcoded(&c1, &x);
+        assert_eq!(y1, x);
+    }
+
+    #[test]
+    fn signsgd_signs_and_scales() {
+        let c = SignSgd { chunk: 4 };
+        let x = vec![1.0f32, -2.0, 3.0, -4.0, 0.5, 0.5, -0.5, 0.0];
+        let (y, wire) = transcoded(&c, &x);
+        // Chunk 0 scale = mean(|1,-2,3,-4|) = 2.5; chunk 1 = 0.375.
+        assert_eq!(&y[..4], &[2.5, -2.5, 2.5, -2.5]);
+        assert_eq!(&y[4..], &[0.375, 0.375, -0.375, 0.375]); // 0 -> +
+        // 2 chunk scales (8 B) + 8 sign bits (1 B).
+        assert_eq!(wire, 9);
+        assert_eq!(c.wire_bytes(8), 9);
+    }
+
+    #[test]
+    fn signsgd_wire_bytes_never_exceed_raw() {
+        for d in [0usize, 1, 2, 7, 64, 65, 1000] {
+            let c = SignSgd { chunk: 64 };
+            assert!(c.wire_bytes(d) <= d as u64 * 4, "d={d}");
+        }
+        // Tiny messages fall back to the raw cap.
+        let c = SignSgd { chunk: 64 };
+        assert_eq!(c.wire_bytes(1), 4);
+    }
+
+    #[test]
+    fn ef_residual_carries_the_error() {
+        let inner = Arc::new(TopK { frac: 0.5 }) as Arc<dyn Compressor>;
+        let ef = ErrorFeedback { inner };
+        let mut state = st();
+        let x = vec![1.0f32, 0.1, -2.0, 0.2];
+        let mut y = x.clone();
+        ef.transcode(&mut y, &mut state, site::OUTER);
+        // k=2 keeps 1.0 and -2.0; residual = the dropped mass.
+        assert_eq!(y, vec![1.0, 0.0, -2.0, 0.0]);
+        let r = state.residual_opt(site::OUTER).unwrap();
+        assert_eq!(r, &vec![0.0, 0.1, 0.0, 0.2]);
+        // Next message re-injects the residual: 0.1/0.2 grow until sent.
+        let mut y2 = x.clone();
+        ef.transcode(&mut y2, &mut state, site::OUTER);
+        let r2 = state.residual_opt(site::OUTER).unwrap().clone();
+        // e = x + r = [1.0, 0.2, -2.0, 0.4]; still keeps the big two.
+        assert_eq!(y2, vec![1.0, 0.0, -2.0, 0.0]);
+        assert_eq!(r2, vec![0.0, 0.2, 0.0, 0.4]);
+    }
+
+    #[test]
+    fn ef_topk_full_keep_is_identity_with_zero_residual() {
+        let inner = Arc::new(TopK { frac: 1.0 }) as Arc<dyn Compressor>;
+        let ef = ErrorFeedback { inner };
+        let mut state = st();
+        let x = demo(29);
+        let mut y = x.clone();
+        for _ in 0..3 {
+            ef.transcode(&mut y, &mut state, site::OUTER);
+            assert_eq!(y, x);
+        }
+        let r = state.residual_opt(site::OUTER).unwrap();
+        assert!(r.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn ef_rejoin_state_round_trips() {
+        let ef = ErrorFeedback {
+            inner: Arc::new(TopK { frac: 0.5 }),
+        };
+        assert_eq!(ef.ef_bufs(), 1);
+        let mut a = st();
+        let mut x = vec![1.0f32, 0.25, -3.0, 0.5];
+        ef.transcode(&mut x, &mut a, site::OUTER);
+        let shipped = ef.rejoin_state(&a, 4);
+        assert_eq!(shipped.len(), 1);
+        let mut b = st();
+        let views: Vec<&[f32]> =
+            shipped.iter().map(|v| v.as_slice()).collect();
+        ef.install_rejoin_state(&mut b, &views);
+        assert_eq!(
+            b.residual_opt(site::OUTER),
+            a.residual_opt(site::OUTER)
+        );
+        // A site with no residual yet ships zeros.
+        let fresh = st();
+        assert_eq!(ef.rejoin_state(&fresh, 3), vec![vec![0.0; 3]]);
+    }
+
+    #[test]
+    fn residual_rescale_and_length_reset() {
+        let mut s = st();
+        s.set_residual(site::OUTER, vec![2.0; 4]);
+        s.scale_residuals(0.5);
+        assert_eq!(s.residual_opt(site::OUTER).unwrap(), &vec![1.0; 4]);
+        // Length change (elastic rebuild) resets to zeros.
+        assert_eq!(s.residual(site::OUTER, 6), &vec![0.0; 6]);
+    }
+
+    #[test]
+    fn registry_round_trips_every_builtin() {
+        let r = CompressRegistry::builtin();
+        assert_eq!(
+            r.keys(),
+            vec!["bf16", "ef", "fp16", "none", "randk", "signsgd", "topk"]
+        );
+        for spec in ["none", "fp16", "bf16", "topk:0.1", "randk:0.25",
+                     "signsgd:128", "ef:topk:0.1", "ef:signsgd"] {
+            let sel = r.parse(spec).unwrap();
+            assert_eq!(sel.spec(), spec, "spec round-trip");
+            let c = r.build(&sel).unwrap();
+            assert_eq!(c.key(), sel.key);
+        }
+        // Defaults fill in.
+        let c = r.build(&r.parse("topk").unwrap()).unwrap();
+        assert_eq!(c.params(), "0.1");
+        let c = r.build(&r.parse("signsgd").unwrap()).unwrap();
+        assert_eq!(c.params(), "64");
+    }
+
+    #[test]
+    fn malformed_specs_are_hard_errors() {
+        let r = CompressRegistry::builtin();
+        for bad in ["bogus", "topk:", "topk:abc", "topk:0", "topk:1.5",
+                    "topk:0.1,0.2", "randk:-1", "fp16:2", "signsgd:0",
+                    "signsgd:1.5", "ef", "ef:none", "ef:ef:topk",
+                    "ef:bogus", "topk:inf"] {
+            let failed = match r.parse(bad) {
+                Err(_) => true,
+                Ok(sel) => r.build(&sel).is_err(),
+            };
+            assert!(failed, "{bad} must be rejected");
+        }
+        let e = r.parse("bogus").unwrap_err().to_string();
+        assert!(e.contains("valid forms"), "{e}");
+        assert!(e.contains("topk"), "{e}");
+    }
+
+    #[test]
+    fn custom_registration_and_aliases() {
+        let mut r = CompressRegistry::builtin();
+        r.register("quarter", "test-only topk 0.25", &[], false, |_, _| {
+            Ok(Arc::new(TopK { frac: 0.25 }) as Arc<dyn Compressor>)
+        });
+        r.alias("half16", "fp16");
+        assert_eq!(r.build(&r.parse("quarter").unwrap()).unwrap().key(),
+                   "topk");
+        assert_eq!(r.parse("half16").unwrap().key, "fp16");
+        assert!(r.contains("quarter") && r.contains("half16"));
+        assert!(r.valid_forms().contains("quarter"));
+        assert!(r.help_text().contains("test-only"));
+    }
+
+    #[test]
+    fn wire_bytes_bounded_by_raw_for_all_builtins() {
+        let r = CompressRegistry::builtin();
+        for spec in ["none", "fp16", "bf16", "topk", "topk:1.0", "randk",
+                     "signsgd", "ef:topk:0.9"] {
+            let c = r.build(&r.parse(spec).unwrap()).unwrap();
+            for d in [0usize, 1, 3, 64, 1000] {
+                assert!(
+                    c.wire_bytes(d) <= d as u64 * 4,
+                    "{spec} d={d}: {} > {}",
+                    c.wire_bytes(d),
+                    d * 4
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn describe_formats() {
+        assert_eq!(describe(&NoneCompressor), "none");
+        assert_eq!(describe(&TopK { frac: 0.1 }), "topk(0.1)");
+        let ef = ErrorFeedback {
+            inner: Arc::new(SignSgd { chunk: 64 }),
+        };
+        assert_eq!(describe(&ef), "ef(signsgd(64))");
+    }
+}

@@ -42,7 +42,11 @@
 //! [`slowmo::OuterRegistry`] (`--outer`, `[outer]` tables,
 //! `TrainBuilder::outer`; see ROADMAP.md "Adding an outer optimizer"):
 //! `slowmo` is the paper's rule, with `avg`, `lookahead`, `nesterov` and
-//! `adam` built in. Live runs stream through the
+//! `adam` built in. Communication compression (quantize / sparsify /
+//! error-feedback) is a third registry surface ([`compress`]):
+//! `--compress`, `[compress]` tables and `TrainBuilder::compress` select
+//! a codec applied to every message lane with honest wire-byte
+//! accounting. Live runs stream through the
 //! [`trainer::RunObserver`] trait (`on_step`, `on_outer_boundary`,
 //! `on_eval`) for progress reporting, metric streaming and early
 //! stopping.
@@ -54,6 +58,7 @@ pub mod algorithms;
 pub mod bench;
 pub mod benchkit;
 pub mod clix;
+pub mod compress;
 pub mod configx;
 pub mod data;
 pub mod exec;

@@ -62,6 +62,12 @@ fn app() -> App {
                                    "run optimizer kernels via the PJRT \
                                     artifacts instead of the native \
                                     mirrors (slower on CPU; see §Perf)"))
+                .flag(Flag::opt("compress", "",
+                                "communication compression registry spec: \
+                                 none|fp16|bf16|topk[:frac]|randk[:frac]|\
+                                 signsgd[:chunk]|ef:<codec> (empty = \
+                                 none, or whatever --config sets; see \
+                                 `slowmo info`)"))
                 .flag(Flag::opt("chaos", "",
                                 "deterministic network degradation spec: \
                                  seed=N,delay=2ms,delay-max=20ms,\
@@ -157,6 +163,14 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         }
         b
     };
+    // "none" passes through too: `--compress none` must override a
+    // `[compress]` table coming from --config, not silently no-op.
+    let compress_spec = args.string("compress");
+    let builder = if compress_spec.is_empty() {
+        builder
+    } else {
+        builder.compress(&compress_spec)
+    };
     let chaos_spec = args.string("chaos");
     let builder = if chaos_spec.is_empty() {
         builder
@@ -183,6 +197,10 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
     println!("simulated time/iter {}",
              slowmo::util::fmt_secs(r.sim_time_per_iter()));
     println!("fabric bytes sent   {}", slowmo::util::fmt_bytes(r.bytes_sent));
+    if r.bytes_saved > 0 {
+        println!("compression saved   {}",
+                 slowmo::util::fmt_bytes(r.bytes_saved));
+    }
     if r.retransmits > 0 {
         println!("chaos retransmits   {}", r.retransmits);
     }
@@ -253,6 +271,9 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         "outers" => {
             experiments::outers(&env, &tasks[0])?;
         }
+        "compress" => {
+            experiments::compress(&env, &tasks[0])?;
+        }
         "theory" => {
             experiments::theory(&env)?;
         }
@@ -265,7 +286,8 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (table1|table2|fig2|fig3|figb2|\
-             tableb23|tableb4|doubleavg|noaverage|outers|theory|all)"
+             tableb23|tableb4|doubleavg|noaverage|outers|compress|theory|\
+             all)"
         ),
     }
     println!("\n[exp {which} done in {}]",
@@ -296,5 +318,7 @@ fn cmd_info() -> anyhow::Result<()> {
     print!("{}", slowmo::algorithms::AlgoRegistry::builtin().help_text());
     println!("outer optimizers (--outer):");
     print!("{}", slowmo::slowmo::OuterRegistry::builtin().help_text());
+    println!("compressors (--compress):");
+    print!("{}", slowmo::compress::CompressRegistry::builtin().help_text());
     Ok(())
 }

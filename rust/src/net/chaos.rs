@@ -374,9 +374,11 @@ impl ChaosPlan {
     }
 
     /// Extra simulated seconds for the next message on link `from -> to`
-    /// carrying `elems` f32 values. Advances the link's deterministic
-    /// message counter and the retransmit accounting.
-    pub fn link_extra(&self, from: usize, to: usize, elems: usize) -> f64 {
+    /// carrying `wire_bytes` bytes (the *compressed* size when a codec is
+    /// active — retransmit accounting charges the true wire size).
+    /// Advances the link's deterministic message counter and the
+    /// retransmit accounting.
+    pub fn link_extra(&self, from: usize, to: usize, wire_bytes: u64) -> f64 {
         if self.cfg.delay_mean_s <= 0.0 && self.cfg.drop_prob <= 0.0 {
             // Faults-only / no-op plans: skip the per-link counter lock on
             // the gossip hot path — with both knobs off the counter is
@@ -404,7 +406,7 @@ impl ChaosPlan {
             self.retransmits
                 .fetch_add(u64::from(drops), Ordering::Relaxed);
             self.retrans_bytes
-                .fetch_add(u64::from(drops) * elems as u64 * 4, Ordering::Relaxed);
+                .fetch_add(u64::from(drops) * wire_bytes, Ordering::Relaxed);
         }
         delay + f64::from(drops) * self.rto_s
     }
@@ -569,7 +571,9 @@ mod tests {
         let p = plan(cfg, 2);
         let mut total = 0.0;
         for _ in 0..50 {
-            total += p.link_extra(0, 1, 10);
+            // 40-byte messages: retransmit accounting charges the true
+            // wire size handed in (compressed when a codec is active).
+            total += p.link_extra(0, 1, 40);
         }
         assert!(p.retransmits() > 0);
         assert_eq!(p.retransmitted_bytes(), p.retransmits() * 40);

@@ -13,6 +13,7 @@
 //! changes a worker's ring predecessor between collectives.
 
 use super::fabric::Fabric;
+use crate::compress::Compressor;
 
 /// Chunk boundaries: split `len` into `m` nearly-equal ranges.
 pub fn chunk_ranges(len: usize, m: usize) -> Vec<(usize, usize)> {
@@ -65,6 +66,27 @@ pub fn ring_allreduce_mean_group(
     now: f64,
     coll_id: u64,
 ) -> f64 {
+    ring_allreduce_mean_group_c(fabric, worker, group, x, now, coll_id, None)
+}
+
+/// [`ring_allreduce_mean_group`] with communication compression: when a
+/// `codec` is given, every chunk message and the analytic completion-time
+/// charge use the codec's wire size instead of raw `4·elems` bytes.
+///
+/// The *math* is unchanged — callers lossily transcode the input vector
+/// (with error feedback) before entering the collective, and the ring
+/// then averages those decoded contributions exactly, which is what a
+/// real compressed allreduce delivers. `codec = None` (or the identity
+/// codec) is bit-identical to the uncompressed path.
+pub fn ring_allreduce_mean_group_c(
+    fabric: &Fabric,
+    worker: usize,
+    group: &[usize],
+    x: &mut [f32],
+    now: f64,
+    coll_id: u64,
+    codec: Option<&dyn Compressor>,
+) -> f64 {
     let n = group.len();
     assert!(n > 0, "empty collective group");
     let rank = group
@@ -74,6 +96,12 @@ pub fn ring_allreduce_mean_group(
     if n == 1 {
         return now;
     }
+    let wire_of = |len: usize| -> u64 {
+        match codec {
+            Some(c) => c.wire_bytes(len),
+            None => len as u64 * 4,
+        }
+    };
     let ranges = chunk_ranges(x.len(), n);
     let next = group[(rank + 1) % n];
     let tag_base = coll_id << 32;
@@ -84,7 +112,12 @@ pub fn ring_allreduce_mean_group(
     for r in 0..n - 1 {
         let send_idx = (rank + n - r) % n;
         let (s, e) = ranges[send_idx];
-        fabric.chunk_send(next, tag_base | r as u64, x[s..e].to_vec());
+        fabric.chunk_send_wire(
+            next,
+            tag_base | r as u64,
+            x[s..e].to_vec(),
+            wire_of(e - s),
+        );
         let data = fabric.chunk_recv_tag(worker, tag_base | r as u64);
         let recv_idx = (rank + n - r - 1) % n;
         let (s, e) = ranges[recv_idx];
@@ -97,7 +130,12 @@ pub fn ring_allreduce_mean_group(
     for r in 0..n - 1 {
         let send_idx = (rank + 1 + n - r) % n;
         let (s, e) = ranges[send_idx];
-        fabric.chunk_send(next, tag_base | (n + r) as u64, x[s..e].to_vec());
+        fabric.chunk_send_wire(
+            next,
+            tag_base | (n + r) as u64,
+            x[s..e].to_vec(),
+            wire_of(e - s),
+        );
         let data = fabric.chunk_recv_tag(worker, tag_base | (n + r) as u64);
         let recv_idx = (rank + n - r) % n;
         let (s, e) = ranges[recv_idx];
@@ -107,7 +145,8 @@ pub fn ring_allreduce_mean_group(
     for v in x.iter_mut() {
         *v *= inv_n;
     }
-    let mut done = now + fabric.cost.allreduce_time(x.len(), n);
+    let mut done =
+        now + fabric.cost.allreduce_time_bytes(wire_of(x.len()), n);
     if let Some(plan) = fabric.chaos() {
         done += plan.collective_extra(coll_id, 2 * (n - 1));
     }
@@ -218,6 +257,40 @@ mod tests {
         }
         // Bytes: 2(m-1) rounds × m senders × ~chunk bytes.
         assert!(fabric.bytes_sent() > 0);
+    }
+
+    #[test]
+    fn codec_charges_compressed_bytes_without_touching_math() {
+        use crate::compress::TopK;
+        let m = 4;
+        let d = 256;
+        let cost = CostModel { latency_s: 1e-4, bandwidth_bps: 1e6 };
+        let group: Vec<usize> = (0..m).collect();
+        let run = |codec: Option<&dyn Compressor>| {
+            let fabric = Fabric::new(m, cost.clone());
+            let outs = run_workers(m, |w| {
+                let mut x: Vec<f32> =
+                    (0..d).map(|i| (w * d + i) as f32 * 0.01).collect();
+                let t = ring_allreduce_mean_group_c(
+                    &fabric, w, &group, &mut x, 0.0, 5, codec,
+                );
+                (x, t)
+            });
+            (outs, fabric.bytes_sent(), fabric.bytes_saved())
+        };
+        let (raw, raw_bytes, raw_saved) = run(None);
+        let topk = TopK { frac: 0.25 };
+        let (comp, comp_bytes, comp_saved) = run(Some(&topk));
+        // The collective itself never alters values — lossiness happens
+        // in the caller's transcode before entering the ring.
+        for (a, b) in raw.iter().zip(&comp) {
+            assert_eq!(a.0, b.0);
+            // ... but the compressed run finishes sooner.
+            assert!(b.1 < a.1, "{} !< {}", b.1, a.1);
+        }
+        assert!(comp_bytes < raw_bytes, "{comp_bytes} !< {raw_bytes}");
+        assert_eq!(raw_saved, 0);
+        assert!(comp_saved > 0);
     }
 
     #[test]

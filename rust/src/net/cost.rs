@@ -30,9 +30,16 @@ impl CostModel {
         Self { latency_s: 0.0, bandwidth_bps: f64::INFINITY }
     }
 
-    /// Point-to-point transfer time for `elems` f32 values.
+    /// Point-to-point transfer time for `elems` raw f32 values.
     pub fn xfer_time(&self, elems: usize) -> f64 {
-        self.latency_s + (elems as f64 * 4.0) / self.bandwidth_bps
+        self.xfer_time_bytes(elems as u64 * 4)
+    }
+
+    /// Point-to-point transfer time for a `bytes`-byte message — the
+    /// general form: communication compression charges its true wire
+    /// size through here instead of assuming 4 bytes per element.
+    pub fn xfer_time_bytes(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
     }
 
     /// Default retransmission timeout for the chaos layer when the plan
@@ -42,14 +49,20 @@ impl CostModel {
         (4.0 * self.latency_s).max(1e-3)
     }
 
-    /// Ring-allreduce time for `elems` f32 values over `m` nodes.
+    /// Ring-allreduce time for `elems` raw f32 values over `m` nodes.
     pub fn allreduce_time(&self, elems: usize, m: usize) -> f64 {
+        self.allreduce_time_bytes(elems as u64 * 4, m)
+    }
+
+    /// Ring-allreduce time for a `bytes`-byte vector over `m` nodes —
+    /// the general form used by compressed collectives.
+    pub fn allreduce_time_bytes(&self, bytes: u64, m: usize) -> f64 {
         if m <= 1 {
             return 0.0;
         }
-        let bytes = elems as f64 * 4.0;
         2.0 * (m - 1) as f64 * self.latency_s
-            + 2.0 * ((m - 1) as f64 / m as f64) * bytes / self.bandwidth_bps
+            + 2.0 * ((m - 1) as f64 / m as f64) * bytes as f64
+                / self.bandwidth_bps
     }
 }
 
@@ -160,6 +173,28 @@ mod tests {
         // 2 elems (8 bytes), m=2: 2*(1/2)*8/4 = 2 s.
         assert!((c.allreduce_time(2, 2) - 2.0).abs() < 1e-12);
         assert_eq!(c.allreduce_time(1000, 1), 0.0);
+    }
+
+    #[test]
+    fn byte_forms_match_elem_forms_exactly() {
+        // The f32-element helpers are thin wrappers over the byte forms;
+        // 4*elems bytes must charge bit-identical time (the compress=none
+        // equivalence rests on this).
+        let c = CostModel::ethernet_10g();
+        for elems in [0usize, 1, 7, 1000, 25_500_000] {
+            assert_eq!(c.xfer_time(elems), c.xfer_time_bytes(elems as u64 * 4));
+            for m in [1usize, 2, 8, 32] {
+                assert_eq!(
+                    c.allreduce_time(elems, m),
+                    c.allreduce_time_bytes(elems as u64 * 4, m)
+                );
+            }
+        }
+        // Compressed transfers charge proportionally less serialization.
+        assert!(c.xfer_time_bytes(1000) < c.xfer_time_bytes(4000));
+        assert!(
+            c.allreduce_time_bytes(1000, 4) < c.allreduce_time_bytes(4000, 4)
+        );
     }
 
     #[test]

@@ -30,11 +30,19 @@ pub struct GossipMsg {
 
 /// Fabric over `m` workers: gossip mailboxes + a generic chunk channel for
 /// collectives + counters.
+///
+/// Byte accounting is *wire-honest*: every send carries the number of
+/// bytes a real transport would move for it (the compressed size when a
+/// [`crate::compress::Compressor`] is active; `4·elems` otherwise), and
+/// [`Fabric::bytes_sent`] sums exactly those. [`Fabric::bytes_raw`] keeps
+/// the uncompressed `4·elems` total so [`Fabric::bytes_saved`] reports
+/// what compression actually bought.
 pub struct Fabric {
     m: usize,
     /// Gossip lane: messages tagged with their chaos extra-delay (0.0 on a
-    /// calm fabric) so receive-side arrival math matches the send side.
-    gossip: Mailboxes<(GossipMsg, f64)>,
+    /// calm fabric) and wire byte count, so receive-side arrival math
+    /// matches the send side.
+    gossip: Mailboxes<(GossipMsg, f64, u64)>,
     /// Collective lanes (ring allreduce chunks, rejoin transfers). Tags
     /// are globally-unique routing keys — see [`Fabric::chunk_recv_tag`].
     chunks: Mailboxes<(u64, Vec<f32>)>,
@@ -44,6 +52,7 @@ pub struct Fabric {
     pub cost: CostModel,
     chaos: Option<Arc<ChaosPlan>>,
     bytes_sent: AtomicU64,
+    bytes_raw: AtomicU64,
     msgs_sent: AtomicU64,
 }
 
@@ -57,6 +66,7 @@ impl Fabric {
             cost,
             chaos: None,
             bytes_sent: AtomicU64::new(0),
+            bytes_raw: AtomicU64::new(0),
             msgs_sent: AtomicU64::new(0),
         }
     }
@@ -76,34 +86,50 @@ impl Fabric {
         self.chaos.as_deref()
     }
 
-    fn account(&self, elems: usize) {
-        self.bytes_sent
+    fn account(&self, elems: usize, wire_bytes: u64) {
+        self.bytes_sent.fetch_add(wire_bytes, Ordering::Relaxed);
+        self.bytes_raw
             .fetch_add(elems as u64 * 4, Ordering::Relaxed);
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
     }
 
-    fn arrival(&self, msg: &GossipMsg, extra: f64) -> f64 {
-        msg.send_time + self.cost.xfer_time(msg.payload.len()) + extra
+    fn arrival(&self, msg: &GossipMsg, extra: f64, wire_bytes: u64) -> f64 {
+        msg.send_time + self.cost.xfer_time_bytes(wire_bytes) + extra
     }
 
     /// Send a gossip message; returns the simulated arrival time
     /// (send_time + transfer + any chaos delay/retransmit charge).
     pub fn gossip_send(&self, to: usize, msg: GossipMsg) -> f64 {
+        let wire = msg.payload.len() as u64 * 4;
+        self.gossip_send_wire(to, msg, wire)
+    }
+
+    /// Send a gossip message whose payload has already been passed
+    /// through a compressor: `wire_bytes` is the honest compressed size,
+    /// charged to the transfer time, the chaos retransmit accounting and
+    /// [`Fabric::bytes_sent`] (the payload itself carries the decoded
+    /// values).
+    pub fn gossip_send_wire(
+        &self,
+        to: usize,
+        msg: GossipMsg,
+        wire_bytes: u64,
+    ) -> f64 {
         let extra = match &self.chaos {
-            Some(plan) => plan.link_extra(msg.from, to, msg.payload.len()),
+            Some(plan) => plan.link_extra(msg.from, to, wire_bytes),
             None => 0.0,
         };
-        let arrival = self.arrival(&msg, extra);
-        self.account(msg.payload.len());
-        self.gossip.send(to, (msg, extra));
+        let arrival = self.arrival(&msg, extra, wire_bytes);
+        self.account(msg.payload.len(), wire_bytes);
+        self.gossip.send(to, (msg, extra, wire_bytes));
         arrival
     }
 
     /// Blocking gossip receive for `worker`. Returns the message and its
     /// simulated arrival time (send_time + transfer + chaos extra).
     pub fn gossip_recv(&self, worker: usize) -> (GossipMsg, f64) {
-        let (msg, extra) = self.gossip.recv(worker);
-        let arrival = self.arrival(&msg, extra);
+        let (msg, extra, wire) = self.gossip.recv(worker);
+        let arrival = self.arrival(&msg, extra, wire);
         (msg, arrival)
     }
 
@@ -114,8 +140,8 @@ impl Fabric {
         worker: usize,
         timeout: std::time::Duration,
     ) -> Option<(GossipMsg, f64)> {
-        let (msg, extra) = self.gossip.recv_timeout(worker, timeout)?;
-        let arrival = self.arrival(&msg, extra);
+        let (msg, extra, wire) = self.gossip.recv_timeout(worker, timeout)?;
+        let arrival = self.arrival(&msg, extra, wire);
         Some((msg, arrival))
     }
 
@@ -125,8 +151,8 @@ impl Fabric {
         self.gossip
             .drain(worker)
             .into_iter()
-            .map(|(msg, extra)| {
-                let arrival = self.arrival(&msg, extra);
+            .map(|(msg, extra, wire)| {
+                let arrival = self.arrival(&msg, extra, wire);
                 (msg, arrival)
             })
             .collect()
@@ -136,7 +162,21 @@ impl Fabric {
     /// unique per logical message (collective id × round, or a rejoin
     /// transfer id) so receivers can route them.
     pub(crate) fn chunk_send(&self, to: usize, tag: u64, data: Vec<f32>) {
-        self.account(data.len());
+        let wire = data.len() as u64 * 4;
+        self.chunk_send_wire(to, tag, data, wire);
+    }
+
+    /// Collective-lane send with an explicit wire byte count (compressed
+    /// collectives charge their true size; the chunk still carries the
+    /// decoded f32 values).
+    pub(crate) fn chunk_send_wire(
+        &self,
+        to: usize,
+        tag: u64,
+        data: Vec<f32>,
+        wire_bytes: u64,
+    ) {
+        self.account(data.len(), wire_bytes);
         self.chunks.send(to, (tag, data));
     }
 
@@ -165,8 +205,19 @@ impl Fabric {
         }
     }
 
+    /// Total bytes on the wire (compressed sizes when a codec is active).
     pub fn bytes_sent(&self) -> u64 {
         self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    /// Total raw (uncompressed, 4 B/elem) bytes of everything sent.
+    pub fn bytes_raw(&self) -> u64 {
+        self.bytes_raw.load(Ordering::Relaxed)
+    }
+
+    /// Bytes compression kept off the wire (`raw - sent`, floored at 0).
+    pub fn bytes_saved(&self) -> u64 {
+        self.bytes_raw().saturating_sub(self.bytes_sent())
     }
 
     pub fn msgs_sent(&self) -> u64 {
@@ -196,6 +247,35 @@ mod tests {
         assert_eq!(arrival, 1.0); // free network: arrival == send time
         assert_eq!(f.bytes_sent(), 12);
         assert_eq!(f.msgs_sent(), 1);
+    }
+
+    #[test]
+    fn wire_send_charges_compressed_bytes() {
+        let cost = CostModel { latency_s: 0.0, bandwidth_bps: 4.0 };
+        let f = Fabric::new(2, cost);
+        let msg = GossipMsg {
+            from: 0,
+            step: 0,
+            payload: vec![0.0; 4], // raw 16 B, wire 8 B
+            weight: 1.0,
+            send_time: 0.0,
+        };
+        let eta = f.gossip_send_wire(1, msg, 8);
+        assert!((eta - 2.0).abs() < 1e-12, "8 B at 4 B/s = 2 s, got {eta}");
+        let (_, arrival) = f.gossip_recv(1);
+        assert_eq!(arrival, eta, "both ends see the compressed transfer");
+        assert_eq!(f.bytes_sent(), 8);
+        assert_eq!(f.bytes_raw(), 16);
+        assert_eq!(f.bytes_saved(), 8);
+    }
+
+    #[test]
+    fn raw_sends_save_nothing() {
+        let f = Fabric::new(2, CostModel::free());
+        f.chunk_send(1, 7, vec![1.0, 2.0]);
+        assert_eq!(f.bytes_sent(), 8);
+        assert_eq!(f.bytes_raw(), 8);
+        assert_eq!(f.bytes_saved(), 0);
     }
 
     #[test]

@@ -17,6 +17,9 @@ pub mod cost;
 pub mod fabric;
 
 pub use chaos::{ChaosCfg, ChaosPlan, FaultWindow};
-pub use collectives::{ring_allreduce_mean, ring_allreduce_mean_group};
+pub use collectives::{
+    ring_allreduce_mean, ring_allreduce_mean_group,
+    ring_allreduce_mean_group_c,
+};
 pub use cost::{CostModel, WorkloadTiming};
 pub use fabric::{Fabric, GossipMsg};

@@ -33,6 +33,7 @@
 //! stopping.
 
 use crate::algorithms::{AlgoRegistry, AlgoSel};
+use crate::compress::CompressRegistry;
 use crate::configx::Config;
 use crate::net::{ChaosCfg, CostModel};
 use crate::optim::kernels::{InnerOpt, Kernels};
@@ -53,6 +54,7 @@ pub struct Session {
     engine: Option<Arc<Engine>>,
     registry: AlgoRegistry,
     outers: OuterRegistry,
+    compressors: CompressRegistry,
     /// (preset, force_pjrt) -> model executor.
     models: Mutex<BTreeMap<(String, bool), Arc<ModelExec>>>,
     /// Flat length d -> PJRT optimizer kernels.
@@ -91,6 +93,7 @@ impl Session {
             engine,
             registry: AlgoRegistry::builtin(),
             outers: OuterRegistry::builtin(),
+            compressors: CompressRegistry::builtin(),
             models: Mutex::new(BTreeMap::new()),
             pjrt_kernels: Mutex::new(BTreeMap::new()),
             inits: Mutex::new(BTreeMap::new()),
@@ -127,6 +130,19 @@ impl Session {
         &mut self.outers
     }
 
+    /// The communication-compression registry backing `--compress`, the
+    /// `[compress]` TOML table and [`TrainBuilder::compress`].
+    pub fn compress_registry(&self) -> &CompressRegistry {
+        &self.compressors
+    }
+
+    /// Mutable compress-registry access, e.g. to register an
+    /// out-of-crate codec:
+    /// `session.compress_registry_mut().register("demo", ..., f)`.
+    pub fn compress_registry_mut(&mut self) -> &mut CompressRegistry {
+        &mut self.compressors
+    }
+
     /// Start describing a run of `preset`. See [`TrainBuilder`] for the
     /// knobs and their defaults.
     pub fn train(&self, preset: &str) -> TrainBuilder<'_> {
@@ -160,8 +176,15 @@ impl Session {
             }
             None => None,
         };
-        trainer::run_prepared(cfg, algo, outer_rule, &init, &desc, &model,
-                              &kernels, observer)
+        let compressor = if cfg.compress.is_none() {
+            None
+        } else {
+            Some(self.compressors.build(&cfg.compress).with_context(
+                || format!("resolving compress {:?}", cfg.compress.spec()),
+            )?)
+        };
+        trainer::run_prepared(cfg, algo, outer_rule, compressor, &init,
+                              &desc, &model, &kernels, observer)
     }
 
     /// Cached model executor for `preset` (build-once across runs).
@@ -229,6 +252,7 @@ pub struct TrainBuilder<'s> {
     algo_spec: Option<String>,
     outer_spec: Option<String>,
     outer_tau: Option<u64>,
+    compress_spec: Option<String>,
     inner: Option<InnerOpt>,
     lr: Option<f32>,
     sched: Option<Schedule>,
@@ -247,6 +271,7 @@ impl<'s> TrainBuilder<'s> {
             algo_spec: None,
             outer_spec: None,
             outer_tau: None,
+            compress_spec: None,
             inner: None,
             lr: None,
             sched: None,
@@ -321,6 +346,25 @@ impl<'s> TrainBuilder<'s> {
     /// otherwise.
     pub fn tau(mut self, tau: u64) -> Self {
         self.outer_tau = Some(tau);
+        self
+    }
+
+    /// Select the communication compressor by registry spec string, e.g.
+    /// "topk:0.1", "fp16", "ef:signsgd", "none" (the default). Applies to
+    /// every lane the run communicates on — gossip, the base algorithm's
+    /// collectives and the SlowMo outer average — with honest wire-byte
+    /// accounting ([`crate::trainer::TrainResult`]'s `bytes_sent` /
+    /// `bytes_saved`). Parsed (and validated) against the session's
+    /// [`CompressRegistry`] when the run is built.
+    pub fn compress(mut self, spec: &str) -> Self {
+        self.compress_spec = Some(spec.to_string());
+        self
+    }
+
+    /// Select a pre-parsed compressor selection.
+    pub fn compress_sel(mut self, sel: crate::compress::CompressSel) -> Self {
+        self.cfg.compress = sel;
+        self.compress_spec = None;
         self
     }
 
@@ -461,6 +505,9 @@ impl<'s> TrainBuilder<'s> {
     /// tau = 16                  # overrides [slowmo]'s rule when both
     ///                           # sections are present
     ///
+    /// [compress]                # communication compression
+    /// spec = "ef:topk:0.1"      # CompressRegistry spec string
+    ///
     /// [chaos]                   # section presence enables chaos
     /// seed = 7
     /// delay_ms = 2.0            # mean per-message extra delay
@@ -560,6 +607,18 @@ impl<'s> TrainBuilder<'s> {
                 );
                 self.outer_tau = Some(f as u64);
             }
+        }
+        if c.sections.contains_key("compress") {
+            let spec = c
+                .get("compress", "spec")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "[compress] needs spec = \"<key[:args]>\" (e.g. \
+                         spec = \"topk:0.1\" or \"ef:signsgd\")"
+                    )
+                })?;
+            self.compress_spec = Some(spec.to_string());
         }
         if c.sections.contains_key("chaos") {
             // Seeds are full 64-bit values; an f64 TOML number silently
@@ -662,6 +721,7 @@ impl<'s> TrainBuilder<'s> {
         self,
         registry: &AlgoRegistry,
         outers: &OuterRegistry,
+        compressors: &CompressRegistry,
     ) -> Result<TrainCfg> {
         let mut cfg = self.cfg;
         if let Some(spec) = &self.algo_spec {
@@ -671,6 +731,19 @@ impl<'s> TrainBuilder<'s> {
         }
         if let Some(inner) = self.inner {
             cfg.algo.inner = inner;
+        }
+        if let Some(spec) = &self.compress_spec {
+            cfg.compress = compressors
+                .parse(spec)
+                .with_context(|| format!("resolving compress {spec:?}"))?;
+        }
+        if !cfg.compress.is_none() {
+            // Fail fast on bad codec arguments even when the cfg came in
+            // pre-built: a full build runs the factory's own validation,
+            // not just the spec grammar.
+            compressors.build(&cfg.compress).with_context(|| {
+                format!("resolving compress {:?}", cfg.compress.spec())
+            })?;
         }
         if let Some(spec) = &self.outer_spec {
             let sel = outers
@@ -728,19 +801,31 @@ impl<'s> TrainBuilder<'s> {
     pub fn build_cfg(self) -> Result<TrainCfg> {
         match self.session {
             Some(s) => {
-                let (algos, outers) = (s.registry(), s.outer_registry());
-                self.resolve(algos, outers)
+                let (algos, outers, comps) = (
+                    s.registry(),
+                    s.outer_registry(),
+                    s.compress_registry(),
+                );
+                self.resolve(algos, outers, comps)
             }
-            None => self.resolve(&AlgoRegistry::builtin(),
-                                 &OuterRegistry::builtin()),
+            None => self.resolve(
+                &AlgoRegistry::builtin(),
+                &OuterRegistry::builtin(),
+                &CompressRegistry::builtin(),
+            ),
         }
     }
 
     /// Resolve against an explicit algorithm registry (detached-builder
-    /// use); outer rules resolve against the built-in [`OuterRegistry`].
+    /// use); outer rules and compressors resolve against the built-in
+    /// [`OuterRegistry`] / [`CompressRegistry`].
     pub fn build_cfg_with(self, registry: &AlgoRegistry)
                           -> Result<TrainCfg> {
-        self.resolve(registry, &OuterRegistry::builtin())
+        self.resolve(
+            registry,
+            &OuterRegistry::builtin(),
+            &CompressRegistry::builtin(),
+        )
     }
 
     pub fn run(self) -> Result<TrainResult> {
@@ -762,8 +847,11 @@ impl<'s> TrainBuilder<'s> {
                  session.train(preset)"
             )
         })?;
-        let cfg =
-            self.resolve(session.registry(), session.outer_registry())?;
+        let cfg = self.resolve(
+            session.registry(),
+            session.outer_registry(),
+            session.compress_registry(),
+        )?;
         session.run_observed(&cfg, observer)
     }
 }
@@ -1047,6 +1135,63 @@ rule = "adam"
         assert!(TrainBuilder::new("quad").config(&c).is_err());
         let c =
             Config::parse("[outer]\nrule = \"nope\"").unwrap();
+        assert!(TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_compress_spec_resolves_and_validates() {
+        use crate::compress::CompressSel;
+        let cfg = TrainBuilder::new("quad")
+            .compress("ef:topk:0.25")
+            .build_cfg()
+            .unwrap();
+        assert_eq!(
+            cfg.compress,
+            CompressSel::wrapping("ef", CompressSel::with_args(
+                "topk",
+                &[0.25]
+            ))
+        );
+        assert_eq!(cfg.compress.spec(), "ef:topk:0.25");
+        // Default: no compression.
+        let cfg = TrainBuilder::new("quad").build_cfg().unwrap();
+        assert!(cfg.compress.is_none());
+        // Bad specs are hard errors at build time (grammar and factory
+        // validation both fire).
+        for bad in ["bogus", "topk:0", "ef", "ef:none", "topk:0.1,0.2"] {
+            assert!(
+                TrainBuilder::new("quad")
+                    .compress(bad)
+                    .build_cfg()
+                    .is_err(),
+                "{bad} must be rejected"
+            );
+        }
+        // A hand-rolled pre-built selection is validated too.
+        assert!(TrainBuilder::new("quad")
+            .compress_sel(CompressSel::with_args("topk", &[7.0]))
+            .build_cfg()
+            .is_err());
+    }
+
+    #[test]
+    fn config_bridge_applies_compress_section() {
+        let c = Config::parse("[compress]\nspec = \"topk:0.1\"").unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.compress.spec(), "topk:0.1");
+        // Section without a spec is a hard error.
+        let c = Config::parse("[compress]").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        // Unknown codecs fail at build, not silently.
+        let c = Config::parse("[compress]\nspec = \"nope\"").unwrap();
         assert!(TrainBuilder::new("quad")
             .config(&c)
             .unwrap()

@@ -29,7 +29,8 @@ pub use outer::{
 };
 
 use crate::algorithms::{BaseAlgorithm, WorkerState};
-use crate::net::{ring_allreduce_mean_group, ChaosPlan, Fabric};
+use crate::compress::{site, Compressor};
+use crate::net::{ring_allreduce_mean_group_c, ChaosPlan, Fabric};
 use crate::optim::kernels::Kernels;
 use anyhow::{ensure, Result};
 
@@ -223,15 +224,48 @@ pub fn outer_update(
     state: &mut WorkerState,
     outer: &mut OuterState,
     gamma: f32,
-    mut clock: f64,
+    clock: f64,
     chaos: Option<&ChaosPlan>,
 ) -> Result<f64> {
+    outer_update_c(
+        cfg, rule, algo, fabric, kernels, worker, state, outer, gamma,
+        clock, chaos, None,
+    )
+}
+
+/// [`outer_update`] with communication compression: the worker's
+/// contribution to the exact average is transcoded (error-feedback
+/// residual at [`site::OUTER`], kept in `state.comp`) before entering
+/// the ring collective, and the collective charges compressed wire
+/// bytes. The codec's residual buffers register with the elastic
+/// membership machinery exactly like [`OuterOpt`] state: they rescale by
+/// the live-count ratio at membership changes and ride the rejoin state
+/// transfer ([`Compressor::ef_bufs`] buffers appended after the rule's,
+/// same state-shape-agnostic wire format).
+#[allow(clippy::too_many_arguments)]
+pub fn outer_update_c(
+    cfg: &SlowMoCfg,
+    rule: &dyn OuterOpt,
+    algo: &dyn BaseAlgorithm,
+    fabric: &Fabric,
+    kernels: &Kernels,
+    worker: usize,
+    state: &mut WorkerState,
+    outer: &mut OuterState,
+    gamma: f32,
+    mut clock: f64,
+    chaos: Option<&ChaosPlan>,
+    codec: Option<&dyn Compressor>,
+) -> Result<f64> {
+    let codec = codec.filter(|c| !c.is_identity());
     let t = outer.t;
     let d = state.x.len();
-    // Rejoin wire format, rule-agnostic: message 1 is x0 (d elems),
-    // message 2 is every rule state buffer concatenated plus the packed
-    // leader clock (n_bufs*d + 2 elems).
-    let state_msg_len = rule.n_bufs() * d + 2;
+    let ef_bufs = codec.map(|c| c.ef_bufs()).unwrap_or(0);
+    // Rejoin wire format, rule- and codec-agnostic: message 1 is x0 (d
+    // elems), message 2 is every rule state buffer, then every codec
+    // error-feedback buffer, concatenated, plus the packed leader clock
+    // ((n_bufs + ef_bufs)*d + 2 elems).
+    let state_msg_len = (rule.n_bufs() + ef_bufs) * d + 2;
     if let Some(plan) = chaos {
         if plan.down(worker, t) {
             // Mid-outage: excluded from the collective; the outer state
@@ -254,12 +288,14 @@ pub fn outer_update(
                 x0.len() == d && payload.len() == state_msg_len,
                 "rejoin state transfer corrupt at worker {worker}, outer \
                  boundary {t}: got x0 {} / state {} elems, want {d} / {} \
-                 (outer rule {:?} carries {} buffer(s))",
+                 (outer rule {:?} carries {} buffer(s), compressor {} \
+                 error-feedback buffer(s))",
                 x0.len(),
                 payload.len(),
                 state_msg_len,
                 rule.key(),
-                rule.n_bufs()
+                rule.n_bufs(),
+                ef_bufs
             );
             let lo = payload.pop().expect("payload length checked");
             let hi = payload.pop().expect("payload length checked");
@@ -270,6 +306,17 @@ pub fn outer_update(
             outer.x0 = x0;
             for (i, buf) in outer.opt.bufs.iter_mut().enumerate() {
                 buf.copy_from_slice(&payload[i * d..(i + 1) * d]);
+            }
+            if let Some(c) = codec {
+                // Residuals from before the outage are stale (they missed
+                // every membership rescale) — drop them all, then install
+                // what the leader shipped.
+                state.comp.clear_residuals();
+                let base = rule.n_bufs() * d;
+                let views: Vec<&[f32]> = (0..ef_bufs)
+                    .map(|i| &payload[base + i * d..base + (i + 1) * d])
+                    .collect();
+                c.install_rejoin_state(&mut state.comp, &views);
             }
             state.x.copy_from_slice(&outer.x0);
             state.w = 1.0;
@@ -287,21 +334,40 @@ pub fn outer_update(
 
     // Line 6: exact average x_{t,tau} over the live group (skip for the
     // noaverage variant). coll_ids 3t..3t+2 key the chaos delay streams.
+    // With a codec the worker's contribution is lossily transcoded first
+    // (EF residual at site::OUTER), and the ring charges compressed
+    // bytes.
+    // A lone survivor's "average" moves no bytes, so its contribution is
+    // not lossily transcoded either (codec itself stays active: the
+    // rejoin wire format and residual rescaling are group-size
+    // independent).
+    let comm = group.len() > 1;
     if cfg.exact_average {
-        clock = ring_allreduce_mean_group(
-            fabric, worker, &group, &mut state.x, clock, 3 * t,
+        if comm {
+            if let Some(c) = codec {
+                let WorkerState { x, comp, .. } = state;
+                c.transcode(x, comp, site::OUTER);
+            }
+        }
+        clock = ring_allreduce_mean_group_c(
+            fabric, worker, &group, &mut state.x, clock, 3 * t, codec,
         );
         algo.on_exact_average(state);
     }
 
-    // Elastic membership: the rule state aggregates displacement mass
-    // over the live group; rescale by the live-count ratio when
-    // membership changed since the previous boundary.
+    // Elastic membership: the rule state (and any codec residuals)
+    // aggregate displacement mass over the live group; rescale by the
+    // live-count ratio when membership changed since the previous
+    // boundary.
     if let Some(plan) = chaos {
         let live = group.len();
         let prev = plan.contributor_count_before(t);
         if live != prev {
-            rule.scale_state(&mut outer.opt, live as f32 / prev as f32);
+            let factor = live as f32 / prev as f32;
+            rule.scale_state(&mut outer.opt, factor);
+            if codec.is_some() {
+                state.comp.scale_residuals(factor);
+            }
         }
     }
 
@@ -322,7 +388,13 @@ pub fn outer_update(
             for buf in &outer.opt.bufs {
                 msg.extend_from_slice(buf);
             }
+            if let Some(c) = codec {
+                for buf in c.rejoin_state(&state.comp, d) {
+                    msg.extend_from_slice(&buf);
+                }
+            }
             msg.extend_from_slice(&clock_to_f32s(clock));
+            debug_assert_eq!(msg.len(), state_msg_len);
             for &r in &rejoiners {
                 fabric.chunk_send(r, tag_x, outer.x0.clone());
                 fabric.chunk_send(r, tag_u, msg.clone());
@@ -338,12 +410,26 @@ pub fn outer_update(
         BufferStrategy::Reset => state.reset_buffers(),
         BufferStrategy::Maintain => {}
         BufferStrategy::Average => {
-            clock = ring_allreduce_mean_group(
+            if comm {
+                if let Some(c) = codec {
+                    let WorkerState { h, comp, .. } = state;
+                    c.transcode(h, comp, site::OUTER_H);
+                }
+            }
+            clock = ring_allreduce_mean_group_c(
                 fabric, worker, &group, &mut state.h, clock, 3 * t + 1,
+                codec,
             );
             if !state.v.is_empty() {
-                clock = ring_allreduce_mean_group(
+                if comm {
+                    if let Some(c) = codec {
+                        let WorkerState { v, comp, .. } = state;
+                        c.transcode(v, comp, site::OUTER_V);
+                    }
+                }
+                clock = ring_allreduce_mean_group_c(
                     fabric, worker, &group, &mut state.v, clock, 3 * t + 2,
+                    codec,
                 );
             }
         }
@@ -733,6 +819,61 @@ mod tests {
         assert!(e.contains("worker 1"), "{e}");
         assert!(e.contains("boundary 1"), "{e}");
         assert!(e.contains("corrupt"), "{e}");
+    }
+
+    #[test]
+    fn truncated_rejoin_payload_with_codec_is_a_hard_error() {
+        // With an error-feedback codec the rejoin state payload grows to
+        // (n_bufs + ef_bufs)*d + 2; a legacy rule-only payload (d + 2)
+        // must be rejected — naming the worker, boundary and the codec's
+        // buffer count — instead of silently zero-filling the residual.
+        use crate::compress::{ErrorFeedback, TopK};
+        use crate::net::{ChaosCfg, ChaosPlan, FaultWindow};
+        use std::sync::Arc;
+        let m = 2;
+        let d = 6;
+        let cost = CostModel::free();
+        let plan = Arc::new(
+            ChaosPlan::new(
+                ChaosCfg {
+                    faults: vec![FaultWindow {
+                        worker: 1,
+                        fail_at: 0,
+                        rejoin_at: 1,
+                    }],
+                    ..ChaosCfg::default()
+                },
+                m,
+                &cost,
+            )
+            .unwrap(),
+        );
+        let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+        let rule = rule_of(&cfg);
+        let codec = ErrorFeedback {
+            inner: Arc::new(TopK { frac: 0.5 }),
+        };
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        let init = vec![1.0f32; d];
+        let mut st = WorkerState::new(&init, &inner);
+        let mut ou = OuterState::new(&init, &*rule);
+        ou.t = 1; // worker 1's rejoin boundary
+        let (tag_x, tag_u) = rejoin_tags(1);
+        fabric.chunk_send(1, tag_x, vec![0.0; d]);
+        // Rule buffer + clock, but no residual buffer.
+        fabric.chunk_send(1, tag_u, vec![0.0; d + 2]);
+        let e = outer_update_c(&cfg, &*rule, &algo, &fabric, &kernels, 1,
+                               &mut st, &mut ou, 0.1, 0.0, Some(&*plan),
+                               Some(&codec))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("worker 1"), "{e}");
+        assert!(e.contains("boundary 1"), "{e}");
+        assert!(e.contains("corrupt"), "{e}");
+        assert!(e.contains("error-feedback"), "{e}");
     }
 
     #[test]

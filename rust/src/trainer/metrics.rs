@@ -39,6 +39,9 @@ pub struct TrainResult {
     /// Outer-optimizer spec string ("slowmo:0.7", "adam:0.9,0.95") when
     /// the run wrapped its base algorithm; `None` for bare runs.
     pub outer: Option<String>,
+    /// Communication-compression spec string ("topk:0.1", "ef:signsgd")
+    /// when a codec was configured; `None` for raw-f32 runs.
+    pub compress: Option<String>,
     pub preset: String,
     pub m: usize,
     pub steps: u64,
@@ -59,8 +62,11 @@ pub struct TrainResult {
     pub sim_time: f64,
     /// Real wall-clock seconds spent training.
     pub wall_time: f64,
-    /// Total f32 bytes sent over the fabric.
+    /// Total bytes on the wire (compressed sizes when a codec is active).
     pub bytes_sent: u64,
+    /// Bytes compression kept off the wire (raw 4 B/elem total minus
+    /// `bytes_sent`; 0 for raw-f32 runs).
+    pub bytes_saved: u64,
     /// Chaos-layer retransmitted messages (0 without a chaos plan).
     pub retransmits: u64,
     /// Mean grad-norm^2 trajectory per outer iteration (theory bench).
@@ -94,6 +100,7 @@ impl TrainResult {
             ("sim_time", Json::num(self.sim_time)),
             ("wall_time", Json::num(self.wall_time)),
             ("bytes_sent", Json::num(self.bytes_sent as f64)),
+            ("bytes_saved", Json::num(self.bytes_saved as f64)),
             ("retransmits", Json::num(self.retransmits as f64)),
             (
                 "train_curve",
@@ -118,6 +125,9 @@ impl TrainResult {
         ];
         if let Some(outer) = &self.outer {
             pairs.push(("outer", Json::str(outer)));
+        }
+        if let Some(compress) = &self.compress {
+            pairs.push(("compress", Json::str(compress)));
         }
         Json::obj(pairs)
     }
@@ -168,6 +178,7 @@ mod tests {
         TrainResult {
             algo: "x".into(),
             outer: Some("slowmo:0.7".into()),
+            compress: Some("topk:0.1".into()),
             preset: "p".into(),
             m: 2,
             steps: 100,
@@ -181,6 +192,7 @@ mod tests {
             sim_time: 50.0,
             wall_time: 1.0,
             bytes_sent: 42,
+            bytes_saved: 7,
             retransmits: 0,
             gradnorm_curve: vec![],
             final_params: None,
@@ -199,6 +211,8 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("algo").unwrap().as_str(), Some("x"));
         assert_eq!(j.get("outer").unwrap().as_str(), Some("slowmo:0.7"));
+        assert_eq!(j.get("compress").unwrap().as_str(), Some("topk:0.1"));
+        assert_eq!(j.get("bytes_saved").unwrap().as_f64(), Some(7.0));
         let parsed =
             crate::jsonx::parse(&crate::jsonx::to_string(&j)).unwrap();
         assert_eq!(parsed.get("best_train_loss").unwrap().as_f64(),

@@ -23,11 +23,12 @@ pub use observer::{
 pub use schedule::Schedule;
 
 use crate::algorithms::{AlgoSel, BaseAlgorithm, Ctx, WorkerState};
+use crate::compress::{CompressSel, CompressState, Compressor};
 use crate::data::{task_for, Task};
 use crate::net::{ChaosCfg, ChaosPlan, CostModel, Fabric};
 use crate::optim::kernels::Kernels;
 use crate::runtime::DataDesc;
-use crate::slowmo::{outer_update, OuterOpt, OuterState, SlowMoCfg};
+use crate::slowmo::{outer_update_c, OuterOpt, OuterState, SlowMoCfg};
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -71,6 +72,11 @@ pub struct TrainCfg {
     /// Deterministic network degradation (delays, drops, stragglers,
     /// fault windows). `None` = the perfect network.
     pub chaos: Option<ChaosCfg>,
+    /// Communication compression (registry selection; `none` = raw f32
+    /// everywhere, bit-identical to the pre-compression path). Resolved
+    /// against the session's [`crate::compress::CompressRegistry`] when
+    /// the run starts.
+    pub compress: CompressSel,
     /// Record worker 0's final (de-biased) parameters into the result —
     /// used by the chaos equivalence tests; off by default (costs one
     /// `d`-sized copy).
@@ -98,6 +104,7 @@ impl TrainCfg {
             record_gradnorm: false,
             stop_check_every: None,
             chaos: None,
+            compress: CompressSel::none(),
             record_final_params: false,
         }
     }
@@ -203,6 +210,7 @@ pub(crate) fn run_prepared(
     cfg: &TrainCfg,
     algo: Arc<dyn BaseAlgorithm>,
     outer_rule: Option<Arc<dyn OuterOpt>>,
+    compressor: Option<Arc<dyn Compressor>>,
     init: &[f32],
     desc: &DataDesc,
     model: &ModelExec,
@@ -219,6 +227,14 @@ pub(crate) fn run_prepared(
              OuterRegistry)"
         );
     }
+    ensure!(
+        cfg.compress.is_none() || compressor.is_some(),
+        "compression configured without a built codec (run through \
+         Session, which resolves cfg.compress via its CompressRegistry)"
+    );
+    // The identity codec takes the exact pre-compression code path.
+    let codec: Option<&dyn Compressor> =
+        compressor.as_deref().filter(|c| !c.is_identity());
     let task: Box<dyn Task> =
         task_for(desc, cfg.m, cfg.seed, cfg.heterogeneity);
     let chaos_plan: Option<Arc<ChaosPlan>> = match &cfg.chaos {
@@ -251,6 +267,9 @@ pub(crate) fn run_prepared(
     };
     let mut algo_name =
         display_name(&algo.name(), &cfg.slowmo, outer_rule.as_deref());
+    if codec.is_some() {
+        algo_name.push_str(&format!("+{}", cfg.compress.spec()));
+    }
     if cfg.chaos.is_some() {
         algo_name.push_str("+chaos");
     }
@@ -283,6 +302,9 @@ pub(crate) fn run_prepared(
     let outs: Vec<Result<WorkerOut>> = crate::exec::run_workers(cfg.m, |w| {
         let body = || -> Result<WorkerOut> {
         let mut state = WorkerState::new(init, algo.inner());
+        // Key the compression streams/residuals by (run seed, rank) so
+        // randomized codecs are deterministic per worker.
+        state.comp = CompressState::new(cfg.seed, w as u64);
         let mut outer =
             outer_rule.as_deref().map(|r| OuterState::new(init, r));
         let mut ctx = Ctx {
@@ -290,6 +312,7 @@ pub(crate) fn run_prepared(
             m: cfg.m,
             fabric: &fabric,
             kernels,
+            compress: codec,
             clock: 0.0,
         };
         let mut out = WorkerOut {
@@ -356,10 +379,10 @@ pub(crate) fn run_prepared(
                 (&cfg.slowmo, outer_rule.as_deref(), outer.as_mut())
             {
                 if scfg.is_boundary(k) {
-                    ctx.clock = outer_update(
+                    ctx.clock = outer_update_c(
                         scfg, rule, algo.as_ref(), &fabric, kernels, w,
                         &mut state, outer, gamma_outer, ctx.clock,
-                        chaos_plan.as_deref(),
+                        chaos_plan.as_deref(), codec,
                     )?;
                     if w == 0 {
                         if let Some(obs) = &observer {
@@ -570,6 +593,11 @@ fn assemble(
     TrainResult {
         algo: algo_name,
         outer: cfg.slowmo.as_ref().map(|s| s.outer.spec()),
+        compress: if cfg.compress.is_none() {
+            None
+        } else {
+            Some(cfg.compress.spec())
+        },
         preset: cfg.preset.clone(),
         m: cfg.m,
         steps: cfg.steps,
@@ -583,6 +611,7 @@ fn assemble(
         sim_time,
         wall_time: wall,
         bytes_sent: fabric.bytes_sent(),
+        bytes_saved: fabric.bytes_saved(),
         retransmits,
         gradnorm_curve,
         final_params,
@@ -718,6 +747,7 @@ mod tests {
         assert!(!cfg.force_pjrt);
         assert_eq!(cfg.stop_check_every, None);
         assert!(cfg.chaos.is_none());
+        assert!(cfg.compress.is_none());
         assert!(!cfg.record_final_params);
     }
 }

@@ -7,11 +7,14 @@
 //! (SLOWMO_CHAOS_SEED) so the whole suite re-rolls with one env var.
 
 use slowmo::algorithms::{BaseAlgorithm, Ctx, Local, Sgp, WorkerState};
+use slowmo::compress::{site, ErrorFeedback, TopK};
 use slowmo::exec::run_workers;
 use slowmo::net::{ChaosCfg, ChaosPlan, CostModel, Fabric, FaultWindow};
 use slowmo::optim::kernels::{InnerOpt, Kernels};
 use slowmo::session::Session;
-use slowmo::slowmo::{outer_update, OuterRegistry, OuterState, SlowMoCfg};
+use slowmo::slowmo::{
+    outer_update, outer_update_c, OuterRegistry, OuterState, SlowMoCfg,
+};
 use slowmo::testkit::chaos_seed;
 use slowmo::topology::ExponentialGraph;
 use slowmo::trainer::{Schedule, TrainResult};
@@ -178,6 +181,7 @@ fn sgp_push_sum_tolerates_chaos_fabric() {
                 m,
                 fabric: &fabric,
                 kernels: &kernels,
+                compress: None,
                 clock: 0.0,
             };
             for k in 0..steps {
@@ -326,6 +330,170 @@ fn fault_and_rejoin_every_outer_rule() {
             .unwrap();
         assert_ne!(calm.final_params, a.final_params, "{spec}");
     }
+}
+
+// ------------------------------------------ compression × elastic faults
+
+fn ef_topk(frac: f32) -> ErrorFeedback {
+    ErrorFeedback {
+        inner: Arc::new(TopK { frac }),
+    }
+}
+
+/// Elastic membership rescales error-feedback residuals by the
+/// live-count ratio, exactly like outer-rule state.
+#[test]
+fn membership_change_rescales_ef_residuals() {
+    let m = 2;
+    let d = 4;
+    let cost = CostModel::free();
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![FaultWindow {
+                    worker: 1,
+                    fail_at: 0,
+                    rejoin_at: u64::MAX,
+                }],
+                ..ChaosCfg::default()
+            },
+            m,
+            &cost,
+        )
+        .unwrap(),
+    );
+    let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    let cfg = SlowMoCfg::new(1.0, 0.0, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
+    let codec = ef_topk(0.5);
+    let init = vec![0.0f32; d];
+    let mut st = WorkerState::new(&init, algo.inner());
+    // Pre-existing residual mass from the m=2 regime. The survivor's
+    // group is a singleton, so no transcode runs (nothing is on the
+    // wire) — the membership change (2 -> 1 live) still halves the
+    // residual, exactly like OuterOpt::scale_state.
+    st.comp.set_residual(site::OUTER, vec![2.0; d]);
+    let mut ou = OuterState::new(&init, &*rule);
+    outer_update_c(&cfg, &*rule, &algo, &fabric, &kernels, 0, &mut st,
+                   &mut ou, 1.0, 0.0, Some(&*plan), Some(&codec))
+        .unwrap();
+    assert_eq!(
+        st.comp.residual_opt(site::OUTER).unwrap(),
+        &vec![1.0; d],
+        "residual must be halved by the 2 -> 1 membership change"
+    );
+}
+
+/// Fail-and-rejoin with `ef:topk` active: the rejoin transfer round-trips
+/// the leader's residual buffer bit-for-bit (appended to the rule state,
+/// same state-shape-agnostic wire format), and the run deadlock-free
+/// re-synchronizes x0 across all workers.
+#[test]
+fn rejoin_round_trips_ef_residuals_bitwise() {
+    let m = 3;
+    let d = 8;
+    let cost = CostModel::free();
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![FaultWindow {
+                    worker: 2,
+                    fail_at: 0,
+                    rejoin_at: 1,
+                }],
+                ..ChaosCfg::default()
+            },
+            m,
+            &cost,
+        )
+        .unwrap(),
+    );
+    let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
+    let codec = ef_topk(0.25);
+    let init = vec![1.0f32; d];
+    let out = run_workers(m, |w| {
+        let mut st = WorkerState::new(&init, algo.inner());
+        let mut ou = OuterState::new(&init, &*rule);
+        for t in 0..2u64 {
+            // Divergent inner progress before each boundary, so the
+            // topk residuals are non-trivial.
+            for (i, x) in st.x.iter_mut().enumerate() {
+                *x -= 0.01 * (w as f32 + 1.0) * (t as f32 + 1.0)
+                    + 0.003 * i as f32;
+            }
+            outer_update_c(&cfg, &*rule, &algo, &fabric, &kernels, w,
+                           &mut st, &mut ou, 0.1, 0.0, Some(&*plan),
+                           Some(&codec))
+                .unwrap();
+        }
+        (st, ou)
+    });
+    for (_, ou) in &out {
+        assert_eq!(ou.t, 2, "all workers advanced both boundaries");
+    }
+    // Post-rejoin: every worker holds the identical outer state.
+    for (st, ou) in &out[1..] {
+        assert_eq!(st.x, out[0].0.x);
+        assert_eq!(ou.x0, out[0].1.x0);
+    }
+    // The rejoiner (worker 2) pulled the leader's (worker 0, lowest
+    // contributor rank) OUTER residual, bit for bit. The other survivor
+    // keeps its own, different residual.
+    let leader = out[0].0.comp.residual_opt(site::OUTER).unwrap();
+    assert!(leader.iter().any(|&v| v != 0.0), "test needs a residual");
+    assert_eq!(out[2].0.comp.residual_opt(site::OUTER).unwrap(), leader);
+    assert_ne!(out[1].0.comp.residual_opt(site::OUTER).unwrap(), leader);
+}
+
+/// End-to-end acceptance: `--compress ef:topk --chaos fault=...` — the
+/// run completes, stays bit-deterministic under a fixed seed, and sends
+/// strictly fewer bytes than the uncompressed run.
+#[test]
+fn fault_and_rejoin_with_ef_topk_end_to_end() {
+    let Some(s) = session() else { return };
+    let run = |compress: Option<&str>| -> TrainResult {
+        let mut chaos = degraded();
+        chaos.faults =
+            vec![FaultWindow { worker: 2, fail_at: 1, rejoin_at: 3 }];
+        let mut b = s
+            .train("quad")
+            .algo("local")
+            .inner(sgd())
+            .workers(4)
+            .steps(32)
+            .seed(11)
+            .slowmo_cfg(SlowMoCfg::new(1.0, 0.6, 4))
+            .schedule(Schedule::Const(0.2))
+            .heterogeneity(1.0)
+            .eval_batches(1)
+            .cost(CostModel::ethernet_10g())
+            .compute_time(1e-4)
+            .record_params(true)
+            .chaos(chaos);
+        if let Some(spec) = compress {
+            b = b.compress(spec);
+        }
+        b.run().unwrap()
+    };
+    let a = run(Some("ef:topk:0.3"));
+    let b = run(Some("ef:topk:0.3"));
+    assert_eq!(a.steps_run, 32, "run did not complete");
+    assert_eq!(a.final_params, b.final_params, "non-deterministic");
+    assert_eq!(a.bytes_sent, b.bytes_sent);
+    assert_eq!(a.sim_time, b.sim_time);
+    assert_eq!(a.retransmits, b.retransmits);
+    assert_eq!(a.compress.as_deref(), Some("ef:topk:0.3"));
+    let raw = run(None);
+    assert!(a.bytes_sent < raw.bytes_sent,
+            "{} !< {}", a.bytes_sent, raw.bytes_sent);
+    assert!(a.bytes_saved > 0);
+    assert_eq!(raw.bytes_saved, 0);
 }
 
 /// Faults require SlowMo boundaries and a communication-free base.

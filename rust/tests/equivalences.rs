@@ -366,3 +366,158 @@ fn sim_time_reflects_cost_model() {
     assert!((r.sim_time - want).abs() < 0.2 * want,
             "sim {} vs want {}", r.sim_time, want);
 }
+
+// ----------------------------------------------------- compression layer
+// The compress subsystem's equivalence obligations: the `none` codec (and
+// a builder that never mentions compression) is bit-identical to the
+// pre-subsystem path on every lane, and `ef:topk:1.0` (keep-everything
+// error feedback) matches `none` exactly — its encode/decode round-trip
+// is value-preserving by construction, so the documented ulp bound is 0.
+
+fn quadc(
+    s: &Session,
+    m: usize,
+    steps: u64,
+    algo: AlgoSel,
+    slowmo: Option<SlowMoCfg>,
+    compress: Option<&str>,
+) -> TrainResult {
+    let mut b = s
+        .train("quad")
+        .algo_sel(algo)
+        .workers(m)
+        .steps(steps)
+        .seed(11)
+        .slowmo_opt(slowmo)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(1e-6)
+        .record_params(true);
+    if let Some(spec) = compress {
+        b = b.compress(spec);
+    }
+    b.run().unwrap()
+}
+
+#[test]
+fn compress_none_is_bitwise_identical_to_presubsystem_path() {
+    // AR (per-step gradient collective), SGP (gossip lane) and
+    // Local+SlowMo (outer-boundary collective): `compress = none` must
+    // not move a bit — parameters, curves, bytes and simulated time all
+    // identical to a run that never mentions compression.
+    let Some(s) = session() else { return };
+    let cells: [(AlgoSel, Option<SlowMoCfg>); 3] = [
+        (AlgoSel::with_inner("ar", sgd()), None),
+        (AlgoSel::with_inner("sgp", sgd()), None),
+        (local(), Some(SlowMoCfg::new(1.0, 0.7, 8))),
+    ];
+    for (algo, slowmo) in cells {
+        let bare = quadc(&s, 4, 48, algo.clone(), slowmo.clone(), None);
+        let none = quadc(&s, 4, 48, algo, slowmo, Some("none"));
+        assert_eq!(bare.final_params, none.final_params);
+        assert_eq!(bare.train_curve, none.train_curve);
+        assert_eq!(bare.bytes_sent, none.bytes_sent);
+        assert_eq!(bare.sim_time, none.sim_time);
+        assert_eq!(none.bytes_saved, 0);
+        // The identity codec is not reported as a codec.
+        assert_eq!(none.compress, None);
+        assert!(!none.algo.contains("none"), "{}", none.algo);
+    }
+}
+
+#[test]
+fn ef_topk_keep_everything_matches_none_exactly() {
+    // ef:topk:1.0 keeps every coordinate: encode/decode is value-exact
+    // and the residual is identically zero, so the whole run matches the
+    // uncompressed one bit for bit (documented ulp bound: 0). Only the
+    // reporting differs: the codec is named, and the dense index+value
+    // fallback keeps bytes at the raw size.
+    let Some(s) = session() else { return };
+    for (algo, slowmo) in [
+        (AlgoSel::with_inner("ar", sgd()), None),
+        (local(), Some(SlowMoCfg::new(1.0, 0.7, 8))),
+    ] {
+        let bare = quadc(&s, 4, 48, algo.clone(), slowmo.clone(), None);
+        let ef = quadc(&s, 4, 48, algo, slowmo, Some("ef:topk:1.0"));
+        assert_eq!(bare.final_params, ef.final_params);
+        assert_eq!(bare.train_curve, ef.train_curve);
+        assert_eq!(bare.bytes_sent, ef.bytes_sent, "dense fallback");
+        assert_eq!(ef.compress.as_deref(), Some("ef:topk:1"));
+        assert!(ef.algo.contains("ef:topk:1"), "{}", ef.algo);
+    }
+}
+
+#[test]
+fn lossy_compression_strictly_cuts_bytes_and_time() {
+    // The acceptance frontier: every lossy codec sends strictly fewer
+    // bytes than raw f32 on the same run, reports the savings, and
+    // finishes sooner on the α-β network.
+    let Some(s) = session() else { return };
+    let slowmo = Some(SlowMoCfg::new(1.0, 0.7, 8));
+    let raw = quadc(&s, 4, 48, local(), slowmo.clone(), None);
+    for spec in ["fp16", "bf16", "topk:0.1", "ef:topk:0.1", "randk:0.1",
+                 "signsgd", "ef:signsgd"] {
+        let r = quadc(&s, 4, 48, local(), slowmo.clone(), Some(spec));
+        assert!(r.bytes_sent < raw.bytes_sent,
+                "{spec}: {} !< {}", r.bytes_sent, raw.bytes_sent);
+        assert!(r.bytes_saved > 0, "{spec}");
+        assert!(r.sim_time < raw.sim_time, "{spec}");
+        assert_eq!(r.compress.as_deref(), Some(spec));
+    }
+}
+
+#[test]
+fn compressed_runs_are_bit_deterministic() {
+    // Seeded determinism holds with compression on — including randk,
+    // whose index streams derive from (run seed, worker, site, counter).
+    let Some(s) = session() else { return };
+    let slowmo = Some(SlowMoCfg::new(1.0, 0.7, 8));
+    for spec in ["ef:topk:0.25", "randk:0.25", "ef:signsgd"] {
+        let a = quadc(&s, 4, 48, local(), slowmo.clone(), Some(spec));
+        let b = quadc(&s, 4, 48, local(), slowmo.clone(), Some(spec));
+        assert_eq!(a.final_params, b.final_params, "{spec}");
+        assert_eq!(a.bytes_sent, b.bytes_sent, "{spec}");
+        assert_eq!(a.sim_time, b.sim_time, "{spec}");
+    }
+}
+
+#[test]
+fn faultless_chaos_with_compression_moves_time_not_math() {
+    // The chaos contract composes with compression: the codec is applied
+    // before the fabric, so seeded delays/drops still change only
+    // simulated time and retransmit counts.
+    let Some(s) = session() else { return };
+    let sgp = AlgoSel::with_inner("sgp", sgd());
+    let chaos = ChaosCfg {
+        seed: chaos_seed(),
+        delay_mean_s: 2e-3,
+        delay_max_s: 20e-3,
+        drop_prob: 0.1,
+        reorder_window: 4,
+        ..ChaosCfg::default()
+    };
+    let run = |chaos: Option<ChaosCfg>| {
+        s.train("quad")
+            .algo_sel(sgp.clone())
+            .workers(4)
+            .steps(48)
+            .seed(11)
+            .schedule(Schedule::Const(0.2))
+            .heterogeneity(1.0)
+            .eval_batches(1)
+            .cost(CostModel::ethernet_10g())
+            .compute_time(1e-6)
+            .record_params(true)
+            .compress("ef:topk:0.25")
+            .chaos_opt(chaos)
+            .run()
+            .unwrap()
+    };
+    let calm = run(None);
+    let chaotic = run(Some(chaos));
+    assert_eq!(calm.final_params, chaotic.final_params);
+    assert_eq!(calm.bytes_sent, chaotic.bytes_sent);
+    assert!(chaotic.sim_time > calm.sim_time);
+}

@@ -221,3 +221,171 @@ fn push_sum_invariant_under_delays_and_reordering() {
         }
     }
 }
+
+// --------------------------------------------------- compression codecs
+// Encode→decode round-trip bounds for every built-in compressor, plus
+// the registry-wide wire_bytes() <= 4·d honesty bound. All seeded through
+// testkit::forall (SLOWMO_TEST_SEED / SLOWMO_PROP_CASES), with shrinking
+// toward minimal failing vectors.
+
+use slowmo::compress::{
+    site, CompressRegistry, CompressState, Compressor,
+};
+use slowmo::testkit::{forall, VecF32};
+
+fn vecs() -> VecF32 {
+    VecF32 { min_len: 1, max_len: 300, scale: 2.0 }
+}
+
+fn round_trip(c: &dyn Compressor, x: &[f32]) -> Vec<f32> {
+    let mut st = CompressState::new(test_seed(), 0);
+    let wire = c.encode(x, &mut st, site::GRAD);
+    assert_eq!(
+        wire.wire_bytes,
+        c.wire_bytes(x.len()),
+        "encode must report the same wire size the cost model charges"
+    );
+    let mut out = vec![0.0f32; x.len()];
+    c.decode(&wire, &mut out);
+    out
+}
+
+fn build(spec: &str) -> std::sync::Arc<dyn Compressor> {
+    let r = CompressRegistry::builtin();
+    r.build(&r.parse(spec).unwrap()).unwrap()
+}
+
+#[test]
+fn fp16_round_trip_within_half_ulp() {
+    let c = build("fp16");
+    forall("fp16 round-trip ulp bound", &vecs(), |x| {
+        let y = round_trip(c.as_ref(), x);
+        // Normal halves: rel error <= 2^-11; subnormals: abs <= 2^-25.
+        x.iter().zip(&y).all(|(&a, &b)| {
+            (b - a).abs() <= a.abs() * 4.9e-4 + 3.1e-8
+        })
+    });
+}
+
+#[test]
+fn bf16_round_trip_within_half_ulp() {
+    let c = build("bf16");
+    forall("bf16 round-trip ulp bound", &vecs(), |x| {
+        let y = round_trip(c.as_ref(), x);
+        // bf16 keeps 8 mantissa bits: rel error <= 2^-8.
+        x.iter().zip(&y).all(|(&a, &b)| {
+            (b - a).abs() <= a.abs() * 4e-3 + 1e-37
+        })
+    });
+}
+
+#[test]
+fn topk_preserves_the_largest_support_exactly() {
+    let c = build("topk:0.3");
+    forall("topk support preservation", &vecs(), |x| {
+        let y = round_trip(c.as_ref(), x);
+        let d = x.len();
+        let k = ((0.3f64 * d as f64).ceil() as usize).clamp(1, d);
+        let kept: Vec<usize> =
+            (0..d).filter(|&i| y[i] != 0.0).collect();
+        // Kept coordinates carry the original values bit-for-bit.
+        if !kept.iter().all(|&i| y[i] == x[i]) {
+            return false;
+        }
+        // No more than k survive (fewer only when x itself has zeros —
+        // a kept zero decodes to 0 and is indistinguishable from
+        // dropped here).
+        if kept.len() > k {
+            return false;
+        }
+        // Support optimality, unconditionally: every kept |value| >=
+        // every dropped one (a flipped selection comparator fails this).
+        let min_kept = kept
+            .iter()
+            .map(|&i| x[i].abs())
+            .fold(f32::INFINITY, f32::min);
+        let max_dropped = (0..d)
+            .filter(|i| !kept.contains(i))
+            .map(|i| x[i].abs())
+            .fold(0.0f32, f32::max);
+        min_kept >= max_dropped
+    });
+}
+
+#[test]
+fn randk_rescale_is_exact_on_kept_coords() {
+    let c = build("randk:0.3");
+    forall("randk kept-coordinate rescale", &vecs(), |x| {
+        let y = round_trip(c.as_ref(), x);
+        let d = x.len();
+        let k = ((0.3f64 * d as f64).ceil() as usize).clamp(1, d);
+        let scale = d as f32 / k as f32;
+        let nonzero = (0..d).filter(|&i| y[i] != 0.0).count();
+        nonzero <= k
+            && (0..d).all(|i| y[i] == 0.0 || y[i] == x[i] * scale)
+    });
+}
+
+#[test]
+fn signsgd_agrees_in_sign_with_uniform_chunk_magnitude() {
+    let c = build("signsgd:32");
+    forall("signsgd sign agreement", &vecs(), |x| {
+        let y = round_trip(c.as_ref(), x);
+        x.iter().zip(&y).all(|(&a, &b)| {
+            if a > 0.0 {
+                b >= 0.0
+            } else if a < 0.0 {
+                b <= 0.0
+            } else {
+                // Zeros encode as +scale (sign convention).
+                b >= 0.0
+            }
+        })
+    });
+}
+
+#[test]
+fn ef_residual_equals_dropped_mass() {
+    // One EF step: decoded + residual == input (exactly, in f64).
+    let c = build("ef:topk:0.25");
+    forall("ef residual accounting", &vecs(), |x| {
+        let mut st = CompressState::new(test_seed(), 0);
+        let mut y = x.clone();
+        c.transcode(&mut y, &mut st, site::OUTER);
+        let r = st.residual_opt(site::OUTER).unwrap();
+        x.iter().zip(&y).zip(r).all(|((&a, &b), &rv)| {
+            // b + rv == a up to one f32 rounding of the subtraction.
+            (f64::from(b) + f64::from(rv) - f64::from(a)).abs()
+                <= f64::from(a.abs()) * 1e-6 + 1e-7
+        })
+    });
+}
+
+#[test]
+fn wire_bytes_never_exceed_raw_for_any_registered_key() {
+    // The honesty bound the cost model relies on: no registered codec —
+    // at default arguments or the extreme frac=1.0 — may charge more
+    // than raw f32 (sparse codecs fall back to dense accounting).
+    let r = CompressRegistry::builtin();
+    let mut specs: Vec<String> =
+        r.keys().iter().map(|k| k.to_string()).collect();
+    specs.extend(
+        ["topk:1.0", "randk:1.0", "signsgd:1", "ef:topk:1.0"]
+            .iter()
+            .map(|s| s.to_string()),
+    );
+    for spec in &specs {
+        // `ef` needs an inner codec at parse time; give it one.
+        let spec =
+            if spec == "ef" { "ef:topk:0.1" } else { spec.as_str() };
+        let c = r.build(&r.parse(spec).unwrap()).unwrap();
+        for d in 0..=130usize {
+            assert!(
+                c.wire_bytes(d) <= d as u64 * 4,
+                "{spec}: wire_bytes({d}) = {} > {}",
+                c.wire_bytes(d),
+                d * 4
+            );
+        }
+    }
+}

@@ -211,6 +211,101 @@ fn custom_out_of_crate_outer_rule_runs_by_string_key() {
         .is_err());
 }
 
+#[test]
+fn custom_out_of_crate_compressor_runs_by_string_key() {
+    use slowmo::compress::{CompressState, Compressor, Wire};
+
+    /// A deliberately simple out-of-crate codec: keep every even
+    /// coordinate (half the values, half the bytes). Proves the
+    /// CompressRegistry's factory surface is sufficient for codecs
+    /// defined outside the crate, mirroring `Anchor` / `HalfPull`.
+    struct EvenOnly;
+
+    impl Compressor for EvenOnly {
+        fn key(&self) -> String {
+            "evenonly".into()
+        }
+
+        fn params(&self) -> String {
+            String::new()
+        }
+
+        fn encode(
+            &self,
+            x: &[f32],
+            _st: &mut CompressState,
+            _site: u64,
+        ) -> Wire {
+            let data: Vec<f32> =
+                x.iter().step_by(2).copied().collect();
+            Wire {
+                data,
+                d: x.len(),
+                wire_bytes: self.wire_bytes(x.len()),
+            }
+        }
+
+        fn decode(&self, wire: &Wire, out: &mut [f32]) {
+            out.fill(0.0);
+            for (j, &v) in wire.data.iter().enumerate() {
+                out[2 * j] = v;
+            }
+        }
+
+        fn wire_bytes(&self, d: usize) -> u64 {
+            d.div_ceil(2) as u64 * 4
+        }
+    }
+
+    let Some(mut s) = session() else { return };
+    s.compress_registry_mut().register(
+        "evenonly",
+        "test-only even-coordinate codec defined outside the crate",
+        &[],
+        false,
+        |_, _| {
+            Ok(std::sync::Arc::new(EvenOnly)
+                as std::sync::Arc<dyn Compressor>)
+        },
+    );
+    let run = |spec: Option<&str>| {
+        let mut b = s
+            .train("quad")
+            .algo("local")
+            .inner(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 })
+            .workers(2)
+            .steps(64)
+            .seed(5)
+            .slowmo(0.5, 8)
+            .schedule(Schedule::Const(0.2))
+            .heterogeneity(1.0)
+            .eval_batches(1)
+            .cost(CostModel::ethernet_10g())
+            .compute_time(1e-6);
+        if let Some(spec) = spec {
+            b = b.compress(spec);
+        }
+        b.run().unwrap()
+    };
+    let raw = run(None);
+    let r = run(Some("evenonly"));
+    assert!(r.algo.contains("evenonly"), "{}", r.algo);
+    assert_eq!(r.compress.as_deref(), Some("evenonly"));
+    assert!(r.bytes_sent < raw.bytes_sent);
+    assert!(r.bytes_saved > 0);
+    // And it wraps in error feedback like any other inner codec.
+    let ef = run(Some("ef:evenonly"));
+    assert_eq!(ef.compress.as_deref(), Some("ef:evenonly"));
+    assert!(ef.bytes_sent < raw.bytes_sent);
+    // Unknown keys still fail hard through the same path.
+    assert!(s
+        .train("quad")
+        .algo("local")
+        .compress("nope")
+        .run()
+        .is_err());
+}
+
 struct StopAfter {
     after: u64,
     seen: u64,
