@@ -1,0 +1,132 @@
+//! Hierarchical two-level SlowMo on a two-tier cluster: 4 workers split
+//! into 2 groups with fast 10G intra-group links and a slow 1G / 0.5 ms
+//! inter-group link — the BMUF cluster shape the paper's framework
+//! generalizes.
+//!
+//! Demonstrates the hierarchy subsystem's three contracts:
+//! 1. `groups("1")` is bit-identical to a run that never mentions groups
+//!    (one group *is* the flat topology);
+//! 2. the two-level reduce moves strictly fewer bytes over the slow
+//!    inter-group links than flat SlowMo on the same cluster, and
+//!    finishes sooner in simulated time;
+//! 3. everything stays deterministic given the seed, and the intra-group
+//!    fast average (`tau_inner`) composes on top.
+//!
+//! Runs on the engine-free quad fast path (no PJRT needed).
+//!
+//! Run with:  cargo run --release --example hier
+//! CI-sized:  SLOWMO_EXAMPLE_STEPS=24 cargo run --release --example hier
+
+use slowmo::net::CostModel;
+use slowmo::optim::kernels::InnerOpt;
+use slowmo::session::{Session, TrainBuilder};
+use slowmo::trainer::TrainResult;
+
+fn base(session: &Session, steps: u64) -> TrainBuilder<'_> {
+    let inter = CostModel::ethernet_1g();
+    session
+        .train("quad")
+        .algo("local")
+        .inner(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 })
+        .workers(4)
+        .steps(steps)
+        .seed(5)
+        .slowmo(0.6, 8)
+        .schedule(slowmo::trainer::Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(2e-3)
+        .record_params(true)
+        .inter_link(inter.latency_s, inter.bandwidth_bps)
+}
+
+fn report(label: &str, r: &TrainResult) {
+    println!(
+        "{label:<16} best loss {:>9.4}   inter {:>9}   total {:>9}   sim {:>8}",
+        r.best_train_loss,
+        slowmo::util::fmt_bytes(r.bytes_inter),
+        slowmo::util::fmt_bytes(r.bytes_sent),
+        slowmo::util::fmt_secs(r.sim_time),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let session = match Session::native_only() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not found ({e}); run `make artifacts`");
+            return Ok(());
+        }
+    };
+    let steps = slowmo::util::env_u64("SLOWMO_EXAMPLE_STEPS", 64);
+    println!(
+        "quad / local+slowmo(t8,b0.6), m=4, {steps} steps, \
+         10G intra / 1G inter\n"
+    );
+
+    // Contract 1: one group is the flat topology, bit for bit. (The
+    // flat reference must not set the inter link — there are no
+    // inter-group hops with g=1, so costs match too.)
+    let flat = session
+        .train("quad")
+        .algo("local")
+        .inner(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 })
+        .workers(4)
+        .steps(steps)
+        .seed(5)
+        .slowmo(0.6, 8)
+        .schedule(slowmo::trainer::Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(2e-3)
+        .record_params(true)
+        .run()?;
+    report("flat (no groups)", &flat);
+    let g1 = base(&session, steps).groups("1").run()?;
+    assert_eq!(g1.final_params, flat.final_params, "g=1 must be flat");
+    assert_eq!(g1.bytes_sent, flat.bytes_sent);
+    assert_eq!(g1.bytes_inter, 0);
+
+    // Contract 2: flat SlowMo on the tiered cluster vs the two-level
+    // reduce — same steps, strictly less slow-link traffic, less time.
+    let flat_tiered = base(&session, steps).groups_flat("2").run()?;
+    report("flat on tiers", &flat_tiered);
+    let hier = base(&session, steps).groups("2").run()?;
+    report("hier g=2", &hier);
+    assert!(
+        hier.bytes_inter < flat_tiered.bytes_inter,
+        "hier {} !< flat {}",
+        hier.bytes_inter,
+        flat_tiered.bytes_inter
+    );
+    assert!(
+        hier.sim_time < flat_tiered.sim_time,
+        "hier must win on the slow inter link: {} !< {}",
+        hier.sim_time,
+        flat_tiered.sim_time
+    );
+
+    // Contract 3: deterministic, and tau_inner composes.
+    let again = base(&session, steps).groups("2").run()?;
+    assert_eq!(again.final_params, hier.final_params, "nondeterministic");
+    assert_eq!(again.bytes_inter, hier.bytes_inter);
+    let ti = base(&session, steps).groups("2").tau_inner(2).run()?;
+    report("hier g=2 ti=2", &ti);
+    assert_eq!(
+        ti.bytes_inter, hier.bytes_inter,
+        "intra-group averages must not touch the slow links"
+    );
+    assert!(ti.bytes_sent > hier.bytes_sent);
+
+    println!(
+        "\nhierarchy cut slow-link traffic {} -> {} ({} total sim {} -> {})",
+        slowmo::util::fmt_bytes(flat_tiered.bytes_inter),
+        slowmo::util::fmt_bytes(hier.bytes_inter),
+        hier.algo,
+        slowmo::util::fmt_secs(flat_tiered.sim_time),
+        slowmo::util::fmt_secs(hier.sim_time),
+    );
+    Ok(())
+}

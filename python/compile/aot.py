@@ -27,8 +27,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax._src.lib import xla_client as xc
 
-from . import optim, presets
-from .kernels import ref
+try:
+    from . import optim, presets
+    from .kernels import ref
+except ImportError:
+    # Run as a plain script (`python python/compile/aot.py`, the form the
+    # Makefile and ROADMAP document) rather than `python -m compile.aot`:
+    # put the package root on sys.path and import absolutely.
+    import sys
+
+    sys.path.insert(
+        0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    from compile import optim, presets
+    from compile.kernels import ref
 
 
 def to_hlo_text(lowered) -> str:
@@ -205,6 +217,37 @@ def export_golden(out_dir: str, seed: int = 1234) -> None:
         "in": {"x": x.tolist(), "y": y.tolist(), "a": 0.25, "b": 0.75},
         "out": {"z": np.asarray(ref.axpy_mix(
             jnp.array(x), jnp.array(y), 0.25, 0.75)).tolist()},
+    }
+
+    # Hierarchical two-level run: unequal groups "0-0|1-3" of m=4 worker
+    # vectors, reduced with the |G|*g/m weighted two-level mean (the op
+    # order rust/src/slowmo/hier.rs's distributed reduce and
+    # topology::Groups::weighted_mean mirror: sequential f32 group sums,
+    # per-group 1/|G| scale, |G|*g/m weighting, sequential sum over
+    # groups, 1/g scale), then one slow-momentum update on the result.
+    m_workers = 4
+    groups = [[0], [1, 2, 3]]
+    xs = [vec() for _ in range(m_workers)]
+    acc = np.zeros(d, dtype=np.float32)
+    for grp in groups:
+        gm = np.zeros(d, dtype=np.float32)
+        for w in grp:
+            gm = (gm + xs[w]).astype(np.float32)
+        gm = (gm * np.float32(1.0 / len(grp))).astype(np.float32)
+        factor = np.float32(len(grp) * len(groups)) / np.float32(m_workers)
+        if factor != np.float32(1.0):
+            gm = (gm * factor).astype(np.float32)
+        acc = (acc + gm).astype(np.float32)
+    xbar = (acc * np.float32(1.0 / len(groups))).astype(np.float32)
+    x0, u = vec(), vec()
+    xn, un = ref.slowmo_update(jnp.array(x0), jnp.array(xbar),
+                               jnp.array(u), 0.05, 1.0, 0.7)
+    cases["hier"] = {
+        "in": {"xs": [x.tolist() for x in xs], "groups": "0-0|1-3",
+               "x0": x0.tolist(), "u": u.tolist(),
+               "gamma": 0.05, "alpha": 1.0, "beta": 0.7},
+        "out": {"xbar": xbar.tolist(), "x": np.asarray(xn).tolist(),
+                "u": np.asarray(un).tolist()},
     }
     with open(os.path.join(out_dir, "golden.json"), "w") as f:
         json.dump(cases, f)

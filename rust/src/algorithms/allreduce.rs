@@ -40,17 +40,20 @@ impl BaseAlgorithm for AllReduce {
         k: u64,
     ) -> Result<()> {
         let mut avg = g.to_vec();
+        // The collective runs over this worker's communication scope: the
+        // whole run, or one hierarchy group (group-local gradient
+        // averaging).
+        let group = ctx.scope_members();
         // Compress the gradient contribution (EF-SGD style: the residual
         // at the GRAD site re-injects whatever this step's codec
         // dropped). A single worker sends nothing, so nothing is lossily
         // transcoded either — no accuracy cost for bytes never on the
         // wire.
-        if ctx.m > 1 {
+        if group.len() > 1 {
             compress_payload(
                 ctx.compress, &mut state.comp, &mut avg, site::GRAD,
             );
         }
-        let group: Vec<usize> = (0..ctx.m).collect();
         // coll_id = k keys the chaos delay stream per step.
         ctx.clock = ring_allreduce_mean_group_c(
             ctx.fabric, ctx.worker, &group, &mut avg, ctx.clock, k,

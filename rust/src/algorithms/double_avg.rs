@@ -45,13 +45,15 @@ impl BaseAlgorithm for DoubleAvg {
         k: u64,
     ) -> Result<()> {
         apply_inner(ctx, &self.inner, state, g, gamma)?;
-        if (k + 1) % self.tau == 0 && ctx.m > 1 {
-            // Alg. 5 lines 6-7: average params AND momentum buffers.
+        if (k + 1) % self.tau == 0 && ctx.scope_len() > 1 {
+            // Alg. 5 lines 6-7: average params AND momentum buffers over
+            // this worker's communication scope (the whole run, or one
+            // hierarchy group).
             // coll_ids 3k..3k+2 key the chaos delay streams per collective.
             // Each buffer is compressed at its own site (independent EF
             // residuals for x, h and v).
             let codec = ctx.compress.filter(|c| !c.is_identity());
-            let group: Vec<usize> = (0..ctx.m).collect();
+            let group = ctx.scope_members();
             compress_payload(
                 ctx.compress, &mut state.comp, &mut state.x, site::DAVG_X,
             );

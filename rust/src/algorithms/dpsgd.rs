@@ -50,8 +50,11 @@ impl BaseAlgorithm for Dpsgd {
     ) -> Result<()> {
         apply_inner(ctx, &self.inner, state, g, gamma)?;
 
-        let round = self.topo.round(ctx.worker, k);
-        for &(peer, p) in &round.out {
+        // Topology over the communication scope (local ranks); fabric
+        // addresses are global.
+        let round = self.topo.round(ctx.local_rank(), k);
+        for &(peer_local, p) in &round.out {
+            let peer = ctx.to_global(peer_local);
             let mut payload: Vec<f32> =
                 state.x.iter().map(|&v| v * p as f32).collect();
             // Per-link EF residual keyed by the destination peer.
@@ -76,7 +79,7 @@ impl BaseAlgorithm for Dpsgd {
         crate::optim::scale(&mut state.x, round.self_weight as f32);
 
         // Blocking receive of exactly the step-k neighbor messages.
-        let expect = self.in_degree(ctx.m);
+        let expect = self.in_degree(ctx.scope_len());
         let mut consumed = 0;
         let mut stash_idx = 0;
         while consumed < expect {
@@ -132,7 +135,7 @@ mod tests {
             let mut st = WorkerState::new(&[w as f32; 4], algo.inner());
             let mut ctx = Ctx { worker: w, m, fabric: &fabric,
                                 kernels: &kernels, compress: None,
-                                clock: 0.0 };
+                                scope: None, clock: 0.0 };
             for k in 0..40 {
                 algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
             }

@@ -96,7 +96,9 @@ impl WorkerState {
 
 /// Everything an algorithm may touch during one inner step.
 pub struct Ctx<'a> {
+    /// Global worker rank (mailbox address on the fabric).
     pub worker: usize,
+    /// Global worker count.
     pub m: usize,
     pub fabric: &'a Fabric,
     pub kernels: &'a Kernels,
@@ -104,9 +106,49 @@ pub struct Ctx<'a> {
     /// the trainer passes `None` for the identity codec so the default
     /// path stays bit-identical to the pre-compression code).
     pub compress: Option<&'a dyn Compressor>,
+    /// Group-local communication scope (hierarchical SlowMo): the sorted
+    /// global ranks this worker's base algorithm talks to. `None` = all
+    /// `m` workers (the flat topology). Algorithms built for a scope of
+    /// size `s` address peers by *local* rank `0..s`, translated to
+    /// global mailbox ids through [`Ctx::to_global`].
+    pub scope: Option<&'a [usize]>,
     /// Simulated wall-clock for this worker (advanced by comm waits; the
     /// trainer adds compute time).
     pub clock: f64,
+}
+
+impl<'a> Ctx<'a> {
+    /// Workers in this worker's communication scope.
+    pub fn scope_len(&self) -> usize {
+        self.scope.map_or(self.m, <[usize]>::len)
+    }
+
+    /// This worker's local rank within its scope (== `worker` when flat).
+    pub fn local_rank(&self) -> usize {
+        match self.scope {
+            None => self.worker,
+            Some(s) => s
+                .iter()
+                .position(|&w| w == self.worker)
+                .expect("worker must be a member of its own scope"),
+        }
+    }
+
+    /// Translate a scope-local rank to the global mailbox id.
+    pub fn to_global(&self, local: usize) -> usize {
+        match self.scope {
+            None => local,
+            Some(s) => s[local],
+        }
+    }
+
+    /// The sorted global ranks of this scope (collective group).
+    pub fn scope_members(&self) -> Vec<usize> {
+        match self.scope {
+            None => (0..self.m).collect(),
+            Some(s) => s.to_vec(),
+        }
+    }
 }
 
 /// A base distributed optimization algorithm (paper Alg. 1 line 4 step).
@@ -209,6 +251,7 @@ pub mod testutil {
                 fabric: &fabric,
                 kernels: &kernels,
                 compress: None,
+                scope: None,
                 clock: 0.0,
             };
             let target = vec![(w + 1) as f32; d];

@@ -96,9 +96,13 @@ impl BaseAlgorithm for Sgp {
 
         // 2. Send scaled (x, w) shares to out-neighbors (Alg. 2 l.5),
         // through the configured compressor (per-link EF residual; the
-        // push-sum weight scalar rides uncompressed).
-        let round = self.topo.round(ctx.worker, k);
-        for &(peer, p) in &round.out {
+        // push-sum weight scalar rides uncompressed). The topology is
+        // built over the communication scope (the whole run, or one
+        // hierarchy group), so it deals in local ranks; the fabric in
+        // global mailbox ids.
+        let round = self.topo.round(ctx.local_rank(), k);
+        for &(peer_local, p) in &round.out {
+            let peer = ctx.to_global(peer_local);
             let mut payload: Vec<f32> =
                 state.x.iter().map(|&v| v * p as f32).collect();
             let wire = super::compress_payload(
@@ -155,7 +159,7 @@ impl BaseAlgorithm for Sgp {
         } else {
             // Blocking: consume exactly the in-degree of step-k messages,
             // stashing any early messages from faster senders.
-            let expect = self.in_degree(ctx.worker, k);
+            let expect = self.in_degree(ctx.local_rank(), k);
             let mut consumed = 0;
             let mut stash_idx = 0;
             while consumed < expect {
@@ -242,7 +246,7 @@ mod tests {
             let mut st = WorkerState::new(&init, algo.inner());
             let mut ctx = Ctx { worker: w, m, fabric: &fabric,
                                 kernels: &kernels, compress: None,
-                                clock: 0.0 };
+                                scope: None, clock: 0.0 };
             for k in 0..60 {
                 algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
             }

@@ -664,6 +664,141 @@ pub fn compress(env: &Env, task: &TaskSpec) -> Result<Table> {
     Ok(table)
 }
 
+// -------------------------------------------------------------- hierarchy
+
+/// Hierarchical two-level SlowMo sweep (`slowmo exp hier`): a `g × τ`
+/// grid on one task, Local base + SlowMo, on a two-tier cluster (fast
+/// 10G intra-group links, slow 1G/0.5 ms inter-group links). Each cell
+/// runs two or three modes:
+///
+/// - `flat`    — classic flat SlowMo on the tiered fabric (the honest
+///   baseline: per-link costs + inter-group byte accounting, algorithm
+///   unchanged);
+/// - `hier`    — the two-level reduce (group-local base, leader ring);
+/// - `hier-ti` — two-level plus a fast intra-group average every τ/4
+///   inner steps.
+///
+/// Emits `results/BENCH_hier.json` (schema `bench-hier/v1`, checked in
+/// at `results/BENCH_hier.schema.json`) and *asserts* the headline
+/// claim: at equal steps, hierarchical SlowMo moves strictly fewer
+/// bytes over the slow inter-group links than flat SlowMo.
+pub fn hier(env: &Env, task: &TaskSpec) -> Result<Table> {
+    use crate::jsonx::Json;
+    let mut table = Table::new(
+        "Hierarchy sweep (Local base + SlowMo, two-tier 10G/1G cluster)",
+        &["g", "tau", "mode", "inter bytes", "total bytes",
+          "best train loss", "final val loss", "sim time (s)"],
+    );
+    let m = env.scale.m();
+    let (inter_lat, inter_bw) = {
+        let c = crate::net::CostModel::ethernet_1g();
+        (c.latency_s, c.bandwidth_bps)
+    };
+    let gs: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&g| g <= m).collect();
+    let mut taus: Vec<u64> = vec![env.scale.tau_local(),
+                                  env.scale.tau_gossip()];
+    taus.dedup();
+    taus.retain(|&t| t * 4 <= env.scale.steps());
+    let mut entries: Vec<Json> = Vec::new();
+    let mut record = |mode: &str,
+                      g: usize,
+                      tau: u64,
+                      tau_inner: u64,
+                      r: &TrainResult,
+                      table: &mut Table| {
+        table.row(&[
+            g.to_string(),
+            tau.to_string(),
+            mode.to_string(),
+            r.bytes_inter.to_string(),
+            r.bytes_sent.to_string(),
+            fmt4(r.best_train_loss),
+            fmt4(r.final_eval_loss),
+            format!("{:.3}", r.sim_time),
+        ]);
+        entries.push(Json::obj(vec![
+            ("mode", Json::str(mode)),
+            ("g", Json::num(g as f64)),
+            ("tau", Json::num(tau as f64)),
+            ("tau_inner", Json::num(tau_inner as f64)),
+            ("bytes_inter", Json::num(r.bytes_inter as f64)),
+            ("bytes_sent", Json::num(r.bytes_sent as f64)),
+            ("best_train_loss", Json::num(r.best_train_loss)),
+            ("final_eval_loss", Json::num(r.final_eval_loss)),
+            ("best_eval_metric", Json::num(r.best_eval_metric)),
+            ("sim_time", Json::num(r.sim_time)),
+        ]));
+    };
+    for &tau in &taus {
+        for &g in &gs {
+            let spec = g.to_string();
+            let base = || {
+                cell(env, task, AlgoSel::with_inner("local", task.inner),
+                     Some(slowmo_for(task, tau)), 0)
+                    // Fixed compute charge: sim-time columns compare
+                    // communication, not host timing noise.
+                    .compute_time(5e-3)
+                    .inter_link(inter_lat, inter_bw)
+            };
+            let hier_run =
+                run_cell(env, base().groups(&spec))?;
+            record("hier", g, tau, 0, &hier_run, &mut table);
+            if g > 1 {
+                let flat_run =
+                    run_cell(env, base().groups_flat(&spec))?;
+                record("flat", g, tau, 0, &flat_run, &mut table);
+                // The acceptance claim, enforced: hierarchy strictly cuts
+                // slow-link traffic at equal steps whenever grouping
+                // actually coarsens the ring (1 < g < m). At g = m the
+                // singleton groups ARE the flat topology — the leader
+                // ring is the full ring and the byte counts tie exactly
+                // (asserted bitwise in rust/tests/equivalences.rs).
+                if g < m {
+                    anyhow::ensure!(
+                        hier_run.bytes_inter < flat_run.bytes_inter,
+                        "hier(g={g},tau={tau}) moved {} inter-group \
+                         bytes, flat moved {} — hierarchy must cut \
+                         slow-link traffic",
+                        hier_run.bytes_inter,
+                        flat_run.bytes_inter
+                    );
+                } else {
+                    anyhow::ensure!(
+                        hier_run.bytes_inter == flat_run.bytes_inter,
+                        "hier(g=m={g}) must tie the flat ring byte for \
+                         byte ({} vs {})",
+                        hier_run.bytes_inter,
+                        flat_run.bytes_inter
+                    );
+                }
+                let ti = (tau / 4).max(1);
+                let ti_run =
+                    run_cell(env, base().groups(&spec).tau_inner(ti))?;
+                record("hier-ti", g, tau, ti, &ti_run, &mut table);
+            }
+        }
+    }
+    table.print();
+    table.write_json(&env.out_path("hier.json"))?;
+    let bench = Json::obj(vec![
+        ("schema", Json::str("bench-hier/v1")),
+        ("preset", Json::str(&task.preset)),
+        ("m", Json::num(m as f64)),
+        ("steps", Json::num(env.scale.steps() as f64)),
+        ("inter_latency_s", Json::num(inter_lat)),
+        ("inter_bandwidth_bps", Json::num(inter_bw)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = env.out_path("BENCH_hier.json");
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, crate::jsonx::to_string(&bench))?;
+    crate::info!("wrote {path}");
+    Ok(table)
+}
+
 // ----------------------------------------------------------------- theory
 
 /// Theorem 1 / Corollary 1-2 validation on the quadratic workload

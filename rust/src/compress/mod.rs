@@ -64,6 +64,17 @@ pub mod site {
     pub const DAVG_X: u64 = 3 << 40;
     pub const DAVG_H: u64 = (3 << 40) + 1;
     pub const DAVG_V: u64 = (3 << 40) + 2;
+    /// Hierarchical outer boundary: the inter-group *leader* collective
+    /// re-transcodes the intra-group means before they cross the slow
+    /// links (distinct EF residuals from the intra-stage [`OUTER`] site).
+    pub const OUTER_L: u64 = (1 << 40) + 3;
+    /// Leader-stage momentum-buffer average (`BufferStrategy::Average`).
+    pub const OUTER_LH: u64 = (1 << 40) + 4;
+    /// Leader-stage second-moment average (`BufferStrategy::Average`).
+    pub const OUTER_LV: u64 = (1 << 40) + 5;
+    /// The fast intra-group parameter average every `tau_inner` inner
+    /// steps (hierarchical SlowMo).
+    pub const INTRA: u64 = 5 << 40;
     /// Gossip out-link to `peer` (SGP / OSGP / D-PSGD).
     pub fn gossip(peer: usize) -> u64 {
         (4u64 << 40) | peer as u64

@@ -62,6 +62,18 @@ fn app() -> App {
                                    "run optimizer kernels via the PJRT \
                                     artifacts instead of the native \
                                     mirrors (slower on CPU; see §Perf)"))
+                .flag(Flag::opt("groups", "",
+                                "hierarchical two-level topology: a group \
+                                 count (\"2\") or explicit ranges \
+                                 (\"0-3|4-7\") — groups run the base \
+                                 algorithm locally and the SlowMo \
+                                 boundary becomes a two-level reduce \
+                                 (empty = flat)"))
+                .flag(Flag::opt("tau-inner", "",
+                                "fast intra-group average every N inner \
+                                 steps (0 = off, overriding any [groups] \
+                                 tau_inner from --config; empty = leave \
+                                 the config's value; needs --groups)"))
                 .flag(Flag::opt("compress", "",
                                 "communication compression registry spec: \
                                  none|fp16|bf16|topk[:frac]|randk[:frac]|\
@@ -163,6 +175,26 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         }
         b
     };
+    // Like --compress/--chaos, the hierarchy flags also apply on top of a
+    // --config file (the flag wins over the [groups] table).
+    let groups_spec = args.string("groups");
+    let builder = if groups_spec.is_empty() {
+        builder
+    } else {
+        builder.groups(&groups_spec)
+    };
+    // An explicit `--tau-inner 0` must override a [groups] tau_inner
+    // coming from --config (like `--compress none`), so only an *empty*
+    // flag leaves the config's value alone.
+    let tau_inner = args.string("tau-inner");
+    let builder = if tau_inner.is_empty() {
+        builder
+    } else {
+        builder.tau_inner(
+            args.get_parsed::<u64>("tau-inner")
+                .map_err(anyhow::Error::msg)?,
+        )
+    };
     // "none" passes through too: `--compress none` must override a
     // `[compress]` table coming from --config, not silently no-op.
     let compress_spec = args.string("compress");
@@ -197,6 +229,10 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
     println!("simulated time/iter {}",
              slowmo::util::fmt_secs(r.sim_time_per_iter()));
     println!("fabric bytes sent   {}", slowmo::util::fmt_bytes(r.bytes_sent));
+    if r.groups.is_some() {
+        println!("inter-group bytes   {}",
+                 slowmo::util::fmt_bytes(r.bytes_inter));
+    }
     if r.bytes_saved > 0 {
         println!("compression saved   {}",
                  slowmo::util::fmt_bytes(r.bytes_saved));
@@ -274,6 +310,9 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         "compress" => {
             experiments::compress(&env, &tasks[0])?;
         }
+        "hier" => {
+            experiments::hier(&env, &tasks[0])?;
+        }
         "theory" => {
             experiments::theory(&env)?;
         }
@@ -286,8 +325,8 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment {other:?} (table1|table2|fig2|fig3|figb2|\
-             tableb23|tableb4|doubleavg|noaverage|outers|compress|theory|\
-             all)"
+             tableb23|tableb4|doubleavg|noaverage|outers|compress|hier|\
+             theory|all)"
         ),
     }
     println!("\n[exp {which} done in {}]",

@@ -113,6 +113,7 @@ pub fn ring_allreduce_mean_group_c(
         let send_idx = (rank + n - r) % n;
         let (s, e) = ranges[send_idx];
         fabric.chunk_send_wire(
+            worker,
             next,
             tag_base | r as u64,
             x[s..e].to_vec(),
@@ -131,6 +132,7 @@ pub fn ring_allreduce_mean_group_c(
         let send_idx = (rank + 1 + n - r) % n;
         let (s, e) = ranges[send_idx];
         fabric.chunk_send_wire(
+            worker,
             next,
             tag_base | (n + r) as u64,
             x[s..e].to_vec(),
@@ -145,8 +147,14 @@ pub fn ring_allreduce_mean_group_c(
     for v in x.iter_mut() {
         *v *= inv_n;
     }
-    let mut done =
-        now + fabric.cost.allreduce_time_bytes(wire_of(x.len()), n);
+    // A synchronous ring round is gated by its slowest link: a ring
+    // spanning more than one tier group charges the inter-group α-β
+    // parameters (no-op without tiers — `cost_for_span` returns the flat
+    // cost model, bit-identical to the pre-tier path).
+    let mut done = now
+        + fabric
+            .cost_for_span(group)
+            .allreduce_time_bytes(wire_of(x.len()), n);
     if let Some(plan) = fabric.chaos() {
         done += plan.collective_extra(coll_id, 2 * (n - 1));
     }

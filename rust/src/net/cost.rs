@@ -25,6 +25,13 @@ impl CostModel {
         Self { latency_s: 50e-6, bandwidth_bps: 1.25e9 }
     }
 
+    /// Commodity 1 Gbps Ethernet with WAN-ish latency — the default slow
+    /// *inter-group* link of the two-tier cluster model (BMUF's
+    /// fast-intra-node / slow-inter-node shape).
+    pub fn ethernet_1g() -> Self {
+        Self { latency_s: 500e-6, bandwidth_bps: 1.25e8 }
+    }
+
     /// An idealized zero-cost network (for algorithm-only tests).
     pub fn free() -> Self {
         Self { latency_s: 0.0, bandwidth_bps: f64::INFINITY }

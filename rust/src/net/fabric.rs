@@ -10,8 +10,24 @@
 use crate::exec::Mailboxes;
 use crate::net::chaos::ChaosPlan;
 use crate::net::cost::CostModel;
+use crate::topology::Groups;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Two-tier link context: a worker [`Groups`] partition plus the α-β
+/// parameters of the slow inter-group links. With tiers installed the
+/// fabric charges every transfer the cost of the link it actually
+/// crosses — `Fabric::cost` for intra-group hops, `Tiers::inter` for
+/// hops between groups — and tallies inter-group wire bytes separately
+/// ([`Fabric::bytes_inter`]), so hierarchical runs and flat runs on the
+/// same tiered cluster are compared honestly.
+#[derive(Clone)]
+pub struct Tiers {
+    pub groups: Arc<Groups>,
+    /// Cost model of the slow inter-group links (`Fabric::cost` stays the
+    /// fast intra-group model).
+    pub inter: CostModel,
+}
 
 /// One gossip message (SGP/OSGP/D-PSGD payload).
 #[derive(Clone, Debug)]
@@ -50,9 +66,11 @@ pub struct Fabric {
     /// touches its slot; the mutex is for the `&self` API).
     chunk_stash: Vec<Mutex<Vec<(u64, Vec<f32>)>>>,
     pub cost: CostModel,
+    tiers: Option<Tiers>,
     chaos: Option<Arc<ChaosPlan>>,
     bytes_sent: AtomicU64,
     bytes_raw: AtomicU64,
+    bytes_inter: AtomicU64,
     msgs_sent: AtomicU64,
 }
 
@@ -64,9 +82,11 @@ impl Fabric {
             chunks: Mailboxes::new(m),
             chunk_stash: (0..m).map(|_| Mutex::new(Vec::new())).collect(),
             cost,
+            tiers: None,
             chaos: None,
             bytes_sent: AtomicU64::new(0),
             bytes_raw: AtomicU64::new(0),
+            bytes_inter: AtomicU64::new(0),
             msgs_sent: AtomicU64::new(0),
         }
     }
@@ -78,6 +98,14 @@ impl Fabric {
         f
     }
 
+    /// Install a two-tier link context (worker partition + inter-group
+    /// cost model). Every subsequent send is charged per the link it
+    /// crosses and inter-group wire bytes are tallied separately.
+    pub fn set_tiers(&mut self, groups: Arc<Groups>, inter: CostModel) {
+        assert_eq!(groups.m(), self.m, "tier partition must cover m workers");
+        self.tiers = Some(Tiers { groups, inter });
+    }
+
     pub fn m(&self) -> usize {
         self.m
     }
@@ -86,15 +114,52 @@ impl Fabric {
         self.chaos.as_deref()
     }
 
-    fn account(&self, elems: usize, wire_bytes: u64) {
+    /// The installed worker partition, when two-tier accounting is on.
+    pub fn groups(&self) -> Option<&Groups> {
+        self.tiers.as_ref().map(|t| &*t.groups)
+    }
+
+    /// Cost model of the link `from -> to` (`cost` without tiers or for
+    /// intra-group hops; the tier's inter model across groups).
+    pub fn cost_for_link(&self, from: usize, to: usize) -> &CostModel {
+        match &self.tiers {
+            Some(t) if t.groups.is_inter(from, to) => &t.inter,
+            _ => &self.cost,
+        }
+    }
+
+    /// Cost model governing a synchronous collective over `workers`: a
+    /// ring round completes when its slowest transfer does, so a ring
+    /// spanning more than one group is gated by the inter-group links.
+    pub fn cost_for_span(&self, workers: &[usize]) -> &CostModel {
+        match &self.tiers {
+            Some(t) if t.groups.spans(workers) => &t.inter,
+            _ => &self.cost,
+        }
+    }
+
+    fn account(&self, from: usize, to: usize, elems: usize, wire_bytes: u64) {
         self.bytes_sent.fetch_add(wire_bytes, Ordering::Relaxed);
         self.bytes_raw
             .fetch_add(elems as u64 * 4, Ordering::Relaxed);
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = &self.tiers {
+            if t.groups.is_inter(from, to) {
+                self.bytes_inter.fetch_add(wire_bytes, Ordering::Relaxed);
+            }
+        }
     }
 
-    fn arrival(&self, msg: &GossipMsg, extra: f64, wire_bytes: u64) -> f64 {
-        msg.send_time + self.cost.xfer_time_bytes(wire_bytes) + extra
+    fn arrival(
+        &self,
+        msg: &GossipMsg,
+        to: usize,
+        extra: f64,
+        wire_bytes: u64,
+    ) -> f64 {
+        msg.send_time
+            + self.cost_for_link(msg.from, to).xfer_time_bytes(wire_bytes)
+            + extra
     }
 
     /// Send a gossip message; returns the simulated arrival time
@@ -119,8 +184,8 @@ impl Fabric {
             Some(plan) => plan.link_extra(msg.from, to, wire_bytes),
             None => 0.0,
         };
-        let arrival = self.arrival(&msg, extra, wire_bytes);
-        self.account(msg.payload.len(), wire_bytes);
+        let arrival = self.arrival(&msg, to, extra, wire_bytes);
+        self.account(msg.from, to, msg.payload.len(), wire_bytes);
         self.gossip.send(to, (msg, extra, wire_bytes));
         arrival
     }
@@ -129,7 +194,7 @@ impl Fabric {
     /// simulated arrival time (send_time + transfer + chaos extra).
     pub fn gossip_recv(&self, worker: usize) -> (GossipMsg, f64) {
         let (msg, extra, wire) = self.gossip.recv(worker);
-        let arrival = self.arrival(&msg, extra, wire);
+        let arrival = self.arrival(&msg, worker, extra, wire);
         (msg, arrival)
     }
 
@@ -141,7 +206,7 @@ impl Fabric {
         timeout: std::time::Duration,
     ) -> Option<(GossipMsg, f64)> {
         let (msg, extra, wire) = self.gossip.recv_timeout(worker, timeout)?;
-        let arrival = self.arrival(&msg, extra, wire);
+        let arrival = self.arrival(&msg, worker, extra, wire);
         Some((msg, arrival))
     }
 
@@ -152,7 +217,7 @@ impl Fabric {
             .drain(worker)
             .into_iter()
             .map(|(msg, extra, wire)| {
-                let arrival = self.arrival(&msg, extra, wire);
+                let arrival = self.arrival(&msg, worker, extra, wire);
                 (msg, arrival)
             })
             .collect()
@@ -160,10 +225,17 @@ impl Fabric {
 
     /// Collective lane: send one tagged chunk. Tags must be globally
     /// unique per logical message (collective id × round, or a rejoin
-    /// transfer id) so receivers can route them.
-    pub(crate) fn chunk_send(&self, to: usize, tag: u64, data: Vec<f32>) {
+    /// transfer id) so receivers can route them. `from` feeds the
+    /// two-tier byte accounting (which link did this chunk cross).
+    pub(crate) fn chunk_send(
+        &self,
+        from: usize,
+        to: usize,
+        tag: u64,
+        data: Vec<f32>,
+    ) {
         let wire = data.len() as u64 * 4;
-        self.chunk_send_wire(to, tag, data, wire);
+        self.chunk_send_wire(from, to, tag, data, wire);
     }
 
     /// Collective-lane send with an explicit wire byte count (compressed
@@ -171,12 +243,13 @@ impl Fabric {
     /// decoded f32 values).
     pub(crate) fn chunk_send_wire(
         &self,
+        from: usize,
         to: usize,
         tag: u64,
         data: Vec<f32>,
         wire_bytes: u64,
     ) {
-        self.account(data.len(), wire_bytes);
+        self.account(from, to, data.len(), wire_bytes);
         self.chunks.send(to, (tag, data));
     }
 
@@ -218,6 +291,11 @@ impl Fabric {
     /// Bytes compression kept off the wire (`raw - sent`, floored at 0).
     pub fn bytes_saved(&self) -> u64 {
         self.bytes_raw().saturating_sub(self.bytes_sent())
+    }
+
+    /// Wire bytes that crossed inter-group links (0 without tiers).
+    pub fn bytes_inter(&self) -> u64 {
+        self.bytes_inter.load(Ordering::Relaxed)
     }
 
     pub fn msgs_sent(&self) -> u64 {
@@ -272,10 +350,53 @@ mod tests {
     #[test]
     fn raw_sends_save_nothing() {
         let f = Fabric::new(2, CostModel::free());
-        f.chunk_send(1, 7, vec![1.0, 2.0]);
+        f.chunk_send(0, 1, 7, vec![1.0, 2.0]);
         assert_eq!(f.bytes_sent(), 8);
         assert_eq!(f.bytes_raw(), 8);
         assert_eq!(f.bytes_saved(), 0);
+        assert_eq!(f.bytes_inter(), 0);
+    }
+
+    #[test]
+    fn tiers_charge_per_link_and_tally_inter_bytes() {
+        use crate::topology::Groups;
+        // Groups {0,1} | {2,3}; intra free, inter 1 ms + 1 MB/s.
+        let inter = CostModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let mut f = Fabric::new(4, CostModel::free());
+        f.set_tiers(
+            Arc::new(Groups::parse("0-1|2-3", 4).unwrap()),
+            inter.clone(),
+        );
+        let msg = |from: usize| GossipMsg {
+            from,
+            step: 0,
+            payload: vec![0.0; 250], // 1000 B -> 1 ms serialization inter
+            weight: 1.0,
+            send_time: 0.0,
+        };
+        // Intra hop: free.
+        let eta = f.gossip_send(1, msg(0));
+        assert_eq!(eta, 0.0);
+        assert_eq!(f.bytes_inter(), 0);
+        // Inter hop: latency + bytes/bandwidth, tallied as inter.
+        let eta = f.gossip_send(2, msg(0));
+        assert!((eta - 2e-3).abs() < 1e-12, "{eta}");
+        assert_eq!(f.bytes_inter(), 1000);
+        // Receivers observe the same per-link arrival.
+        let (_, a) = f.gossip_recv(1);
+        assert_eq!(a, 0.0);
+        let (_, a) = f.gossip_recv(2);
+        assert!((a - 2e-3).abs() < 1e-12);
+        // Chunk lane accounts tiers too.
+        f.chunk_send(1, 3, 9, vec![0.0; 2]);
+        assert_eq!(f.bytes_inter(), 1008);
+        // Span queries drive the collective cost choice.
+        assert_eq!(
+            f.cost_for_span(&[2, 3]).latency_s,
+            0.0,
+            "intra span uses the fast model"
+        );
+        assert_eq!(f.cost_for_span(&[0, 2]).latency_s, inter.latency_s);
     }
 
     #[test]

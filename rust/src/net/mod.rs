@@ -22,4 +22,4 @@ pub use collectives::{
     ring_allreduce_mean_group_c,
 };
 pub use cost::{CostModel, WorkloadTiming};
-pub use fabric::{Fabric, GossipMsg};
+pub use fabric::{Fabric, GossipMsg, Tiers};

@@ -38,7 +38,7 @@ use crate::configx::Config;
 use crate::net::{ChaosCfg, CostModel};
 use crate::optim::kernels::{InnerOpt, Kernels};
 use crate::runtime::{artifacts_dir, Engine, Manifest};
-use crate::slowmo::{BufferStrategy, OuterRegistry, SlowMoCfg};
+use crate::slowmo::{BufferStrategy, HierCfg, OuterRegistry, SlowMoCfg};
 use crate::trainer::{
     self, model_exec, ModelExec, RunObserver, Schedule, TrainCfg,
     TrainResult,
@@ -166,7 +166,26 @@ impl Session {
         let init = self.init(&cfg.preset)?;
         let model = self.model(&cfg.preset, cfg.force_pjrt)?;
         let kernels = self.kernels(d, cfg.native_kernels)?;
-        let algo = self.registry.build(&cfg.algo, cfg.m)?;
+        // Hierarchical runs build one group-local algorithm per group
+        // (topologies and collectives sized to the group); flat and
+        // tiers-only runs build the single global instance.
+        let (algos, groups) = match &cfg.hier {
+            Some(h) => {
+                let gr = Arc::new(h.resolve(cfg.m).with_context(|| {
+                    format!("resolving groups {:?}", h.spec)
+                })?);
+                let algos = if h.two_level {
+                    gr.all()
+                        .iter()
+                        .map(|g| self.registry.build(&cfg.algo, g.len()))
+                        .collect::<Result<Vec<_>>>()?
+                } else {
+                    vec![self.registry.build(&cfg.algo, cfg.m)?]
+                };
+                (algos, Some(gr))
+            }
+            None => (vec![self.registry.build(&cfg.algo, cfg.m)?], None),
+        };
         let outer_rule = match &cfg.slowmo {
             Some(s) => {
                 s.validate()?;
@@ -183,8 +202,8 @@ impl Session {
                 || format!("resolving compress {:?}", cfg.compress.spec()),
             )?)
         };
-        trainer::run_prepared(cfg, algo, outer_rule, compressor, &init,
-                              &desc, &model, &kernels, observer)
+        trainer::run_prepared(cfg, algos, groups, outer_rule, compressor,
+                              &init, &desc, &model, &kernels, observer)
     }
 
     /// Cached model executor for `preset` (build-once across runs).
@@ -253,6 +272,11 @@ pub struct TrainBuilder<'s> {
     outer_spec: Option<String>,
     outer_tau: Option<u64>,
     compress_spec: Option<String>,
+    /// (partition spec, two_level) — see [`TrainBuilder::groups`].
+    groups_spec: Option<(String, bool)>,
+    tau_inner: Option<u64>,
+    inter_latency_s: Option<f64>,
+    inter_bandwidth_bps: Option<f64>,
     inner: Option<InnerOpt>,
     lr: Option<f32>,
     sched: Option<Schedule>,
@@ -272,6 +296,10 @@ impl<'s> TrainBuilder<'s> {
             outer_spec: None,
             outer_tau: None,
             compress_spec: None,
+            groups_spec: None,
+            tau_inner: None,
+            inter_latency_s: None,
+            inter_bandwidth_bps: None,
             inner: None,
             lr: None,
             sched: None,
@@ -365,6 +393,43 @@ impl<'s> TrainBuilder<'s> {
     pub fn compress_sel(mut self, sel: crate::compress::CompressSel) -> Self {
         self.cfg.compress = sel;
         self.compress_spec = None;
+        self
+    }
+
+    /// Partition the workers into hierarchical groups (fast intra-group,
+    /// slow inter-group links) and run two-level SlowMo: the base
+    /// algorithm goes group-local and the outer boundary becomes the
+    /// two-level reduce. `spec` is a [`crate::topology::Groups`] spec —
+    /// a count (`"2"`) or explicit ranges (`"0-3|4-7"`); hard parse
+    /// errors at build time. Requires a SlowMo outer wrapper.
+    pub fn groups(mut self, spec: &str) -> Self {
+        self.groups_spec = Some((spec.to_string(), true));
+        self
+    }
+
+    /// Flat SlowMo *on the tiered cluster*: keep the classic global
+    /// algorithm, but install the partition for per-link two-tier costs
+    /// and inter-group byte accounting — the honest baseline
+    /// hierarchical runs are compared against (`slowmo exp hier`).
+    pub fn groups_flat(mut self, spec: &str) -> Self {
+        self.groups_spec = Some((spec.to_string(), false));
+        self
+    }
+
+    /// Fast intra-group exact average every `n` inner steps (0 = off).
+    /// Requires [`TrainBuilder::groups`]; an error at build time
+    /// otherwise.
+    pub fn tau_inner(mut self, n: u64) -> Self {
+        self.tau_inner = Some(n);
+        self
+    }
+
+    /// Slow inter-group link parameters (α seconds, β bytes/s). Defaults
+    /// to the run's cost model (both tiers equally fast). Requires a
+    /// groups partition; an error at build time otherwise.
+    pub fn inter_link(mut self, latency_s: f64, bandwidth_bps: f64) -> Self {
+        self.inter_latency_s = Some(latency_s);
+        self.inter_bandwidth_bps = Some(bandwidth_bps);
         self
     }
 
@@ -508,6 +573,13 @@ impl<'s> TrainBuilder<'s> {
     /// [compress]                # communication compression
     /// spec = "ef:topk:0.1"      # CompressRegistry spec string
     ///
+    /// [groups]                  # hierarchical two-level topology
+    /// spec = "2"                # group count, or ranges "0-3|4-7"
+    /// tau_inner = 4             # fast intra-group average period (0=off)
+    /// two_level = true          # false = flat algo on the tiered fabric
+    /// inter_latency_ms = 0.5    # slow inter-group link α (default: the
+    /// inter_gbps = 1.0          # run's cost model) and bandwidth
+    ///
     /// [chaos]                   # section presence enables chaos
     /// seed = 7
     /// delay_ms = 2.0            # mean per-message extra delay
@@ -619,6 +691,44 @@ impl<'s> TrainBuilder<'s> {
                     )
                 })?;
             self.compress_spec = Some(spec.to_string());
+        }
+        if c.sections.contains_key("groups") {
+            let spec = c
+                .get("groups", "spec")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "[groups] needs spec = \"<count or ranges>\" \
+                         (e.g. spec = \"2\" or spec = \"0-3|4-7\")"
+                    )
+                })?;
+            let two_level = c.bool_or("groups", "two_level", true);
+            self.groups_spec = Some((spec.to_string(), two_level));
+            if let Some(v) = c.get("groups", "tau_inner") {
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow!("[groups] tau_inner must be a number")
+                })?;
+                ensure!(
+                    f >= 0.0 && f.fract() == 0.0,
+                    "[groups] tau_inner must be an integer >= 0 (got {f})"
+                );
+                self.tau_inner = Some(f as u64);
+            }
+            // A present-but-wrong-typed knob is a hard error, not a
+            // silent default (same philosophy as [chaos]).
+            if let Some(v) = c.get("groups", "inter_latency_ms") {
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow!("[groups] inter_latency_ms must be a number")
+                })?;
+                self.inter_latency_s = Some(f * 1e-3);
+            }
+            if let Some(v) = c.get("groups", "inter_gbps") {
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow!("[groups] inter_gbps must be a number")
+                })?;
+                // Gigabits/s -> bytes/s.
+                self.inter_bandwidth_bps = Some(f * 1.25e8);
+            }
         }
         if c.sections.contains_key("chaos") {
             // Seeds are full 64-bit values; an f64 TOML number silently
@@ -762,6 +872,39 @@ impl<'s> TrainBuilder<'s> {
                      outer(..) first"
                 ),
             }
+        }
+        if let Some((spec, two_level)) = &self.groups_spec {
+            let mut h = if *two_level {
+                HierCfg::new(spec)
+            } else {
+                HierCfg::flat(spec)
+            };
+            if let Some(ti) = self.tau_inner {
+                h.tau_inner = ti;
+            }
+            h.inter_latency_s = self.inter_latency_s;
+            h.inter_bandwidth_bps = self.inter_bandwidth_bps;
+            cfg.hier = Some(h);
+        } else if self.tau_inner.is_some()
+            || self.inter_latency_s.is_some()
+            || self.inter_bandwidth_bps.is_some()
+        {
+            bail!(
+                "tau_inner()/inter_link() require a groups partition — \
+                 set groups(..) (or a [groups] table) first"
+            );
+        }
+        if let Some(h) = &cfg.hier {
+            // Spec grammar and structural knobs fail hard at build time.
+            h.resolve(cfg.m)
+                .with_context(|| format!("resolving groups {:?}", h.spec))?;
+            ensure!(
+                !h.two_level || cfg.slowmo.is_some(),
+                "groups(..) needs a SlowMo outer wrapper (the two-level \
+                 reduce runs at outer boundaries) — set slowmo(..) or \
+                 outer(..), or use groups_flat(..) for tier accounting \
+                 alone"
+            );
         }
         if let Some(s) = &mut cfg.slowmo {
             if let Some(b) = self.buffers {
@@ -1197,6 +1340,122 @@ rule = "adam"
             .unwrap()
             .build_cfg()
             .is_err());
+    }
+
+    #[test]
+    fn builder_groups_resolves_and_validates() {
+        // Two-level hierarchy with an explicit inter link.
+        let cfg = TrainBuilder::new("quad")
+            .workers(8)
+            .slowmo(0.7, 8)
+            .groups("2")
+            .tau_inner(4)
+            .inter_link(5e-4, 1.25e8)
+            .build_cfg()
+            .unwrap();
+        let h = cfg.hier.as_ref().unwrap();
+        assert_eq!(h.spec, "2");
+        assert!(h.two_level);
+        assert_eq!(h.tau_inner, 4);
+        assert_eq!(h.inter_latency_s, Some(5e-4));
+        assert_eq!(h.inter_bandwidth_bps, Some(1.25e8));
+        assert_eq!(h.resolve(8).unwrap().spec(), "0-3|4-7");
+        // Flat-on-tiers baseline needs no slowmo wrapper.
+        let cfg = TrainBuilder::new("quad")
+            .workers(4)
+            .groups_flat("0-1|2-3")
+            .build_cfg()
+            .unwrap();
+        assert!(!cfg.hier.as_ref().unwrap().two_level);
+        // Two-level without slowmo is a hard error naming the fix.
+        let e = TrainBuilder::new("quad")
+            .groups("2")
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("SlowMo outer wrapper"), "{e}");
+        // tau_inner without a partition is an error, not a no-op.
+        let e = TrainBuilder::new("quad")
+            .tau_inner(4)
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("groups"), "{e}");
+        // Bad specs fail hard at build time, naming the token.
+        let e = TrainBuilder::new("quad")
+            .workers(8)
+            .slowmo(0.7, 8)
+            .groups("0-3|3-7")
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("overlap"), "{e}");
+        assert!(TrainBuilder::new("quad")
+            .workers(4)
+            .slowmo(0.7, 8)
+            .groups("5")
+            .build_cfg()
+            .is_err());
+        // tau_inner on the flat baseline is rejected.
+        assert!(TrainBuilder::new("quad")
+            .workers(4)
+            .groups_flat("2")
+            .tau_inner(2)
+            .build_cfg()
+            .is_err());
+    }
+
+    #[test]
+    fn config_bridge_applies_groups_section() {
+        let toml = r#"
+[slowmo]
+beta = 0.6
+tau = 8
+
+[groups]
+spec = "0-1|2-3"
+tau_inner = 2
+inter_latency_ms = 0.5
+inter_gbps = 1.0
+"#;
+        let c = Config::parse(toml).unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        let h = cfg.hier.unwrap();
+        assert_eq!(h.spec, "0-1|2-3");
+        assert!(h.two_level);
+        assert_eq!(h.tau_inner, 2);
+        assert_eq!(h.inter_latency_s, Some(0.5e-3));
+        assert_eq!(h.inter_bandwidth_bps, Some(1.25e8));
+        // two_level = false is the tiered baseline (no slowmo needed).
+        let c = Config::parse(
+            "[groups]\nspec = \"2\"\ntwo_level = false",
+        )
+        .unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert!(!cfg.hier.unwrap().two_level);
+        // Section without a spec, and wrong-typed knobs, are hard errors.
+        let c = Config::parse("[groups]").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        for bad in ["tau_inner = 1.5", "tau_inner = -1",
+                    "inter_latency_ms = \"fast\"", "inter_gbps = \"big\""]
+        {
+            let c = Config::parse(&format!(
+                "[groups]\nspec = \"2\"\n{bad}"
+            ))
+            .unwrap();
+            assert!(
+                TrainBuilder::new("quad").config(&c).is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,589 @@
+//! Hierarchical two-level SlowMo: groups of workers with fast intra-group
+//! links and slow inter-group links (the BMUF cluster shape; Gao & Huang
+//! 2020's periodic two-level momentum structure).
+//!
+//! The `m` workers are partitioned by a [`Groups`] spec (`"g"` or explicit
+//! `"0-3|4-7"` ranges — see [`crate::topology::Groups`]). Inside a group
+//! the base algorithm runs over a *group-local fabric view* (topologies
+//! and collectives sized to the group, peers addressed by local rank —
+//! [`crate::algorithms::Ctx::scope`]), optionally exact-averaging the
+//! group every [`HierCfg::tau_inner`] inner steps. The SlowMo outer
+//! boundary becomes a **two-level reduce**:
+//!
+//! 1. each group ring-averages its live members (fast links, the same
+//!    `3t + lane` collective ids as the flat path — `g = 1` is therefore
+//!    *bitwise identical* to flat SlowMo);
+//! 2. group leaders (lowest live rank per group) scale their group means
+//!    by `|G|·g / m` and ring-average over leaders only (slow links; the
+//!    weighting makes the leader mean the exact global mean for unequal
+//!    groups);
+//! 3. leaders broadcast the global mean back down their group (with the
+//!    leader clock packed into the payload, same causality trick as the
+//!    elastic rejoin transfer), and every worker applies the registered
+//!    [`super::OuterOpt`] rule locally — deterministic fp on identical
+//!    inputs keeps all workers bit-synchronized.
+//!
+//! Costs are honest end to end: the fabric's two-tier link context
+//! ([`crate::net::Tiers`]) charges intra rings at the fast model and the
+//! leader ring at the slow model (a synchronous ring is gated by its
+//! slowest link), tallies inter-group wire bytes separately, and composes
+//! with compression (per-stage EF sites) and the chaos layer (collective
+//! ids key the delay streams; elastic membership works per group).
+
+use crate::compress::{site, CompressState, Compressor};
+use crate::net::{ring_allreduce_mean_group_c, CostModel, Fabric};
+use crate::topology::Groups;
+use anyhow::{ensure, Result};
+
+/// Collective-id bit for the inter-group leader ring at an outer
+/// boundary: distinct from the flat/intra lane ids `3t + L` so the chaos
+/// delay streams and chunk tags never collide across the two stages.
+pub(crate) const LEADER_COLL_BIT: u64 = 1 << 29;
+
+/// Collective-id bit for the fast intra-group average every `tau_inner`
+/// inner steps (`coll_id = INNER_COLL_BIT | k`). Keeps the inner-step
+/// lane disjoint from boundary lanes and from base-algorithm collectives
+/// for any realistic step count (`k < 2^29`).
+pub(crate) const INNER_COLL_BIT: u64 = 1 << 30;
+
+/// Chunk tag for the leader→members broadcast of lane `lane` (bit 63 is
+/// the rejoin flag; collective tags use `coll_id << 32 | round`, and this
+/// id sets both stage bits so it can never be a ring id).
+fn bcast_tag(lane: u64) -> u64 {
+    (LEADER_COLL_BIT | INNER_COLL_BIT | lane) << 32
+}
+
+/// The chunk lane carries `Vec<f32>`, but broadcast and rejoin transfers
+/// must also convey the sender's f64 clock (simulated time stays causal:
+/// state cannot arrive before the sender computed it). Split the f64 bit
+/// pattern across two f32 payload slots — exact round-trip, no rounding.
+pub(crate) fn clock_to_f32s(clock: f64) -> [f32; 2] {
+    let bits = clock.to_bits();
+    [
+        f32::from_bits((bits >> 32) as u32),
+        f32::from_bits(bits as u32),
+    ]
+}
+
+pub(crate) fn clock_from_f32s(hi: f32, lo: f32) -> f64 {
+    f64::from_bits(((hi.to_bits() as u64) << 32) | lo.to_bits() as u64)
+}
+
+/// Hierarchical-topology configuration for one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HierCfg {
+    /// [`Groups`] spec string, resolved against the run's worker count
+    /// when the run starts (hard parse error).
+    pub spec: String,
+    /// Fast intra-group exact average every this many inner steps
+    /// (0 = off; boundary steps are skipped — the outer reduce subsumes
+    /// them). Requires `two_level`.
+    pub tau_inner: u64,
+    /// `true` (the default) = the hierarchical algorithm: group-local
+    /// base algorithm + two-level outer reduce. `false` = *flat SlowMo on
+    /// the tiered cluster*: the classic global algorithm, but with
+    /// per-link two-tier costs and inter-group byte accounting — the
+    /// honest baseline `slowmo exp hier` compares against.
+    pub two_level: bool,
+    /// Inter-group link latency override (seconds); `None` = the run's
+    /// cost model (both tiers equally fast).
+    pub inter_latency_s: Option<f64>,
+    /// Inter-group link bandwidth override (bytes/s); `None` = the run's
+    /// cost model.
+    pub inter_bandwidth_bps: Option<f64>,
+}
+
+impl HierCfg {
+    /// Hierarchical two-level SlowMo over `spec` groups.
+    pub fn new(spec: &str) -> Self {
+        Self {
+            spec: spec.to_string(),
+            tau_inner: 0,
+            two_level: true,
+            inter_latency_s: None,
+            inter_bandwidth_bps: None,
+        }
+    }
+
+    /// Flat SlowMo on the tiered cluster (accounting/cost baseline).
+    pub fn flat(spec: &str) -> Self {
+        Self {
+            two_level: false,
+            ..Self::new(spec)
+        }
+    }
+
+    pub fn with_tau_inner(mut self, tau_inner: u64) -> Self {
+        self.tau_inner = tau_inner;
+        self
+    }
+
+    /// Override the slow inter-group link parameters.
+    pub fn with_inter_link(
+        mut self,
+        latency_s: f64,
+        bandwidth_bps: f64,
+    ) -> Self {
+        self.inter_latency_s = Some(latency_s);
+        self.inter_bandwidth_bps = Some(bandwidth_bps);
+        self
+    }
+
+    /// Structural validation (spec grammar is checked by [`Self::resolve`]).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.tau_inner == 0 || self.two_level,
+            "[groups] tau_inner needs the two-level reduce \
+             (two_level = false is the flat-on-tiered-cluster baseline)"
+        );
+        if let Some(l) = self.inter_latency_s {
+            ensure!(
+                l.is_finite() && l >= 0.0,
+                "[groups] inter latency must be finite and >= 0 (got {l})"
+            );
+        }
+        if let Some(b) = self.inter_bandwidth_bps {
+            ensure!(
+                b > 0.0,
+                "[groups] inter bandwidth must be > 0 (got {b})"
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse the spec against `m` workers (hard error naming the token).
+    pub fn resolve(&self, m: usize) -> Result<Groups> {
+        self.validate()?;
+        Groups::parse(&self.spec, m).map_err(anyhow::Error::msg)
+    }
+
+    /// The slow inter-group cost model: the run's `intra` model with any
+    /// configured overrides applied.
+    pub fn inter_cost(&self, intra: &CostModel) -> CostModel {
+        CostModel {
+            latency_s: self.inter_latency_s.unwrap_or(intra.latency_s),
+            bandwidth_bps: self
+                .inter_bandwidth_bps
+                .unwrap_or(intra.bandwidth_bps),
+        }
+    }
+}
+
+/// Live members of `worker`'s group: intersection of the group with the
+/// (sorted) live contributor set.
+fn group_live(groups: &Groups, live: &[usize], gi: usize) -> Vec<usize> {
+    groups
+        .members(gi)
+        .iter()
+        .copied()
+        .filter(|w| live.binary_search(w).is_ok())
+        .collect()
+}
+
+/// One boundary-average lane (parameters, or an h/v buffer under
+/// `BufferStrategy::Average`): the flat exact average when `hier` is
+/// `None`, the two-level reduce otherwise. `lane` is the flat-compatible
+/// collective id (`3t + L`) — with a single group the two-level path
+/// performs the *identical* operations (same transcode, same ring, same
+/// id), so `g = 1` is bitwise flat SlowMo by construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn boundary_average(
+    fabric: &Fabric,
+    hier: Option<&Groups>,
+    worker: usize,
+    live: &[usize],
+    x: &mut Vec<f32>,
+    comp: &mut CompressState,
+    mut clock: f64,
+    lane: u64,
+    codec: Option<&dyn Compressor>,
+    site_intra: u64,
+    site_leader: u64,
+) -> Result<f64> {
+    let d = x.len();
+    let Some(groups) = hier else {
+        // Flat path, operation for operation the pre-hierarchy code: a
+        // lone survivor's "average" moves no bytes, so its contribution
+        // is not lossily transcoded either.
+        if live.len() > 1 {
+            if let Some(c) = codec {
+                c.transcode(x, comp, site_intra);
+            }
+        }
+        return Ok(ring_allreduce_mean_group_c(
+            fabric, worker, live, x, clock, lane, codec,
+        ));
+    };
+
+    // Stage 1: fast intra-group average over the group's live members
+    // (flat-compatible collective id; disjoint groups sharing the id is
+    // fine — chunks only travel within a group, per-recipient mailboxes).
+    let gi = groups.group_of(worker);
+    let gl = group_live(groups, live, gi);
+    debug_assert!(gl.binary_search(&worker).is_ok());
+    if gl.len() > 1 {
+        if let Some(c) = codec {
+            c.transcode(x, comp, site_intra);
+        }
+    }
+    clock = ring_allreduce_mean_group_c(
+        fabric, worker, &gl, x, clock, lane, codec,
+    );
+
+    // Stage 2: inter-group leader reduce. Leaders are the lowest live
+    // rank of each group with at least one live member, in group order
+    // (ascending — the canonicalized partition keeps leaders sorted).
+    let live_groups: Vec<(usize, usize, usize)> = groups
+        .all()
+        .iter()
+        .enumerate()
+        .filter_map(|(g, members)| {
+            let mut it = members
+                .iter()
+                .filter(|&&w| live.binary_search(&w).is_ok());
+            it.next().map(|&leader| (g, 1 + it.count(), leader))
+        })
+        .collect();
+    let n_lg = live_groups.len();
+    if n_lg <= 1 {
+        return Ok(clock);
+    }
+    let total: usize = live_groups.iter().map(|&(_, c, _)| c).sum();
+    debug_assert_eq!(total, live.len());
+    let my_leader = live_groups
+        .iter()
+        .find(|&&(g, ..)| g == gi)
+        .expect("a live worker's own group is live")
+        .2;
+
+    if worker == my_leader {
+        // Weight the group mean by |G_live|·g_live / m_live so the leader
+        // mean is the exact global mean for unequal (or degraded) groups.
+        // Equal live counts give factor == 1.0 exactly — skipped, so the
+        // equal-group fast path stays bit-clean.
+        let factor = (gl.len() * n_lg) as f32 / total as f32;
+        if factor != 1.0 {
+            for v in x.iter_mut() {
+                *v *= factor;
+            }
+        }
+        // More than one live group (checked above), so the leader ring
+        // moves bytes — re-transcode the weighted group mean before it
+        // crosses the slow links.
+        if let Some(c) = codec {
+            c.transcode(x, comp, site_leader);
+        }
+        let leader_ids: Vec<usize> =
+            live_groups.iter().map(|&(.., l)| l).collect();
+        clock = ring_allreduce_mean_group_c(
+            fabric,
+            worker,
+            &leader_ids,
+            x,
+            clock,
+            LEADER_COLL_BIT | lane,
+            codec,
+        );
+        // Stage 3: broadcast the global mean (plus the leader clock) back
+        // down the fast links. Raw f32 like the rejoin transfer.
+        let members: Vec<usize> =
+            gl.iter().copied().filter(|&w| w != worker).collect();
+        if !members.is_empty() {
+            let mut msg = Vec::with_capacity(d + 2);
+            msg.extend_from_slice(x);
+            msg.extend_from_slice(&clock_to_f32s(clock));
+            for &r in &members {
+                fabric.chunk_send(worker, r, bcast_tag(lane), msg.clone());
+                clock += fabric.cost_for_link(worker, r).xfer_time(d + 2);
+            }
+        }
+    } else {
+        let mut payload = fabric.chunk_recv_tag(worker, bcast_tag(lane));
+        // A misshaped payload would silently zero-fill the clock and
+        // corrupt the parameters — hard error naming worker and lane.
+        ensure!(
+            payload.len() == d + 2,
+            "hierarchical broadcast corrupt at worker {worker}, \
+             collective lane {lane}: got {} elems, want {}",
+            payload.len(),
+            d + 2
+        );
+        let lo = payload.pop().expect("payload length checked");
+        let hi = payload.pop().expect("payload length checked");
+        let leader_clock = clock_from_f32s(hi, lo);
+        clock = clock.max(leader_clock)
+            + fabric.cost_for_link(my_leader, worker).xfer_time(d + 2);
+        x.copy_from_slice(&payload);
+    }
+    Ok(clock)
+}
+
+/// The fast intra-group exact average every `tau_inner` inner steps
+/// (full group membership — fault windows only change membership at
+/// outer boundaries, and the trainer rejects `tau_inner` + faults).
+/// Returns the updated clock.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn intra_average(
+    fabric: &Fabric,
+    groups: &Groups,
+    worker: usize,
+    x: &mut Vec<f32>,
+    comp: &mut CompressState,
+    clock: f64,
+    k: u64,
+    codec: Option<&dyn Compressor>,
+) -> f64 {
+    let members = groups.members(groups.group_of(worker));
+    if members.len() > 1 {
+        if let Some(c) = codec {
+            c.transcode(x, comp, site::INTRA);
+        }
+    }
+    ring_allreduce_mean_group_c(
+        fabric,
+        worker,
+        members,
+        x,
+        clock,
+        INNER_COLL_BIT | k,
+        codec,
+    )
+}
+
+/// Test hook: run one raw two-level reduce lane over `live` (free of the
+/// outer-update framing) so the integration property suite can compare
+/// the distributed schedule against [`Groups::weighted_mean`].
+#[doc(hidden)]
+pub fn test_two_level_average(
+    fabric: &Fabric,
+    groups: &Groups,
+    worker: usize,
+    live: &[usize],
+    x: &mut Vec<f32>,
+    comp: &mut CompressState,
+) -> Result<f64> {
+    boundary_average(
+        fabric,
+        Some(groups),
+        worker,
+        live,
+        x,
+        comp,
+        0.0,
+        0,
+        None,
+        site::OUTER,
+        site::OUTER_L,
+    )
+}
+
+/// Which live contributor ships the rejoin `(x0, state)` transfer to
+/// `rejoiner`: the lowest live rank in the rejoiner's own group (state is
+/// bit-identical everywhere after a boundary, so prefer the fast link),
+/// falling back to the globally lowest survivor when the whole group was
+/// down. Deterministic — both endpoints compute it independently.
+pub(crate) fn rejoin_shipper(
+    hier: Option<&Groups>,
+    live: &[usize],
+    rejoiner: usize,
+) -> usize {
+    if let Some(groups) = hier {
+        let members = groups.members(groups.group_of(rejoiner));
+        if let Some(&s) = members
+            .iter()
+            .find(|&&w| live.binary_search(&w).is_ok())
+        {
+            return s;
+        }
+    }
+    live[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::run_workers;
+    use crate::util::allclose;
+
+    #[test]
+    fn clock_encoding_round_trips_exactly() {
+        for clock in [0.0, 1.5e-3, 123.456789, 9.87654321e7] {
+            let [hi, lo] = clock_to_f32s(clock);
+            assert_eq!(clock_from_f32s(hi, lo), clock);
+        }
+    }
+
+    #[test]
+    fn hier_cfg_validation_and_inter_cost() {
+        assert!(HierCfg::new("2").validate().is_ok());
+        assert!(HierCfg::new("2").with_tau_inner(4).validate().is_ok());
+        let e = HierCfg::flat("2")
+            .with_tau_inner(4)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tau_inner"), "{e}");
+        assert!(HierCfg::new("2")
+            .with_inter_link(-1.0, 1e9)
+            .validate()
+            .is_err());
+        assert!(HierCfg::new("2")
+            .with_inter_link(1e-3, 0.0)
+            .validate()
+            .is_err());
+        // Spec errors surface through resolve.
+        assert!(HierCfg::new("0-3|3-7").resolve(8).is_err());
+        assert_eq!(HierCfg::new("2").resolve(8).unwrap().g(), 2);
+        // inter_cost defaults to the intra model, overrides apply.
+        let intra = CostModel::ethernet_10g();
+        let same = HierCfg::new("2").inter_cost(&intra);
+        assert_eq!(same.latency_s, intra.latency_s);
+        assert_eq!(same.bandwidth_bps, intra.bandwidth_bps);
+        let slow =
+            HierCfg::new("2").with_inter_link(1e-3, 1e8).inter_cost(&intra);
+        assert_eq!(slow.latency_s, 1e-3);
+        assert_eq!(slow.bandwidth_bps, 1e8);
+    }
+
+    fn run_two_level(
+        groups: &Groups,
+        live: Vec<usize>,
+        xs: Vec<Vec<f32>>,
+    ) -> Vec<(Vec<f32>, f64)> {
+        let m = groups.m();
+        let fabric = Fabric::new(m, CostModel::free());
+        run_workers(m, |w| {
+            let mut x = xs[w].clone();
+            let mut comp = CompressState::default();
+            let mut clock = 0.0;
+            if live.binary_search(&w).is_ok() {
+                clock = boundary_average(
+                    &fabric,
+                    Some(groups),
+                    w,
+                    &live,
+                    &mut x,
+                    &mut comp,
+                    0.0,
+                    0,
+                    None,
+                    site::OUTER,
+                    site::OUTER_L,
+                )
+                .unwrap();
+            }
+            (x, clock)
+        })
+    }
+
+    #[test]
+    fn two_level_reduce_recovers_global_mean() {
+        // Unequal groups: every live worker ends with the weighted global
+        // mean, bit-identical across workers.
+        let m = 7;
+        let groups = Groups::parse("0|1-3|4-6", m).unwrap();
+        let xs: Vec<Vec<f32>> = (0..m)
+            .map(|w| (0..9).map(|i| (w * 9 + i) as f32 * 0.01).collect())
+            .collect();
+        let want = groups.weighted_mean(&xs);
+        let live: Vec<usize> = (0..m).collect();
+        let out = run_two_level(&groups, live, xs.clone());
+        for (w, (x, _)) in out.iter().enumerate() {
+            assert!(allclose(x, &want, 1e-5, 1e-6), "worker {w}");
+            assert_eq!(*x, out[0].0, "workers must agree bitwise");
+        }
+        // And it is the true global mean up to f32 rounding.
+        for i in 0..9 {
+            let g: f64 = (0..m).map(|w| f64::from(xs[w][i])).sum::<f64>()
+                / m as f64;
+            assert!((f64::from(want[i]) - g).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn two_level_reduce_survivor_weighting() {
+        // Worker 3 of group {2,3} is dead: the global mean is over the
+        // three survivors, weighted 2:1 across groups.
+        let m = 4;
+        let groups = Groups::parse("0-1|2-3", m).unwrap();
+        let xs: Vec<Vec<f32>> =
+            (0..m).map(|w| vec![w as f32; 5]).collect();
+        let live = vec![0usize, 1, 2];
+        let out = run_two_level(&groups, live, xs);
+        let want = (0.0 + 1.0 + 2.0) / 3.0;
+        for &w in &[0usize, 1, 2] {
+            for &v in &out[w].0 {
+                assert!((v - want).abs() < 1e-6, "worker {w}: {v}");
+            }
+        }
+        // The dead worker's parameters are untouched.
+        assert_eq!(out[3].0, vec![3.0; 5]);
+    }
+
+    #[test]
+    fn single_group_is_the_flat_path_bitwise() {
+        // g=1: stage 1 covers everyone with the flat collective id and
+        // the leader stage is a no-op — identical bits and identical
+        // clock to the hier=None path.
+        let m = 4;
+        let groups = Groups::flat(m);
+        let cost = CostModel { latency_s: 1e-4, bandwidth_bps: 1e7 };
+        let live: Vec<usize> = (0..m).collect();
+        let mk = |hier: Option<&Groups>| {
+            let fabric = Fabric::new(m, cost.clone());
+            run_workers(m, |w| {
+                let mut x: Vec<f32> =
+                    (0..13).map(|i| (w * 13 + i) as f32 * 0.1).collect();
+                let mut comp = CompressState::default();
+                let clock = boundary_average(
+                    &fabric, hier, w, &live, &mut x, &mut comp, 0.0, 3,
+                    None, site::OUTER, site::OUTER_L,
+                )
+                .unwrap();
+                (x, clock)
+            })
+        };
+        assert_eq!(mk(Some(&groups)), mk(None));
+    }
+
+    #[test]
+    fn broadcast_carries_leader_clock_causality() {
+        // Non-free network: a member whose own clock is stale must land
+        // after the leader's post-reduce clock plus the broadcast hop.
+        let m = 4;
+        let groups = Groups::parse("0-1|2-3", m).unwrap();
+        let cost = CostModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let fabric = Fabric::new(m, cost.clone());
+        let live: Vec<usize> = (0..m).collect();
+        let out = run_workers(m, |w| {
+            let mut x = vec![w as f32; 8];
+            let mut comp = CompressState::default();
+            // Leaders (0, 2) enter late; members (1, 3) at 0.
+            let start = if w % 2 == 0 { 5.0 } else { 0.0 };
+            boundary_average(
+                &fabric, Some(&groups), w, &live, &mut x, &mut comp,
+                start, 0, None, site::OUTER, site::OUTER_L,
+            )
+            .unwrap()
+        });
+        for &member in &[1usize, 3] {
+            assert!(
+                out[member] > 5.0,
+                "member {member} clock {} ignores leader causality",
+                out[member]
+            );
+            assert!(out[member] >= out[member - 1]);
+        }
+    }
+
+    #[test]
+    fn rejoin_shipper_prefers_own_group() {
+        let groups = Groups::parse("0-1|2-3", 4).unwrap();
+        // Worker 3 rejoins; its group-mate 2 is live -> 2 ships.
+        assert_eq!(rejoin_shipper(Some(&groups), &[0, 1, 2], 3), 2);
+        // Whole group down -> global lowest survivor ships.
+        assert_eq!(rejoin_shipper(Some(&groups), &[0, 1], 3), 0);
+        // Flat: always the lowest survivor.
+        assert_eq!(rejoin_shipper(None, &[1, 2], 3), 1);
+    }
+}

@@ -21,8 +21,10 @@
 //! - m=1, β=0, α∈(0,1]     → Lookahead (also the `lookahead` outer rule)
 //! - `exact_average=false` → SGP-SlowMo-noaverage (paper §6)
 
+pub mod hier;
 pub mod outer;
 
+pub use hier::HierCfg;
 pub use outer::{
     AdamRule, AvgRule, LookaheadRule, NesterovRule, OuterOpt, OuterOptState,
     OuterRegistry, OuterSel, SlowMoRule,
@@ -30,9 +32,11 @@ pub use outer::{
 
 use crate::algorithms::{BaseAlgorithm, WorkerState};
 use crate::compress::{site, Compressor};
-use crate::net::{ring_allreduce_mean_group_c, ChaosPlan, Fabric};
+use crate::net::{ChaosPlan, Fabric};
 use crate::optim::kernels::Kernels;
+use crate::topology::Groups;
 use anyhow::{ensure, Result};
+use hier::{clock_from_f32s, clock_to_f32s};
 
 /// Chunk-lane tags for the rejoin state transfer at boundary `t`. Bit 63
 /// separates them from collective tags (`coll_id << 32 | round`, with
@@ -44,23 +48,6 @@ const REJOIN_FLAG: u64 = 1 << 63;
 
 fn rejoin_tags(t: u64) -> (u64, u64) {
     (REJOIN_FLAG | (t << 1), REJOIN_FLAG | (t << 1) | 1)
-}
-
-/// The chunk lane carries `Vec<f32>`, but the rejoin transfer must also
-/// convey the leader's f64 clock (the rejoiner's own clock fell behind
-/// while it was down, and simulated time must stay causal: the state
-/// cannot arrive before the leader computed it). Split the f64 bit
-/// pattern across two f32 payload slots — exact round-trip, no rounding.
-fn clock_to_f32s(clock: f64) -> [f32; 2] {
-    let bits = clock.to_bits();
-    [
-        f32::from_bits((bits >> 32) as u32),
-        f32::from_bits(bits as u32),
-    ]
-}
-
-fn clock_from_f32s(hi: f32, lo: f32) -> f64 {
-    f64::from_bits(((hi.to_bits() as u64) << 32) | lo.to_bits() as u64)
 }
 
 /// How base-optimizer buffers are treated at each outer boundary
@@ -253,8 +240,39 @@ pub fn outer_update_c(
     state: &mut WorkerState,
     outer: &mut OuterState,
     gamma: f32,
+    clock: f64,
+    chaos: Option<&ChaosPlan>,
+    codec: Option<&dyn Compressor>,
+) -> Result<f64> {
+    outer_update_g(
+        cfg, rule, algo, fabric, kernels, worker, state, outer, gamma,
+        clock, chaos, None, codec,
+    )
+}
+
+/// [`outer_update_c`] with hierarchical topology: when a [`Groups`]
+/// partition is given, line 6's exact average becomes the two-level
+/// reduce of [`hier::boundary_average`] (fast intra-group rings, a slow
+/// leader ring weighted for unequal groups, broadcast back down), and the
+/// rejoin transfer ships from the rejoiner's own group when possible.
+/// `hier = None` (or a single group) is bitwise-identical to the flat
+/// path. Elastic membership, `scale_state` and the rejoin wire format
+/// all work per group — the outer state is bit-synchronized across every
+/// live worker after each boundary, exactly as in the flat algorithm.
+#[allow(clippy::too_many_arguments)]
+pub fn outer_update_g(
+    cfg: &SlowMoCfg,
+    rule: &dyn OuterOpt,
+    algo: &dyn BaseAlgorithm,
+    fabric: &Fabric,
+    kernels: &Kernels,
+    worker: usize,
+    state: &mut WorkerState,
+    outer: &mut OuterState,
+    gamma: f32,
     mut clock: f64,
     chaos: Option<&ChaosPlan>,
+    hier: Option<&Groups>,
     codec: Option<&dyn Compressor>,
 ) -> Result<f64> {
     let codec = codec.filter(|c| !c.is_identity());
@@ -275,9 +293,14 @@ pub fn outer_update_c(
         }
         if plan.is_rejoiner(worker, t) {
             // Rejoin by pulling the post-update outer state from the
-            // lowest-ranked contributor. The state payload carries the
-            // leader's clock in its last two slots; the state cannot
-            // arrive before the leader finished computing it.
+            // shipper (the lowest live rank in this worker's group under
+            // hierarchy — post-boundary state is bit-identical everywhere,
+            // so prefer the fast link — else the lowest-ranked
+            // contributor). The state payload carries the shipper's clock
+            // in its last two slots; the state cannot arrive before the
+            // shipper finished computing it.
+            let shipper =
+                hier::rejoin_shipper(hier, &plan.contributors(t), worker);
             let (tag_x, tag_u) = rejoin_tags(t);
             let x0 = fabric.chunk_recv_tag(worker, tag_x);
             let mut payload = fabric.chunk_recv_tag(worker, tag_u);
@@ -300,9 +323,10 @@ pub fn outer_update_c(
             let lo = payload.pop().expect("payload length checked");
             let hi = payload.pop().expect("payload length checked");
             let leader_clock = clock_from_f32s(hi, lo);
+            let link = fabric.cost_for_link(shipper, worker);
             clock = clock.max(leader_clock)
-                + fabric.cost.xfer_time(d)
-                + fabric.cost.xfer_time(state_msg_len);
+                + link.xfer_time(d)
+                + link.xfer_time(state_msg_len);
             outer.x0 = x0;
             for (i, buf) in outer.opt.bufs.iter_mut().enumerate() {
                 buf.copy_from_slice(&payload[i * d..(i + 1) * d]);
@@ -333,25 +357,33 @@ pub fn outer_update_c(
     };
 
     // Line 6: exact average x_{t,tau} over the live group (skip for the
-    // noaverage variant). coll_ids 3t..3t+2 key the chaos delay streams.
+    // noaverage variant) — flat ring, or the hierarchical two-level
+    // reduce when a partition is installed. coll_ids 3t..3t+2 key the
+    // chaos delay streams (leader-stage rings add their own id bit).
     // With a codec the worker's contribution is lossily transcoded first
-    // (EF residual at site::OUTER), and the ring charges compressed
-    // bytes.
+    // (EF residual at site::OUTER; leader stages re-transcode at their
+    // own sites), and every ring charges compressed bytes.
     // A lone survivor's "average" moves no bytes, so its contribution is
     // not lossily transcoded either (codec itself stays active: the
     // rejoin wire format and residual rescaling are group-size
     // independent).
-    let comm = group.len() > 1;
     if cfg.exact_average {
-        if comm {
-            if let Some(c) = codec {
-                let WorkerState { x, comp, .. } = state;
-                c.transcode(x, comp, site::OUTER);
-            }
+        {
+            let WorkerState { x, comp, .. } = state;
+            clock = hier::boundary_average(
+                fabric,
+                hier,
+                worker,
+                &group,
+                x,
+                comp,
+                clock,
+                3 * t,
+                codec,
+                site::OUTER,
+                site::OUTER_L,
+            )?;
         }
-        clock = ring_allreduce_mean_group_c(
-            fabric, worker, &group, &mut state.x, clock, 3 * t, codec,
-        );
         algo.on_exact_average(state);
     }
 
@@ -379,10 +411,16 @@ pub fn outer_update_c(
     state.w = 1.0;
     state.z.copy_from_slice(&state.x);
 
-    // Ship the fresh outer state to any workers rejoining right now.
+    // Ship the fresh outer state to any workers rejoining right now
+    // (under hierarchy, each rejoiner pulls from its own group's lowest
+    // live rank when one exists — the fast link).
     if let Some(plan) = chaos {
-        let rejoiners = plan.rejoiners(t);
-        if !rejoiners.is_empty() && worker == group[0] {
+        let mine: Vec<usize> = plan
+            .rejoiners(t)
+            .into_iter()
+            .filter(|&r| hier::rejoin_shipper(hier, &group, r) == worker)
+            .collect();
+        if !mine.is_empty() {
             let (tag_x, tag_u) = rejoin_tags(t);
             let mut msg = Vec::with_capacity(state_msg_len);
             for buf in &outer.opt.bufs {
@@ -395,13 +433,17 @@ pub fn outer_update_c(
             }
             msg.extend_from_slice(&clock_to_f32s(clock));
             debug_assert_eq!(msg.len(), state_msg_len);
-            for &r in &rejoiners {
-                fabric.chunk_send(r, tag_x, outer.x0.clone());
-                fabric.chunk_send(r, tag_u, msg.clone());
+            for &r in &mine {
+                fabric.chunk_send(worker, r, tag_x, outer.x0.clone());
+                fabric.chunk_send(worker, r, tag_u, msg.clone());
             }
-            clock += (fabric.cost.xfer_time(d)
-                + fabric.cost.xfer_time(state_msg_len))
-                * rejoiners.len() as f64;
+            clock += mine
+                .iter()
+                .map(|&r| {
+                    let link = fabric.cost_for_link(worker, r);
+                    link.xfer_time(d) + link.xfer_time(state_msg_len)
+                })
+                .sum::<f64>();
         }
     }
 
@@ -410,27 +452,37 @@ pub fn outer_update_c(
         BufferStrategy::Reset => state.reset_buffers(),
         BufferStrategy::Maintain => {}
         BufferStrategy::Average => {
-            if comm {
-                if let Some(c) = codec {
-                    let WorkerState { h, comp, .. } = state;
-                    c.transcode(h, comp, site::OUTER_H);
-                }
-            }
-            clock = ring_allreduce_mean_group_c(
-                fabric, worker, &group, &mut state.h, clock, 3 * t + 1,
-                codec,
-            );
-            if !state.v.is_empty() {
-                if comm {
-                    if let Some(c) = codec {
-                        let WorkerState { v, comp, .. } = state;
-                        c.transcode(v, comp, site::OUTER_V);
-                    }
-                }
-                clock = ring_allreduce_mean_group_c(
-                    fabric, worker, &group, &mut state.v, clock, 3 * t + 2,
+            {
+                let WorkerState { h, comp, .. } = state;
+                clock = hier::boundary_average(
+                    fabric,
+                    hier,
+                    worker,
+                    &group,
+                    h,
+                    comp,
+                    clock,
+                    3 * t + 1,
                     codec,
-                );
+                    site::OUTER_H,
+                    site::OUTER_LH,
+                )?;
+            }
+            if !state.v.is_empty() {
+                let WorkerState { v, comp, .. } = state;
+                clock = hier::boundary_average(
+                    fabric,
+                    hier,
+                    worker,
+                    &group,
+                    v,
+                    comp,
+                    clock,
+                    3 * t + 2,
+                    codec,
+                    site::OUTER_V,
+                    site::OUTER_LV,
+                )?;
             }
         }
     }
@@ -717,14 +769,6 @@ mod tests {
     }
 
     #[test]
-    fn rejoin_clock_encoding_round_trips_exactly() {
-        for clock in [0.0, 1.5e-3, 123.456789, 9.87654321e7] {
-            let [hi, lo] = clock_to_f32s(clock);
-            assert_eq!(clock_from_f32s(hi, lo), clock);
-        }
-    }
-
-    #[test]
     fn rejoiner_clock_respects_leader_causality() {
         use crate::net::{ChaosCfg, ChaosPlan, FaultWindow};
         use std::sync::Arc;
@@ -809,9 +853,9 @@ mod tests {
         let mut ou = OuterState::new(&init, &*rule);
         ou.t = 1; // worker 1's rejoin boundary
         let (tag_x, tag_u) = rejoin_tags(1);
-        fabric.chunk_send(1, tag_x, vec![0.0; d]);
+        fabric.chunk_send(0, 1, tag_x, vec![0.0; d]);
         // Truncated state payload: u without the packed clock slots.
-        fabric.chunk_send(1, tag_u, vec![0.0; d]);
+        fabric.chunk_send(0, 1, tag_u, vec![0.0; d]);
         let e = outer_update(&cfg, &*rule, &algo, &fabric, &kernels, 1,
                              &mut st, &mut ou, 0.1, 0.0, Some(&*plan))
             .unwrap_err()
@@ -862,9 +906,9 @@ mod tests {
         let mut ou = OuterState::new(&init, &*rule);
         ou.t = 1; // worker 1's rejoin boundary
         let (tag_x, tag_u) = rejoin_tags(1);
-        fabric.chunk_send(1, tag_x, vec![0.0; d]);
+        fabric.chunk_send(0, 1, tag_x, vec![0.0; d]);
         // Rule buffer + clock, but no residual buffer.
-        fabric.chunk_send(1, tag_u, vec![0.0; d + 2]);
+        fabric.chunk_send(0, 1, tag_u, vec![0.0; d + 2]);
         let e = outer_update_c(&cfg, &*rule, &algo, &fabric, &kernels, 1,
                                &mut st, &mut ou, 0.1, 0.0, Some(&*plan),
                                Some(&codec))

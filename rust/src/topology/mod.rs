@@ -11,6 +11,239 @@
 //! D-PSGD (Lian et al. 2017) uses an undirected graph with a
 //! **doubly-stochastic** matrix; we provide the symmetric ring.
 
+/// A partition of the `m` workers into `g` disjoint groups — the cluster
+/// shape hierarchical SlowMo runs on (fast intra-group links, slow
+/// inter-group links; BMUF's node/cluster split, Gao & Huang's periodic
+/// two-level structure).
+///
+/// Spec grammar (hard parse errors name the offending token):
+/// - `"g"` — a bare group count: split `0..m` into `g` contiguous,
+///   near-equal groups (sizes differ by at most one, larger groups
+///   first — the [`crate::net::collectives::chunk_ranges`] convention);
+/// - `"0-3|4-7"` — explicit `|`-separated inclusive ranges (a bare index
+///   like `"5"` inside a `|` form is the singleton `5-5`). The ranges
+///   must partition `0..m` exactly: no overlap, no gap, no out-of-range
+///   worker.
+///
+/// Groups are canonicalized to ascending order of their first member, so
+/// group leaders (lowest member rank) are ascending too — the order the
+/// inter-group leader collective rings over.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Groups {
+    /// Group index -> sorted member worker ids.
+    members: Vec<Vec<usize>>,
+    /// Worker id -> group index.
+    owner: Vec<usize>,
+}
+
+impl Groups {
+    fn from_members(mut members: Vec<Vec<usize>>, m: usize) -> Self {
+        members.sort_by_key(|g| g[0]);
+        let mut owner = vec![0usize; m];
+        for (gi, grp) in members.iter().enumerate() {
+            for &w in grp {
+                owner[w] = gi;
+            }
+        }
+        Self { members, owner }
+    }
+
+    /// One group holding everyone (the flat topology).
+    pub fn flat(m: usize) -> Self {
+        Self::even(m, 1).expect("g=1 always partitions")
+    }
+
+    /// Split `0..m` into `g` contiguous near-equal groups.
+    pub fn even(m: usize, g: usize) -> Result<Self, String> {
+        if m == 0 {
+            return Err("groups: m must be >= 1".into());
+        }
+        if g == 0 {
+            return Err(format!(
+                "groups spec {g:?}: group count must be >= 1"
+            ));
+        }
+        if g > m {
+            return Err(format!(
+                "groups spec {g:?}: group count {g} exceeds m={m}"
+            ));
+        }
+        let base = m / g;
+        let rem = m % g;
+        let mut members = Vec::with_capacity(g);
+        let mut start = 0;
+        for i in 0..g {
+            let sz = base + usize::from(i < rem);
+            members.push((start..start + sz).collect());
+            start += sz;
+        }
+        Ok(Self::from_members(members, m))
+    }
+
+    /// Parse a spec string against `m` workers (see the type docs for the
+    /// grammar). Errors are hard and name the offending token.
+    pub fn parse(spec: &str, m: usize) -> Result<Self, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(format!(
+                "groups spec \"\": expected a group count (e.g. \"2\") or \
+                 '|'-separated ranges (e.g. \"0-{}|{}-{}\")",
+                m / 2,
+                m / 2 + usize::from(m > 1),
+                m.saturating_sub(1)
+            ));
+        }
+        if !spec.contains('|') && !spec.contains('-') {
+            let g: usize = spec.parse().map_err(|_| {
+                format!(
+                    "groups spec {spec:?}: expected a group count or \
+                     '|'-separated ranges like \"0-3|4-7\""
+                )
+            })?;
+            return Self::even(m, g);
+        }
+        let mut covered = vec![false; m];
+        let mut members: Vec<Vec<usize>> = Vec::new();
+        for tok in spec.split('|') {
+            let tok = tok.trim();
+            let parse_idx = |s: &str| -> Result<usize, String> {
+                s.trim().parse::<usize>().map_err(|_| {
+                    format!(
+                        "groups spec {spec:?}: bad range token {tok:?} \
+                         (expected \"a-b\" or a single worker index)"
+                    )
+                })
+            };
+            let (lo, hi) = match tok.split_once('-') {
+                Some((a, b)) => (parse_idx(a)?, parse_idx(b)?),
+                None => {
+                    let w = parse_idx(tok)?;
+                    (w, w)
+                }
+            };
+            if lo > hi {
+                return Err(format!(
+                    "groups spec {spec:?}: range {tok:?} is inverted \
+                     ({lo} > {hi})"
+                ));
+            }
+            if hi >= m {
+                return Err(format!(
+                    "groups spec {spec:?}: range {tok:?} names worker {hi} \
+                     but m={m}"
+                ));
+            }
+            for w in lo..=hi {
+                if covered[w] {
+                    return Err(format!(
+                        "groups spec {spec:?}: ranges overlap at worker \
+                         {w} (token {tok:?})"
+                    ));
+                }
+                covered[w] = true;
+            }
+            members.push((lo..=hi).collect());
+        }
+        if let Some(missing) = covered.iter().position(|&c| !c) {
+            return Err(format!(
+                "groups spec {spec:?}: worker {missing} is not covered \
+                 (the ranges must partition 0..{m} exactly)"
+            ));
+        }
+        Ok(Self::from_members(members, m))
+    }
+
+    /// Number of groups.
+    pub fn g(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Total workers partitioned.
+    pub fn m(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Group index of `worker`.
+    pub fn group_of(&self, worker: usize) -> usize {
+        self.owner[worker]
+    }
+
+    /// Sorted member worker ids of group `gi`.
+    pub fn members(&self, gi: usize) -> &[usize] {
+        &self.members[gi]
+    }
+
+    /// All groups (ascending by first member).
+    pub fn all(&self) -> &[Vec<usize>] {
+        &self.members
+    }
+
+    /// Do `a` and `b` sit in different groups (a slow inter-group link)?
+    pub fn is_inter(&self, a: usize, b: usize) -> bool {
+        self.owner[a] != self.owner[b]
+    }
+
+    /// Does a set of workers span more than one group?
+    pub fn spans(&self, workers: &[usize]) -> bool {
+        match workers.first() {
+            None => false,
+            Some(&w0) => {
+                let g0 = self.owner[w0];
+                workers.iter().any(|&w| self.owner[w] != g0)
+            }
+        }
+    }
+
+    /// Canonical spec string ("0-3|4-7").
+    pub fn spec(&self) -> String {
+        self.members
+            .iter()
+            .map(|g| format!("{}-{}", g[0], g[g.len() - 1]))
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    /// Serial reference of the two-level weighted mean over full
+    /// membership: per-group sequential f32 mean, scaled by
+    /// `|G_i|·g / m`, summed across groups and divided by `g`. Equals the
+    /// global mean in exact arithmetic for any partition; the distributed
+    /// two-level reduce mirrors this operation order (golden-pinned in
+    /// `rust/tests/golden.rs`, tolerance-tested in
+    /// `rust/tests/properties.rs`).
+    pub fn weighted_mean(&self, xs: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(xs.len(), self.m(), "weighted_mean needs one vec per worker");
+        let d = xs.first().map(|v| v.len()).unwrap_or(0);
+        let n = self.g();
+        let mut acc = vec![0.0f32; d];
+        for grp in &self.members {
+            let mut gm = vec![0.0f32; d];
+            for &w in grp {
+                for (a, &v) in gm.iter_mut().zip(&xs[w]) {
+                    *a += v;
+                }
+            }
+            let inv = 1.0 / grp.len() as f32;
+            for v in gm.iter_mut() {
+                *v *= inv;
+            }
+            let factor = (grp.len() * n) as f32 / self.m() as f32;
+            if factor != 1.0 {
+                for v in gm.iter_mut() {
+                    *v *= factor;
+                }
+            }
+            for (a, &v) in acc.iter_mut().zip(&gm) {
+                *a += v;
+            }
+        }
+        let inv_n = 1.0 / n as f32;
+        for v in acc.iter_mut() {
+            *v *= inv_n;
+        }
+        acc
+    }
+}
+
 /// A directed communication round: who sends to whom with what weight.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Round {
@@ -369,6 +602,122 @@ mod tests {
             reach = next;
         }
         assert!(reach.iter().all(|row| row.iter().all(|&b| b)));
+    }
+
+    #[test]
+    fn groups_even_split_shapes() {
+        let g = Groups::even(8, 3).unwrap();
+        assert_eq!(g.g(), 3);
+        assert_eq!(g.m(), 8);
+        assert_eq!(g.members(0), &[0, 1, 2]);
+        assert_eq!(g.members(1), &[3, 4, 5]);
+        assert_eq!(g.members(2), &[6, 7]);
+        assert_eq!(g.spec(), "0-2|3-5|6-7");
+        assert_eq!(g.group_of(4), 1);
+        assert!(g.is_inter(2, 3));
+        assert!(!g.is_inter(3, 5));
+        assert!(g.spans(&[0, 7]));
+        assert!(!g.spans(&[3, 4]));
+        assert!(!g.spans(&[]));
+        assert_eq!(Groups::flat(5).g(), 1);
+    }
+
+    #[test]
+    fn groups_parse_count_and_ranges() {
+        assert_eq!(Groups::parse("2", 8).unwrap(), Groups::even(8, 2).unwrap());
+        let g = Groups::parse("4-7|0-3", 8).unwrap();
+        // Canonicalized ascending by first member.
+        assert_eq!(g.members(0), &[0, 1, 2, 3]);
+        assert_eq!(g.members(1), &[4, 5, 6, 7]);
+        // Singleton index inside a ranged form.
+        let g = Groups::parse("0-1|2|3", 4).unwrap();
+        assert_eq!(g.g(), 3);
+        assert_eq!(g.members(1), &[2]);
+        // Round trip through the canonical spec.
+        let g = Groups::parse("0-2|3-7", 8).unwrap();
+        assert_eq!(Groups::parse(&g.spec(), 8).unwrap(), g);
+    }
+
+    #[test]
+    fn groups_malformed_specs_are_hard_errors_naming_the_token() {
+        // Zero count / count exceeding m.
+        let e = Groups::parse("0", 4).unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        let e = Groups::parse("5", 4).unwrap_err();
+        assert!(e.contains("exceeds m=4"), "{e}");
+        // Garbage count.
+        let e = Groups::parse("two", 4).unwrap_err();
+        assert!(e.contains("two"), "{e}");
+        // Overlap names the worker and the token.
+        let e = Groups::parse("0-3|3-7", 8).unwrap_err();
+        assert!(e.contains("overlap at worker 3"), "{e}");
+        assert!(e.contains("3-7"), "{e}");
+        // Gap names the missing worker.
+        let e = Groups::parse("0-2|4-7", 8).unwrap_err();
+        assert!(e.contains("worker 3"), "{e}");
+        // Out of range names the token and m.
+        let e = Groups::parse("0-3|4-9", 8).unwrap_err();
+        assert!(e.contains("4-9"), "{e}");
+        assert!(e.contains("m=8"), "{e}");
+        // Inverted range.
+        let e = Groups::parse("3-1|0|2", 4).unwrap_err();
+        assert!(e.contains("inverted"), "{e}");
+        // Garbage range token / empty spec.
+        assert!(Groups::parse("0-x|1-3", 4).is_err());
+        assert!(Groups::parse("", 4).is_err());
+    }
+
+    #[test]
+    fn groups_partition_property_small_domain() {
+        // Exhaustive over a small domain: every accepted count spec
+        // partitions 0..m exactly once.
+        for m in 1..=12 {
+            for g in 1..=14 {
+                match Groups::even(m, g) {
+                    Ok(gr) => {
+                        assert!(g <= m);
+                        let mut seen = vec![0usize; m];
+                        for gi in 0..gr.g() {
+                            for &w in gr.members(gi) {
+                                seen[w] += 1;
+                                assert_eq!(gr.group_of(w), gi);
+                            }
+                        }
+                        assert!(seen.iter().all(|&c| c == 1), "m={m} g={g}");
+                        assert_eq!(gr.g(), g);
+                    }
+                    Err(_) => assert!(g > m, "m={m} g={g} wrongly rejected"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn groups_weighted_mean_equals_global_mean() {
+        // Unequal groups: the |G|·g/m weighting recovers the exact global
+        // mean (up to f32 rounding).
+        let m = 7;
+        let gr = Groups::parse("0|1-3|4-6", m).unwrap();
+        let xs: Vec<Vec<f32>> = (0..m)
+            .map(|w| (0..5).map(|i| (w * 5 + i) as f32 * 0.3).collect())
+            .collect();
+        let got = gr.weighted_mean(&xs);
+        for i in 0..5 {
+            let want: f64 = (0..m)
+                .map(|w| f64::from(xs[w][i]))
+                .sum::<f64>()
+                / m as f64;
+            assert!(
+                (f64::from(got[i]) - want).abs() < 1e-5,
+                "i={i}: {} vs {want}",
+                got[i]
+            );
+        }
+        // Equal groups: every scale factor is exactly 1.0.
+        let gr = Groups::even(8, 4).unwrap();
+        let xs: Vec<Vec<f32>> = (0..8).map(|w| vec![w as f32; 3]).collect();
+        let got = gr.weighted_mean(&xs);
+        assert!(got.iter().all(|&v| (v - 3.5).abs() < 1e-6), "{got:?}");
     }
 
     #[test]

@@ -39,6 +39,9 @@ pub struct TrainResult {
     /// Outer-optimizer spec string ("slowmo:0.7", "adam:0.9,0.95") when
     /// the run wrapped its base algorithm; `None` for bare runs.
     pub outer: Option<String>,
+    /// Canonical hierarchical-partition spec ("0-3|4-7") when the run was
+    /// tiered (two-level or flat-on-tiers); `None` for flat runs.
+    pub groups: Option<String>,
     /// Communication-compression spec string ("topk:0.1", "ef:signsgd")
     /// when a codec was configured; `None` for raw-f32 runs.
     pub compress: Option<String>,
@@ -67,6 +70,9 @@ pub struct TrainResult {
     /// Bytes compression kept off the wire (raw 4 B/elem total minus
     /// `bytes_sent`; 0 for raw-f32 runs).
     pub bytes_saved: u64,
+    /// Wire bytes that crossed slow inter-group links (0 for untiered
+    /// runs — the two-tier cost model's headline accounting).
+    pub bytes_inter: u64,
     /// Chaos-layer retransmitted messages (0 without a chaos plan).
     pub retransmits: u64,
     /// Mean grad-norm^2 trajectory per outer iteration (theory bench).
@@ -101,6 +107,7 @@ impl TrainResult {
             ("wall_time", Json::num(self.wall_time)),
             ("bytes_sent", Json::num(self.bytes_sent as f64)),
             ("bytes_saved", Json::num(self.bytes_saved as f64)),
+            ("bytes_inter", Json::num(self.bytes_inter as f64)),
             ("retransmits", Json::num(self.retransmits as f64)),
             (
                 "train_curve",
@@ -125,6 +132,9 @@ impl TrainResult {
         ];
         if let Some(outer) = &self.outer {
             pairs.push(("outer", Json::str(outer)));
+        }
+        if let Some(groups) = &self.groups {
+            pairs.push(("groups", Json::str(groups)));
         }
         if let Some(compress) = &self.compress {
             pairs.push(("compress", Json::str(compress)));
@@ -178,6 +188,7 @@ mod tests {
         TrainResult {
             algo: "x".into(),
             outer: Some("slowmo:0.7".into()),
+            groups: Some("0-0|1-1".into()),
             compress: Some("topk:0.1".into()),
             preset: "p".into(),
             m: 2,
@@ -193,6 +204,7 @@ mod tests {
             wall_time: 1.0,
             bytes_sent: 42,
             bytes_saved: 7,
+            bytes_inter: 13,
             retransmits: 0,
             gradnorm_curve: vec![],
             final_params: None,
@@ -212,7 +224,9 @@ mod tests {
         assert_eq!(j.get("algo").unwrap().as_str(), Some("x"));
         assert_eq!(j.get("outer").unwrap().as_str(), Some("slowmo:0.7"));
         assert_eq!(j.get("compress").unwrap().as_str(), Some("topk:0.1"));
+        assert_eq!(j.get("groups").unwrap().as_str(), Some("0-0|1-1"));
         assert_eq!(j.get("bytes_saved").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("bytes_inter").unwrap().as_f64(), Some(13.0));
         let parsed =
             crate::jsonx::parse(&crate::jsonx::to_string(&j)).unwrap();
         assert_eq!(parsed.get("best_train_loss").unwrap().as_f64(),

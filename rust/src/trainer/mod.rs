@@ -28,7 +28,10 @@ use crate::data::{task_for, Task};
 use crate::net::{ChaosCfg, ChaosPlan, CostModel, Fabric};
 use crate::optim::kernels::Kernels;
 use crate::runtime::DataDesc;
-use crate::slowmo::{outer_update_c, OuterOpt, OuterState, SlowMoCfg};
+use crate::slowmo::{
+    hier, outer_update_g, HierCfg, OuterOpt, OuterState, SlowMoCfg,
+};
+use crate::topology::Groups;
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -49,6 +52,12 @@ pub struct TrainCfg {
     pub algo: AlgoSel,
     /// `None` = run the base algorithm bare (e.g. plain SGP baseline).
     pub slowmo: Option<SlowMoCfg>,
+    /// Hierarchical topology: worker groups with fast intra-group and
+    /// slow inter-group links. With `two_level` the base algorithm runs
+    /// group-locally and the SlowMo boundary is the two-level reduce;
+    /// without it the flat algorithm runs on the tiered cluster
+    /// (per-link costs + inter-byte accounting only). `None` = flat.
+    pub hier: Option<HierCfg>,
     pub sched: Schedule,
     /// Data heterogeneity knob (0 = iid shards .. 1 = strongly non-iid).
     pub heterogeneity: f64,
@@ -93,6 +102,7 @@ impl TrainCfg {
             seed: 0,
             algo: AlgoSel::new("sgp"),
             slowmo: None,
+            hier: None,
             sched: Schedule::Const(0.1),
             heterogeneity: 0.5,
             eval_every: 0,
@@ -206,9 +216,11 @@ impl CheckpointGate {
 /// algorithm, init vector) have already been prepared by the
 /// [`crate::session::Session`]. Observer callbacks fire on worker 0; see
 /// [`observer`] for the early-stop synchronization contract.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_prepared(
     cfg: &TrainCfg,
-    algo: Arc<dyn BaseAlgorithm>,
+    algos: Vec<Arc<dyn BaseAlgorithm>>,
+    groups: Option<Arc<Groups>>,
     outer_rule: Option<Arc<dyn OuterOpt>>,
     compressor: Option<Arc<dyn Compressor>>,
     init: &[f32],
@@ -232,6 +244,36 @@ pub(crate) fn run_prepared(
         "compression configured without a built codec (run through \
          Session, which resolves cfg.compress via its CompressRegistry)"
     );
+    // Hierarchical topology: the session resolves the partition and
+    // builds one group-local algorithm per group (two-level mode).
+    let two_level = cfg.hier.as_ref().map(|h| h.two_level).unwrap_or(false);
+    if let Some(h) = &cfg.hier {
+        h.validate()?;
+        let gr = groups.as_deref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "hierarchy configured without a resolved partition (run \
+                 through Session, which parses [groups] spec against m)"
+            )
+        })?;
+        ensure!(
+            gr.m() == cfg.m,
+            "groups partition covers {} workers but m={}",
+            gr.m(),
+            cfg.m
+        );
+        ensure!(
+            !h.two_level || cfg.slowmo.is_some(),
+            "hierarchical groups need a SlowMo outer wrapper (the \
+             two-level reduce happens at outer boundaries); use \
+             two_level = false for tier accounting alone"
+        );
+        ensure!(
+            algos.len() == if h.two_level { gr.g() } else { 1 },
+            "expected one built algorithm per group"
+        );
+    } else {
+        ensure!(algos.len() == 1, "flat runs build exactly one algorithm");
+    }
     // The identity codec takes the exact pre-compression code path.
     let codec: Option<&dyn Compressor> =
         compressor.as_deref().filter(|c| !c.is_identity());
@@ -249,24 +291,50 @@ pub(crate) fn run_prepared(
                 // Probe with a large d: amortized accountings like
                 // doubleavg's `2*buffers*d/tau` round down to 0 for d=1.
                 ensure!(
-                    algo.comm_elems_per_step(1 << 20) == 0,
+                    algos[0].comm_elems_per_step(1 << 20) == 0,
                     "chaos fault injection requires a communication-free \
                      base algorithm (use `local`; got {})",
-                    algo.name()
+                    algos[0].name()
+                );
+                ensure!(
+                    cfg.hier.as_ref().map(|h| h.tau_inner).unwrap_or(0)
+                        == 0,
+                    "chaos fault injection cannot combine with \
+                     tau_inner intra-group averages (membership is only \
+                     defined at outer boundaries)"
                 );
             }
             Some(Arc::new(plan))
         }
         None => None,
     };
-    let fabric = match &chaos_plan {
+    let mut fabric = match &chaos_plan {
         Some(plan) => {
             Fabric::with_chaos(cfg.m, cfg.cost.clone(), Arc::clone(plan))
         }
         None => Fabric::new(cfg.m, cfg.cost.clone()),
     };
+    if let (Some(h), Some(gr)) = (&cfg.hier, &groups) {
+        fabric.set_tiers(Arc::clone(gr), h.inter_cost(&cfg.cost));
+    }
+    let fabric = fabric;
     let mut algo_name =
-        display_name(&algo.name(), &cfg.slowmo, outer_rule.as_deref());
+        display_name(&algos[0].name(), &cfg.slowmo, outer_rule.as_deref());
+    if let (Some(h), Some(gr)) = (&cfg.hier, &groups) {
+        if h.two_level {
+            algo_name.push_str(&format!(
+                "+hier(g{}{})",
+                gr.g(),
+                if h.tau_inner > 0 {
+                    format!(",ti{}", h.tau_inner)
+                } else {
+                    String::new()
+                }
+            ));
+        } else {
+            algo_name.push_str(&format!("+tiered(g{})", gr.g()));
+        }
+    }
     if codec.is_some() {
         algo_name.push_str(&format!("+{}", cfg.compress.spec()));
     }
@@ -301,6 +369,16 @@ pub(crate) fn run_prepared(
 
     let outs: Vec<Result<WorkerOut>> = crate::exec::run_workers(cfg.m, |w| {
         let body = || -> Result<WorkerOut> {
+        // Group-local view (two-level mode): this worker's base algorithm
+        // instance is sized to its group and communicates only inside it.
+        let (algo, scope): (&Arc<dyn BaseAlgorithm>, Option<&[usize]>) =
+            match (&groups, two_level) {
+                (Some(gr), true) => {
+                    let gi = gr.group_of(w);
+                    (&algos[gi], Some(gr.members(gi)))
+                }
+                _ => (&algos[0], None),
+            };
         let mut state = WorkerState::new(init, algo.inner());
         // Key the compression streams/residuals by (run seed, rank) so
         // randomized codecs are deterministic per worker.
@@ -313,6 +391,7 @@ pub(crate) fn run_prepared(
             fabric: &fabric,
             kernels,
             compress: codec,
+            scope,
             clock: 0.0,
         };
         let mut out = WorkerOut {
@@ -362,6 +441,29 @@ pub(crate) fn run_prepared(
             }
             algo.step(&mut ctx, &mut state, &grads, gamma, k)?;
             out.steps_run += 1;
+            // Hierarchical fast path: exact-average the group every
+            // tau_inner steps (outer boundaries subsume their own — the
+            // two-level reduce already synchronizes everyone).
+            if let (Some(h), Some(gr)) = (&cfg.hier, &groups) {
+                let at_boundary = cfg
+                    .slowmo
+                    .as_ref()
+                    .map(|s| s.is_boundary(k))
+                    .unwrap_or(false);
+                if h.two_level
+                    && h.tau_inner > 0
+                    && (k + 1) % h.tau_inner == 0
+                    && !at_boundary
+                {
+                    {
+                        let WorkerState { x, comp, .. } = &mut state;
+                        ctx.clock = hier::intra_average(
+                            &fabric, gr, w, x, comp, ctx.clock, k, codec,
+                        );
+                    }
+                    algo.on_exact_average(&mut state);
+                }
+            }
             let mut stop_req = false;
             if w == 0 {
                 if let Some(obs) = &observer {
@@ -379,10 +481,15 @@ pub(crate) fn run_prepared(
                 (&cfg.slowmo, outer_rule.as_deref(), outer.as_mut())
             {
                 if scfg.is_boundary(k) {
-                    ctx.clock = outer_update_c(
+                    let hier_groups = if two_level {
+                        groups.as_deref()
+                    } else {
+                        None
+                    };
+                    ctx.clock = outer_update_g(
                         scfg, rule, algo.as_ref(), &fabric, kernels, w,
                         &mut state, outer, gamma_outer, ctx.clock,
-                        chaos_plan.as_deref(), codec,
+                        chaos_plan.as_deref(), hier_groups, codec,
                     )?;
                     if w == 0 {
                         if let Some(obs) = &observer {
@@ -593,6 +700,7 @@ fn assemble(
     TrainResult {
         algo: algo_name,
         outer: cfg.slowmo.as_ref().map(|s| s.outer.spec()),
+        groups: fabric.groups().map(|g| g.spec()),
         compress: if cfg.compress.is_none() {
             None
         } else {
@@ -612,6 +720,7 @@ fn assemble(
         wall_time: wall,
         bytes_sent: fabric.bytes_sent(),
         bytes_saved: fabric.bytes_saved(),
+        bytes_inter: fabric.bytes_inter(),
         retransmits,
         gradnorm_curve,
         final_params,
@@ -748,6 +857,7 @@ mod tests {
         assert_eq!(cfg.stop_check_every, None);
         assert!(cfg.chaos.is_none());
         assert!(cfg.compress.is_none());
+        assert!(cfg.hier.is_none());
         assert!(!cfg.record_final_params);
     }
 }

@@ -13,10 +13,11 @@ use slowmo::net::{ChaosCfg, ChaosPlan, CostModel, Fabric, FaultWindow};
 use slowmo::optim::kernels::{InnerOpt, Kernels};
 use slowmo::session::Session;
 use slowmo::slowmo::{
-    outer_update, outer_update_c, OuterRegistry, OuterState, SlowMoCfg,
+    outer_update, outer_update_c, outer_update_g, OuterRegistry,
+    OuterState, SlowMoCfg,
 };
 use slowmo::testkit::chaos_seed;
-use slowmo::topology::ExponentialGraph;
+use slowmo::topology::{ExponentialGraph, Groups};
 use slowmo::trainer::{Schedule, TrainResult};
 use std::sync::Arc;
 
@@ -182,6 +183,7 @@ fn sgp_push_sum_tolerates_chaos_fabric() {
                 fabric: &fabric,
                 kernels: &kernels,
                 compress: None,
+                scope: None,
                 clock: 0.0,
             };
             for k in 0..steps {
@@ -533,6 +535,148 @@ fn fault_injection_is_validated() {
     assert!(err.contains("communication-free"), "{err}");
 }
 
+// ------------------------------------------- hierarchy × elastic faults
+
+fn quad_hier_chaos(
+    s: &Session,
+    steps: u64,
+    groups: Option<&str>,
+    chaos: Option<ChaosCfg>,
+) -> TrainResult {
+    let mut b = s
+        .train("quad")
+        .algo("local")
+        .inner(sgd())
+        .workers(4)
+        .steps(steps)
+        .seed(11)
+        .slowmo_cfg(SlowMoCfg::new(1.0, 0.6, 4))
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(1e-4)
+        .record_params(true)
+        .chaos_opt(chaos);
+    if let Some(spec) = groups {
+        b = b.groups(spec);
+    }
+    b.run().unwrap()
+}
+
+/// Fail-and-rejoin composes with the two-level reduce: the run completes
+/// without deadlock, is bit-deterministic, and one group (g=1) stays
+/// bitwise identical to the flat elastic path — fault machinery
+/// included.
+#[test]
+fn hier_fault_and_rejoin_end_to_end() {
+    let Some(s) = session() else { return };
+    let mut cfg = degraded();
+    // Worker 3 (group {2,3} under g=2) fails and rejoins: its group-mate
+    // 2 is the rejoin shipper over the fast link.
+    cfg.faults = vec![FaultWindow { worker: 3, fail_at: 1, rejoin_at: 3 }];
+    let a = quad_hier_chaos(&s, 32, Some("2"), Some(cfg.clone()));
+    let b = quad_hier_chaos(&s, 32, Some("2"), Some(cfg.clone()));
+    assert_eq!(a.steps_run, 32, "run did not complete");
+    assert_eq!(a.final_params, b.final_params, "non-deterministic");
+    assert_eq!(a.sim_time, b.sim_time);
+    assert_eq!(a.bytes_inter, b.bytes_inter);
+    assert!(a.algo.contains("+hier(g2)"), "{}", a.algo);
+    // The survivor-weighted trajectory differs from the calm hier run's.
+    let calm = quad_hier_chaos(&s, 32, Some("2"), None);
+    assert_ne!(calm.final_params, a.final_params);
+    // g=1 under the same fault plan is the flat elastic path, bitwise.
+    let flat = quad_hier_chaos(&s, 32, None, Some(cfg.clone()));
+    let g1 = quad_hier_chaos(&s, 32, Some("1"), Some(cfg));
+    assert_eq!(g1.final_params, flat.final_params);
+    assert_eq!(g1.sim_time, flat.sim_time);
+    assert_eq!(g1.bytes_sent, flat.bytes_sent);
+}
+
+/// A whole group down: the boundary average weights the surviving
+/// groups' live counts, and a rejoiner whose group has no live member
+/// pulls its state from the globally lowest survivor instead.
+#[test]
+fn hier_whole_group_outage_falls_back_to_global_shipper() {
+    let m = 4;
+    let d = 6;
+    let cost = CostModel::free();
+    let groups = Groups::parse("0-1|2-3", m).unwrap();
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![
+                    FaultWindow { worker: 2, fail_at: 0, rejoin_at: 1 },
+                    FaultWindow { worker: 3, fail_at: 0, rejoin_at: 2 },
+                ],
+                ..ChaosCfg::default()
+            },
+            m,
+            &cost,
+        )
+        .unwrap(),
+    );
+    let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
+    let init = vec![1.0f32; d];
+    let out = run_workers(m, |w| {
+        let mut st = WorkerState::new(&init, algo.inner());
+        let mut ou = OuterState::new(&init, &*rule);
+        for t in 0..3u64 {
+            for (i, x) in st.x.iter_mut().enumerate() {
+                *x -= 0.01 * (w as f32 + 1.0) * (t as f32 + 1.0)
+                    + 0.001 * i as f32;
+            }
+            outer_update_g(&cfg, &*rule, &algo, &fabric, &kernels, w,
+                           &mut st, &mut ou, 0.1, 0.0, Some(&*plan),
+                           Some(&groups), None)
+                .unwrap();
+        }
+        (st, ou)
+    });
+    for (_, ou) in &out {
+        assert_eq!(ou.t, 3, "all workers advanced all boundaries");
+    }
+    // Boundary 0: group {2,3} fully down (boundary average over group
+    // {0,1} alone). Boundary 1: worker 2 rejoins — its group has no live
+    // member, so worker 0 ships. Boundary 2: worker 3 rejoins from its
+    // now-live group-mate 2. After boundary 2 everyone is synchronized.
+    for (w, (st, ou)) in out.iter().enumerate().skip(1) {
+        assert_eq!(st.x, out[0].0.x, "x diverged on worker {w}");
+        assert_eq!(ou.x0, out[0].1.x0, "x0 diverged on worker {w}");
+        assert_eq!(ou.u(), out[0].1.u(), "u diverged on worker {w}");
+    }
+}
+
+/// tau_inner intra-group averages cannot combine with fault windows —
+/// membership is only defined at outer boundaries.
+#[test]
+fn tau_inner_with_faults_is_rejected() {
+    let Some(s) = session() else { return };
+    let cfg = ChaosCfg {
+        faults: vec![FaultWindow { worker: 1, fail_at: 0, rejoin_at: 2 }],
+        ..ChaosCfg::default()
+    };
+    let err = s
+        .train("quad")
+        .algo("local")
+        .inner(sgd())
+        .workers(4)
+        .steps(8)
+        .slowmo_cfg(SlowMoCfg::new(1.0, 0.5, 4))
+        .groups("2")
+        .tau_inner(2)
+        .schedule(Schedule::Const(0.1))
+        .chaos(cfg)
+        .run()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("tau_inner"), "{err}");
+}
+
 /// Long soak for the CI chaos job: multiple overlapping-in-time fault
 /// windows across a longer run, still deterministic and deadlock-free.
 #[test]
@@ -553,4 +697,63 @@ fn chaos_soak_multiple_fault_windows() {
     // Local base never touches the gossip lane, so there is nothing to
     // retransmit — the collective chaos charge shows up in sim_time only.
     assert_eq!(a.retransmits, 0);
+}
+
+/// Hierarchy sweep for the CI chaos job: every registered outer rule ×
+/// every partition shape of m=4 (flat anchor, 2 groups, unequal groups,
+/// singletons), each under a degraded network with a fail-and-rejoin
+/// window — deterministic, deadlock-free, and g=1 bitwise equal to the
+/// flat elastic path per rule.
+#[test]
+#[ignore = "slow hierarchy/chaos sweep — run via `cargo test -- --include-ignored`"]
+fn hier_chaos_sweep_every_rule_and_partition() {
+    let Some(s) = session() else { return };
+    let keys: Vec<String> = s
+        .outer_registry()
+        .keys()
+        .iter()
+        .map(|k| k.to_string())
+        .collect();
+    for key in &keys {
+        let sel = s.outer_registry().parse(key).unwrap();
+        let run = |groups: Option<&str>| -> TrainResult {
+            let mut chaos = degraded();
+            chaos.faults =
+                vec![FaultWindow { worker: 3, fail_at: 1, rejoin_at: 3 }];
+            let mut b = s
+                .train("quad")
+                .algo("local")
+                .inner(sgd())
+                .workers(4)
+                .steps(64)
+                .seed(11)
+                .slowmo_cfg(SlowMoCfg::with_outer(sel.clone(), 4))
+                .schedule(Schedule::Const(0.2))
+                .heterogeneity(1.0)
+                .eval_batches(1)
+                .cost(CostModel::ethernet_10g())
+                .compute_time(1e-4)
+                .record_params(true)
+                .chaos(chaos);
+            if let Some(spec) = groups {
+                b = b.groups(spec);
+            }
+            b.run().unwrap()
+        };
+        let flat = run(None);
+        for spec in ["1", "2", "0-0|1-3", "4"] {
+            let a = run(Some(spec));
+            let b = run(Some(spec));
+            assert_eq!(a.steps_run, 64, "{key}/{spec}: incomplete");
+            assert_eq!(a.final_params, b.final_params,
+                       "{key}/{spec}: non-deterministic");
+            assert_eq!(a.sim_time, b.sim_time, "{key}/{spec}");
+            assert_eq!(a.bytes_inter, b.bytes_inter, "{key}/{spec}");
+            if spec == "1" {
+                assert_eq!(a.final_params, flat.final_params,
+                           "{key}: g=1 must be the flat elastic path");
+                assert_eq!(a.bytes_sent, flat.bytes_sent, "{key}");
+            }
+        }
+    }
 }

@@ -483,6 +483,207 @@ fn compressed_runs_are_bit_deterministic() {
     }
 }
 
+// ----------------------------------------------------- hierarchy layer
+// The two-level redesign's equivalence obligations: one group IS the
+// flat topology (bitwise, for every registered outer rule), m singleton
+// groups with tau_inner=1 degenerate to the flat path, the g=2 reduce
+// computes the same mean up to fp association, and chaos still moves
+// only simulated time.
+
+/// Quad run with an optional hierarchy: `groups = (spec, two_level)`.
+fn quadg(
+    s: &Session,
+    m: usize,
+    steps: u64,
+    slowmo: Option<SlowMoCfg>,
+    groups: Option<(&str, bool)>,
+    tau_inner: u64,
+    chaos: Option<ChaosCfg>,
+) -> TrainResult {
+    let mut b = s
+        .train("quad")
+        .algo_sel(local())
+        .workers(m)
+        .steps(steps)
+        .seed(11)
+        .slowmo_opt(slowmo)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(1e-6)
+        .record_params(true)
+        .chaos_opt(chaos);
+    if let Some((spec, two_level)) = groups {
+        b = if two_level {
+            b.groups(spec)
+        } else {
+            b.groups_flat(spec)
+        };
+        if tau_inner > 0 {
+            b = b.tau_inner(tau_inner);
+        }
+    }
+    b.run().unwrap()
+}
+
+#[test]
+fn hier_g1_is_bitwise_identical_to_flat_for_every_outer_rule() {
+    // One group is the flat topology: same transcode, same ring, same
+    // collective ids — every registered outer rule must land on the
+    // identical bits, bytes and simulated time.
+    let Some(s) = session() else { return };
+    let keys: Vec<String> = s
+        .outer_registry()
+        .keys()
+        .iter()
+        .map(|k| k.to_string())
+        .collect();
+    for key in &keys {
+        let sel = s.outer_registry().parse(key).unwrap();
+        let cfg = SlowMoCfg::with_outer(sel, 8);
+        let flat = quadg(&s, 4, 64, Some(cfg.clone()), None, 0, None);
+        let g1 =
+            quadg(&s, 4, 64, Some(cfg), Some(("1", true)), 0, None);
+        assert_eq!(g1.final_params, flat.final_params, "{key}");
+        assert!(g1.final_params.is_some());
+        assert_eq!(g1.train_curve, flat.train_curve, "{key}");
+        assert_eq!(g1.sim_time, flat.sim_time, "{key}");
+        assert_eq!(g1.bytes_sent, flat.bytes_sent, "{key}");
+        assert_eq!(g1.bytes_inter, 0, "{key}: g=1 has no inter links");
+        assert_eq!(g1.groups.as_deref(), Some("0-3"), "{key}");
+    }
+}
+
+#[test]
+fn hier_gm_with_tau_inner_1_degenerates_to_flat() {
+    // m singleton groups: intra stages and tau_inner averages are
+    // no-ops, the leader ring is the full flat ring — identical math,
+    // bytes and (with the default equal-tier link) simulated time; every
+    // boundary byte crossed a group boundary so it all counts as inter.
+    let Some(s) = session() else { return };
+    let cfg = SlowMoCfg::new(1.0, 0.7, 8);
+    let flat = quadg(&s, 4, 64, Some(cfg.clone()), None, 0, None);
+    let gm =
+        quadg(&s, 4, 64, Some(cfg), Some(("4", true)), 1, None);
+    assert_eq!(gm.final_params, flat.final_params);
+    assert_eq!(gm.train_curve, flat.train_curve);
+    assert_eq!(gm.bytes_sent, flat.bytes_sent);
+    assert_eq!(gm.sim_time, flat.sim_time);
+    assert_eq!(
+        gm.bytes_inter, gm.bytes_sent,
+        "singleton groups make every byte inter-group"
+    );
+    assert!(gm.algo.contains("+hier(g4,ti1)"), "{}", gm.algo);
+}
+
+#[test]
+fn hier_two_groups_same_mean_fewer_inter_bytes() {
+    // g=2: the weighted two-level reduce computes the same average up to
+    // fp association (close final params / losses), while moving
+    // strictly fewer bytes over the slow links than flat SlowMo on the
+    // same partition — at *equal* total steps.
+    let Some(s) = session() else { return };
+    let cfg = SlowMoCfg::new(1.0, 0.7, 8);
+    let flat_tiered =
+        quadg(&s, 4, 64, Some(cfg.clone()), Some(("2", false)), 0, None);
+    let hier =
+        quadg(&s, 4, 64, Some(cfg), Some(("2", true)), 0, None);
+    assert_eq!(hier.steps_run, flat_tiered.steps_run);
+    let (a, b) = (
+        hier.final_params.as_ref().unwrap(),
+        flat_tiered.final_params.as_ref().unwrap(),
+    );
+    assert!(
+        slowmo::util::allclose(a, b, 1e-4, 1e-5),
+        "two-level mean drifted from the flat mean"
+    );
+    assert!(
+        (hier.final_eval_loss - flat_tiered.final_eval_loss).abs()
+            <= 1e-3 * flat_tiered.final_eval_loss.abs().max(1e-6),
+        "{} vs {}",
+        hier.final_eval_loss,
+        flat_tiered.final_eval_loss
+    );
+    assert!(
+        hier.bytes_inter < flat_tiered.bytes_inter,
+        "{} !< {}",
+        hier.bytes_inter,
+        flat_tiered.bytes_inter
+    );
+    assert!(flat_tiered.bytes_inter > 0);
+    assert!(hier.algo.contains("+hier(g2)"), "{}", hier.algo);
+    assert!(flat_tiered.algo.contains("+tiered(g2)"),
+            "{}", flat_tiered.algo);
+}
+
+#[test]
+fn hier_slow_inter_link_wins_on_sim_time() {
+    // With a genuinely slow inter-group link, the hierarchy's smaller
+    // leader ring beats the flat global ring in simulated time — the
+    // paper-motivating tradeoff, at identical step budgets.
+    let Some(s) = session() else { return };
+    let run = |two_level: bool| {
+        let b = s
+            .train("quad")
+            .algo_sel(local())
+            .workers(4)
+            .steps(64)
+            .seed(11)
+            .slowmo_cfg(SlowMoCfg::new(1.0, 0.7, 8))
+            .schedule(Schedule::Const(0.2))
+            .heterogeneity(1.0)
+            .eval_batches(1)
+            .cost(CostModel::ethernet_10g())
+            .compute_time(1e-6)
+            .inter_link(5e-4, 1.25e8);
+        if two_level {
+            b.groups("2").run().unwrap()
+        } else {
+            b.groups_flat("2").run().unwrap()
+        }
+    };
+    let flat = run(false);
+    let hier = run(true);
+    assert!(
+        hier.sim_time < flat.sim_time,
+        "hier {} !< flat {}",
+        hier.sim_time,
+        flat.sim_time
+    );
+    assert!(hier.bytes_inter < flat.bytes_inter);
+}
+
+#[test]
+fn faultless_chaos_with_hierarchy_moves_time_not_math() {
+    // The chaos contract composes with the two-level reduce: seeded
+    // delays/drops/stragglers change only simulated time and retransmit
+    // counts — never the bits.
+    let Some(s) = session() else { return };
+    let cfg = SlowMoCfg::new(1.0, 0.7, 8);
+    let calm = quadg(
+        &s, 4, 64, Some(cfg.clone()), Some(("2", true)), 2, None,
+    );
+    let chaotic = quadg(
+        &s, 4, 64, Some(cfg), Some(("2", true)), 2, Some(net_chaos()),
+    );
+    assert_time_only(&calm, &chaotic);
+    assert_eq!(calm.bytes_inter, chaotic.bytes_inter);
+}
+
+#[test]
+fn tau_inner_stays_off_the_slow_links() {
+    // The fast intra-group average adds intra bytes only: inter traffic
+    // is identical with and without it, total bytes strictly higher.
+    let Some(s) = session() else { return };
+    let cfg = SlowMoCfg::new(1.0, 0.7, 8);
+    let plain =
+        quadg(&s, 4, 64, Some(cfg.clone()), Some(("2", true)), 0, None);
+    let ti = quadg(&s, 4, 64, Some(cfg), Some(("2", true)), 2, None);
+    assert_eq!(ti.bytes_inter, plain.bytes_inter);
+    assert!(ti.bytes_sent > plain.bytes_sent);
+}
+
 #[test]
 fn faultless_chaos_with_compression_moves_time_not_math() {
     // The chaos contract composes with compression: the codec is applied

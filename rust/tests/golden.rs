@@ -12,6 +12,7 @@ use slowmo::optim;
 use slowmo::optim::kernels::Kernels;
 use slowmo::runtime::artifacts_dir;
 use slowmo::slowmo::{OuterRegistry, OuterSel};
+use slowmo::topology::Groups;
 use slowmo::util::allclose;
 
 fn golden() -> Option<Json> {
@@ -74,6 +75,54 @@ fn outer_registry_slowmo_rule_matches_jnp_oracle() {
     assert!(allclose(&x0, &vecf(c, "out.x"), 1e-6, 1e-7), "x mismatch");
     assert!(allclose(&st.bufs[0], &vecf(c, "out.u"), 1e-6, 1e-7),
             "u mismatch");
+}
+
+#[test]
+fn hier_two_level_run_matches_oracle() {
+    // The two-level fixture: unequal groups, the |G|·g/m weighted mean,
+    // then one slow-momentum update on the reduced average — pins the
+    // exact op order the distributed reduce mirrors.
+    let Some(g) = golden() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let Some(c) = g.get("hier") else {
+        eprintln!(
+            "SKIP: golden.json predates the hier fixture — regenerate \
+             with `python python/compile/aot.py --out-dir artifacts \
+             --golden-seed 1234`"
+        );
+        return;
+    };
+    let spec = c
+        .path("in.groups")
+        .and_then(|v| v.as_str())
+        .expect("hier fixture names its partition");
+    let xs: Vec<Vec<f32>> = c
+        .path("in.xs")
+        .and_then(|v| v.as_arr())
+        .expect("hier fixture carries worker vectors")
+        .iter()
+        .map(|v| v.as_f32_vec().expect("worker vector"))
+        .collect();
+    let groups = Groups::parse(spec, xs.len()).unwrap();
+    let xbar = groups.weighted_mean(&xs);
+    assert!(
+        allclose(&xbar, &vecf(c, "out.xbar"), 1e-6, 1e-7),
+        "two-level weighted mean mismatch"
+    );
+    let mut x0 = vecf(c, "in.x0");
+    let mut u = vecf(c, "in.u");
+    optim::slowmo_update(
+        &mut x0,
+        &xbar,
+        &mut u,
+        scalar(c, "in.gamma"),
+        scalar(c, "in.alpha"),
+        scalar(c, "in.beta"),
+    );
+    assert!(allclose(&x0, &vecf(c, "out.x"), 1e-6, 1e-7), "x mismatch");
+    assert!(allclose(&u, &vecf(c, "out.u"), 1e-6, 1e-7), "u mismatch");
 }
 
 #[test]

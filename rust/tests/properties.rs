@@ -361,6 +361,173 @@ fn ef_residual_equals_dropped_mass() {
     });
 }
 
+// ---------------------------------------------------- group partitions
+// The hierarchical-topology invariants: every accepted Groups spec
+// partitions 0..m exactly once; malformed specs are hard parse errors
+// naming the offending token; and the distributed two-level reduce
+// agrees with the serial weighted-mean reference within an ulp bound.
+
+use slowmo::topology::Groups;
+use slowmo::testkit::{Pair, UsizeIn};
+
+#[test]
+fn groups_count_spec_partitions_exactly_once_randomized() {
+    // Randomized (m, g): an accepted count spec covers every worker
+    // exactly once with consistent group_of/members views; rejections
+    // happen only for g = 0 or g > m.
+    forall(
+        "groups count spec partitions 0..m",
+        &Pair(UsizeIn(1, 64), UsizeIn(0, 80)),
+        |&(m, g)| match Groups::parse(&g.to_string(), m) {
+            Ok(gr) => {
+                let mut seen = vec![0usize; m];
+                for gi in 0..gr.g() {
+                    let members = gr.members(gi);
+                    if members.is_empty() {
+                        return false;
+                    }
+                    for &w in members {
+                        if w >= m || gr.group_of(w) != gi {
+                            return false;
+                        }
+                        seen[w] += 1;
+                    }
+                }
+                gr.g() == g
+                    && gr.m() == m
+                    && seen.iter().all(|&c| c == 1)
+            }
+            Err(e) => (g == 0 || g > m) && e.contains("group count"),
+        },
+    );
+}
+
+#[test]
+fn groups_range_spec_round_trips_through_canonical_form() {
+    // Randomized partitions: cut 0..m at seeded points, render as a
+    // range spec, parse it back, and check the exact-partition property
+    // plus spec() round-trip stability.
+    forall(
+        "groups range spec round-trips",
+        &Pair(UsizeIn(1, 48), UsizeIn(0, 1_000_000)),
+        |&(m, salt)| {
+            let mut rng = stream(salt as u64, "groups-cuts", m as u64, 0, 0);
+            let mut cuts: Vec<usize> = (1..m)
+                .filter(|_| rng.below(3) == 0)
+                .collect();
+            cuts.push(m);
+            cuts.dedup();
+            let mut spec_parts = Vec::new();
+            let mut start = 0;
+            for &end in &cuts {
+                spec_parts.push(format!("{}-{}", start, end - 1));
+                start = end;
+            }
+            let spec = spec_parts.join("|");
+            let Ok(gr) = Groups::parse(&spec, m) else {
+                return false;
+            };
+            let mut seen = vec![0usize; m];
+            for gi in 0..gr.g() {
+                for &w in gr.members(gi) {
+                    seen[w] += 1;
+                }
+            }
+            seen.iter().all(|&c| c == 1)
+                && Groups::parse(&gr.spec(), m) == Ok(gr)
+        },
+    );
+}
+
+#[test]
+fn groups_malformed_specs_name_the_offending_token() {
+    for (m, spec, needle) in [
+        (4, "0", ">= 1"),
+        (4, "9", "exceeds m=4"),
+        (8, "0-3|3-7", "overlap at worker 3"),
+        (8, "0-2|4-7", "worker 3"),
+        (8, "0-3|4-9", "4-9"),
+        (4, "3-1|0|2", "inverted"),
+        (4, "0-x|1-3", "0-x"),
+        (4, "", "expected"),
+    ] {
+        let e = Groups::parse(spec, m).unwrap_err();
+        assert!(e.contains(needle), "{spec:?}: {e}");
+    }
+}
+
+#[test]
+fn two_level_weighted_mean_matches_exact_mean_randomized() {
+    // The serial reference (which the distributed two-level reduce
+    // mirrors and the golden fixture pins) equals the exact global mean
+    // within the same m·eps·Σ|x| ulp bound as the flat ring.
+    let gen = WorkerVecs { m_range: (1, 9), d_range: (1, 97), scale: 2.0 };
+    forall_seeded(
+        "two-level weighted mean == exact mean",
+        &gen,
+        test_seed() ^ 0x5EED,
+        default_cases(),
+        |vecs| {
+            let m = vecs.len();
+            let (mean, mag) = mean_and_mag(vecs);
+            // Sweep a few partitions of this m, including unequal ones.
+            for g in 1..=m {
+                let gr = Groups::even(m, g).unwrap();
+                let out = gr.weighted_mean(vecs);
+                // The two-stage schedule adds a scale and a g-term sum on
+                // top of the flat bound — 4x covers it comfortably.
+                if !within_ulp_bound(&out, &mean, &mag, 4 * m) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn distributed_two_level_reduce_matches_serial_reference() {
+    // The fabric-level two-level reduce (intra rings -> weighted leader
+    // ring -> broadcast) must land on the same mean as the serial
+    // reference, and bit-identically across workers.
+    use slowmo::net::Fabric;
+    let gen = WorkerVecs { m_range: (2, 8), d_range: (1, 65), scale: 2.0 };
+    forall_seeded(
+        "distributed two-level == serial weighted mean",
+        &gen,
+        test_seed() ^ 0x600D,
+        default_cases() / 2,
+        |vecs| {
+            let m = vecs.len();
+            let (mean, mag) = mean_and_mag(vecs);
+            for g in 1..=m {
+                let gr = std::sync::Arc::new(Groups::even(m, g).unwrap());
+                let fabric = Fabric::new(m, CostModel::free());
+                let live: Vec<usize> = (0..m).collect();
+                let outs = run_workers(m, |w| {
+                    let mut x = vecs[w].clone();
+                    let mut comp =
+                        slowmo::compress::CompressState::default();
+                    slowmo::slowmo::hier::test_two_level_average(
+                        &fabric, &gr, w, &live, &mut x, &mut comp,
+                    )
+                    .unwrap();
+                    x
+                });
+                for out in &outs {
+                    if out != &outs[0] {
+                        return false;
+                    }
+                    if !within_ulp_bound(out, &mean, &mag, 4 * m) {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
 #[test]
 fn wire_bytes_never_exceed_raw_for_any_registered_key() {
     // The honesty bound the cost model relies on: no registered codec —
