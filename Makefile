@@ -1,7 +1,19 @@
 # Convenience targets referenced by the examples' SKIP messages, the
 # test-suite skip notes, and ROADMAP.md.
 
-.PHONY: artifacts e2e
+.PHONY: artifacts e2e bench help
+
+help:
+	@echo "targets:"
+	@echo "  artifacts  AOT-lower model/optimizer graphs into artifacts/"
+	@echo "  e2e        also export the ~12.6M-param LM preset"
+	@echo "  bench      hot-path micro-benchmarks -> results/BENCH_micro.json"
+	@echo ""
+	@echo "experiment sweeps (cargo run --release -- exp <id> --scale <s>):"
+	@echo "  table1|table2|fig2|fig3|figb2|tableb23|tableb4|doubleavg|"
+	@echo "  noaverage|outers|compress|hier|theory|throughput|all"
+	@echo "scales: ci|quick|standard|full (exp default: quick; bench"
+	@echo "honours SLOWMO_SCALE, default ci)"
 
 # AOT-lower the JAX/Pallas model + optimizer graphs and the golden
 # fixtures into artifacts/ (seed 1234 is the committed golden baseline;
@@ -14,3 +26,9 @@ artifacts:
 # `cargo run --release --example e2e_lm -- lm-e2e`.
 e2e: artifacts
 	python python/compile/aot.py --out-dir artifacts --group e2e
+
+# Hot-path micro-benchmarks (ROADMAP item 5a): emits
+# results/BENCH_micro.json (schema bench-micro/v1, validated in CI
+# against results/BENCH_micro.schema.json). Scale via SLOWMO_SCALE.
+bench:
+	cargo bench --bench micro

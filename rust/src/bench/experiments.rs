@@ -799,6 +799,195 @@ pub fn hier(env: &Env, task: &TaskSpec) -> Result<Table> {
     Ok(table)
 }
 
+// ------------------------------------------------------------- throughput
+
+/// Wall-clock throughput trajectory (`slowmo exp throughput`): the same
+/// quad workload run under both execution backends (`sim` vs
+/// `threaded`) over an m × algo × compress grid, measuring real
+/// steps/sec and the comm/compute wall-clock phase split. Every cell
+/// *asserts* the backend contract — identical parameters, curves,
+/// simulated time and wire bytes bit for bit — so the speedup column
+/// can only come from the transport, never from different math.
+///
+/// Emits `results/BENCH_throughput.json` (schema `bench-throughput/v1`,
+/// checked in at `results/BENCH_throughput.schema.json`). On machines
+/// with ≥ 4 cores the headline claim is enforced: the best threaded
+/// speedup at the largest m must reach 2× sim. The deliberately small
+/// τ keeps the runs communication-bound — that is the regime the
+/// threaded fabric exists for.
+pub fn throughput(env: &Env) -> Result<Table> {
+    use crate::exec::ExecMode;
+    use crate::jsonx::Json;
+    let mut table = Table::new(
+        "Throughput — sim vs threaded backend (quad, SlowMo, tau=4)",
+        &["m", "algo", "compress", "exec", "wall (s)", "steps/s",
+          "speedup", "comm (s)", "compute (s)"],
+    );
+    let steps: u64 = 768;
+    let tau: u64 = 4;
+    let ms: Vec<usize> = match env.scale {
+        Scale::Ci | Scale::Quick => vec![4, 8],
+        _ => vec![4, 8, 16],
+    };
+    let max_m = *ms.last().unwrap();
+    // Deterministic-by-construction algorithms only: dpsgd merges two
+    // in-edges in arrival order and osgp drains opportunistically, so
+    // neither promises bitwise sim == threaded (see ROADMAP §Execution
+    // backends). local/sgp/ar do.
+    let algos = ["local", "sgp", "ar"];
+    let specs = ["none", "fp16"];
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let enforce = cores >= 4;
+    let mut best_speedup = 0.0f64;
+    let mut entries: Vec<Json> = Vec::new();
+    for &m in &ms {
+        for algo in algos {
+            for spec in specs {
+                let build = |mode: ExecMode| {
+                    let mut b = env
+                        .session
+                        .train("quad")
+                        .algo_sel(AlgoSel::with_inner(
+                            algo,
+                            InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 },
+                        ))
+                        .workers(m)
+                        .steps(steps)
+                        .seed(0)
+                        .slowmo_cfg(SlowMoCfg::new(1.0, 0.5, tau)
+                            .with_buffers(BufferStrategy::Maintain))
+                        .schedule(Schedule::Const(0.3))
+                        .heterogeneity(1.0)
+                        .eval_batches(1)
+                        .cost(env.cost())
+                        // Fixed simulated compute charge: sim_time must
+                        // be host-independent so it can be compared
+                        // bitwise across backends.
+                        .compute_time(1e-6)
+                        .record_params(true)
+                        .exec(mode);
+                    if spec != "none" {
+                        b = b.compress(spec);
+                    }
+                    b
+                };
+                let sim = run_cell(env, build(ExecMode::Sim))?;
+                let thr = run_cell(env, build(ExecMode::Threaded))?;
+                let bits = |v: &Option<Vec<f32>>| -> Vec<u32> {
+                    v.as_ref()
+                        .map(|p| p.iter().map(|x| x.to_bits()).collect())
+                        .unwrap_or_default()
+                };
+                anyhow::ensure!(
+                    bits(&sim.final_params) == bits(&thr.final_params),
+                    "threaded diverged from sim on final params \
+                     (m={m}, {algo}, {spec})"
+                );
+                anyhow::ensure!(
+                    sim.train_curve.len() == thr.train_curve.len()
+                        && sim.train_curve.iter().zip(&thr.train_curve).all(
+                            |(a, b)| {
+                                a.0 == b.0 && a.1.to_bits() == b.1.to_bits()
+                            },
+                        ),
+                    "threaded diverged from sim on the train curve \
+                     (m={m}, {algo}, {spec})"
+                );
+                anyhow::ensure!(
+                    sim.sim_time.to_bits() == thr.sim_time.to_bits(),
+                    "threaded diverged from sim on simulated time \
+                     (m={m}, {algo}, {spec}): {} vs {}",
+                    sim.sim_time,
+                    thr.sim_time
+                );
+                anyhow::ensure!(
+                    sim.bytes_sent == thr.bytes_sent,
+                    "threaded diverged from sim on wire bytes \
+                     (m={m}, {algo}, {spec}): {} vs {}",
+                    sim.bytes_sent,
+                    thr.bytes_sent
+                );
+                let speedup = sim.wall_time / thr.wall_time.max(1e-12);
+                if m == max_m {
+                    best_speedup = best_speedup.max(speedup);
+                }
+                let sps = |r: &TrainResult| {
+                    (r.steps_run * m as u64) as f64 / r.wall_time.max(1e-12)
+                };
+                let mut row = |r: &TrainResult, speed: Option<f64>| {
+                    table.row(&[
+                        m.to_string(),
+                        algo.to_string(),
+                        spec.to_string(),
+                        r.exec.clone(),
+                        format!("{:.4}", r.wall_time),
+                        format!("{:.0}", sps(r)),
+                        speed
+                            .map(|s| format!("{s:.2}x"))
+                            .unwrap_or_else(|| "-".into()),
+                        format!("{:.4}", r.comm_wall_time),
+                        format!("{:.4}", r.compute_wall_time),
+                    ]);
+                    let mut pairs = vec![
+                        ("exec", Json::str(&r.exec)),
+                        ("m", Json::num(m as f64)),
+                        ("algo", Json::str(algo)),
+                        ("compress", Json::str(spec)),
+                        ("wall_time", Json::num(r.wall_time)),
+                        ("steps_per_sec", Json::num(sps(r))),
+                        ("comm_wall_time", Json::num(r.comm_wall_time)),
+                        ("compute_wall_time",
+                         Json::num(r.compute_wall_time)),
+                        ("sim_time", Json::num(r.sim_time)),
+                        ("bytes_sent", Json::num(r.bytes_sent as f64)),
+                    ];
+                    if let Some(s) = speed {
+                        pairs.push(("speedup_vs_sim", Json::num(s)));
+                        pairs.push(("bitwise_equal", Json::Bool(true)));
+                    }
+                    entries.push(Json::obj(pairs));
+                };
+                row(&sim, None);
+                row(&thr, Some(speedup));
+            }
+        }
+    }
+    table.print();
+    table.write_json(&env.out_path("throughput.json"))?;
+    if enforce {
+        anyhow::ensure!(
+            best_speedup >= 2.0,
+            "threaded backend reached only {best_speedup:.2}x sim at \
+             m={max_m} on {cores} cores — the comm-bound quad sweep \
+             must show >= 2x"
+        );
+    } else {
+        crate::info!(
+            "throughput: speedup gate skipped ({cores} cores < 4)"
+        );
+    }
+    let bench = Json::obj(vec![
+        ("schema", Json::str("bench-throughput/v1")),
+        ("preset", Json::str("quad")),
+        ("steps", Json::num(steps as f64)),
+        ("tau", Json::num(tau as f64)),
+        ("cores", Json::num(cores as f64)),
+        ("speedup_gate_enforced", Json::Bool(enforce)),
+        ("max_m", Json::num(max_m as f64)),
+        ("best_speedup_at_max_m", Json::num(best_speedup)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = env.out_path("BENCH_throughput.json");
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, crate::jsonx::to_string(&bench))?;
+    crate::info!("wrote {path}");
+    Ok(table)
+}
+
 // ----------------------------------------------------------------- theory
 
 /// Theorem 1 / Corollary 1-2 validation on the quadratic workload

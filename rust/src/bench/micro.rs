@@ -102,5 +102,23 @@ pub fn run(env: &Env) -> Result<Bench> {
 
     b.report();
     b.write_jsonl(&env.out_path("micro.jsonl"))?;
+    // Checked-in perf trajectory: schema `bench-micro/v1`, validated in
+    // CI against results/BENCH_micro.schema.json (`make bench`).
+    let bench = crate::jsonx::Json::obj(vec![
+        ("schema", crate::jsonx::Json::str("bench-micro/v1")),
+        ("scale", crate::jsonx::Json::str(env.scale.name())),
+        (
+            "entries",
+            crate::jsonx::Json::Arr(
+                b.results().iter().map(|s| s.to_json()).collect(),
+            ),
+        ),
+    ]);
+    let path = env.out_path("BENCH_micro.json");
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, crate::jsonx::to_string(&bench))?;
+    crate::info!("wrote {path}");
     Ok(b)
 }

@@ -45,6 +45,16 @@ impl std::str::FromStr for Scale {
 }
 
 impl Scale {
+    /// Canonical lowercase name (the `--scale` spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Ci => "ci",
+            Scale::Quick => "quick",
+            Scale::Standard => "standard",
+            Scale::Full => "full",
+        }
+    }
+
     /// Workers.
     pub fn m(&self) -> usize {
         match self {
@@ -147,6 +157,8 @@ mod tests {
     #[test]
     fn scale_parse_and_params() {
         assert_eq!("quick".parse(), Ok(Scale::Quick));
+        assert_eq!(Scale::Quick.name(), "quick");
+        assert_eq!(Scale::Quick.name().parse(), Ok(Scale::Quick));
         assert_eq!("standard".parse(), Ok(Scale::Standard));
         assert_eq!("full".parse(), Ok(Scale::Full));
         let e = "x".parse::<Scale>().unwrap_err();

@@ -85,6 +85,12 @@ fn app() -> App {
                                  seed=N,delay=2ms,delay-max=20ms,\
                                  drop=0.05,rto=1ms,retries=3,reorder=4,\
                                  straggle=W:F,fault=W@T..R (empty = off)"))
+                .flag(Flag::opt("exec", "",
+                                "execution backend: sim (default; \
+                                 simulated clock) | threaded (one OS \
+                                 thread per worker, real concurrent \
+                                 transfers; identical math, real wall \
+                                 clock; empty = leave config's value)"))
                 .flag(Flag::opt("progress", "0",
                                 "stream a progress line every N steps \
                                  (0 = off)"))
@@ -213,6 +219,16 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
                 .map_err(anyhow::Error::msg)?,
         )
     };
+    let exec_spec = args.string("exec");
+    let builder = if exec_spec.is_empty() {
+        builder
+    } else {
+        builder.exec(
+            exec_spec
+                .parse::<slowmo::exec::ExecMode>()
+                .map_err(anyhow::Error::msg)?,
+        )
+    };
     let cfg = builder.build_cfg()?;
     println!("training {} / {} ...", cfg.preset, cfg.algo.spec());
     let r = match args.u64("progress") {
@@ -316,6 +332,9 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         "theory" => {
             experiments::theory(&env)?;
         }
+        "throughput" => {
+            experiments::throughput(&env)?;
+        }
         "all" => {
             experiments::table2(&env)?;
             experiments::theory(&env)?;
@@ -326,7 +345,7 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         other => anyhow::bail!(
             "unknown experiment {other:?} (table1|table2|fig2|fig3|figb2|\
              tableb23|tableb4|doubleavg|noaverage|outers|compress|hier|\
-             theory|all)"
+             theory|throughput|all)"
         ),
     }
     println!("\n[exp {which} done in {}]",

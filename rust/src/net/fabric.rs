@@ -6,13 +6,23 @@
 //! retransmit, and bounded-reordering charges are stamped onto the message
 //! at send time, so both endpoints observe the same simulated arrival.
 //! Chaos never changes what is delivered — only when (in simulated time).
+//!
+//! The transport underneath is chosen by [`ExecMode`]
+//! ([`Fabric::with_mode`]): the default `sim` backend queues through mpsc
+//! mailboxes, the `threaded` backend through per-link spin channels built
+//! for real wall-clock throughput. Every simulated-time and byte-
+//! accounting computation is identical across backends — a `threaded` run
+//! reports the same `sim_time`, `bytes_*` and (where merge order is
+//! fixed) bit-identical parameters as its `sim` twin, while its
+//! `wall_time` measures what the hardware actually did.
 
-use crate::exec::Mailboxes;
+use crate::exec::{ExecMode, Lanes};
 use crate::net::chaos::ChaosPlan;
 use crate::net::cost::CostModel;
 use crate::topology::Groups;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Two-tier link context: a worker [`Groups`] partition plus the α-β
 /// parameters of the slow inter-group links. With tiers installed the
@@ -55,16 +65,22 @@ pub struct GossipMsg {
 /// what compression actually bought.
 pub struct Fabric {
     m: usize,
+    mode: ExecMode,
     /// Gossip lane: messages tagged with their chaos extra-delay (0.0 on a
     /// calm fabric) and wire byte count, so receive-side arrival math
     /// matches the send side.
-    gossip: Mailboxes<(GossipMsg, f64, u64)>,
+    gossip: Lanes<(GossipMsg, f64, u64)>,
     /// Collective lanes (ring allreduce chunks, rejoin transfers). Tags
     /// are globally-unique routing keys — see [`Fabric::chunk_recv_tag`].
-    chunks: Mailboxes<(u64, Vec<f32>)>,
+    chunks: Lanes<(u64, Vec<f32>)>,
     /// Per-worker stash of early chunks (only the owning worker thread
     /// touches its slot; the mutex is for the `&self` API).
     chunk_stash: Vec<Mutex<Vec<(u64, Vec<f32>)>>>,
+    /// Real nanoseconds each worker spent blocked inside fabric receives
+    /// (only worker w's thread touches slot w). Measured identically in
+    /// both exec modes, so threaded-vs-sim comparisons are apples to
+    /// apples; feeds `TrainResult::comm_wall_time`.
+    comm_wait_ns: Vec<AtomicU64>,
     pub cost: CostModel,
     tiers: Option<Tiers>,
     chaos: Option<Arc<ChaosPlan>>,
@@ -76,11 +92,21 @@ pub struct Fabric {
 
 impl Fabric {
     pub fn new(m: usize, cost: CostModel) -> Self {
+        Self::with_mode(m, cost, ExecMode::Sim)
+    }
+
+    /// A fabric on an explicit execution backend. `Sim` is what
+    /// [`Fabric::new`] builds; `Threaded` swaps the transport for the
+    /// per-link spin channels while keeping every cost/accounting
+    /// computation bit-identical.
+    pub fn with_mode(m: usize, cost: CostModel, mode: ExecMode) -> Self {
         Self {
             m,
-            gossip: Mailboxes::new(m),
-            chunks: Mailboxes::new(m),
+            mode,
+            gossip: Lanes::new(mode, m),
+            chunks: Lanes::new(mode, m),
             chunk_stash: (0..m).map(|_| Mutex::new(Vec::new())).collect(),
+            comm_wait_ns: (0..m).map(|_| AtomicU64::new(0)).collect(),
             cost,
             tiers: None,
             chaos: None,
@@ -92,6 +118,8 @@ impl Fabric {
     }
 
     /// A fabric whose messages are degraded by a deterministic chaos plan.
+    /// Chaos is sim-only: its delays are simulated-time charges that the
+    /// threaded backend would measure right past.
     pub fn with_chaos(m: usize, cost: CostModel, plan: Arc<ChaosPlan>) -> Self {
         let mut f = Self::new(m, cost);
         f.chaos = Some(plan);
@@ -108,6 +136,21 @@ impl Fabric {
 
     pub fn m(&self) -> usize {
         self.m
+    }
+
+    /// The execution backend this fabric runs on.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Real seconds `worker` has spent blocked inside fabric receives.
+    pub fn comm_wait_s(&self, worker: usize) -> f64 {
+        self.comm_wait_ns[worker].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    fn note_wait(&self, worker: usize, t0: Instant) {
+        self.comm_wait_ns[worker]
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
 
     pub fn chaos(&self) -> Option<&ChaosPlan> {
@@ -185,15 +228,18 @@ impl Fabric {
             None => 0.0,
         };
         let arrival = self.arrival(&msg, to, extra, wire_bytes);
-        self.account(msg.from, to, msg.payload.len(), wire_bytes);
-        self.gossip.send(to, (msg, extra, wire_bytes));
+        let from = msg.from;
+        self.account(from, to, msg.payload.len(), wire_bytes);
+        self.gossip.send(from, to, (msg, extra, wire_bytes));
         arrival
     }
 
     /// Blocking gossip receive for `worker`. Returns the message and its
     /// simulated arrival time (send_time + transfer + chaos extra).
     pub fn gossip_recv(&self, worker: usize) -> (GossipMsg, f64) {
+        let t0 = Instant::now();
         let (msg, extra, wire) = self.gossip.recv(worker);
+        self.note_wait(worker, t0);
         let arrival = self.arrival(&msg, worker, extra, wire);
         (msg, arrival)
     }
@@ -205,7 +251,10 @@ impl Fabric {
         worker: usize,
         timeout: std::time::Duration,
     ) -> Option<(GossipMsg, f64)> {
-        let (msg, extra, wire) = self.gossip.recv_timeout(worker, timeout)?;
+        let t0 = Instant::now();
+        let got = self.gossip.recv_timeout(worker, timeout);
+        self.note_wait(worker, t0);
+        let (msg, extra, wire) = got?;
         let arrival = self.arrival(&msg, worker, extra, wire);
         Some((msg, arrival))
     }
@@ -250,7 +299,7 @@ impl Fabric {
         wire_bytes: u64,
     ) {
         self.account(from, to, data.len(), wire_bytes);
-        self.chunks.send(to, (tag, data));
+        self.chunks.send(from, to, (tag, data));
     }
 
     /// Collective lane: blocking receive of the chunk tagged `want`.
@@ -269,9 +318,11 @@ impl Fabric {
         if let Some(pos) = stash.iter().position(|&(tag, _)| tag == want) {
             return stash.swap_remove(pos).1;
         }
+        let t0 = Instant::now();
         loop {
             let (tag, data) = self.chunks.recv(worker);
             if tag == want {
+                self.note_wait(worker, t0);
                 return data;
             }
             stash.push((tag, data));
@@ -490,6 +541,113 @@ mod tests {
         assert!(f.chaos().unwrap().retransmits() > 0);
         // Goodput accounting is unchanged by retransmissions.
         assert_eq!(f.bytes_sent(), 20 * 4);
+    }
+
+    #[test]
+    fn default_mode_is_sim() {
+        let f = Fabric::new(2, CostModel::free());
+        assert_eq!(f.mode(), crate::exec::ExecMode::Sim);
+    }
+
+    #[test]
+    fn threaded_mode_same_arrival_and_accounting() {
+        // The threaded transport must not perturb any simulated-time or
+        // byte computation: replay the sim arithmetic checks on it.
+        let cost = CostModel { latency_s: 1.0, bandwidth_bps: 4.0 };
+        let f =
+            Fabric::with_mode(2, cost, crate::exec::ExecMode::Threaded);
+        assert_eq!(f.mode(), crate::exec::ExecMode::Threaded);
+        let msg = GossipMsg {
+            from: 0,
+            step: 0,
+            payload: vec![0.0; 2], // 8 bytes -> 2 s at 4 B/s
+            weight: 1.0,
+            send_time: 10.0,
+        };
+        let eta = f.gossip_send(1, msg);
+        assert!((eta - 13.0).abs() < 1e-12);
+        let (_, arrival) = f.gossip_recv(1);
+        assert!((arrival - 13.0).abs() < 1e-12);
+        assert_eq!(f.bytes_sent(), 8);
+        assert_eq!(f.msgs_sent(), 1);
+        f.chunk_send(0, 1, 7, vec![1.0, 2.0]);
+        assert_eq!(f.chunk_recv_tag(1, 7), vec![1.0, 2.0]);
+        assert_eq!(f.bytes_sent(), 16);
+    }
+
+    #[test]
+    fn threaded_concurrent_gossip_all_to_all() {
+        let f = Fabric::with_mode(
+            4,
+            CostModel::free(),
+            crate::exec::ExecMode::Threaded,
+        );
+        run_workers(4, |i| {
+            for to in 0..4 {
+                if to != i {
+                    f.gossip_send(
+                        to,
+                        GossipMsg {
+                            from: i,
+                            step: 0,
+                            payload: vec![i as f32],
+                            weight: 1.0,
+                            send_time: 0.0,
+                        },
+                    );
+                }
+            }
+            let mut froms: Vec<usize> =
+                (0..3).map(|_| f.gossip_recv(i).0.from).collect();
+            froms.sort_unstable();
+            let expect: Vec<usize> =
+                (0..4).filter(|&x| x != i).collect();
+            assert_eq!(froms, expect);
+        });
+        assert_eq!(f.msgs_sent(), 12);
+    }
+
+    #[test]
+    fn threaded_chunk_lane_routes_by_tag_across_threads() {
+        let f = Fabric::with_mode(
+            4,
+            CostModel::free(),
+            crate::exec::ExecMode::Threaded,
+        );
+        run_workers(4, |i| {
+            let next = (i + 1) % 4;
+            // Two rounds sent ahead of time: the receiver must pick tags
+            // in its own order even when both are already queued.
+            f.chunk_send(i, next, 100 + i as u64, vec![i as f32]);
+            f.chunk_send(i, next, 200 + i as u64, vec![10.0 + i as f32]);
+            let prev = (i + 3) % 4;
+            let b = f.chunk_recv_tag(i, 200 + prev as u64);
+            let a = f.chunk_recv_tag(i, 100 + prev as u64);
+            assert_eq!(a, vec![prev as f32]);
+            assert_eq!(b, vec![10.0 + prev as f32]);
+        });
+    }
+
+    #[test]
+    fn comm_wait_accumulates_on_blocking_recv() {
+        let f = Fabric::new(2, CostModel::free());
+        assert_eq!(f.comm_wait_s(0), 0.0);
+        for step in 0..64 {
+            f.gossip_send(
+                0,
+                GossipMsg {
+                    from: 1,
+                    step,
+                    payload: vec![1.0],
+                    weight: 1.0,
+                    send_time: 0.0,
+                },
+            );
+            f.gossip_recv(0);
+        }
+        // No-contention recvs still pay the (tiny, positive) measure.
+        assert!(f.comm_wait_s(0) > 0.0);
+        assert_eq!(f.comm_wait_s(1), 0.0);
     }
 
     #[test]

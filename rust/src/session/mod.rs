@@ -35,6 +35,7 @@
 use crate::algorithms::{AlgoRegistry, AlgoSel};
 use crate::compress::CompressRegistry;
 use crate::configx::Config;
+use crate::exec::ExecMode;
 use crate::net::{ChaosCfg, CostModel};
 use crate::optim::kernels::{InnerOpt, Kernels};
 use crate::runtime::{artifacts_dir, Engine, Manifest};
@@ -519,6 +520,19 @@ impl<'s> TrainBuilder<'s> {
         self
     }
 
+    /// Select the execution backend: [`ExecMode::Sim`] (default) runs
+    /// the simulated fabric, [`ExecMode::Threaded`] the real-parallel
+    /// spin-channel transport. The math is identical across backends —
+    /// `sim_time`, byte counts and (for fixed-merge-order algorithms)
+    /// parameters are bitwise-equal — while `wall_time` /
+    /// `comm_wall_time` measure what the hardware actually did. Chaos
+    /// injection is sim-only: `exec(Threaded)` plus `chaos(..)` is a
+    /// hard error at run time.
+    pub fn exec(mut self, mode: ExecMode) -> Self {
+        self.cfg.exec = mode;
+        self
+    }
+
     /// Attach a deterministic chaos plan: seeded per-link delays, drops
     /// with retransmit accounting, bounded reordering, stragglers, and
     /// fault windows with elastic membership at outer boundaries (see
@@ -572,6 +586,9 @@ impl<'s> TrainBuilder<'s> {
     ///
     /// [compress]                # communication compression
     /// spec = "ef:topk:0.1"      # CompressRegistry spec string
+    ///
+    /// [exec]                    # execution backend
+    /// mode = "threaded"         # "sim" (default) | "threaded"
     ///
     /// [groups]                  # hierarchical two-level topology
     /// spec = "2"                # group count, or ranges "0-3|4-7"
@@ -691,6 +708,20 @@ impl<'s> TrainBuilder<'s> {
                     )
                 })?;
             self.compress_spec = Some(spec.to_string());
+        }
+        if c.sections.contains_key("exec") {
+            let mode = c
+                .get("exec", "mode")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| {
+                    anyhow!(
+                        "[exec] needs mode = \"sim\" or mode = \
+                         \"threaded\""
+                    )
+                })?;
+            self.cfg.exec = mode
+                .parse::<ExecMode>()
+                .map_err(|e| anyhow!("[exec] mode: {e}"))?;
         }
         if c.sections.contains_key("groups") {
             let spec = c
@@ -1456,6 +1487,46 @@ inter_gbps = 1.0
                 "{bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn builder_exec_selects_backend() {
+        let cfg = TrainBuilder::new("quad").build_cfg().unwrap();
+        assert_eq!(cfg.exec, ExecMode::Sim);
+        let cfg = TrainBuilder::new("quad")
+            .exec(ExecMode::Threaded)
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.exec, ExecMode::Threaded);
+    }
+
+    #[test]
+    fn config_bridge_applies_exec_section() {
+        let c = Config::parse("[exec]\nmode = \"threaded\"").unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.exec, ExecMode::Threaded);
+        let c = Config::parse("[exec]\nmode = \"sim\"").unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.exec, ExecMode::Sim);
+        // Section without a mode, or an unknown mode, is a hard error.
+        let c = Config::parse("[exec]").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        let c = Config::parse("[exec]\nmode = \"turbo\"").unwrap();
+        let e = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("turbo"), "{e}");
+        let c = Config::parse("[exec]\nmode = 3").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
     }
 
     #[test]

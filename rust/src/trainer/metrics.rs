@@ -65,6 +65,16 @@ pub struct TrainResult {
     pub sim_time: f64,
     /// Real wall-clock seconds spent training.
     pub wall_time: f64,
+    /// Execution backend the run used ("sim" | "threaded"). Backends
+    /// share every simulated-time and byte computation; only the
+    /// wall-clock fields mean different transports.
+    pub exec: String,
+    /// Real seconds spent inside model `train_step` calls (mean across
+    /// workers) — the compute half of the wall-clock phase breakdown.
+    pub compute_wall_time: f64,
+    /// Real seconds spent blocked in fabric receives (mean across
+    /// workers) — the communication half of the breakdown.
+    pub comm_wall_time: f64,
     /// Total bytes on the wire (compressed sizes when a codec is active).
     pub bytes_sent: u64,
     /// Bytes compression kept off the wire (raw 4 B/elem total minus
@@ -105,6 +115,9 @@ impl TrainResult {
             ("final_eval_loss", Json::num(self.final_eval_loss)),
             ("sim_time", Json::num(self.sim_time)),
             ("wall_time", Json::num(self.wall_time)),
+            ("exec", Json::str(&self.exec)),
+            ("compute_wall_time", Json::num(self.compute_wall_time)),
+            ("comm_wall_time", Json::num(self.comm_wall_time)),
             ("bytes_sent", Json::num(self.bytes_sent as f64)),
             ("bytes_saved", Json::num(self.bytes_saved as f64)),
             ("bytes_inter", Json::num(self.bytes_inter as f64)),
@@ -202,6 +215,9 @@ mod tests {
             final_eval_loss: loss,
             sim_time: 50.0,
             wall_time: 1.0,
+            exec: "sim".into(),
+            compute_wall_time: 0.6,
+            comm_wall_time: 0.3,
             bytes_sent: 42,
             bytes_saved: 7,
             bytes_inter: 13,
@@ -227,6 +243,12 @@ mod tests {
         assert_eq!(j.get("groups").unwrap().as_str(), Some("0-0|1-1"));
         assert_eq!(j.get("bytes_saved").unwrap().as_f64(), Some(7.0));
         assert_eq!(j.get("bytes_inter").unwrap().as_f64(), Some(13.0));
+        assert_eq!(j.get("exec").unwrap().as_str(), Some("sim"));
+        assert_eq!(
+            j.get("compute_wall_time").unwrap().as_f64(),
+            Some(0.6)
+        );
+        assert_eq!(j.get("comm_wall_time").unwrap().as_f64(), Some(0.3));
         let parsed =
             crate::jsonx::parse(&crate::jsonx::to_string(&j)).unwrap();
         assert_eq!(parsed.get("best_train_loss").unwrap().as_f64(),

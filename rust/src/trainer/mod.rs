@@ -25,6 +25,7 @@ pub use schedule::Schedule;
 use crate::algorithms::{AlgoSel, BaseAlgorithm, Ctx, WorkerState};
 use crate::compress::{CompressSel, CompressState, Compressor};
 use crate::data::{task_for, Task};
+use crate::exec::ExecMode;
 use crate::net::{ChaosCfg, ChaosPlan, CostModel, Fabric};
 use crate::optim::kernels::Kernels;
 use crate::runtime::DataDesc;
@@ -78,8 +79,13 @@ pub struct TrainCfg {
     /// Observer early-stop granularity in steps; `None` = the SlowMo τ,
     /// or 16 without SlowMo. Stops only take effect at multiples of this.
     pub stop_check_every: Option<u64>,
+    /// Execution backend: `Sim` (default) runs the simulated fabric,
+    /// `Threaded` the real-parallel spin-channel transport. Identical
+    /// math; only `wall_time`/`comm_wall_time` change meaning.
+    pub exec: ExecMode,
     /// Deterministic network degradation (delays, drops, stragglers,
-    /// fault windows). `None` = the perfect network.
+    /// fault windows). `None` = the perfect network. Sim-only: a run
+    /// with both `exec = threaded` and chaos is rejected.
     pub chaos: Option<ChaosCfg>,
     /// Communication compression (registry selection; `none` = raw f32
     /// everywhere, bit-identical to the pre-compression path). Resolved
@@ -113,6 +119,7 @@ impl TrainCfg {
             compute_time_s: 0.0,
             record_gradnorm: false,
             stop_check_every: None,
+            exec: ExecMode::Sim,
             chaos: None,
             compress: CompressSel::none(),
             record_final_params: false,
@@ -153,6 +160,10 @@ struct WorkerOut {
     gradnorms: Vec<f64>,
     evals: Vec<(u64, f32, f32, f64)>, // (step, loss, metric, clock)
     clock: f64,
+    /// Real seconds this worker spent inside `train_step` calls (the
+    /// compute half of the wall-clock phase breakdown; the comm half
+    /// lives in the fabric's per-worker wait counters).
+    compute_wall: f64,
     steps_run: u64,
     final_params: Option<Vec<f32>>,
 }
@@ -274,6 +285,15 @@ pub(crate) fn run_prepared(
     } else {
         ensure!(algos.len() == 1, "flat runs build exactly one algorithm");
     }
+    // Chaos charges simulated time for its delays/stragglers; the
+    // threaded backend measures real time, which would silently ignore
+    // every injected degradation. Refuse the combination outright.
+    ensure!(
+        cfg.exec == ExecMode::Sim || cfg.chaos.is_none(),
+        "chaos injection is sim-only: simulated delay/straggler charges \
+         have no effect on the threaded backend's wall clock (drop \
+         [chaos] or use exec = \"sim\")"
+    );
     // The identity codec takes the exact pre-compression code path.
     let codec: Option<&dyn Compressor> =
         compressor.as_deref().filter(|c| !c.is_identity());
@@ -312,7 +332,7 @@ pub(crate) fn run_prepared(
         Some(plan) => {
             Fabric::with_chaos(cfg.m, cfg.cost.clone(), Arc::clone(plan))
         }
-        None => Fabric::new(cfg.m, cfg.cost.clone()),
+        None => Fabric::with_mode(cfg.m, cfg.cost.clone(), cfg.exec),
     };
     if let (Some(h), Some(gr)) = (&cfg.hier, &groups) {
         fabric.set_tiers(Arc::clone(gr), h.inter_cost(&cfg.cost));
@@ -399,6 +419,7 @@ pub(crate) fn run_prepared(
             gradnorms: Vec::new(),
             evals: Vec::new(),
             clock: 0.0,
+            compute_wall: 0.0,
             steps_run: 0,
             final_params: None,
         };
@@ -429,10 +450,12 @@ pub(crate) fn run_prepared(
             let t0 = Instant::now();
             let (loss, grads) =
                 model.train_step(algo.eval_params(&state), &batch)?;
+            let step_wall = t0.elapsed().as_secs_f64();
+            out.compute_wall += step_wall;
             let compute = if cfg.compute_time_s > 0.0 {
                 cfg.compute_time_s
             } else {
-                t0.elapsed().as_secs_f64()
+                step_wall
             };
             ctx.clock += compute * slowdown;
             out.losses.push(loss);
@@ -697,6 +720,12 @@ fn assemble(
     let final_eval_loss =
         eval_curve.last().map(|p| p.loss_mean).unwrap_or(f64::NAN);
     let sim_time = workers.iter().map(|w| w.clock).fold(0.0f64, f64::max);
+    let compute_wall_time = crate::util::mean(
+        &workers.iter().map(|w| w.compute_wall).collect::<Vec<_>>(),
+    );
+    let comm_wall_time = crate::util::mean(
+        &(0..cfg.m).map(|w| fabric.comm_wait_s(w)).collect::<Vec<_>>(),
+    );
     TrainResult {
         algo: algo_name,
         outer: cfg.slowmo.as_ref().map(|s| s.outer.spec()),
@@ -718,6 +747,9 @@ fn assemble(
         final_eval_loss,
         sim_time,
         wall_time: wall,
+        exec: fabric.mode().name().to_string(),
+        compute_wall_time,
+        comm_wall_time,
         bytes_sent: fabric.bytes_sent(),
         bytes_saved: fabric.bytes_saved(),
         bytes_inter: fabric.bytes_inter(),
@@ -855,6 +887,7 @@ mod tests {
         assert!(cfg.native_kernels);
         assert!(!cfg.force_pjrt);
         assert_eq!(cfg.stop_check_every, None);
+        assert_eq!(cfg.exec, ExecMode::Sim);
         assert!(cfg.chaos.is_none());
         assert!(cfg.compress.is_none());
         assert!(cfg.hier.is_none());

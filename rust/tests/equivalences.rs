@@ -4,6 +4,7 @@
 //! [`Session`] (no PJRT needed) so they are fast and bit-deterministic.
 
 use slowmo::algorithms::AlgoSel;
+use slowmo::exec::ExecMode;
 use slowmo::net::{ChaosCfg, CostModel};
 use slowmo::optim::kernels::InnerOpt;
 use slowmo::session::Session;
@@ -721,4 +722,167 @@ fn faultless_chaos_with_compression_moves_time_not_math() {
     assert_eq!(calm.final_params, chaotic.final_params);
     assert_eq!(calm.bytes_sent, chaotic.bytes_sent);
     assert!(chaotic.sim_time > calm.sim_time);
+}
+
+// ------------------------------------------------- execution backends
+// The threaded backend's contract: real concurrent transfers, same
+// math bit for bit. Both backends share every simulated-time and byte
+// computation — only the transport differs — so parameters, curves,
+// sim_time and bytes must all be identical. dpsgd (two in-edges merged
+// in arrival order) and osgp (opportunistic drains) are
+// scheduling-dependent in *both* modes and so carry no bitwise promise;
+// see ROADMAP §Execution backends.
+
+/// Quad run on an explicit execution backend.
+fn quade(
+    s: &Session,
+    m: usize,
+    steps: u64,
+    algo: AlgoSel,
+    slowmo: Option<SlowMoCfg>,
+    compress: Option<&str>,
+    mode: ExecMode,
+) -> TrainResult {
+    let mut b = s
+        .train("quad")
+        .algo_sel(algo)
+        .workers(m)
+        .steps(steps)
+        .seed(11)
+        .slowmo_opt(slowmo)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(1e-6)
+        .record_params(true)
+        .exec(mode);
+    if let Some(spec) = compress {
+        b = b.compress(spec);
+    }
+    b.run().unwrap()
+}
+
+fn assert_backends_agree(sim: &TrainResult, thr: &TrainResult, tag: &str) {
+    assert_eq!(sim.exec, "sim", "{tag}");
+    assert_eq!(thr.exec, "threaded", "{tag}");
+    assert_eq!(sim.final_params, thr.final_params, "{tag}: params");
+    assert!(sim.final_params.is_some(), "{tag}");
+    assert_eq!(sim.train_curve, thr.train_curve, "{tag}: train curve");
+    assert_eq!(
+        sim.eval_curve.len(),
+        thr.eval_curve.len(),
+        "{tag}: eval points"
+    );
+    for (a, b) in sim.eval_curve.iter().zip(&thr.eval_curve) {
+        assert_eq!(a.step, b.step, "{tag}");
+        assert_eq!(
+            a.loss_mean.to_bits(),
+            b.loss_mean.to_bits(),
+            "{tag}: eval loss at step {}",
+            a.step
+        );
+    }
+    assert_eq!(sim.sim_time, thr.sim_time, "{tag}: sim time");
+    assert_eq!(sim.bytes_sent, thr.bytes_sent, "{tag}: bytes");
+}
+
+#[test]
+fn threaded_matches_sim_for_every_outer_rule() {
+    // The whole OuterRegistry lands on identical bits under the
+    // threaded fabric: the outer boundary is a ring allreduce with a
+    // fixed chunk-reduction order, so transport concurrency must not
+    // show up in the math.
+    let Some(s) = session() else { return };
+    let keys: Vec<String> = s
+        .outer_registry()
+        .keys()
+        .iter()
+        .map(|k| k.to_string())
+        .collect();
+    for key in &keys {
+        let sel = s.outer_registry().parse(key).unwrap();
+        let cfg = SlowMoCfg::with_outer(sel, 8);
+        let sim = quade(&s, 4, 64, local(), Some(cfg.clone()), None,
+                        ExecMode::Sim);
+        let thr = quade(&s, 4, 64, local(), Some(cfg), None,
+                        ExecMode::Threaded);
+        assert_backends_agree(&sim, &thr, key);
+    }
+}
+
+#[test]
+fn threaded_matches_sim_across_deterministic_bases() {
+    // Every base algorithm whose receive pattern is order-insensitive
+    // (in-degree ≤ 1 gossip, fixed-order ring collectives) is bitwise
+    // identical across backends.
+    let Some(s) = session() else { return };
+    for spec in ["local", "sgp", "ar", "doubleavg:8"] {
+        let mut sel = s.registry().parse(spec).unwrap();
+        sel.inner = sgd();
+        let slowmo = Some(SlowMoCfg::new(1.0, 0.6, 8));
+        let sim = quade(&s, 4, 64, sel.clone(), slowmo.clone(), None,
+                        ExecMode::Sim);
+        let thr =
+            quade(&s, 4, 64, sel, slowmo, None, ExecMode::Threaded);
+        assert_backends_agree(&sim, &thr, spec);
+    }
+}
+
+#[test]
+fn threaded_matches_sim_with_compression() {
+    // The codec sits above the fabric, so compression composes with the
+    // threaded transport without moving a bit.
+    let Some(s) = session() else { return };
+    for spec in ["fp16", "ef:topk:0.25"] {
+        let slowmo = Some(SlowMoCfg::new(1.0, 0.7, 8));
+        let sim = quade(&s, 4, 48, local(), slowmo.clone(), Some(spec),
+                        ExecMode::Sim);
+        let thr = quade(&s, 4, 48, local(), slowmo, Some(spec),
+                        ExecMode::Threaded);
+        assert_backends_agree(&sim, &thr, spec);
+    }
+}
+
+#[test]
+fn threaded_rejects_chaos() {
+    // Chaos charges simulated time; the threaded backend measures a
+    // real clock, so the combination is a hard configuration error, not
+    // a silent no-op.
+    let Some(s) = session() else { return };
+    let err = s
+        .train("quad")
+        .algo_sel(local())
+        .workers(4)
+        .steps(16)
+        .seed(11)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::free())
+        .compute_time(1e-6)
+        .exec(ExecMode::Threaded)
+        .chaos_opt(Some(net_chaos()))
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sim-only"), "{msg}");
+}
+
+#[test]
+#[ignore] // expensive: m=32 × repeated runs; run with --ignored
+fn threaded_high_concurrency_stress() {
+    // Far more workers than cores: the spin-then-yield receive path
+    // must stay deterministic under heavy oversubscription. Repeated
+    // same-seed threaded runs are bit-identical, and all equal sim.
+    let Some(s) = session() else { return };
+    let sgp = AlgoSel::with_inner("sgp", sgd());
+    let slowmo = Some(SlowMoCfg::new(1.0, 0.6, 8));
+    let sim = quade(&s, 32, 96, sgp.clone(), slowmo.clone(), None,
+                    ExecMode::Sim);
+    for round in 0..3 {
+        let thr = quade(&s, 32, 96, sgp.clone(), slowmo.clone(), None,
+                        ExecMode::Threaded);
+        assert_backends_agree(&sim, &thr, &format!("round {round}"));
+    }
 }
