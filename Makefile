@@ -11,7 +11,7 @@ help:
 	@echo ""
 	@echo "experiment sweeps (cargo run --release -- exp <id> --scale <s>):"
 	@echo "  table1|table2|fig2|fig3|figb2|tableb23|tableb4|doubleavg|"
-	@echo "  noaverage|outers|compress|hier|theory|throughput|all"
+	@echo "  noaverage|outers|compress|hier|semisync|theory|throughput|all"
 	@echo "scales: ci|quick|standard|full (exp default: quick; bench"
 	@echo "honours SLOWMO_SCALE, default ci)"
 

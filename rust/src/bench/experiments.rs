@@ -799,6 +799,130 @@ pub fn hier(env: &Env, task: &TaskSpec) -> Result<Table> {
     Ok(table)
 }
 
+// --------------------------------------------------------------- semisync
+
+/// Semi-synchronous boundary sweep (`slowmo exp semisync`): a
+/// `q × staleness × straggler-severity` grid on one task, Local base +
+/// SlowMo, fixed per-step compute so the sim-time column isolates the
+/// boundary barrier. Severity `f` runs worker 1 at an `f`-fold compute
+/// slowdown via the chaos layer (`straggle=1:f`); `q = m` is the
+/// blocking baseline (bitwise-identical to no quorum at all, asserted
+/// in `rust/tests/equivalences.rs`).
+///
+/// Emits `results/BENCH_semisync.json` (schema `bench-semisync/v1`,
+/// checked in at `results/BENCH_semisync.schema.json`) and *asserts*
+/// the headline claim: under a 4x straggler, every `q < m` cell
+/// finishes in strictly less simulated time than the blocking run at
+/// equal steps.
+pub fn semisync(env: &Env, task: &TaskSpec) -> Result<Table> {
+    use crate::jsonx::Json;
+    use crate::net::ChaosCfg;
+    let mut table = Table::new(
+        "Semi-sync boundary sweep (Local base + SlowMo, straggler)",
+        &["q", "staleness", "straggle", "sim time (s)", "misses",
+          "folds", "best train loss", "final val loss"],
+    );
+    let m = env.scale.m();
+    let tau = env.scale.tau_local();
+    // Descending so the q = m blocking baseline for each severity runs
+    // first — the q < m cells assert strict sim-time wins against it.
+    let qs: Vec<usize> = {
+        let mut v = vec![m, m.saturating_sub(1), m / 2 + 1];
+        v.retain(|&q| q >= 1);
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v.dedup();
+        v
+    };
+    let stalenesses: [u64; 2] = [0, 1];
+    let severities: [f64; 2] = [1.0, 4.0];
+    let mut entries: Vec<Json> = Vec::new();
+    // sim_time of the q = m blocking baseline, keyed by severity index.
+    let mut blocking: Vec<f64> = vec![0.0; severities.len()];
+    for (si, &sev) in severities.iter().enumerate() {
+        for &q in &qs {
+            for &s in &stalenesses {
+                if q == m && s > 0 {
+                    continue; // no late workers to fold at q = m
+                }
+                let mut b = cell(
+                    env,
+                    task,
+                    AlgoSel::with_inner("local", task.inner),
+                    Some(slowmo_for(task, tau)),
+                    0,
+                )
+                // Fixed compute charge: the sim-time column compares
+                // barrier behavior, not host timing noise.
+                .compute_time(5e-3)
+                .quorum(q)
+                .staleness(s);
+                if sev > 1.0 {
+                    b = b.chaos(
+                        format!("straggle=1:{sev}")
+                            .parse::<ChaosCfg>()
+                            .map_err(anyhow::Error::msg)?,
+                    );
+                }
+                let r = run_cell(env, b)?;
+                if q == m {
+                    blocking[si] = r.sim_time;
+                } else if sev > 1.0 {
+                    // The acceptance claim, enforced: relaxing the
+                    // barrier must strictly beat blocking on simulated
+                    // wall-clock under a straggler at equal steps.
+                    anyhow::ensure!(
+                        r.sim_time < blocking[si],
+                        "semisync(q={q},s={s},straggle={sev}) took \
+                         {:.3}s sim but blocking took {:.3}s — the \
+                         quorum must strictly cut straggler stalls",
+                        r.sim_time,
+                        blocking[si]
+                    );
+                }
+                table.row(&[
+                    q.to_string(),
+                    s.to_string(),
+                    format!("{sev}"),
+                    format!("{:.3}", r.sim_time),
+                    r.quorum_misses.to_string(),
+                    r.stale_folds.to_string(),
+                    fmt4(r.best_train_loss),
+                    fmt4(r.final_eval_loss),
+                ]);
+                entries.push(Json::obj(vec![
+                    ("q", Json::num(q as f64)),
+                    ("staleness", Json::num(s as f64)),
+                    ("straggle", Json::num(sev)),
+                    ("sim_time", Json::num(r.sim_time)),
+                    ("quorum_misses", Json::num(r.quorum_misses as f64)),
+                    ("stale_folds", Json::num(r.stale_folds as f64)),
+                    ("best_train_loss", Json::num(r.best_train_loss)),
+                    ("final_eval_loss", Json::num(r.final_eval_loss)),
+                    ("best_eval_metric", Json::num(r.best_eval_metric)),
+                    ("bytes_sent", Json::num(r.bytes_sent as f64)),
+                ]));
+            }
+        }
+    }
+    table.print();
+    table.write_json(&env.out_path("semisync.json"))?;
+    let bench = Json::obj(vec![
+        ("schema", Json::str("bench-semisync/v1")),
+        ("preset", Json::str(&task.preset)),
+        ("m", Json::num(m as f64)),
+        ("steps", Json::num(env.scale.steps() as f64)),
+        ("tau", Json::num(tau as f64)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = env.out_path("BENCH_semisync.json");
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, crate::jsonx::to_string(&bench))?;
+    crate::info!("wrote {path}");
+    Ok(table)
+}
+
 // ------------------------------------------------------------- throughput
 
 /// Wall-clock throughput trajectory (`slowmo exp throughput`): the same

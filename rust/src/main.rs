@@ -85,6 +85,19 @@ fn app() -> App {
                                  seed=N,delay=2ms,delay-max=20ms,\
                                  drop=0.05,rto=1ms,retries=3,reorder=4,\
                                  straggle=W:F,fault=W@T..R (empty = off)"))
+                .flag(Flag::opt("quorum", "",
+                                "semi-synchronous outer boundary: the \
+                                 outer average proceeds once Q of M \
+                                 workers arrive; late workers miss the \
+                                 round and resync at the next boundary \
+                                 (Q = M or empty = blocking; sim-only, \
+                                 needs --slowmo/--outer and a comm-free \
+                                 base like local)"))
+                .flag(Flag::opt("staleness", "",
+                                "bounded staleness for --quorum: fold a \
+                                 late worker's contribution into the \
+                                 next boundary's average, down-weighted \
+                                 (0 or empty = drop late contributions)"))
                 .flag(Flag::opt("exec", "",
                                 "execution backend: sim (default; \
                                  simulated clock) | threaded (one OS \
@@ -219,6 +232,26 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
                 .map_err(anyhow::Error::msg)?,
         )
     };
+    // Semi-sync boundary knobs stack on --config too (flag wins over the
+    // [outer] table, like the other surfaces).
+    let quorum_spec = args.string("quorum");
+    let builder = if quorum_spec.is_empty() {
+        builder
+    } else {
+        builder.quorum(
+            args.get_parsed::<usize>("quorum")
+                .map_err(anyhow::Error::msg)?,
+        )
+    };
+    let staleness_spec = args.string("staleness");
+    let builder = if staleness_spec.is_empty() {
+        builder
+    } else {
+        builder.staleness(
+            args.get_parsed::<u64>("staleness")
+                .map_err(anyhow::Error::msg)?,
+        )
+    };
     let exec_spec = args.string("exec");
     let builder = if exec_spec.is_empty() {
         builder
@@ -255,6 +288,10 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
     }
     if r.retransmits > 0 {
         println!("chaos retransmits   {}", r.retransmits);
+    }
+    if r.quorum_misses > 0 || r.stale_folds > 0 {
+        println!("quorum misses       {}", r.quorum_misses);
+        println!("stale folds         {}", r.stale_folds);
     }
     println!("wall time           {}", slowmo::util::fmt_secs(r.wall_time));
     r.append_jsonl(&args.string("out"))?;
@@ -329,6 +366,9 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         "hier" => {
             experiments::hier(&env, &tasks[0])?;
         }
+        "semisync" => {
+            experiments::semisync(&env, &tasks[0])?;
+        }
         "theory" => {
             experiments::theory(&env)?;
         }
@@ -345,7 +385,7 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         other => anyhow::bail!(
             "unknown experiment {other:?} (table1|table2|fig2|fig3|figb2|\
              tableb23|tableb4|doubleavg|noaverage|outers|compress|hier|\
-             theory|throughput|all)"
+             semisync|theory|throughput|all)"
         ),
     }
     println!("\n[exp {which} done in {}]",

@@ -192,8 +192,31 @@ impl std::str::FromStr for ChaosCfg {
                         format!("chaos reorder: bad window {v:?}")
                     })?;
                 }
-                "straggle" => cfg.stragglers.push(Self::parse_straggler(v)?),
-                "fault" => cfg.faults.push(Self::parse_fault(v)?),
+                "straggle" => {
+                    let (w, f) = Self::parse_straggler(v)?;
+                    if cfg.stragglers.iter().any(|&(ww, _)| ww == w) {
+                        return Err(format!(
+                            "chaos spec: duplicate straggle entry for \
+                             worker {w}"
+                        ));
+                    }
+                    cfg.stragglers.push((w, f));
+                }
+                "fault" => {
+                    let fw = Self::parse_fault(v)?;
+                    if cfg.faults.iter().any(|f| {
+                        f.worker == fw.worker
+                            && f.fail_at < fw.rejoin_at
+                            && fw.fail_at < f.rejoin_at
+                    }) {
+                        return Err(format!(
+                            "chaos spec: overlapping fault windows for \
+                             worker {}",
+                            fw.worker
+                        ));
+                    }
+                    cfg.faults.push(fw);
+                }
                 other => {
                     return Err(format!(
                         "chaos spec: unknown key {other:?} (seed|delay|\
@@ -244,12 +267,18 @@ impl ChaosPlan {
             cfg.reorder_window >= 1,
             "chaos: reorder_window must be >= 1"
         );
+        let mut straggling = vec![false; m];
         for &(w, f) in &cfg.stragglers {
             ensure!(w < m, "chaos: straggler worker {w} out of range (m={m})");
             ensure!(
                 f.is_finite() && f > 0.0,
                 "chaos: straggler factor for worker {w} must be > 0"
             );
+            ensure!(
+                !straggling[w],
+                "chaos: duplicate straggler entry for worker {w}"
+            );
+            straggling[w] = true;
         }
         let mut by_worker: Vec<Vec<FaultWindow>> = vec![Vec::new(); m];
         for f in &cfg.faults {
@@ -712,6 +741,45 @@ mod tests {
         let e = "fault=2".parse::<ChaosCfg>().unwrap_err();
         assert!(e.contains("worker@fail"), "{e}");
         assert!("seed".parse::<ChaosCfg>().is_err());
+    }
+
+    #[test]
+    fn spec_rejects_duplicate_stragglers_naming_the_worker() {
+        let e = "straggle=1:4, straggle=1:2"
+            .parse::<ChaosCfg>()
+            .unwrap_err();
+        assert!(e.contains("duplicate straggle"), "{e}");
+        assert!(e.contains("worker 1"), "{e}");
+        // Distinct workers stay fine.
+        let cfg: ChaosCfg = "straggle=0:2, straggle=1:4".parse().unwrap();
+        assert_eq!(cfg.stragglers, vec![(0, 2.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn spec_rejects_overlapping_fault_windows_naming_the_worker() {
+        let e = "fault=2@1..5, fault=2@3..7".parse::<ChaosCfg>().unwrap_err();
+        assert!(e.contains("overlapping fault windows"), "{e}");
+        assert!(e.contains("worker 2"), "{e}");
+        // A never-rejoining window overlaps everything after it.
+        let e = "fault=0@2, fault=0@9..10".parse::<ChaosCfg>().unwrap_err();
+        assert!(e.contains("worker 0"), "{e}");
+        // Touching windows ([1,3) then [3,5)) and distinct workers are fine.
+        let cfg: ChaosCfg =
+            "fault=1@1..3, fault=1@3..5, fault=2@1..5".parse().unwrap();
+        assert_eq!(cfg.faults.len(), 3);
+    }
+
+    #[test]
+    fn plan_rejects_duplicate_stragglers_from_programmatic_cfgs() {
+        // The TOML/builder path pushes entries directly into ChaosCfg,
+        // bypassing FromStr — ChaosPlan::new must catch duplicates too.
+        let dup = ChaosCfg {
+            stragglers: vec![(1, 4.0), (1, 2.0)],
+            ..ChaosCfg::default()
+        };
+        let e = ChaosPlan::new(dup, 4, &CostModel::free()).unwrap_err();
+        assert!(e.to_string().contains("duplicate straggler"), "{e}");
+        assert!(e.to_string().contains("worker 1"), "{e}");
     }
 
     #[test]

@@ -302,6 +302,23 @@ impl Fabric {
         self.chunks.send(from, to, (tag, data));
     }
 
+    /// Control-plane send on the collective lane: routes a tagged chunk
+    /// like [`Fabric::chunk_send`] but bypasses the byte/message
+    /// accounting and charges no transfer cost. Reserved for zero-cost
+    /// bookkeeping — the boundary arrival-stamp exchange's ~12 B
+    /// payloads, whose barrier the subsequent data transfers already
+    /// pay for — so control traffic never perturbs `bytes_sent` /
+    /// `bytes_raw` / `msgs_sent` relative to the blocking path.
+    pub(crate) fn chunk_send_ctrl(
+        &self,
+        from: usize,
+        to: usize,
+        tag: u64,
+        data: Vec<f32>,
+    ) {
+        self.chunks.send(from, to, (tag, data));
+    }
+
     /// Collective lane: blocking receive of the chunk tagged `want`.
     ///
     /// With static membership every worker receives chunks from a single
@@ -626,6 +643,25 @@ mod tests {
             assert_eq!(a, vec![prev as f32]);
             assert_eq!(b, vec![10.0 + prev as f32]);
         });
+    }
+
+    #[test]
+    fn ctrl_sends_move_data_without_touching_accounting() {
+        // The control plane (boundary arrival stamps) must be invisible
+        // to every byte/message counter, or semisync runs could never be
+        // byte-identical to the blocking path.
+        let inter = CostModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let mut f = Fabric::new(4, CostModel::free());
+        f.set_tiers(
+            Arc::new(crate::topology::Groups::parse("0-1|2-3", 4).unwrap()),
+            inter,
+        );
+        f.chunk_send_ctrl(0, 2, 42, vec![1.0, 2.0, 3.0]);
+        assert_eq!(f.chunk_recv_tag(2, 42), vec![1.0, 2.0, 3.0]);
+        assert_eq!(f.bytes_sent(), 0);
+        assert_eq!(f.bytes_raw(), 0);
+        assert_eq!(f.msgs_sent(), 0);
+        assert_eq!(f.bytes_inter(), 0, "even across the slow tier");
     }
 
     #[test]

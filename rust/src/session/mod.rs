@@ -272,6 +272,8 @@ pub struct TrainBuilder<'s> {
     algo_spec: Option<String>,
     outer_spec: Option<String>,
     outer_tau: Option<u64>,
+    quorum: Option<usize>,
+    staleness: Option<u64>,
     compress_spec: Option<String>,
     /// (partition spec, two_level) — see [`TrainBuilder::groups`].
     groups_spec: Option<(String, bool)>,
@@ -296,6 +298,8 @@ impl<'s> TrainBuilder<'s> {
             algo_spec: None,
             outer_spec: None,
             outer_tau: None,
+            quorum: None,
+            staleness: None,
             compress_spec: None,
             groups_spec: None,
             tau_inner: None,
@@ -375,6 +379,29 @@ impl<'s> TrainBuilder<'s> {
     /// otherwise.
     pub fn tau(mut self, tau: u64) -> Self {
         self.outer_tau = Some(tau);
+        self
+    }
+
+    /// Semi-synchronous outer boundaries: the outer average proceeds as
+    /// soon as `q` of the `m` workers reach the boundary; late workers
+    /// miss the round (survivor-rescaled mean) and resynchronize at the
+    /// next boundary. `q = m` is bitwise-identical to the blocking
+    /// path. Requires an outer wrapper with the exact average on, a
+    /// communication-free base algorithm, and the sim backend; hard
+    /// errors otherwise at build/run time.
+    pub fn quorum(mut self, q: usize) -> Self {
+        self.quorum = Some(q);
+        self
+    }
+
+    /// Bounded staleness `s` for semi-synchronous boundaries: a
+    /// quorum-late worker's parameters are folded into the *next*
+    /// boundary's average, down-weighted by
+    /// [`crate::slowmo::STALE_LAMBDA`], instead of dropped. `s = 0`
+    /// (the default) drops late contributions. Requires
+    /// [`TrainBuilder::quorum`]; an error at build time otherwise.
+    pub fn staleness(mut self, s: u64) -> Self {
+        self.staleness = Some(s);
         self
     }
 
@@ -583,6 +610,8 @@ impl<'s> TrainBuilder<'s> {
     /// rule = "adam:0.9,0.95"    # enables the wrapper on its own, or
     /// tau = 16                  # overrides [slowmo]'s rule when both
     ///                           # sections are present
+    /// quorum = 3                # semi-sync boundary: proceed at q-of-m
+    /// staleness = 1             # fold late workers in (0 = drop them)
     ///
     /// [compress]                # communication compression
     /// spec = "ef:topk:0.1"      # CompressRegistry spec string
@@ -695,6 +724,26 @@ impl<'s> TrainBuilder<'s> {
                     "[outer] tau must be an integer >= 1 (got {f})"
                 );
                 self.outer_tau = Some(f as u64);
+            }
+            if let Some(v) = c.get("outer", "quorum") {
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow!("[outer] quorum must be a number")
+                })?;
+                ensure!(
+                    f >= 1.0 && f.fract() == 0.0,
+                    "[outer] quorum must be an integer >= 1 (got {f})"
+                );
+                self.quorum = Some(f as usize);
+            }
+            if let Some(v) = c.get("outer", "staleness") {
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow!("[outer] staleness must be a number")
+                })?;
+                ensure!(
+                    f >= 0.0 && f.fract() == 0.0,
+                    "[outer] staleness must be an integer >= 0 (got {f})"
+                );
+                self.staleness = Some(f as u64);
             }
         }
         if c.sections.contains_key("compress") {
@@ -901,6 +950,24 @@ impl<'s> TrainBuilder<'s> {
                 None => bail!(
                     "tau() requires an outer wrapper — set slowmo(..) or \
                      outer(..) first"
+                ),
+            }
+        }
+        if let Some(q) = self.quorum {
+            match &mut cfg.slowmo {
+                Some(s) => s.quorum = Some(q),
+                None => bail!(
+                    "quorum() requires an outer wrapper — set slowmo(..) \
+                     or outer(..) first"
+                ),
+            }
+        }
+        if let Some(st) = self.staleness {
+            match &mut cfg.slowmo {
+                Some(s) => s.staleness = st,
+                None => bail!(
+                    "staleness() requires an outer wrapper — set \
+                     slowmo(..) or outer(..) first"
                 ),
             }
         }
@@ -1175,6 +1242,62 @@ exact_average = false
         assert_eq!(s.outer, crate::slowmo::OuterSel::slowmo(1.0, 0.5));
         assert_eq!(s.buffers, BufferStrategy::Maintain);
         assert!(!s.exact_average);
+    }
+
+    #[test]
+    fn quorum_and_staleness_flow_through_builder_and_toml() {
+        // Builder path.
+        let cfg = TrainBuilder::new("quad")
+            .slowmo(0.5, 8)
+            .quorum(3)
+            .staleness(1)
+            .build_cfg()
+            .unwrap();
+        let s = cfg.slowmo.as_ref().unwrap();
+        assert_eq!(s.quorum, Some(3));
+        assert_eq!(s.staleness, 1);
+        // Without an outer wrapper both knobs are build-time errors.
+        let e = TrainBuilder::new("quad")
+            .quorum(2)
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("outer wrapper"), "{e}");
+        let e = TrainBuilder::new("quad")
+            .staleness(1)
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("outer wrapper"), "{e}");
+        // TOML path, including hard type errors.
+        let toml = "[outer]\nrule = \"slowmo:0.5\"\nquorum = 3\n\
+                    staleness = 1\n";
+        let c = Config::parse(toml).unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        let s = cfg.slowmo.as_ref().unwrap();
+        assert_eq!(s.quorum, Some(3));
+        assert_eq!(s.staleness, 1);
+        let bad = Config::parse(
+            "[outer]\nrule = \"avg\"\nquorum = \"three\"\n",
+        )
+        .unwrap();
+        let e = TrainBuilder::new("quad")
+            .config(&bad)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("quorum must be a number"), "{e}");
+        let bad =
+            Config::parse("[outer]\nrule = \"avg\"\nstaleness = 1.5\n")
+                .unwrap();
+        let e = TrainBuilder::new("quad")
+            .config(&bad)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("staleness must be an integer"), "{e}");
     }
 
     #[test]

@@ -382,6 +382,11 @@ pub fn test_two_level_average(
 /// bit-identical everywhere after a boundary, so prefer the fast link),
 /// falling back to the globally lowest survivor when the whole group was
 /// down. Deterministic — both endpoints compute it independently.
+///
+/// The semi-sync quorum boundary reuses this with `live` = the quorum
+/// ring (sorted worker ids), so a quorum-late worker resyncs from the
+/// same shipper a fault-window rejoiner would — the `live`-subset
+/// machinery here is agnostic to *which* authority shrank the group.
 pub(crate) fn rejoin_shipper(
     hier: Option<&Groups>,
     live: &[usize],

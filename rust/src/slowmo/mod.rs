@@ -50,6 +50,31 @@ fn rejoin_tags(t: u64) -> (u64, u64) {
     (REJOIN_FLAG | (t << 1), REJOIN_FLAG | (t << 1) | 1)
 }
 
+/// Chunk-lane tags for the semi-synchronous boundary machinery: arrival
+/// stamps, stale-contribution folds and the folded-mean broadcast at
+/// boundary `t`. Bits 63+62 together keep them clear of both collective
+/// tags (bit 63 never set) and rejoin tags (bit 63 alone); the sender id
+/// keeps same-boundary messages from different peers distinct.
+const SEMISYNC_FLAG: u64 = (1 << 63) | (1 << 62);
+
+fn stamp_tag(t: u64, from: usize) -> u64 {
+    SEMISYNC_FLAG | (t << 18) | ((from as u64) << 2)
+}
+
+fn fold_tag(t: u64, from: usize) -> u64 {
+    SEMISYNC_FLAG | (t << 18) | ((from as u64) << 2) | 1
+}
+
+fn foldb_tag(t: u64) -> u64 {
+    SEMISYNC_FLAG | (t << 18) | 2
+}
+
+/// Down-weight λ applied to a stale (one-boundary-old) contribution when
+/// it is folded into the next boundary's quorum average:
+/// `x' = (|Q|·x̄ + λ·Σ x̃_j) / (|Q| + λ·k)`. Exposed so tests and
+/// harnesses can compute the reference fold serially.
+pub const STALE_LAMBDA: f32 = 0.5;
+
 /// How base-optimizer buffers are treated at each outer boundary
 /// (paper Alg. 1 line 2; App. B.4 ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -102,6 +127,21 @@ pub struct SlowMoCfg {
     pub buffers: BufferStrategy,
     /// `false` = skip line 6 (SGP-SlowMo-noaverage, §6).
     pub exact_average: bool,
+    /// Semi-synchronous boundary quorum: with `Some(q)`, `q < m`, the
+    /// outer average proceeds over the `q` earliest boundary arrivals
+    /// (by arrival stamp, worker id breaking ties) and later workers are
+    /// handled per `staleness`. `None` — or `q >= m` — is the blocking
+    /// barrier. Sim-only when effective; validated at run start.
+    pub quorum: Option<usize>,
+    /// Bounded staleness for quorum-late contributions: `0` drops them
+    /// (elastic fault-window semantics — the late worker freezes one
+    /// round, then resyncs by pulling the fresh outer state), `>= 1`
+    /// additionally folds the stale contribution into the next
+    /// boundary's average, down-weighted by [`STALE_LAMBDA`]. The
+    /// lockstep boundary schedule never produces an age above 1, so
+    /// every `s >= 1` behaves identically; the knob bounds the accepted
+    /// age.
+    pub staleness: u64,
 }
 
 impl SlowMoCfg {
@@ -124,6 +164,8 @@ impl SlowMoCfg {
             tau,
             buffers: BufferStrategy::Reset,
             exact_average: true,
+            quorum: None,
+            staleness: 0,
         }
     }
 
@@ -137,6 +179,19 @@ impl SlowMoCfg {
         self
     }
 
+    /// Semi-synchronous boundary quorum (see the `quorum` field).
+    pub fn with_quorum(mut self, q: usize) -> Self {
+        self.quorum = Some(q);
+        self
+    }
+
+    /// Bounded staleness for quorum-late contributions (see the
+    /// `staleness` field).
+    pub fn with_staleness(mut self, s: u64) -> Self {
+        self.staleness = s;
+        self
+    }
+
     /// Structural validation (run before any boundary arithmetic).
     pub fn validate(&self) -> Result<()> {
         ensure!(
@@ -144,6 +199,23 @@ impl SlowMoCfg {
             "slowmo tau must be >= 1 (got {})",
             self.tau
         );
+        if let Some(q) = self.quorum {
+            ensure!(q >= 1, "slowmo quorum must be >= 1 (got {q})");
+            ensure!(
+                self.exact_average,
+                "slowmo quorum requires the exact average (the quorum \
+                 gates the boundary collective; noaverage has no \
+                 barrier to relax)"
+            );
+        } else {
+            ensure!(
+                self.staleness == 0,
+                "slowmo staleness requires a quorum (it bounds the age \
+                 of quorum-late contributions; got staleness {} with no \
+                 quorum)",
+                self.staleness
+            );
+        }
         Ok(())
     }
 
@@ -166,6 +238,21 @@ pub struct OuterState {
     pub opt: OuterOptState,
     /// Outer iterations completed.
     pub t: u64,
+    /// Semi-sync: did this worker miss the previous boundary's quorum?
+    /// (It resyncs — pulls the fresh outer state — at the next one.)
+    pub late: bool,
+    /// Semi-sync: stale contribution snapshot awaiting the next-boundary
+    /// fold (`staleness >= 1` only).
+    pub pending: Option<Vec<f32>>,
+    /// Semi-sync: ring size at the last boundary this worker observed
+    /// (0 = none yet, i.e. the rule state is still all-zero) — replaces
+    /// the chaos plan's static contributor-count bookkeeping when the
+    /// quorum decides membership dynamically.
+    pub prev_ring: usize,
+    /// Boundaries where this worker missed the quorum.
+    pub quorum_misses: u64,
+    /// Stale contributions of this worker folded at a later boundary.
+    pub stale_folds: u64,
 }
 
 impl OuterState {
@@ -174,6 +261,11 @@ impl OuterState {
             x0: init.to_vec(),
             opt: rule.init(init.len()),
             t: 0,
+            late: false,
+            pending: None,
+            prev_ring: 0,
+            quorum_misses: 0,
+            stale_folds: 0,
         }
     }
 
@@ -296,65 +388,111 @@ pub fn outer_update_g(
             // shipper (the lowest live rank in this worker's group under
             // hierarchy — post-boundary state is bit-identical everywhere,
             // so prefer the fast link — else the lowest-ranked
-            // contributor). The state payload carries the shipper's clock
-            // in its last two slots; the state cannot arrive before the
-            // shipper finished computing it.
+            // contributor).
             let shipper =
                 hier::rejoin_shipper(hier, &plan.contributors(t), worker);
-            let (tag_x, tag_u) = rejoin_tags(t);
-            let x0 = fabric.chunk_recv_tag(worker, tag_x);
-            let mut payload = fabric.chunk_recv_tag(worker, tag_u);
-            // A short (or otherwise misshaped) payload would silently
-            // zero-fill the clock and corrupt the rule state — hard error
-            // instead, naming the worker and boundary.
-            ensure!(
-                x0.len() == d && payload.len() == state_msg_len,
-                "rejoin state transfer corrupt at worker {worker}, outer \
-                 boundary {t}: got x0 {} / state {} elems, want {d} / {} \
-                 (outer rule {:?} carries {} buffer(s), compressor {} \
-                 error-feedback buffer(s))",
-                x0.len(),
-                payload.len(),
-                state_msg_len,
-                rule.key(),
-                rule.n_bufs(),
-                ef_bufs
+            return pull_rejoin_state(
+                rule, fabric, worker, shipper, state, outer, clock, codec,
             );
-            let lo = payload.pop().expect("payload length checked");
-            let hi = payload.pop().expect("payload length checked");
-            let leader_clock = clock_from_f32s(hi, lo);
-            let link = fabric.cost_for_link(shipper, worker);
-            clock = clock.max(leader_clock)
-                + link.xfer_time(d)
-                + link.xfer_time(state_msg_len);
-            outer.x0 = x0;
-            for (i, buf) in outer.opt.bufs.iter_mut().enumerate() {
-                buf.copy_from_slice(&payload[i * d..(i + 1) * d]);
-            }
-            if let Some(c) = codec {
-                // Residuals from before the outage are stale (they missed
-                // every membership rescale) — drop them all, then install
-                // what the leader shipped.
-                state.comp.clear_residuals();
-                let base = rule.n_bufs() * d;
-                let views: Vec<&[f32]> = (0..ef_bufs)
-                    .map(|i| &payload[base + i * d..base + (i + 1) * d])
-                    .collect();
-                c.install_rejoin_state(&mut state.comp, &views);
-            }
-            state.x.copy_from_slice(&outer.x0);
-            state.w = 1.0;
-            state.z.copy_from_slice(&state.x);
-            // Buffers from before the outage are stale — always reset.
-            state.reset_buffers();
-            outer.t += 1;
-            return Ok(clock);
         }
     }
     let group: Vec<usize> = match chaos {
         Some(plan) => plan.contributors(t),
         None => (0..fabric.m()).collect(),
     };
+
+    // Semi-synchronous quorum: with `quorum = Some(q)`, q < m, the
+    // boundary proceeds over the q earliest arrivals and everyone else
+    // is "late" — dropped-and-rescaled (staleness 0, the elastic
+    // fault-window semantics) or folded into the next boundary's average
+    // (staleness >= 1). Fault windows and quorum are mutually exclusive
+    // (validated at run start), so under semisync `group` is always the
+    // full worker set.
+    let semisync = cfg.quorum.is_some_and(|q| q < fabric.m());
+    // The workers entering this boundary's collectives.
+    let mut ring = group.clone();
+    // Quorum-late-at-(t-1) workers resyncing now: they pull state like
+    // fault-window rejoiners (and, with staleness >= 1, first ship their
+    // stale contribution to the collector for the fold).
+    let mut resyncers: Vec<usize> = Vec::new();
+    let barrier =
+        cfg.exact_average || cfg.buffers == BufferStrategy::Average;
+    if barrier && group.len() > 1 {
+        // Boundary arrival stamps (control plane, uncharged). Everyone
+        // needs them: a synchronous collective cannot complete before
+        // its last member arrives, so blocking participants charge the
+        // max arrival stamp; under semisync the stamps select the quorum
+        // deterministically on every participant.
+        let stamps =
+            exchange_stamps(fabric, worker, &group, t, clock, outer.late)?;
+        if semisync {
+            resyncers = stamps
+                .iter()
+                .filter(|s| s.late)
+                .map(|s| s.worker)
+                .collect();
+            let mut cand: Vec<&Stamp> =
+                stamps.iter().filter(|s| !s.late).collect();
+            cand.sort_by(|a, b| {
+                a.clock.total_cmp(&b.clock).then(a.worker.cmp(&b.worker))
+            });
+            let q = cfg.quorum.unwrap_or(usize::MAX).min(cand.len());
+            ring = cand[..q].iter().map(|s| s.worker).collect();
+            ring.sort_unstable();
+        }
+        if ring.contains(&worker) {
+            // The collective's entry time is its slowest member's
+            // arrival (satellite audit: late arrivals previously charged
+            // only their own clock, understating the barrier).
+            clock = stamps
+                .iter()
+                .filter(|s| ring.contains(&s.worker))
+                .fold(clock, |c, s| c.max(s.clock));
+        }
+    }
+    if semisync {
+        let n_ring = ring.len();
+        if outer.late {
+            // I missed the previous boundary's quorum. With staleness
+            // >= 1 my frozen snapshot still joins this boundary's
+            // average (shipped to the collector, charged honestly);
+            // either way I resync by pulling the fresh outer state.
+            outer.late = false;
+            if let Some(snap) = outer.pending.take() {
+                let collector = ring[0];
+                let link = fabric.cost_for_link(worker, collector);
+                let mut msg = snap;
+                msg.extend_from_slice(&clock_to_f32s(clock));
+                fabric.chunk_send(
+                    worker,
+                    collector,
+                    fold_tag(t, worker),
+                    msg,
+                );
+                clock += link.xfer_time(d + 2);
+                outer.stale_folds += 1;
+            }
+            outer.prev_ring = n_ring;
+            let shipper = hier::rejoin_shipper(hier, &ring, worker);
+            return pull_rejoin_state(
+                rule, fabric, worker, shipper, state, outer, clock, codec,
+            );
+        }
+        if !ring.contains(&worker) {
+            // Late this boundary: the ring proceeds without me; I freeze
+            // (keeping my own clock — semisync's whole point) and resync
+            // next boundary. staleness >= 1 keeps the contribution for
+            // the fold instead of dropping it.
+            outer.quorum_misses += 1;
+            outer.late = true;
+            if cfg.staleness >= 1 {
+                outer.pending = Some(state.x.clone());
+            }
+            outer.prev_ring = n_ring;
+            outer.t += 1;
+            return Ok(clock);
+        }
+    }
 
     // Line 6: exact average x_{t,tau} over the live group (skip for the
     // noaverage variant) — flat ring, or the hierarchical two-level
@@ -374,7 +512,7 @@ pub fn outer_update_g(
                 fabric,
                 hier,
                 worker,
-                &group,
+                &ring,
                 x,
                 comp,
                 clock,
@@ -387,11 +525,89 @@ pub fn outer_update_g(
         algo.on_exact_average(state);
     }
 
+    // Bounded-staleness fold: each resyncer shipped its boundary-(t-1)
+    // contribution; the collector (lowest ring rank) down-weights those
+    // into the fresh ring mean —
+    //   x' = (|Q|·x̄ + λ·Σ x̃_j) / (|Q| + λ·k),  λ = STALE_LAMBDA —
+    // then re-broadcasts the folded mean (packed-clock payload, the
+    // leader-broadcast causality rule) so the ring stays
+    // bit-synchronized.
+    if cfg.exact_average && cfg.staleness >= 1 && !resyncers.is_empty() {
+        let collector = ring[0];
+        if worker == collector {
+            let qn = ring.len() as f32;
+            let mut acc: Vec<f32> =
+                state.x.iter().map(|&v| v * qn).collect();
+            let mut weight = qn;
+            for &r in &resyncers {
+                let mut payload =
+                    fabric.chunk_recv_tag(worker, fold_tag(t, r));
+                ensure!(
+                    payload.len() == d + 2,
+                    "stale fold payload corrupt at worker {worker}, \
+                     outer boundary {t}: got {} elems from worker {r}, \
+                     want {}",
+                    payload.len(),
+                    d + 2
+                );
+                let lo = payload.pop().expect("fold length checked");
+                let hi = payload.pop().expect("fold length checked");
+                let link = fabric.cost_for_link(r, worker);
+                clock = clock.max(clock_from_f32s(hi, lo))
+                    + link.xfer_time(d + 2);
+                for (a, v) in acc.iter_mut().zip(&payload) {
+                    *a += STALE_LAMBDA * v;
+                }
+                weight += STALE_LAMBDA;
+            }
+            for (x, a) in state.x.iter_mut().zip(&acc) {
+                *x = a / weight;
+            }
+            let mut msg = state.x.clone();
+            msg.extend_from_slice(&clock_to_f32s(clock));
+            for &r in &ring[1..] {
+                fabric.chunk_send(worker, r, foldb_tag(t), msg.clone());
+                clock +=
+                    fabric.cost_for_link(worker, r).xfer_time(d + 2);
+            }
+        } else {
+            let mut msg = fabric.chunk_recv_tag(worker, foldb_tag(t));
+            ensure!(
+                msg.len() == d + 2,
+                "folded-mean broadcast corrupt at worker {worker}, \
+                 outer boundary {t}: got {} elems, want {}",
+                msg.len(),
+                d + 2
+            );
+            let lo = msg.pop().expect("broadcast length checked");
+            let hi = msg.pop().expect("broadcast length checked");
+            let link = fabric.cost_for_link(collector, worker);
+            clock = clock.max(clock_from_f32s(hi, lo))
+                + link.xfer_time(d + 2);
+            state.x.copy_from_slice(&msg);
+        }
+    }
+
     // Elastic membership: the rule state (and any codec residuals)
-    // aggregate displacement mass over the live group; rescale by the
+    // aggregate displacement mass over the ring; rescale by the
     // live-count ratio when membership changed since the previous
-    // boundary.
-    if let Some(plan) = chaos {
+    // boundary. Under semisync the quorum decides membership, so the
+    // previous ring size is the per-worker bookkeeping from the stamp
+    // exchange (prev_ring == 0 means no boundary observed yet — the
+    // rule state is still all-zero, nothing to rescale); otherwise it
+    // is the chaos plan's static contributor count.
+    if semisync {
+        let live = ring.len();
+        let prev = outer.prev_ring;
+        if prev != 0 && live != prev {
+            let factor = live as f32 / prev as f32;
+            rule.scale_state(&mut outer.opt, factor);
+            if codec.is_some() {
+                state.comp.scale_residuals(factor);
+            }
+        }
+        outer.prev_ring = live;
+    } else if let Some(plan) = chaos {
         let live = group.len();
         let prev = plan.contributor_count_before(t);
         if live != prev {
@@ -411,14 +627,21 @@ pub fn outer_update_g(
     state.w = 1.0;
     state.z.copy_from_slice(&state.x);
 
-    // Ship the fresh outer state to any workers rejoining right now
-    // (under hierarchy, each rejoiner pulls from its own group's lowest
-    // live rank when one exists — the fast link).
-    if let Some(plan) = chaos {
-        let mine: Vec<usize> = plan
-            .rejoiners(t)
+    // Ship the fresh outer state to any workers rejoining right now —
+    // static fault-window rejoiners, or quorum-late workers resyncing
+    // (under hierarchy, each pulls from its own group's lowest live
+    // rank when one exists — the fast link).
+    let rejoining: Vec<usize> = if semisync {
+        resyncers
+    } else if let Some(plan) = chaos {
+        plan.rejoiners(t)
+    } else {
+        Vec::new()
+    };
+    {
+        let mine: Vec<usize> = rejoining
             .into_iter()
-            .filter(|&r| hier::rejoin_shipper(hier, &group, r) == worker)
+            .filter(|&r| hier::rejoin_shipper(hier, &ring, r) == worker)
             .collect();
         if !mine.is_empty() {
             let (tag_x, tag_u) = rejoin_tags(t);
@@ -458,7 +681,7 @@ pub fn outer_update_g(
                     fabric,
                     hier,
                     worker,
-                    &group,
+                    &ring,
                     h,
                     comp,
                     clock,
@@ -474,7 +697,7 @@ pub fn outer_update_g(
                     fabric,
                     hier,
                     worker,
-                    &group,
+                    &ring,
                     v,
                     comp,
                     clock,
@@ -488,6 +711,132 @@ pub fn outer_update_g(
     }
     outer.t += 1;
     Ok(clock)
+}
+
+/// Rejoin by pulling the post-update `(x0, rule state, codec residuals)`
+/// from `shipper` at boundary `outer.t` — the wire format shared by
+/// static fault-window rejoiners and quorum-late resyncers (whose
+/// previous boundary froze them the same way). The state payload carries
+/// the shipper's clock in its last two slots; the state cannot arrive
+/// before the shipper finished computing it.
+#[allow(clippy::too_many_arguments)]
+fn pull_rejoin_state(
+    rule: &dyn OuterOpt,
+    fabric: &Fabric,
+    worker: usize,
+    shipper: usize,
+    state: &mut WorkerState,
+    outer: &mut OuterState,
+    mut clock: f64,
+    codec: Option<&dyn Compressor>,
+) -> Result<f64> {
+    let t = outer.t;
+    let d = state.x.len();
+    let ef_bufs = codec.map(|c| c.ef_bufs()).unwrap_or(0);
+    let state_msg_len = (rule.n_bufs() + ef_bufs) * d + 2;
+    let (tag_x, tag_u) = rejoin_tags(t);
+    let x0 = fabric.chunk_recv_tag(worker, tag_x);
+    let mut payload = fabric.chunk_recv_tag(worker, tag_u);
+    // A short (or otherwise misshaped) payload would silently
+    // zero-fill the clock and corrupt the rule state — hard error
+    // instead, naming the worker and boundary.
+    ensure!(
+        x0.len() == d && payload.len() == state_msg_len,
+        "rejoin state transfer corrupt at worker {worker}, outer \
+         boundary {t}: got x0 {} / state {} elems, want {d} / {} \
+         (outer rule {:?} carries {} buffer(s), compressor {} \
+         error-feedback buffer(s))",
+        x0.len(),
+        payload.len(),
+        state_msg_len,
+        rule.key(),
+        rule.n_bufs(),
+        ef_bufs
+    );
+    let lo = payload.pop().expect("payload length checked");
+    let hi = payload.pop().expect("payload length checked");
+    let leader_clock = clock_from_f32s(hi, lo);
+    let link = fabric.cost_for_link(shipper, worker);
+    clock = clock.max(leader_clock)
+        + link.xfer_time(d)
+        + link.xfer_time(state_msg_len);
+    outer.x0 = x0;
+    for (i, buf) in outer.opt.bufs.iter_mut().enumerate() {
+        buf.copy_from_slice(&payload[i * d..(i + 1) * d]);
+    }
+    if let Some(c) = codec {
+        // Residuals from before the outage are stale (they missed
+        // every membership rescale) — drop them all, then install
+        // what the leader shipped.
+        state.comp.clear_residuals();
+        let base = rule.n_bufs() * d;
+        let views: Vec<&[f32]> = (0..ef_bufs)
+            .map(|i| &payload[base + i * d..base + (i + 1) * d])
+            .collect();
+        c.install_rejoin_state(&mut state.comp, &views);
+    }
+    state.x.copy_from_slice(&outer.x0);
+    state.w = 1.0;
+    state.z.copy_from_slice(&state.x);
+    // Buffers from before the outage are stale — always reset.
+    state.reset_buffers();
+    outer.t += 1;
+    Ok(clock)
+}
+
+/// One worker's boundary-arrival stamp (control plane).
+struct Stamp {
+    worker: usize,
+    clock: f64,
+    /// Set when the sender missed the previous boundary's quorum and is
+    /// resyncing now (excluded from quorum candidacy this round).
+    late: bool,
+}
+
+/// All-to-all exchange of boundary-arrival stamps among `group`: 12-byte
+/// control messages, charged neither bytes nor simulated time — the data
+/// transfers that follow already pay for the barrier the stamps
+/// establish. Returns one stamp per group member, in group order.
+fn exchange_stamps(
+    fabric: &Fabric,
+    worker: usize,
+    group: &[usize],
+    t: u64,
+    clock: f64,
+    late: bool,
+) -> Result<Vec<Stamp>> {
+    let [hi, lo] = clock_to_f32s(clock);
+    let flag = if late { 1.0 } else { 0.0 };
+    for &peer in group {
+        if peer != worker {
+            fabric.chunk_send_ctrl(
+                worker,
+                peer,
+                stamp_tag(t, worker),
+                vec![hi, lo, flag],
+            );
+        }
+    }
+    group
+        .iter()
+        .map(|&peer| {
+            if peer == worker {
+                return Ok(Stamp { worker: peer, clock, late });
+            }
+            let msg = fabric.chunk_recv_tag(worker, stamp_tag(t, peer));
+            ensure!(
+                msg.len() == 3,
+                "arrival stamp corrupt at worker {worker}, outer \
+                 boundary {t}: got {} elems from worker {peer}, want 3",
+                msg.len()
+            );
+            Ok(Stamp {
+                worker: peer,
+                clock: clock_from_f32s(msg[0], msg[1]),
+                late: msg[2] != 0.0,
+            })
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -976,6 +1325,172 @@ mod tests {
             assert_eq!(ou.x0, out[0].x0);
             assert_eq!(ou.opt, out[0].opt, "moment buffers diverged");
         }
+    }
+
+    #[test]
+    fn blocking_boundary_charges_max_arrival_stamp() {
+        // A synchronous collective cannot complete before its last
+        // member arrives: with a free network the only time a boundary
+        // can charge is the slowest arrival stamp — and every member
+        // must charge exactly that.
+        let m = 3;
+        let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+        let rule = rule_of(&cfg);
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let fabric = Fabric::new(m, CostModel::free());
+        let (states, outers) = mk_states(m, 6);
+        let clocks = run_workers(m, |w| {
+            let mut st = states[w].clone();
+            let mut ou = outers[w].clone();
+            outer_update(&cfg, &*rule, &algo, &fabric, &kernels, w,
+                         &mut st, &mut ou, 0.1, w as f64, None)
+                .unwrap()
+        });
+        for (w, &c) in clocks.iter().enumerate() {
+            assert_eq!(c, 2.0, "worker {w} must leave at the slowest \
+                                arrival");
+        }
+    }
+
+    #[test]
+    fn quorum_drops_late_worker_then_resyncs_bitwise() {
+        let m = 3;
+        let d = 6;
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let fabric = Fabric::new(m, CostModel::free());
+        let (states, outers) = mk_states(m, d);
+        // Arrival stamps are the worker ids, so with q=2 worker 2 is
+        // late and the quorum mean covers workers 0 and 1.
+        let want: Vec<f32> = (0..d)
+            .map(|i| (0..2).map(|w| states[w].x[i]).sum::<f32>() / 2.0)
+            .collect();
+        let cfg0 = SlowMoCfg::new(1.0, 0.0, 4).with_quorum(2);
+        let rule0 = rule_of(&cfg0);
+        let single = run_workers(m, |w| {
+            let mut st = states[w].clone();
+            let mut ou = outers[w].clone();
+            let clock = outer_update(&cfg0, &*rule0, &algo, &fabric,
+                                     &kernels, w, &mut st, &mut ou, 0.1,
+                                     w as f64, None)
+                .unwrap();
+            (st, ou, clock)
+        });
+        for (w, (st, ou, _)) in single.iter().enumerate().take(2) {
+            assert!(allclose(&st.x, &want, 1e-5, 1e-6), "worker {w}");
+            assert_eq!(ou.quorum_misses, 0);
+        }
+        // The late worker froze — parameters untouched, its own clock
+        // kept (semisync's whole point), the miss counted.
+        let (st2, ou2, clock2) = &single[2];
+        assert_eq!(st2.x, states[2].x);
+        assert_eq!(*clock2, 2.0);
+        assert_eq!(ou2.quorum_misses, 1);
+        assert!(ou2.late);
+        assert_eq!(ou2.t, 1, "the boundary index still advances");
+
+        // Second boundary: the late worker resyncs by pulling the fresh
+        // outer state — everyone bit-identical again afterwards.
+        let cfg = SlowMoCfg::new(1.0, 0.5, 4).with_quorum(2);
+        let rule = rule_of(&cfg);
+        let out = run_workers(m, |w| {
+            let mut st = states[w].clone();
+            let mut ou = outers[w].clone();
+            let mut clock = w as f64;
+            for _ in 0..2 {
+                clock = outer_update(&cfg, &*rule, &algo, &fabric,
+                                     &kernels, w, &mut st, &mut ou, 0.1,
+                                     clock, None)
+                    .unwrap();
+            }
+            (st, ou)
+        });
+        for (st, ou) in &out {
+            assert_eq!(ou.t, 2);
+            assert_eq!(st.x, out[0].0.x);
+            assert_eq!(ou.x0, out[0].1.x0);
+            assert_eq!(ou.u(), out[0].1.u());
+        }
+        assert_eq!(out[2].1.quorum_misses, 1);
+        assert!(!out[2].1.late, "resynced");
+    }
+
+    #[test]
+    fn staleness_folds_late_contribution_at_next_boundary() {
+        // s=1: the late worker's boundary-0 snapshot is down-weighted
+        // into boundary 1's quorum mean instead of being dropped.
+        let m = 3;
+        let d = 4;
+        let algo = Local::new(InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 });
+        let kernels = Kernels::Native;
+        let fabric = Fabric::new(m, CostModel::free());
+        let (states, outers) = mk_states(m, d);
+        let cfg = SlowMoCfg::new(1.0, 0.0, 4)
+            .with_quorum(2)
+            .with_staleness(1);
+        let rule = rule_of(&cfg);
+        let out = run_workers(m, |w| {
+            let mut st = states[w].clone();
+            let mut ou = outers[w].clone();
+            let mut clock = w as f64;
+            for _ in 0..2 {
+                clock = outer_update(&cfg, &*rule, &algo, &fabric,
+                                     &kernels, w, &mut st, &mut ou, 0.1,
+                                     clock, None)
+                    .unwrap();
+            }
+            (st, ou)
+        });
+        // Reference serial fold: the boundary-1 ring mean over workers
+        // {0,1} is their shared boundary-0 mean (beta=0, alpha=1 adopts
+        // it; Reset zeroes h so the inner loop is a no-op here), and the
+        // stale snapshot is worker 2's original x.
+        let mean01: Vec<f32> = (0..d)
+            .map(|i| (states[0].x[i] + states[1].x[i]) / 2.0)
+            .collect();
+        let want: Vec<f32> = (0..d)
+            .map(|i| {
+                (2.0 * mean01[i] + STALE_LAMBDA * states[2].x[i])
+                    / (2.0 + STALE_LAMBDA)
+            })
+            .collect();
+        for (st, ou) in &out {
+            assert_eq!(ou.t, 2);
+            assert_eq!(st.x, out[0].0.x);
+            assert!(allclose(&st.x, &want, 1e-6, 1e-7));
+        }
+        assert_eq!(out[2].1.quorum_misses, 1);
+        assert_eq!(out[2].1.stale_folds, 1);
+        assert_eq!(out[0].1.stale_folds, 0);
+    }
+
+    #[test]
+    fn quorum_validation_rejects_degenerate_configs() {
+        let e = SlowMoCfg::new(1.0, 0.5, 4)
+            .with_quorum(0)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("quorum"), "{e}");
+        let e = SlowMoCfg::new(1.0, 0.5, 4)
+            .with_staleness(1)
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("staleness"), "{e}");
+        let e = SlowMoCfg::new(1.0, 0.5, 4)
+            .with_quorum(2)
+            .no_average()
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("exact average"), "{e}");
+        assert!(SlowMoCfg::new(1.0, 0.5, 4)
+            .with_quorum(2)
+            .with_staleness(1)
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -92,6 +92,11 @@ pub trait OuterOpt: Send + Sync {
     /// worker-count ratio (the state aggregates displacement mass over the
     /// live group). Default: scale every buffer linearly; rules with
     /// quadratic buffers (Adam's second moment) override.
+    ///
+    /// Called from two membership authorities, never both in one run: the
+    /// chaos plan's fault windows (static live counts) and the semi-sync
+    /// quorum boundary (dynamic ring sizes tracked per worker in
+    /// `OuterState::prev_ring`).
     fn scale_state(&self, state: &mut OuterOptState, factor: f32) {
         for b in &mut state.bufs {
             for v in b.iter_mut() {

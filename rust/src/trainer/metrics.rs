@@ -85,6 +85,12 @@ pub struct TrainResult {
     pub bytes_inter: u64,
     /// Chaos-layer retransmitted messages (0 without a chaos plan).
     pub retransmits: u64,
+    /// Semi-synchronous boundaries: total (worker × boundary) quorum
+    /// misses across the run (0 for blocking runs).
+    pub quorum_misses: u64,
+    /// Semi-synchronous boundaries: stale contributions folded into a
+    /// later boundary's average (0 for blocking or `staleness = 0` runs).
+    pub stale_folds: u64,
     /// Mean grad-norm^2 trajectory per outer iteration (theory bench).
     pub gradnorm_curve: Vec<(u64, f64)>,
     /// Worker 0's final (de-biased) parameters — recorded only when
@@ -122,6 +128,8 @@ impl TrainResult {
             ("bytes_saved", Json::num(self.bytes_saved as f64)),
             ("bytes_inter", Json::num(self.bytes_inter as f64)),
             ("retransmits", Json::num(self.retransmits as f64)),
+            ("quorum_misses", Json::num(self.quorum_misses as f64)),
+            ("stale_folds", Json::num(self.stale_folds as f64)),
             (
                 "train_curve",
                 Json::Arr(
@@ -222,6 +230,8 @@ mod tests {
             bytes_saved: 7,
             bytes_inter: 13,
             retransmits: 0,
+            quorum_misses: 3,
+            stale_folds: 2,
             gradnorm_curve: vec![],
             final_params: None,
         }
@@ -249,6 +259,8 @@ mod tests {
             Some(0.6)
         );
         assert_eq!(j.get("comm_wall_time").unwrap().as_f64(), Some(0.3));
+        assert_eq!(j.get("quorum_misses").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("stale_folds").unwrap().as_f64(), Some(2.0));
         let parsed =
             crate::jsonx::parse(&crate::jsonx::to_string(&j)).unwrap();
         assert_eq!(parsed.get("best_train_loss").unwrap().as_f64(),

@@ -165,6 +165,10 @@ struct WorkerOut {
     /// lives in the fabric's per-worker wait counters).
     compute_wall: f64,
     steps_run: u64,
+    /// Outer boundaries this worker missed the quorum at (semi-sync).
+    quorum_misses: u64,
+    /// Stale contributions this worker folded into a later boundary.
+    stale_folds: u64,
     final_params: Option<Vec<f32>>,
 }
 
@@ -328,6 +332,53 @@ pub(crate) fn run_prepared(
         }
         None => None,
     };
+    // Semi-synchronous quorum boundaries (q < m) share the elastic
+    // machinery's constraints — a quorum-late worker freezes a full
+    // outer round — plus their own: membership would be decided twice
+    // if fault windows ran alongside, and arrival stamps are simulated
+    // clocks.
+    if let Some(s) = &cfg.slowmo {
+        if let Some(q) = s.quorum {
+            ensure!(
+                q <= cfg.m,
+                "slowmo quorum {q} exceeds the worker count m={}",
+                cfg.m
+            );
+            if q < cfg.m {
+                ensure!(
+                    cfg.exec == ExecMode::Sim,
+                    "semi-synchronous quorum boundaries are sim-only \
+                     (quorum selection reads simulated arrival stamps); \
+                     use exec = \"sim\" or quorum = m"
+                );
+                ensure!(
+                    algos[0].comm_elems_per_step(1 << 20) == 0,
+                    "semi-synchronous quorum boundaries require a \
+                     communication-free base algorithm (a gossiping base \
+                     would deadlock on quorum-late workers; use `local`, \
+                     got {})",
+                    algos[0].name()
+                );
+                if let Some(c) = &cfg.chaos {
+                    ensure!(
+                        c.faults.is_empty(),
+                        "semi-synchronous quorum boundaries cannot \
+                         combine with chaos fault windows (two membership \
+                         authorities at one boundary); model the \
+                         adversary with stragglers/delays instead"
+                    );
+                }
+                if let Some(h) = &cfg.hier {
+                    ensure!(
+                        h.tau_inner == 0,
+                        "semi-synchronous quorum boundaries cannot \
+                         combine with tau_inner intra-group averages \
+                         (they would deadlock on quorum-late workers)"
+                    );
+                }
+            }
+        }
+    }
     let mut fabric = match &chaos_plan {
         Some(plan) => {
             Fabric::with_chaos(cfg.m, cfg.cost.clone(), Arc::clone(plan))
@@ -421,6 +472,8 @@ pub(crate) fn run_prepared(
             clock: 0.0,
             compute_wall: 0.0,
             steps_run: 0,
+            quorum_misses: 0,
+            stale_folds: 0,
             final_params: None,
         };
         // Straggler slowdown: a chaos-designated slow worker charges more
@@ -560,6 +613,10 @@ pub(crate) fn run_prepared(
             }
         }
         out.clock = ctx.clock;
+        if let Some(o) = &outer {
+            out.quorum_misses = o.quorum_misses;
+            out.stale_folds = o.stale_folds;
+        }
         if cfg.record_final_params {
             out.final_params = Some(algo.eval_params(&state).to_vec());
         }
@@ -726,6 +783,9 @@ fn assemble(
     let comm_wall_time = crate::util::mean(
         &(0..cfg.m).map(|w| fabric.comm_wait_s(w)).collect::<Vec<_>>(),
     );
+    let quorum_misses =
+        workers.iter().map(|w| w.quorum_misses).sum::<u64>();
+    let stale_folds = workers.iter().map(|w| w.stale_folds).sum::<u64>();
     TrainResult {
         algo: algo_name,
         outer: cfg.slowmo.as_ref().map(|s| s.outer.spec()),
@@ -754,6 +814,8 @@ fn assemble(
         bytes_saved: fabric.bytes_saved(),
         bytes_inter: fabric.bytes_inter(),
         retransmits,
+        quorum_misses,
+        stale_folds,
         gradnorm_curve,
         final_params,
     }

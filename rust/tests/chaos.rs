@@ -155,6 +155,72 @@ fn worker_rejoins_two_boundaries_later() {
     }
 }
 
+// ------------------------------------- blocking-boundary time accounting
+
+/// Regression (straggler amplification): a blocking outer boundary is a
+/// barrier, so EVERY worker is charged the latest arrival stamp before
+/// the collective — one slow worker stalls the whole ring. The
+/// per-worker clocks must show that stall; previously each worker left
+/// the boundary from its own arrival time, under-reporting every fast
+/// worker's simulated wait.
+#[test]
+fn blocking_boundary_amplifies_straggler_stalls() {
+    let m = 4;
+    let d = 8;
+    let fabric = Fabric::new(m, CostModel::free());
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    let cfg = SlowMoCfg::new(1.0, 0.0, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
+    let init = vec![1.0f32; d];
+    // Worker 1 needs 4 compute-units per round, the rest 1; free links
+    // isolate the barrier charge from transfer costs.
+    let compute = [1.0f64, 4.0, 1.0, 1.0];
+    let clocks = run_workers(m, |w| {
+        let mut st = WorkerState::new(&init, algo.inner());
+        let mut ou = OuterState::new(&init, &*rule);
+        let mut clock = 0.0;
+        for _ in 0..3 {
+            clock += compute[w];
+            clock = outer_update(&cfg, &*rule, &algo, &fabric, &kernels,
+                                 w, &mut st, &mut ou, 0.1, clock, None)
+                .unwrap();
+        }
+        clock
+    });
+    // Quantified: every worker exits every boundary at the straggler's
+    // stamp — 4.0 per round, 12.0 total, not its own 3.0.
+    for (w, &c) in clocks.iter().enumerate() {
+        assert_eq!(c, 12.0, "worker {w} exited at {c}, want 12.0");
+    }
+}
+
+/// End-to-end: a chaos straggler moves simulated time by exactly its
+/// extra compute (the barrier re-syncs everyone, collective charges
+/// cancel) and never changes the math.
+#[test]
+fn straggler_scales_sim_time_without_touching_math() {
+    let Some(s) = session() else { return };
+    let run = |factor: f64| -> TrainResult {
+        let chaos = (factor > 1.0).then(|| ChaosCfg {
+            seed: chaos_seed(),
+            stragglers: vec![(1, factor)],
+            ..ChaosCfg::default()
+        });
+        quad_chaos(&s, 32, chaos)
+    };
+    let calm = run(1.0);
+    let slow = run(4.0);
+    assert_eq!(calm.final_params, slow.final_params,
+               "a straggler must move time, never math");
+    // 32 steps at 1e-4 s, worker 1 slowed 4x: + 3 * 32 * 1e-4 s on the
+    // critical path, and nothing else — the barrier charges every
+    // boundary from the straggler's stamp in both runs.
+    let extra = slow.sim_time - calm.sim_time;
+    assert!((extra - 9.6e-3).abs() < 1e-9,
+            "sim-time delta {extra} != straggler compute surplus");
+}
+
 // ------------------------------------------- push-sum on the real fabric
 
 /// Blocking SGP on a chaos fabric (delays + reordering + drops): push-sum

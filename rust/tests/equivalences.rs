@@ -557,6 +557,43 @@ fn hier_g1_is_bitwise_identical_to_flat_for_every_outer_rule() {
 }
 
 #[test]
+fn quorum_m_staleness_0_is_bitwise_identical_to_blocking() {
+    // q = m admits every worker into the ring, so the semi-synchronous
+    // machinery must vanish: for every registered outer rule the run
+    // lands on identical bits, bytes and simulated time as the blocking
+    // path (the arrival-stamp exchange rides the zero-cost control
+    // lane, so it cannot perturb accounting either).
+    let Some(s) = session() else { return };
+    let keys: Vec<String> = s
+        .outer_registry()
+        .keys()
+        .iter()
+        .map(|k| k.to_string())
+        .collect();
+    for key in &keys {
+        let sel = s.outer_registry().parse(key).unwrap();
+        let cfg = SlowMoCfg::with_outer(sel, 8);
+        let blocking = quadg(&s, 4, 64, Some(cfg.clone()), None, 0, None);
+        let semisync = quadg(
+            &s,
+            4,
+            64,
+            Some(cfg.with_quorum(4).with_staleness(0)),
+            None,
+            0,
+            None,
+        );
+        assert_eq!(semisync.final_params, blocking.final_params, "{key}");
+        assert!(semisync.final_params.is_some());
+        assert_eq!(semisync.train_curve, blocking.train_curve, "{key}");
+        assert_eq!(semisync.sim_time, blocking.sim_time, "{key}");
+        assert_eq!(semisync.bytes_sent, blocking.bytes_sent, "{key}");
+        assert_eq!(semisync.quorum_misses, 0, "{key}");
+        assert_eq!(semisync.stale_folds, 0, "{key}");
+    }
+}
+
+#[test]
 fn hier_gm_with_tau_inner_1_degenerates_to_flat() {
     // m singleton groups: intra stages and tau_inner averages are
     // no-ops, the leader ring is the full flat ring — identical math,

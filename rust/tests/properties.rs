@@ -1,7 +1,8 @@
-//! Property tests for the collective/partition primitives and the
-//! push-sum delay-tolerance claim, built on the seeded `testkit`
-//! mini-framework (override seeds with SLOWMO_TEST_SEED / case counts
-//! with SLOWMO_PROP_CASES).
+//! Property tests for the collective/partition primitives, the
+//! push-sum delay-tolerance claim, the compression codecs and the
+//! semi-synchronous quorum-boundary bitwise contracts, built on the
+//! seeded `testkit` mini-framework (override seeds with
+//! SLOWMO_TEST_SEED / case counts with SLOWMO_PROP_CASES).
 
 use slowmo::exec::run_workers;
 use slowmo::net::collectives::chunk_ranges;
@@ -555,4 +556,191 @@ fn wire_bytes_never_exceed_raw_for_any_registered_key() {
             );
         }
     }
+}
+
+// ------------------------------------------- semi-synchronous boundaries
+// Bitwise contracts for the q-of-m quorum boundary: the s=1 fold must
+// equal a reference serial computation (ring mean, STALE_LAMBDA
+// down-weighting, the outer rule's exact f32 op order), and the s=0
+// drop must be the elastic fault-window machinery under another name.
+
+use slowmo::algorithms::{BaseAlgorithm, Local, WorkerState};
+use slowmo::net::{ChaosCfg, ChaosPlan, FaultWindow};
+use slowmo::optim::kernels::{InnerOpt, Kernels};
+use slowmo::slowmo::{
+    outer_update, OuterRegistry, OuterSel, OuterState, SlowMoCfg,
+    STALE_LAMBDA,
+};
+use std::sync::Arc;
+
+/// Fixed m=3 (exactly one quorum-late worker), random d and values.
+fn trio() -> WorkerVecs {
+    WorkerVecs { m_range: (3, 3), d_range: (1, 129), scale: 2.0 }
+}
+
+#[test]
+fn staleness_fold_matches_reference_serial_computation_bitwise() {
+    // m=3, q=2, s=1, `avg` rule: arrival stamps are the worker ids, so
+    // worker 2 misses boundary 0 and its snapshot folds into boundary
+    // 1's average. The two-boundary trajectory must be BITWISE equal to
+    // a serial f32 reference mirroring the implementation's op order:
+    // n=2 ring mean (a+b)*0.5, fold acc = x̄·q then += λ·stale then
+    // /weight, and the avg rule's un = (x0-x̄)/γ; x0 -= γ·un (which is
+    // NOT a plain copy — γ·((x0-x̄)/γ) ≠ x0-x̄ in general).
+    let cfg = SlowMoCfg::with_outer(OuterSel::new("avg"), 4)
+        .with_quorum(2)
+        .with_staleness(1);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
+    let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+    let kernels = Kernels::Native;
+    let gamma = 0.1f32;
+    forall_seeded(
+        "s=1 fold == serial reference",
+        &trio(),
+        test_seed(),
+        default_cases() / 2,
+        |vecs| {
+            let d = vecs[0].len();
+            let init = vec![1.0f32; d];
+            let fabric = Fabric::new(3, CostModel::free());
+            let out = run_workers(3, |w| {
+                let mut st = WorkerState::new(&init, algo.inner());
+                st.x.copy_from_slice(&vecs[w]);
+                let mut ou = OuterState::new(&init, &*rule);
+                let mut clock = w as f64;
+                for _ in 0..2 {
+                    clock = outer_update(
+                        &cfg, &*rule, &algo, &fabric, &kernels, w,
+                        &mut st, &mut ou, gamma, clock, None,
+                    )
+                    .unwrap();
+                }
+                (st, ou)
+            });
+            // Serial reference in the implementation's exact op order.
+            let step = |x0: &mut [f32], xt: &[f32]| {
+                for (a, &b) in x0.iter_mut().zip(xt) {
+                    let un = (*a - b) / gamma;
+                    *a -= gamma * un;
+                }
+            };
+            let mut x0 = init.clone();
+            // Boundary 0: quorum ring {0,1}; the n=2 ring mean is
+            // (a+b)*0.5 on both members (f32 addition commutes bitwise).
+            let xbar0: Vec<f32> = (0..d)
+                .map(|i| (vecs[0][i] + vecs[1][i]) * 0.5)
+                .collect();
+            step(&mut x0, &xbar0);
+            // Boundary 1: both ring members carry x0 bit-for-bit, so
+            // the ring mean is x0 itself ((a+a)*0.5 == a exactly); then
+            // worker 2's boundary-0 snapshot folds in, down-weighted.
+            let xbar1: Vec<f32> = (0..d)
+                .map(|i| {
+                    let mut acc = x0[i] * 2.0;
+                    acc += STALE_LAMBDA * vecs[2][i];
+                    let mut weight = 2.0f32;
+                    weight += STALE_LAMBDA;
+                    acc / weight
+                })
+                .collect();
+            step(&mut x0, &xbar1);
+            out.iter()
+                .all(|(st, ou)| ou.t == 2 && st.x == x0 && ou.x0 == x0)
+                && out[2].1.quorum_misses == 1
+                && out[2].1.stale_folds == 1
+        },
+    );
+}
+
+#[test]
+fn quorum_drop_matches_elastic_fault_window_bitwise() {
+    // The s=0 semantics claim: a quorum-late worker IS an elastic
+    // fault-window outage of one boundary. Run A: q=2, no chaos (worker
+    // 2's arrival stamp makes it late at boundary 0, it resyncs at
+    // boundary 1). Run B: blocking boundaries with an explicit
+    // FaultWindow covering boundary 0 and the same arrival stamps.
+    // Every worker's (x, x0, u, t, clock) must match bitwise across the
+    // two runs — including the late worker's pulled rejoin state.
+    let cfg_q = SlowMoCfg::new(1.0, 0.5, 4).with_quorum(2);
+    let cfg_f = SlowMoCfg::new(1.0, 0.5, 4);
+    let reg = OuterRegistry::builtin();
+    let rule_q = reg.build(&cfg_q.outer).unwrap();
+    let rule_f = reg.build(&cfg_f.outer).unwrap();
+    let algo = Local::new(InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 });
+    let kernels = Kernels::Native;
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![FaultWindow {
+                    worker: 2,
+                    fail_at: 0,
+                    rejoin_at: 1,
+                }],
+                ..ChaosCfg::default()
+            },
+            3,
+            &CostModel::free(),
+        )
+        .unwrap(),
+    );
+    forall_seeded(
+        "s=0 drop == elastic fault window",
+        &trio(),
+        test_seed(),
+        default_cases() / 2,
+        |vecs| {
+            let d = vecs[0].len();
+            let init = vec![1.0f32; d];
+            let run = |quorum: bool| {
+                let fabric = if quorum {
+                    Fabric::new(3, CostModel::free())
+                } else {
+                    Fabric::with_chaos(
+                        3,
+                        CostModel::free(),
+                        Arc::clone(&plan),
+                    )
+                };
+                let (cfg, rule) = if quorum {
+                    (&cfg_q, &rule_q)
+                } else {
+                    (&cfg_f, &rule_f)
+                };
+                run_workers(3, |w| {
+                    let mut st = WorkerState::new(&init, algo.inner());
+                    st.x.copy_from_slice(&vecs[w]);
+                    let mut ou = OuterState::new(&init, &**rule);
+                    let mut clock = w as f64;
+                    for t in 0..2u32 {
+                        // Divergent inner progress before each boundary
+                        // (identical in both runs; the down worker's is
+                        // discarded by the rejoin pull either way).
+                        for (i, x) in st.x.iter_mut().enumerate() {
+                            *x -= 0.01
+                                * (w as f32 + 1.0)
+                                * (t as f32 + 1.0)
+                                + 0.001 * i as f32;
+                        }
+                        let chaos =
+                            if quorum { None } else { Some(&*plan) };
+                        clock = outer_update(
+                            cfg, &**rule, &algo, &fabric, &kernels, w,
+                            &mut st, &mut ou, 0.1, clock, chaos,
+                        )
+                        .unwrap();
+                    }
+                    (st, ou, clock)
+                })
+            };
+            let a = run(true);
+            let b = run(false);
+            a.iter().zip(&b).all(|((sa, oa, ca), (sb, ob, cb))| {
+                sa.x == sb.x
+                    && oa.x0 == ob.x0
+                    && oa.u() == ob.u()
+                    && oa.t == ob.t
+                    && ca == cb
+            })
+        },
+    );
 }
