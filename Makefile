@@ -8,10 +8,13 @@ help:
 	@echo "  artifacts  AOT-lower model/optimizer graphs into artifacts/"
 	@echo "  e2e        also export the ~12.6M-param LM preset"
 	@echo "  bench      hot-path micro-benchmarks -> results/BENCH_micro.json"
+	@echo "             (fails on any kernel >25% slower than the previous"
+	@echo "             checked-in run; SLOWMO_BENCH_TOL overrides)"
 	@echo ""
 	@echo "experiment sweeps (cargo run --release -- exp <id> --scale <s>):"
 	@echo "  table1|table2|fig2|fig3|figb2|tableb23|tableb4|doubleavg|"
 	@echo "  noaverage|outers|compress|hier|semisync|theory|throughput|all"
+	@echo "  (compress sweeps the demo frequency-domain codec vs topk et al.)"
 	@echo "scales: ci|quick|standard|full (exp default: quick; bench"
 	@echo "honours SLOWMO_SCALE, default ci)"
 

@@ -1,8 +1,9 @@
 //! Communication compression on the byte/accuracy frontier: the same
 //! SlowMo run under every built-in codec — raw f32, half-precision
-//! quantization, top-k / random-k sparsification and 1-bit signsgd, with
-//! and without error feedback — comparing bytes-on-wire, simulated time
-//! and final loss.
+//! quantization, top-k / random-k sparsification, 1-bit signsgd (with
+//! and without error feedback) and the DeMo-style frequency-domain
+//! `demo` codec — comparing bytes-on-wire, simulated time and final
+//! loss.
 //!
 //! Demonstrates the compress subsystem's three contracts:
 //! 1. `none` is bit-identical to a run that never mentions compression;
@@ -77,9 +78,21 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(none.bytes_sent, raw.bytes_sent);
     assert_eq!(none.sim_time, raw.sim_time);
 
+    // `ef:demo` is a hard error (demo already carries a per-link
+    // residual); the registry names both codecs in the message.
+    let err = match session
+        .compress_registry()
+        .parse("ef:demo:0.1")
+        .and_then(|sel| session.compress_registry().build(&sel))
+    {
+        Ok(_) => panic!("ef:demo must be rejected"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("ef") && err.contains("demo"), "{err}");
+
     let mut prev_loss_note = String::new();
     for spec in ["fp16", "topk:0.1", "ef:topk:0.1", "randk:0.1",
-                 "ef:signsgd"] {
+                 "ef:signsgd", "demo:0.1"] {
         let r = run(&session, steps, Some(spec))?;
         report(spec, &r);
         // Contract 2: lossy codecs strictly cut bytes on the wire (and

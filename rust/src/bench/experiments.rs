@@ -587,7 +587,10 @@ pub fn outers(env: &Env, task: &TaskSpec) -> Result<Table> {
 
 /// Specs swept by [`compress`]: the byte/accuracy tradeoff ladder from
 /// raw f32 down to ~0.19 B/coord signsgd, with and without error
-/// feedback.
+/// feedback, plus the frequency-domain `demo` codec at three keep
+/// fractions bracketing the `topk` byte budgets (per-chunk `ceil` makes
+/// `demo:0.25` byte-equal to `topk:0.25` and `demo:0.05` strictly
+/// cheaper than `topk:0.1` on chunk-aligned presets).
 pub const COMPRESS_SWEEP: &[&str] = &[
     "none",
     "bf16",
@@ -599,14 +602,20 @@ pub const COMPRESS_SWEEP: &[&str] = &[
     "ef:randk:0.1",
     "signsgd",
     "ef:signsgd",
+    "demo:0.25",
+    "demo:0.1",
+    "demo:0.05",
 ];
 
 /// Communication-compression sweep (Local base + SlowMo, fixed τ): every
 /// spec in [`COMPRESS_SWEEP`] on one task, recording the bytes-on-wire vs
 /// final-loss frontier. Besides the printed table (and the usual
 /// `runs.jsonl` rows), emits `BENCH_compress.json` — schema
-/// `bench-compress/v1`, see `results/BENCH_compress.schema.json` — so the
-/// perf trajectory records wire bytes alongside loss.
+/// `bench-compress/v2`, see `results/BENCH_compress.schema.json` — so the
+/// perf trajectory records wire bytes alongside loss. The harness itself
+/// asserts the DeMo headline: at least one `demo` cell reaches a lower
+/// final eval loss than a `topk`-family cell at an equal-or-smaller wire
+/// byte budget.
 pub fn compress(env: &Env, task: &TaskSpec) -> Result<Table> {
     use crate::jsonx::Json;
     let mut table = Table::new(
@@ -616,6 +625,7 @@ pub fn compress(env: &Env, task: &TaskSpec) -> Result<Table> {
     );
     let tau = env.scale.tau_local();
     let mut entries: Vec<Json> = Vec::new();
+    let mut frontier: Vec<(String, u64, f64)> = Vec::new();
     for spec in COMPRESS_SWEEP {
         // Hard parse errors surface immediately; this also keeps the
         // sweep honest for out-of-crate registrations replacing built-ins.
@@ -635,6 +645,7 @@ pub fn compress(env: &Env, task: &TaskSpec) -> Result<Table> {
             fmt4(r.final_eval_loss),
             format!("{:.3}", r.sim_time),
         ]);
+        frontier.push((spec.to_string(), r.bytes_sent, r.final_eval_loss));
         entries.push(Json::obj(vec![
             ("compress", Json::str(spec)),
             ("bytes_sent", Json::num(r.bytes_sent as f64)),
@@ -645,10 +656,30 @@ pub fn compress(env: &Env, task: &TaskSpec) -> Result<Table> {
             ("sim_time", Json::num(r.sim_time)),
         ]));
     }
+    // Headline assertion: some demo cell beats some topk-family cell on
+    // final eval loss at an equal-or-smaller byte budget. Checked over
+    // every (demo, topk/ef:topk) pair so a single frontier crossing
+    // anywhere in the sweep satisfies it.
+    let wins = frontier
+        .iter()
+        .filter(|(s, ..)| s.starts_with("demo"))
+        .any(|(_, db, dl)| {
+            frontier
+                .iter()
+                .filter(|(s, ..)| {
+                    s.starts_with("topk") || s.starts_with("ef:topk")
+                })
+                .any(|(_, tb, tl)| db <= tb && dl < tl)
+        });
+    anyhow::ensure!(
+        wins,
+        "demo never beat a topk-family cell at an equal-or-smaller byte \
+         budget; frontier: {frontier:?}"
+    );
     table.print();
     table.write_json(&env.out_path("compress.json"))?;
     let bench = Json::obj(vec![
-        ("schema", Json::str("bench-compress/v1")),
+        ("schema", Json::str("bench-compress/v2")),
         ("preset", Json::str(&task.preset)),
         ("m", Json::num(env.scale.m() as f64)),
         ("steps", Json::num(env.scale.steps() as f64)),

@@ -1,16 +1,24 @@
 //! Micro-benchmarks for the perf pass (EXPERIMENTS.md §Perf).
 //!
 //! Hot-path latencies: model train-step execute, optimizer kernels
-//! (PJRT artifact vs native mirror), ring allreduce, gossip mixing, and
-//! literal-conversion overhead. Run via `cargo bench --bench micro` or
-//! `slowmo exp micro`.
+//! (PJRT artifact vs native mirror), DCT codec kernels, ring allreduce,
+//! gossip mixing, and literal-conversion overhead. Run via
+//! `cargo bench --bench micro` or `slowmo exp micro`.
+//!
+//! Regression gate: when a previous `results/BENCH_micro.json` from the
+//! same scale exists, any kernel whose fresh median is more than
+//! `SLOWMO_BENCH_TOL` (default 0.25 = 25%) slower than the checked-in
+//! run fails the bench — `make bench` is the CI hook.
 
 use super::Env;
-use crate::benchkit::Bench;
+use crate::benchkit::{Bench, Stats};
+use crate::compress::{site, CompressState, Compressor, Demo};
 use crate::data::task_for;
 use crate::exec::run_workers;
+use crate::jsonx::Json;
 use crate::net::{ring_allreduce_mean, CostModel, Fabric};
-use crate::optim::kernels::{InnerOpt, Kernels};
+use crate::optim::kernels::{dct2_chunked, dct3_chunked, DctPlans, InnerOpt,
+                            Kernels};
 use crate::runtime::engine::Arg;
 use crate::trainer::model_exec;
 use anyhow::Result;
@@ -82,6 +90,28 @@ pub fn run(env: &Env) -> Result<Bench> {
         });
     }
 
+    // ---- DCT codec kernels (native path of the demo compressor) ----
+    {
+        let d = 65536usize;
+        let plans = DctPlans::new();
+        let mut rng = crate::rng::Xoshiro256::seed_from(3);
+        let mut x = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        let mut f = vec![0.0f32; d];
+        b.run("dct2/d65536/c64/native", || {
+            dct2_chunked(&plans, &x, &mut f, 64);
+        });
+        b.run("dct3/d65536/c64/native", || {
+            dct3_chunked(&plans, &f, &mut x, 64);
+        });
+        let demo = Demo::new(0.1, 64);
+        let mut st = CompressState::new(1, 0);
+        let mut y = x.clone();
+        b.run("demo-transcode/d65536/k0.1c64", || {
+            demo.transcode(&mut y, &mut st, site::OUTER);
+        });
+    }
+
     // ---- raw PJRT execute overhead (tiny graph: the axpy kernel) ----
     {
         let d = 4096;
@@ -103,22 +133,143 @@ pub fn run(env: &Env) -> Result<Bench> {
     b.report();
     b.write_jsonl(&env.out_path("micro.jsonl"))?;
     // Checked-in perf trajectory: schema `bench-micro/v1`, validated in
-    // CI against results/BENCH_micro.schema.json (`make bench`).
-    let bench = crate::jsonx::Json::obj(vec![
-        ("schema", crate::jsonx::Json::str("bench-micro/v1")),
-        ("scale", crate::jsonx::Json::str(env.scale.name())),
+    // CI against results/BENCH_micro.schema.json (`make bench`). The
+    // previous run (if any) is loaded *before* the overwrite so it can
+    // serve as the regression baseline below.
+    let path = env.out_path("BENCH_micro.json");
+    let baseline = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| crate::jsonx::parse(&s).ok());
+    let bench = Json::obj(vec![
+        ("schema", Json::str("bench-micro/v1")),
+        ("scale", Json::str(env.scale.name())),
         (
             "entries",
-            crate::jsonx::Json::Arr(
-                b.results().iter().map(|s| s.to_json()).collect(),
-            ),
+            Json::Arr(b.results().iter().map(|s| s.to_json()).collect()),
         ),
     ]);
-    let path = env.out_path("BENCH_micro.json");
     if let Some(dir) = std::path::Path::new(&path).parent() {
         std::fs::create_dir_all(dir)?;
     }
     std::fs::write(&path, crate::jsonx::to_string(&bench))?;
     crate::info!("wrote {path}");
+
+    // ---- regression gate vs the previous checked-in run ----
+    if let Some(prev) = baseline {
+        let tol: f64 = std::env::var("SLOWMO_BENCH_TOL")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.25);
+        match regressions(&prev, b.results(), env.scale.name(), tol) {
+            None => crate::info!(
+                "bench baseline is from a different scale; regression \
+                 gate skipped"
+            ),
+            Some(slow) => anyhow::ensure!(
+                slow.is_empty(),
+                "kernel regression(s) >{:.0}% vs previous {path} \
+                 (override tolerance with SLOWMO_BENCH_TOL): {}",
+                tol * 100.0,
+                slow.join("; ")
+            ),
+        }
+    }
     Ok(b)
+}
+
+/// Compare fresh medians against a previous `bench-micro` document.
+/// Returns `None` when the baseline was recorded at a different scale
+/// (medians are not comparable), otherwise the list of kernels whose
+/// fresh median exceeds the baseline by more than `tol` (relative).
+/// Kernels present on only one side are ignored — adding or removing a
+/// bench must not trip the gate.
+fn regressions(
+    prev: &Json,
+    fresh: &[Stats],
+    scale: &str,
+    tol: f64,
+) -> Option<Vec<String>> {
+    if prev.get("scale").and_then(|s| s.as_str()) != Some(scale) {
+        return None;
+    }
+    let empty: &[Json] = &[];
+    let prev_entries =
+        prev.get("entries").and_then(|e| e.as_arr()).unwrap_or(empty);
+    let mut slow = Vec::new();
+    for s in fresh {
+        let old = prev_entries
+            .iter()
+            .find(|e| {
+                e.get("name").and_then(|n| n.as_str())
+                    == Some(s.name.as_str())
+            })
+            .and_then(|e| e.get("median_s"))
+            .and_then(|m| m.as_f64());
+        let Some(old) = old else { continue };
+        let new = s.median();
+        if old > 0.0 && new > old * (1.0 + tol) {
+            slow.push(format!(
+                "{}: {:.3e}s -> {:.3e}s (+{:.0}%)",
+                s.name,
+                old,
+                new,
+                (new / old - 1.0) * 100.0
+            ));
+        }
+    }
+    Some(slow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(scale: &str, entries: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("bench-micro/v1")),
+            ("scale", Json::str(scale)),
+            (
+                "entries",
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|(n, m)| {
+                            Json::obj(vec![
+                                ("name", Json::str(n)),
+                                ("median_s", Json::num(*m)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn stat(name: &str, median: f64) -> Stats {
+        Stats { name: name.into(), samples: vec![median] }
+    }
+
+    #[test]
+    fn regression_gate_flags_only_slowdowns_beyond_tol() {
+        let prev = doc("ci", &[("a", 1.0), ("b", 1.0), ("c", 1.0)]);
+        // a: within tolerance; b: over; c: faster — only b trips.
+        let fresh = [stat("a", 1.2), stat("b", 1.3), stat("c", 0.5)];
+        let slow = regressions(&prev, &fresh, "ci", 0.25).unwrap();
+        assert_eq!(slow.len(), 1, "{slow:?}");
+        assert!(slow[0].starts_with("b:"), "{slow:?}");
+    }
+
+    #[test]
+    fn regression_gate_skips_on_scale_mismatch() {
+        let prev = doc("full", &[("a", 1.0)]);
+        assert!(regressions(&prev, &[stat("a", 9.0)], "ci", 0.25).is_none());
+    }
+
+    #[test]
+    fn regression_gate_ignores_added_and_removed_kernels() {
+        let prev = doc("ci", &[("gone", 1.0)]);
+        let slow =
+            regressions(&prev, &[stat("new", 9.0)], "ci", 0.25).unwrap();
+        assert!(slow.is_empty(), "{slow:?}");
+    }
 }

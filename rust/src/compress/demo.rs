@@ -1,0 +1,283 @@
+//! DeMo-style frequency-domain compression (Peng et al., arXiv
+//! 2411.19870): transform each chunk of the message into an orthonormal
+//! DCT basis, transmit only the top-k coefficients per chunk, and
+//! accumulate every untransmitted coefficient in a persistent per-link
+//! *frequency residual* so the slow-moving part of the signal is
+//! eventually delivered instead of dropped.
+//!
+//! The codec is the frequency-domain sibling of
+//! [`super::ErrorFeedback`]`(`[`super::TopK`]`)`: where `ef:topk` keeps
+//! its residual in the spatial domain, `demo` keeps it in the DCT domain,
+//! where SlowMo's outer displacement concentrates energy into few
+//! coefficients — the same byte budget reconstructs more of the signal.
+//! Because the DCT is linear, the elastic-membership residual rescale
+//! (multiply by the live-worker ratio) is exactly as valid on frequency
+//! residuals as on spatial ones, so the codec rides the existing
+//! [`super::CompressState`] machinery unchanged: residuals at
+//! [`super::site::OUTER`] rescale on membership changes and ship in the
+//! rejoin state transfer via the [`super::Compressor::ef_bufs`] lane.
+//!
+//! Wire format: the standard sparse index+value layout of
+//! [`super::TopK`] — indices address *DCT coefficients*, the decoder
+//! scatters them into the frequency scratch and inverse-transforms. Byte
+//! accounting stays honest: `8` bytes per kept coefficient summed over
+//! chunks, capped at the raw `4·d`.
+
+use super::{
+    k_of, site, sparse_pack, sparse_unpack, CompressState, Compressor, Wire,
+};
+use crate::optim::kernels::{dct2_chunked, dct3_chunked, DctPlans};
+
+/// `demo[:k,chunk]` — per-chunk DCT top-k with a persistent frequency
+/// residual. `frac` is the kept fraction per chunk (`ceil(frac·n)`
+/// coefficients of every `n`-length chunk); `chunk` is the transform
+/// length (the trailing partial chunk gets its own shorter plan).
+///
+/// With `frac = 1.0` every coefficient is transmitted, the residual is
+/// identically zero and the transcode equals `dct3(dct2(x))` — value-
+/// equal to `none` within the DCT round-trip ulp bound pinned by the
+/// property suite (not bitwise: the transform rounds through f32 twice).
+pub struct Demo {
+    pub frac: f32,
+    pub chunk: usize,
+    /// Per-length DCT plan cache (interior mutability: `encode` takes
+    /// `&self`). At most two plans live here — `chunk` and the tail.
+    plans: DctPlans,
+}
+
+impl Demo {
+    pub fn new(frac: f32, chunk: usize) -> Self {
+        assert!(chunk >= 1, "demo chunk must be >= 1");
+        Demo { frac, chunk, plans: DctPlans::new() }
+    }
+
+    /// Kept-coefficient count summed over the chunks of a `d`-length
+    /// message (per-chunk `ceil`, so it can exceed `ceil(frac·d)`).
+    fn total_k(&self, d: usize) -> usize {
+        let full = d / self.chunk;
+        let tail = d % self.chunk;
+        full * k_of(self.frac, self.chunk) + k_of(self.frac, tail)
+    }
+}
+
+impl Compressor for Demo {
+    fn key(&self) -> String {
+        "demo".into()
+    }
+
+    fn params(&self) -> String {
+        format!("{},{}", self.frac, self.chunk)
+    }
+
+    fn encode(&self, x: &[f32], st: &mut CompressState, s: u64) -> Wire {
+        let d = x.len();
+        if d == 0 {
+            return Wire { data: Vec::new(), d: 0, wire_bytes: 0 };
+        }
+        // Forward transform, then fold in the carried frequency residual
+        // (the codec's analogue of `ef`'s `x + r`).
+        let mut f = vec![0.0f32; d];
+        dct2_chunked(&self.plans, x, &mut f, self.chunk);
+        {
+            let r = st.residual(s, d);
+            for (fv, rv) in f.iter_mut().zip(r.iter()) {
+                *fv += *rv;
+            }
+        }
+        // Per-chunk top-|coefficient| selection with the same total
+        // order as `topk` (index tie-break), kept as global indices.
+        let mut kept: Vec<usize> = Vec::with_capacity(self.total_k(d));
+        let mut lo = 0;
+        while lo < d {
+            let n = (d - lo).min(self.chunk);
+            let k = k_of(self.frac, n);
+            let mut order: Vec<usize> = (lo..lo + n).collect();
+            if k < n {
+                order.select_nth_unstable_by(k - 1, |&a, &b| {
+                    f[b].abs()
+                        .total_cmp(&f[a].abs())
+                        .then_with(|| a.cmp(&b))
+                });
+                order.truncate(k);
+            }
+            kept.extend(order);
+            lo += n;
+        }
+        kept.sort_unstable();
+        // The new residual is exactly the untransmitted coefficients:
+        // residual + decoded-coefficients is a bitwise partition of `f`
+        // (pinned by the property suite's residual-accounting test).
+        {
+            let r = st.residual(s, d);
+            r.copy_from_slice(&f);
+            for &i in &kept {
+                r[i] = 0.0;
+            }
+        }
+        sparse_pack(&kept, &f, self.wire_bytes(d))
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        let d = wire.d;
+        debug_assert_eq!(out.len(), d);
+        if d == 0 {
+            return;
+        }
+        // Scatter kept coefficients into the frequency scratch, then
+        // inverse-transform chunk by chunk.
+        let mut f = vec![0.0f32; d];
+        sparse_unpack(wire, &mut f, 1.0);
+        dct3_chunked(&self.plans, &f, out, self.chunk);
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        if d == 0 {
+            return 0;
+        }
+        (self.total_k(d) as u64 * 8).min(d as u64 * 4)
+    }
+
+    fn ef_bufs(&self) -> usize {
+        1
+    }
+
+    fn rejoin_state(&self, st: &CompressState, d: usize) -> Vec<Vec<f32>> {
+        vec![match st.residual_opt(site::OUTER) {
+            Some(r) if r.len() == d => r.clone(),
+            _ => vec![0.0; d],
+        }]
+    }
+
+    fn install_rejoin_state(&self, st: &mut CompressState, bufs: &[&[f32]]) {
+        if let Some(buf) = bufs.first() {
+            st.set_residual(site::OUTER, buf.to_vec());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st() -> CompressState {
+        CompressState::new(7, 0)
+    }
+
+    fn signal(d: usize) -> Vec<f32> {
+        // Smooth-ish deterministic signal with a rough component, so the
+        // DCT spectrum has both large and small coefficients.
+        (0..d)
+            .map(|i| {
+                let t = i as f32 / d.max(1) as f32;
+                (6.3 * t).sin() + 0.25 * (41.0 * t).cos()
+                    + 0.05 * ((i * 2654435761usize) as f32 / 4e9)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn keep_all_round_trips_with_zero_residual() {
+        let c = Demo::new(1.0, 16);
+        let mut s = st();
+        let x = signal(50);
+        let wire = c.encode(&x, &mut s, site::OUTER);
+        assert_eq!(wire.wire_bytes, 50 * 4); // dense cap
+        let r = s.residual_opt(site::OUTER).unwrap();
+        assert!(r.iter().all(|&v| v == 0.0), "residual must be zero");
+        let mut y = vec![0.0f32; 50];
+        c.decode(&wire, &mut y);
+        let mag = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= 1e-6 * mag, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn residual_is_exact_bitwise_partition_of_spectrum() {
+        let c = Demo::new(0.1, 16);
+        let mut s = st();
+        let x = signal(80);
+        // Fresh state: residual starts zero, so wire ∪ residual must be
+        // exactly dct2(x), bitwise.
+        let wire = c.encode(&x, &mut s, site::GRAD);
+        let plans = DctPlans::new();
+        let mut f = vec![0.0f32; 80];
+        dct2_chunked(&plans, &x, &mut f, 16);
+        let r = s.residual_opt(site::GRAD).unwrap().clone();
+        let k = wire.data.len() / 2;
+        let mut seen = vec![false; 80];
+        for j in 0..k {
+            let i = wire.data[j].to_bits() as usize;
+            assert_eq!(wire.data[k + j].to_bits(), f[i].to_bits());
+            assert_eq!(r[i], 0.0, "kept coefficient must leave residual");
+            seen[i] = true;
+        }
+        for (i, kept) in seen.iter().enumerate() {
+            if !kept {
+                assert_eq!(r[i].to_bits(), f[i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn residual_feeds_next_message() {
+        let c = Demo::new(0.05, 32);
+        let mut s = st();
+        let x = signal(64);
+        c.encode(&x, &mut s, site::OUTER);
+        let r1 = s.residual_opt(site::OUTER).unwrap().clone();
+        assert!(r1.iter().any(|&v| v != 0.0), "lossy keep must leave mass");
+        // Encoding a zero vector next still transmits: the carried
+        // residual alone ranks the coefficients.
+        let wire = c.encode(&[0.0; 64], &mut s, site::OUTER);
+        let mut y = vec![0.0f32; 64];
+        c.decode(&wire, &mut y);
+        assert!(y.iter().any(|&v| v != 0.0), "residual must drain");
+    }
+
+    #[test]
+    fn wire_bytes_per_chunk_ceil_and_dense_cap() {
+        let c = Demo::new(0.1, 64);
+        // 2 full chunks (k = ceil(6.4) = 7 each) + tail 22 (k = 3).
+        assert_eq!(c.wire_bytes(150), (7 + 7 + 3) * 8);
+        assert_eq!(c.wire_bytes(0), 0);
+        // keep-all caps at the raw size.
+        assert_eq!(Demo::new(1.0, 8).wire_bytes(100), 400);
+        // Reported bytes match the encode path.
+        let mut s = st();
+        let wire = c.encode(&signal(150), &mut s, site::GRAD);
+        assert_eq!(wire.wire_bytes, c.wire_bytes(150));
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let x = signal(96);
+        let run = || {
+            let c = Demo::new(0.1, 32);
+            let mut s = st();
+            c.encode(&x, &mut s, site::OUTER);
+            let w = c.encode(&x, &mut s, site::OUTER);
+            (w.data, s.residual_opt(site::OUTER).unwrap().clone())
+        };
+        let (w1, r1) = run();
+        let (w2, r2) = run();
+        assert_eq!(w1, w2);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn rejoin_state_ships_and_installs_outer_residual() {
+        let c = Demo::new(0.1, 16);
+        let mut s = st();
+        c.encode(&signal(48), &mut s, site::OUTER);
+        let shipped = c.rejoin_state(&s, 48);
+        assert_eq!(shipped.len(), 1);
+        assert_eq!(&shipped[0], s.residual_opt(site::OUTER).unwrap());
+        let mut s2 = st();
+        c.install_rejoin_state(&mut s2, &[&shipped[0]]);
+        assert_eq!(s2.residual_opt(site::OUTER).unwrap(), &shipped[0]);
+        // No residual yet (or wrong length) ships zeros.
+        assert_eq!(c.rejoin_state(&st(), 5), vec![vec![0.0; 5]]);
+        assert_eq!(c.ef_bufs(), 1);
+    }
+}

@@ -32,17 +32,28 @@
 //!   (mean |x|) per `chunk` coordinates; the mean of the decoded
 //!   ±scale vectors acts as the soft majority vote of SIGNSGD-style
 //!   reduces;
+//! - `demo[:k,chunk]`  — DeMo-style frequency-domain top-k ([`Demo`]):
+//!   DCT-transform each `chunk` of the message, transmit the
+//!   `ceil(k·chunk)` largest coefficients per chunk and carry every
+//!   untransmitted coefficient in a persistent per-link *frequency*
+//!   residual (a state-aware codec — see `compress/demo.rs`);
 //! - `ef:<inner>`      — error feedback around any other compressor:
 //!   the residual `e = (x + r) - decode(encode(x + r))` is carried per
 //!   link and re-injected into the next message. Residuals at the SlowMo
 //!   outer boundary register with the elastic-membership machinery: they
 //!   rescale with the live-worker ratio and ride the rejoin state
 //!   transfer exactly like [`crate::slowmo::OuterOpt`] buffers.
+//!   `ef:demo` is a hard parse error: `demo` already carries its own
+//!   per-link residual, and stacking a second spatial-domain residual on
+//!   top double-counts dropped mass.
 
 use crate::rng::{stream, Xoshiro256};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
+
+mod demo;
+pub use demo::Demo;
 
 /// Well-known residual/stream site keys. A *site* identifies one logical
 /// send location on one worker (a gossip out-link, a collective input, the
@@ -842,6 +853,26 @@ impl CompressRegistry {
             },
         );
         r.register(
+            "demo",
+            "DCT top-k per chunk + persistent frequency residual (DeMo)",
+            &[("k", Some(0.1)), ("chunk", Some(64.0))],
+            false,
+            |a, _| {
+                ensure!(
+                    a[0] > 0.0 && a[0] <= 1.0,
+                    "demo k must be in (0,1] (got {})",
+                    a[0]
+                );
+                ensure!(
+                    a[1] >= 1.0 && a[1].fract() == 0.0,
+                    "demo chunk must be an integer >= 1 (got {})",
+                    a[1]
+                );
+                Ok(Arc::new(Demo::new(a[0], a[1] as usize))
+                    as Arc<dyn Compressor>)
+            },
+        );
+        r.register(
             "ef",
             "error feedback around any inner codec (ef:topk:0.1, ...)",
             &[],
@@ -854,6 +885,14 @@ impl CompressRegistry {
                     inner.key() != "ef",
                     "ef cannot wrap another ef (residuals would share a \
                      site)"
+                );
+                ensure!(
+                    inner.key() != "demo",
+                    "ef cannot wrap demo: both codecs (\"ef\" and \
+                     \"demo\") keep a per-link residual, and stacking \
+                     ef's spatial-domain residual on demo's frequency-\
+                     domain residual double-counts dropped mass — demo \
+                     already carries its own error feedback"
                 );
                 ensure!(
                     !inner.is_identity(),
@@ -1308,10 +1347,12 @@ mod tests {
         let r = CompressRegistry::builtin();
         assert_eq!(
             r.keys(),
-            vec!["bf16", "ef", "fp16", "none", "randk", "signsgd", "topk"]
+            vec!["bf16", "demo", "ef", "fp16", "none", "randk", "signsgd",
+                 "topk"]
         );
         for spec in ["none", "fp16", "bf16", "topk:0.1", "randk:0.25",
-                     "signsgd:128", "ef:topk:0.1", "ef:signsgd"] {
+                     "signsgd:128", "demo:0.1,64", "demo:0.25,32",
+                     "ef:topk:0.1", "ef:signsgd"] {
             let sel = r.parse(spec).unwrap();
             assert_eq!(sel.spec(), spec, "spec round-trip");
             let c = r.build(&sel).unwrap();
@@ -1322,6 +1363,10 @@ mod tests {
         assert_eq!(c.params(), "0.1");
         let c = r.build(&r.parse("signsgd").unwrap()).unwrap();
         assert_eq!(c.params(), "64");
+        let c = r.build(&r.parse("demo").unwrap()).unwrap();
+        assert_eq!(c.params(), "0.1,64");
+        let c = r.build(&r.parse("demo:0.25").unwrap()).unwrap();
+        assert_eq!(c.params(), "0.25,64");
     }
 
     #[test]
@@ -1330,7 +1375,9 @@ mod tests {
         for bad in ["bogus", "topk:", "topk:abc", "topk:0", "topk:1.5",
                     "topk:0.1,0.2", "randk:-1", "fp16:2", "signsgd:0",
                     "signsgd:1.5", "ef", "ef:none", "ef:ef:topk",
-                    "ef:bogus", "topk:inf"] {
+                    "ef:bogus", "topk:inf", "demo:0", "demo:1.5",
+                    "demo:0.1,0", "demo:0.1,1.5", "demo:0.1,64,3",
+                    "ef:demo:0.1"] {
             let failed = match r.parse(bad) {
                 Err(_) => true,
                 Ok(sel) => r.build(&sel).is_err(),
@@ -1340,6 +1387,14 @@ mod tests {
         let e = r.parse("bogus").unwrap_err().to_string();
         assert!(e.contains("valid forms"), "{e}");
         assert!(e.contains("topk"), "{e}");
+        // The ef:demo rejection names both codecs (satellite contract:
+        // two stacked per-link residuals is a semantic trap).
+        let sel = r.parse("ef:demo:0.1").unwrap();
+        let e = match r.build(&sel) {
+            Ok(_) => panic!("ef:demo must be rejected"),
+            Err(e) => e.to_string(),
+        };
+        assert!(e.contains("\"ef\"") && e.contains("\"demo\""), "{e}");
     }
 
     #[test]
@@ -1361,7 +1416,7 @@ mod tests {
     fn wire_bytes_bounded_by_raw_for_all_builtins() {
         let r = CompressRegistry::builtin();
         for spec in ["none", "fp16", "bf16", "topk", "topk:1.0", "randk",
-                     "signsgd", "ef:topk:0.9"] {
+                     "signsgd", "ef:topk:0.9", "demo", "demo:1.0,8"] {
             let c = r.build(&r.parse(spec).unwrap()).unwrap();
             for d in [0usize, 1, 3, 64, 1000] {
                 assert!(

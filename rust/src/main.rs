@@ -77,9 +77,9 @@ fn app() -> App {
                 .flag(Flag::opt("compress", "",
                                 "communication compression registry spec: \
                                  none|fp16|bf16|topk[:frac]|randk[:frac]|\
-                                 signsgd[:chunk]|ef:<codec> (empty = \
-                                 none, or whatever --config sets; see \
-                                 `slowmo info`)"))
+                                 signsgd[:chunk]|demo[:k,chunk]|\
+                                 ef:<codec> (empty = none, or whatever \
+                                 --config sets; see `slowmo info`)"))
                 .flag(Flag::opt("chaos", "",
                                 "deterministic network degradation spec: \
                                  seed=N,delay=2ms,delay-max=20ms,\

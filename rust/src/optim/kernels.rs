@@ -6,6 +6,9 @@
 //! (L1 Pallas kernels lowered to HLO); the native path is the baseline the
 //! perf pass compares against and the engine unit tests run on.
 
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use crate::runtime::engine::{Arg, ExecHandle};
@@ -38,6 +41,131 @@ impl InnerOpt {
             InnerOpt::Nesterov { .. } => "nesterov-sgd",
             InnerOpt::Adam { .. } => "adam",
         }
+    }
+}
+
+/// Precomputed orthonormal DCT basis for one transform length.
+///
+/// `basis[k*n + i] = c_k · cos(π(2i+1)k / 2n)` with `c_0 = √(1/n)` and
+/// `c_k = √(2/n)` for `k > 0`. The matrix is orthogonal, so the inverse
+/// transform (DCT-III) is the transpose of the same table — one plan
+/// serves both directions. Coefficients are stored in f32 but every
+/// transform accumulates in f64, which keeps the forward∘inverse
+/// round-trip and Parseval error near 1e-7 relative (pinned at 1e-6 by
+/// the property suite to leave margin).
+pub struct DctPlan {
+    n: usize,
+    basis: Vec<f32>,
+}
+
+impl DctPlan {
+    pub fn new(n: usize) -> Self {
+        let mut basis = vec![0.0f32; n * n];
+        for k in 0..n {
+            let c = if k == 0 {
+                (1.0 / n as f64).sqrt()
+            } else {
+                (2.0 / n as f64).sqrt()
+            };
+            for (i, b) in basis[k * n..(k + 1) * n].iter_mut().enumerate() {
+                let theta = std::f64::consts::PI * (2 * i + 1) as f64
+                    * k as f64
+                    / (2 * n) as f64;
+                *b = (c * theta.cos()) as f32;
+            }
+        }
+        DctPlan { n, basis }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Forward orthonormal DCT-II: `out[k] = Σ_i basis[k,i] · x[i]`.
+    /// Allocation-free; `x` and `out` must both have length `n`.
+    pub fn dct2(&self, x: &[f32], out: &mut [f32]) {
+        let n = self.n;
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(out.len(), n);
+        for (k, o) in out.iter_mut().enumerate() {
+            let row = &self.basis[k * n..(k + 1) * n];
+            let mut acc = 0.0f64;
+            for (b, v) in row.iter().zip(x) {
+                acc += *b as f64 * *v as f64;
+            }
+            *o = acc as f32;
+        }
+    }
+
+    /// Inverse orthonormal DCT-III (transpose of the forward basis):
+    /// `out[i] = Σ_k basis[k,i] · x[k]`. Allocation-free.
+    pub fn dct3(&self, x: &[f32], out: &mut [f32]) {
+        let n = self.n;
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(out.len(), n);
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut a = 0.0f64;
+            for (k, v) in x.iter().enumerate() {
+                a += self.basis[k * n + i] as f64 * *v as f64;
+            }
+            *o = a as f32;
+        }
+    }
+}
+
+/// Lazy per-length [`DctPlan`] cache. Codecs transform fixed-size chunks
+/// (plus one trailing partial chunk), so at most two plans are ever live
+/// per (codec, tensor-length) pair; the `Mutex` makes the cache shareable
+/// from `&self` codec methods, and `Arc` lets transforms run after the
+/// lock is dropped.
+pub struct DctPlans {
+    plans: Mutex<BTreeMap<usize, Arc<DctPlan>>>,
+}
+
+impl DctPlans {
+    pub fn new() -> Self {
+        DctPlans { plans: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Fetch (or build and cache) the plan for length `n`.
+    pub fn get(&self, n: usize) -> Arc<DctPlan> {
+        let mut plans = self.plans.lock().unwrap();
+        plans
+            .entry(n)
+            .or_insert_with(|| Arc::new(DctPlan::new(n)))
+            .clone()
+    }
+}
+
+impl Default for DctPlans {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Chunked forward DCT-II: transform each `chunk`-sized slice of `x`
+/// independently into the matching slice of `out` (the trailing partial
+/// chunk gets its own shorter plan). Allocation-free after the plans for
+/// the lengths involved are cached.
+pub fn dct2_chunked(plans: &DctPlans, x: &[f32], out: &mut [f32], chunk: usize) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert!(chunk >= 1);
+    for (xs, os) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
+        plans.get(xs.len()).dct2(xs, os);
+    }
+}
+
+/// Chunked inverse DCT-III, the exact inverse of [`dct2_chunked`] with
+/// the same `chunk`.
+pub fn dct3_chunked(plans: &DctPlans, x: &[f32], out: &mut [f32], chunk: usize) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert!(chunk >= 1);
+    for (xs, os) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
+        plans.get(xs.len()).dct3(xs, os);
     }
 }
 
@@ -261,6 +389,36 @@ impl Kernels {
         }
     }
 
+    /// Chunked forward DCT-II into `out` (see [`dct2_chunked`]). There is
+    /// no AOT DCT graph — the transform feeds the frequency-domain codec
+    /// on the host-side wire path, not the device-side optimizer path —
+    /// so both backends run the native kernel; the dispatch method exists
+    /// so call sites stay backend-agnostic and the micro bench measures
+    /// the same entry point the codec uses.
+    pub fn dct2(
+        &self,
+        plans: &DctPlans,
+        x: &[f32],
+        out: &mut [f32],
+        chunk: usize,
+    ) -> Result<()> {
+        dct2_chunked(plans, x, out, chunk);
+        Ok(())
+    }
+
+    /// Chunked inverse DCT-III into `out` (see [`dct3_chunked`]); native
+    /// on both backends for the same reason as [`Kernels::dct2`].
+    pub fn dct3(
+        &self,
+        plans: &DctPlans,
+        x: &[f32],
+        out: &mut [f32],
+        chunk: usize,
+    ) -> Result<()> {
+        dct3_chunked(plans, x, out, chunk);
+        Ok(())
+    }
+
     /// Gossip mixing `x <- a*x + b*y`.
     pub fn axpy(
         &self,
@@ -346,6 +504,126 @@ mod tests {
         assert_eq!(x, x2);
         assert_eq!(m, m2);
         assert_eq!(v, v2);
+    }
+
+    fn lcg_vec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        // Tiny deterministic generator, enough for kernel smoke tests
+        // (the property suite drives the real randomized coverage).
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s = s
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                let u = ((s >> 40) as f32) / ((1u64 << 24) as f32);
+                (u * 2.0 - 1.0) * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dct_round_trips_within_bound() {
+        let plans = DctPlans::new();
+        for &n in &[1usize, 2, 3, 7, 64, 65, 128, 300] {
+            let x = lcg_vec(n as u64, n, 2.0);
+            let mut f = vec![0.0f32; n];
+            let mut y = vec![0.0f32; n];
+            plans.get(n).dct2(&x, &mut f);
+            plans.get(n).dct3(&f, &mut y);
+            let mag = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
+            for (a, b) in x.iter().zip(&y) {
+                assert!(
+                    (a - b).abs() <= 1e-6 * mag,
+                    "n={n}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dct_preserves_energy_parseval() {
+        let plans = DctPlans::new();
+        for &n in &[1usize, 5, 64, 200] {
+            let x = lcg_vec(7 + n as u64, n, 3.0);
+            let mut f = vec![0.0f32; n];
+            plans.get(n).dct2(&x, &mut f);
+            let ex: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            let ef: f64 = f.iter().map(|v| (*v as f64).powi(2)).sum();
+            assert!(
+                (ex - ef).abs() <= 1e-6 * ex.max(1e-12),
+                "n={n}: {ex} vs {ef}"
+            );
+        }
+    }
+
+    #[test]
+    fn dct_basis_is_orthonormal() {
+        let n = 16;
+        let plan = DctPlan::new(n);
+        assert_eq!(plan.len(), n);
+        assert!(!plan.is_empty());
+        for k in 0..n {
+            for j in 0..n {
+                let dot: f64 = (0..n)
+                    .map(|i| {
+                        plan.basis[k * n + i] as f64
+                            * plan.basis[j * n + i] as f64
+                    })
+                    .sum();
+                let want = if k == j { 1.0 } else { 0.0 };
+                assert!(
+                    (dot - want).abs() < 1e-6,
+                    "rows {k},{j}: dot {dot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_dct_matches_per_chunk_and_handles_tail() {
+        let plans = DctPlans::new();
+        // 150 = 2 full chunks of 64 + a partial chunk of 22.
+        let x = lcg_vec(42, 150, 1.5);
+        let mut f = vec![0.0f32; 150];
+        dct2_chunked(&plans, &x, &mut f, 64);
+        let mut want = vec![0.0f32; 150];
+        plans.get(64).dct2(&x[..64], &mut want[..64]);
+        plans.get(64).dct2(&x[64..128], &mut want[64..128]);
+        plans.get(22).dct2(&x[128..], &mut want[128..]);
+        assert_eq!(f, want);
+
+        let mut y = vec![0.0f32; 150];
+        dct3_chunked(&plans, &f, &mut y, 64);
+        let mag = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= 1e-6 * mag);
+        }
+    }
+
+    #[test]
+    fn dct_plan_cache_reuses_plans() {
+        let plans = DctPlans::new();
+        let a = plans.get(64);
+        let b = plans.get(64);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = plans.get(32);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn kernels_dct_dispatch_routes_native() {
+        let k = Kernels::Native;
+        let plans = DctPlans::new();
+        let x = lcg_vec(9, 96, 1.0);
+        let mut f = vec![0.0f32; 96];
+        let mut want = vec![0.0f32; 96];
+        k.dct2(&plans, &x, &mut f, 32).unwrap();
+        dct2_chunked(&plans, &x, &mut want, 32);
+        assert_eq!(f, want);
+        let mut y = vec![0.0f32; 96];
+        k.dct3(&plans, &f, &mut y, 32).unwrap();
+        dct3_chunked(&plans, &f, &mut want, 32);
+        assert_eq!(y, want);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! (SLOWMO_CHAOS_SEED) so the whole suite re-rolls with one env var.
 
 use slowmo::algorithms::{BaseAlgorithm, Ctx, Local, Sgp, WorkerState};
-use slowmo::compress::{site, ErrorFeedback, TopK};
+use slowmo::compress::{site, Demo, ErrorFeedback, TopK};
 use slowmo::exec::run_workers;
 use slowmo::net::{ChaosCfg, ChaosPlan, CostModel, Fabric, FaultWindow};
 use slowmo::optim::kernels::{InnerOpt, Kernels};
@@ -513,6 +513,117 @@ fn rejoin_round_trips_ef_residuals_bitwise() {
     // The rejoiner (worker 2) pulled the leader's (worker 0, lowest
     // contributor rank) OUTER residual, bit for bit. The other survivor
     // keeps its own, different residual.
+    let leader = out[0].0.comp.residual_opt(site::OUTER).unwrap();
+    assert!(leader.iter().any(|&v| v != 0.0), "test needs a residual");
+    assert_eq!(out[2].0.comp.residual_opt(site::OUTER).unwrap(), leader);
+    assert_ne!(out[1].0.comp.residual_opt(site::OUTER).unwrap(), leader);
+}
+
+/// The demo codec's *frequency* residuals are state the elastic
+/// machinery owns just like ef's spatial ones: a membership change
+/// rescales them by the live-count ratio (valid because the DCT is
+/// linear — scaling coefficients scales the signal).
+#[test]
+fn membership_change_rescales_demo_frequency_residuals() {
+    let m = 2;
+    let d = 4;
+    let cost = CostModel::free();
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![FaultWindow {
+                    worker: 1,
+                    fail_at: 0,
+                    rejoin_at: u64::MAX,
+                }],
+                ..ChaosCfg::default()
+            },
+            m,
+            &cost,
+        )
+        .unwrap(),
+    );
+    let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    let cfg = SlowMoCfg::new(1.0, 0.0, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
+    let codec = Demo::new(0.5, 2);
+    let init = vec![0.0f32; d];
+    let mut st = WorkerState::new(&init, algo.inner());
+    st.comp.set_residual(site::OUTER, vec![2.0; d]);
+    let mut ou = OuterState::new(&init, &*rule);
+    outer_update_c(&cfg, &*rule, &algo, &fabric, &kernels, 0, &mut st,
+                   &mut ou, 1.0, 0.0, Some(&*plan), Some(&codec))
+        .unwrap();
+    assert_eq!(
+        st.comp.residual_opt(site::OUTER).unwrap(),
+        &vec![1.0; d],
+        "frequency residual must be halved by the 2 -> 1 change"
+    );
+}
+
+/// Fail-and-rejoin with `demo` active: the rejoin transfer round-trips
+/// the leader's frequency-residual buffer bit-for-bit through the same
+/// state-shape-agnostic wire format `ef` uses (`ef_bufs` = 1).
+#[test]
+fn rejoin_round_trips_demo_frequency_residuals_bitwise() {
+    let m = 3;
+    let d = 8;
+    let cost = CostModel::free();
+    let plan = Arc::new(
+        ChaosPlan::new(
+            ChaosCfg {
+                faults: vec![FaultWindow {
+                    worker: 2,
+                    fail_at: 0,
+                    rejoin_at: 1,
+                }],
+                ..ChaosCfg::default()
+            },
+            m,
+            &cost,
+        )
+        .unwrap(),
+    );
+    let fabric = Fabric::with_chaos(m, cost, Arc::clone(&plan));
+    let algo = Local::new(sgd());
+    let kernels = Kernels::Native;
+    let cfg = SlowMoCfg::new(1.0, 0.5, 4);
+    let rule = OuterRegistry::builtin().build(&cfg.outer).unwrap();
+    let codec = Demo::new(0.25, 4);
+    let init = vec![1.0f32; d];
+    let out = run_workers(m, |w| {
+        let mut st = WorkerState::new(&init, algo.inner());
+        let mut ou = OuterState::new(&init, &*rule);
+        for t in 0..2u64 {
+            // Divergent inner progress before each boundary. The
+            // worker-dependent factor multiplies a *non-affine* shape:
+            // an affine displacement would put all worker-dependence in
+            // the transmitted DC coefficient and leave the dropped
+            // (residual) coefficients identical across workers.
+            for (i, x) in st.x.iter_mut().enumerate() {
+                *x -= 0.01 * (w as f32 + 1.0) * (t as f32 + 1.0)
+                    * (1.0 + 0.3 * (i as f32).sin())
+                    + 0.003 * i as f32;
+            }
+            outer_update_c(&cfg, &*rule, &algo, &fabric, &kernels, w,
+                           &mut st, &mut ou, 0.1, 0.0, Some(&*plan),
+                           Some(&codec))
+                .unwrap();
+        }
+        (st, ou)
+    });
+    for (_, ou) in &out {
+        assert_eq!(ou.t, 2, "all workers advanced both boundaries");
+    }
+    for (st, ou) in &out[1..] {
+        assert_eq!(st.x, out[0].0.x);
+        assert_eq!(ou.x0, out[0].1.x0);
+    }
+    // The rejoiner (worker 2) pulled the leader's (worker 0) OUTER
+    // frequency residual, bit for bit; the other survivor keeps its own,
+    // different residual.
     let leader = out[0].0.comp.residual_opt(site::OUTER).unwrap();
     assert!(leader.iter().any(|&v| v != 0.0), "test needs a residual");
     assert_eq!(out[2].0.comp.residual_opt(site::OUTER).unwrap(), leader);

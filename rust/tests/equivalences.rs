@@ -459,13 +459,61 @@ fn lossy_compression_strictly_cuts_bytes_and_time() {
     let slowmo = Some(SlowMoCfg::new(1.0, 0.7, 8));
     let raw = quadc(&s, 4, 48, local(), slowmo.clone(), None);
     for spec in ["fp16", "bf16", "topk:0.1", "ef:topk:0.1", "randk:0.1",
-                 "signsgd", "ef:signsgd"] {
+                 "signsgd", "ef:signsgd", "demo:0.1"] {
         let r = quadc(&s, 4, 48, local(), slowmo.clone(), Some(spec));
         assert!(r.bytes_sent < raw.bytes_sent,
                 "{spec}: {} !< {}", r.bytes_sent, raw.bytes_sent);
         assert!(r.bytes_saved > 0, "{spec}");
         assert!(r.sim_time < raw.sim_time, "{spec}");
         assert_eq!(r.compress.as_deref(), Some(spec));
+    }
+}
+
+#[test]
+fn demo_keep_all_matches_none_within_ulp_bound() {
+    // demo:1.0 transmits every DCT coefficient, so the only deviation
+    // from the uncompressed run is the forward+inverse transform's f32
+    // rounding (<= ~1.2e-7·max|x| per transcode, measured; the property
+    // suite pins 1e-6). Over 6 outer boundaries the drift on the final
+    // parameters stays within a small multiple of that bound — this is
+    // the codec's documented, *pinned* ulp envelope, where `ef:topk:1.0`
+    // above is exactly 0.
+    let Some(s) = session() else { return };
+    let slowmo = Some(SlowMoCfg::new(1.0, 0.7, 8));
+    let bare = quadc(&s, 4, 48, local(), slowmo.clone(), None);
+    let demo = quadc(&s, 4, 48, local(), slowmo.clone(), Some("demo:1.0"));
+    let mag = bare
+        .final_params
+        .iter()
+        .fold(0.0f32, |m, v| m.max(v.abs()));
+    for (i, (a, b)) in
+        bare.final_params.iter().zip(&demo.final_params).enumerate()
+    {
+        assert!(
+            (a - b).abs() <= mag * 1e-5 + 1e-6,
+            "param {i}: {a} vs {b} (mag {mag})"
+        );
+    }
+    // Keep-all demo pays dense-fallback bytes, exactly like ef:topk:1.0.
+    assert_eq!(demo.bytes_sent, bare.bytes_sent, "dense fallback");
+    assert_eq!(demo.compress.as_deref(), Some("demo:1"));
+}
+
+#[test]
+fn demo_runs_are_bit_deterministic_including_residual_state() {
+    // Same seed ⇒ bit-identical runs with the frequency-residual codec
+    // active: parameters, bytes, simulated time and the full curve. The
+    // residual state's determinism is covered directly by the property
+    // suite; here it shows transitively (it feeds every boundary).
+    let Some(s) = session() else { return };
+    let slowmo = Some(SlowMoCfg::new(1.0, 0.7, 8));
+    for spec in ["demo:0.1", "demo:0.25,32"] {
+        let a = quadc(&s, 4, 48, local(), slowmo.clone(), Some(spec));
+        let b = quadc(&s, 4, 48, local(), slowmo.clone(), Some(spec));
+        assert_eq!(a.final_params, b.final_params, "{spec}");
+        assert_eq!(a.train_curve, b.train_curve, "{spec}");
+        assert_eq!(a.bytes_sent, b.bytes_sent, "{spec}");
+        assert_eq!(a.sim_time, b.sim_time, "{spec}");
     }
 }
 

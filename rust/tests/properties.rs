@@ -362,6 +362,124 @@ fn ef_residual_equals_dropped_mass() {
     });
 }
 
+// ------------------------------------------- DCT / demo codec lane
+// The frequency-domain subsystem: orthonormal DCT-II/III round-trip and
+// Parseval bounds for the kernel pair, and the demo codec's contracts —
+// keep-all ≈ identity, exact (bitwise) residual accounting, and seeded
+// bit-determinism of the encode + residual state.
+
+use slowmo::optim::kernels::{dct2_chunked, dct3_chunked, DctPlans};
+
+#[test]
+fn dct_forward_inverse_round_trip_ulp_bound() {
+    // f32 basis + f64 accumulation measured at <= 1.2e-7·max|x| worst
+    // case over this length range; 1e-6 leaves ~8x margin.
+    let plans = DctPlans::new();
+    forall("dct2/dct3 round-trip", &vecs(), |x| {
+        let d = x.len();
+        let mut f = vec![0.0f32; d];
+        let mut y = vec![0.0f32; d];
+        dct2_chunked(&plans, x, &mut f, 64);
+        dct3_chunked(&plans, &f, &mut y, 64);
+        let mag = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        x.iter()
+            .zip(&y)
+            .all(|(&a, &b)| (b - a).abs() <= mag * 1e-6 + 1e-7)
+    });
+}
+
+#[test]
+fn dct_parseval_energy_preservation() {
+    // The basis is orthonormal, so per-chunk (and hence total) energy is
+    // preserved: ||dct2(x)||² == ||x||² within accumulation error.
+    let plans = DctPlans::new();
+    forall("dct2 Parseval", &vecs(), |x| {
+        let d = x.len();
+        let mut f = vec![0.0f32; d];
+        dct2_chunked(&plans, x, &mut f, 64);
+        let ex: f64 = x.iter().map(|&v| f64::from(v).powi(2)).sum();
+        let ef: f64 = f.iter().map(|&v| f64::from(v).powi(2)).sum();
+        (ex - ef).abs() <= ex * 1e-6 + 1e-12
+    });
+}
+
+#[test]
+fn demo_keep_all_round_trips_within_ulp_bound() {
+    // demo:1.0 transmits every coefficient: the transcode is exactly
+    // dct3(dct2(x)) — identity within the round-trip bound — and the
+    // frequency residual is identically zero.
+    let c = build("demo:1.0");
+    forall("demo keep-all ≈ identity", &vecs(), |x| {
+        let mut st = CompressState::new(test_seed(), 0);
+        let mut y = x.clone();
+        c.transcode(&mut y, &mut st, site::OUTER);
+        let r = st.residual_opt(site::OUTER).unwrap();
+        if r.iter().any(|&v| v != 0.0) {
+            return false;
+        }
+        let mag = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        x.iter()
+            .zip(&y)
+            .all(|(&a, &b)| (b - a).abs() <= mag * 1e-6 + 1e-7)
+    });
+}
+
+#[test]
+fn demo_residual_accounting_is_an_exact_spectrum_partition() {
+    // From a fresh state, the transmitted coefficients and the new
+    // residual partition dct2(x) *bitwise*: every coefficient lands in
+    // exactly one of the two, unmodified.
+    let c = build("demo:0.25");
+    let plans = DctPlans::new();
+    forall("demo residual partition", &vecs(), |x| {
+        let d = x.len();
+        let mut st = CompressState::new(test_seed(), 0);
+        let wire = c.encode(x, &mut st, site::OUTER);
+        let mut f = vec![0.0f32; d];
+        dct2_chunked(&plans, x, &mut f, 64);
+        let r = st.residual_opt(site::OUTER).unwrap();
+        let k = wire.data.len() / 2;
+        let mut kept = vec![false; d];
+        for j in 0..k {
+            let i = wire.data[j].to_bits() as usize;
+            if i >= d
+                || wire.data[k + j].to_bits() != f[i].to_bits()
+                || r[i] != 0.0
+            {
+                return false;
+            }
+            kept[i] = true;
+        }
+        kept.iter()
+            .enumerate()
+            .all(|(i, &was)| was || r[i].to_bits() == f[i].to_bits())
+    });
+}
+
+#[test]
+fn demo_encode_and_residual_state_are_bit_deterministic() {
+    let c = build("demo:0.1");
+    forall("demo bit-determinism", &vecs(), |x| {
+        let once = |_| {
+            let mut st = CompressState::new(test_seed(), 0);
+            // Two messages so the second encode exercises the carried
+            // residual, not just the fresh-state path.
+            c.encode(x, &mut st, site::OUTER);
+            let wire = c.encode(x, &mut st, site::OUTER);
+            let bits: Vec<u32> =
+                wire.data.iter().map(|v| v.to_bits()).collect();
+            let res: Vec<u32> = st
+                .residual_opt(site::OUTER)
+                .unwrap()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            (bits, wire.wire_bytes, res)
+        };
+        once(0) == once(1)
+    });
+}
+
 // ---------------------------------------------------- group partitions
 // The hierarchical-topology invariants: every accepted Groups spec
 // partitions 0..m exactly once; malformed specs are hard parse errors
@@ -538,7 +656,8 @@ fn wire_bytes_never_exceed_raw_for_any_registered_key() {
     let mut specs: Vec<String> =
         r.keys().iter().map(|k| k.to_string()).collect();
     specs.extend(
-        ["topk:1.0", "randk:1.0", "signsgd:1", "ef:topk:1.0"]
+        ["topk:1.0", "randk:1.0", "signsgd:1", "ef:topk:1.0",
+         "demo:1.0", "demo:1.0,1", "demo:0.5,7"]
             .iter()
             .map(|s| s.to_string()),
     );
