@@ -13,8 +13,10 @@ help:
 	@echo ""
 	@echo "experiment sweeps (cargo run --release -- exp <id> --scale <s>):"
 	@echo "  table1|table2|fig2|fig3|figb2|tableb23|tableb4|doubleavg|"
-	@echo "  noaverage|outers|compress|hier|semisync|theory|throughput|all"
-	@echo "  (compress sweeps the demo frequency-domain codec vs topk et al.)"
+	@echo "  noaverage|outers|compress|hier|semisync|scale|theory|"
+	@echo "  throughput|all"
+	@echo "  (compress sweeps the demo frequency-domain codec vs topk et"
+	@echo "  al.; scale sweeps m x topology under dense vs shared state)"
 	@echo "scales: ci|quick|standard|full (exp default: quick; bench"
 	@echo "honours SLOWMO_SCALE, default ci)"
 

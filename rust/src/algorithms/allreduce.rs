@@ -60,12 +60,18 @@ impl BaseAlgorithm for AllReduce {
             ctx.compress.filter(|c| !c.is_identity()),
         );
         apply_inner(ctx, &self.inner, state, &avg, gamma)?;
-        state.z.copy_from_slice(&state.x);
+        if !state.z.is_empty() {
+            state.z.copy_from_slice(&state.x);
+        }
         Ok(())
     }
 
     fn lockstep(&self) -> bool {
         true
+    }
+
+    fn needs_debias(&self) -> bool {
+        false
     }
 
     fn comm_elems_per_step(&self, d: usize) -> usize {

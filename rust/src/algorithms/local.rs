@@ -40,12 +40,19 @@ impl BaseAlgorithm for Local {
         _k: u64,
     ) -> Result<()> {
         apply_inner(ctx, &self.inner, state, g, gamma)?;
-        // Keep the de-biased view coherent for uniform eval plumbing.
-        state.z.copy_from_slice(&state.x);
+        // Keep the de-biased view coherent for uniform eval plumbing
+        // (skipped under the lean-z layout: eval_params is x here).
+        if !state.z.is_empty() {
+            state.z.copy_from_slice(&state.x);
+        }
         Ok(())
     }
 
     fn lockstep(&self) -> bool {
+        false
+    }
+
+    fn needs_debias(&self) -> bool {
         false
     }
 

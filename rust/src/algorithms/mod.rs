@@ -61,19 +61,62 @@ pub struct WorkerState {
     pub comp: CompressState,
 }
 
+/// Which optional [`WorkerState`] buffers a run materializes. The dense
+/// default allocates everything; the shared-state trainer mode elides the
+/// momentum buffer when the inner optimizer is momentum-free (`beta0 = 0`
+/// Nesterov — x is bitwise-unaffected, see
+/// [`crate::optim::nesterov_step_nomom`]) and the de-bias mirror `z` when
+/// the base algorithm reports [`BaseAlgorithm::needs_debias`] `false`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StateLayout {
+    /// Elide the momentum buffer `h` (empty vec).
+    pub lean_h: bool,
+    /// Elide the de-bias mirror `z` (empty vec).
+    pub lean_z: bool,
+}
+
+impl StateLayout {
+    /// The dense default: every buffer allocated.
+    pub fn dense() -> Self {
+        Self::default()
+    }
+}
+
 impl WorkerState {
     pub fn new(init: &[f32], inner: &InnerOpt) -> Self {
+        Self::with_layout(init, inner, StateLayout::dense())
+    }
+
+    /// Allocate per-worker state under `layout` — the shared-state mode's
+    /// entry point. `layout.lean_h`/`lean_z` leave the corresponding
+    /// buffers empty; every consumer of an elidable buffer guards on
+    /// `is_empty()` (momentum dispatch in
+    /// [`crate::optim::kernels::Kernels::inner_step`], the z mirror copies
+    /// in comm-free algorithms and [`BaseAlgorithm::on_exact_average`]).
+    pub fn with_layout(
+        init: &[f32],
+        inner: &InnerOpt,
+        layout: StateLayout,
+    ) -> Self {
         let d = init.len();
         Self {
             x: init.to_vec(),
-            h: vec![0.0; d],
+            h: if layout.lean_h {
+                Vec::new()
+            } else {
+                vec![0.0; d]
+            },
             v: if inner.uses_second_moment() {
                 vec![0.0; d]
             } else {
                 Vec::new()
             },
             w: 1.0,
-            z: init.to_vec(),
+            z: if layout.lean_z {
+                Vec::new()
+            } else {
+                init.to_vec()
+            },
             adam_step: 0,
             stash: Vec::new(),
             pending_count: 0,
@@ -183,7 +226,18 @@ pub trait BaseAlgorithm: Send + Sync {
     /// push-sum state can be re-synchronized (w=1, z=x).
     fn on_exact_average(&self, state: &mut WorkerState) {
         state.w = 1.0;
-        state.z.copy_from_slice(&state.x);
+        if !state.z.is_empty() {
+            state.z.copy_from_slice(&state.x);
+        }
+    }
+
+    /// Does this algorithm read the de-bias mirror `z`? Push-sum methods
+    /// (SGP family) do — their [`BaseAlgorithm::eval_params`] is `z` —
+    /// while comm-free and exact-average methods only mirror x into z for
+    /// uniformity. Algorithms returning `false` may run with `z` elided
+    /// ([`StateLayout::lean_z`], the shared-state trainer mode).
+    fn needs_debias(&self) -> bool {
+        true
     }
 
     /// f32 values communicated per worker per inner step (for comm
@@ -293,6 +347,48 @@ mod tests {
         assert_eq!(s.x, s.z);
         let s = WorkerState::new(&[1.0, 2.0], &InnerOpt::adam_default());
         assert_eq!(s.v.len(), 2);
+    }
+
+    #[test]
+    fn lean_layout_elides_buffers() {
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        let layout = StateLayout { lean_h: true, lean_z: true };
+        let s = WorkerState::with_layout(&[1.0, 2.0, 3.0], &inner, layout);
+        assert_eq!(s.d(), 3);
+        assert!(s.h.is_empty() && s.z.is_empty() && s.v.is_empty());
+        assert_eq!(s.x, vec![1.0, 2.0, 3.0]);
+        // Dense layout through with_layout matches new() exactly.
+        let dense =
+            WorkerState::with_layout(&[1.0, 2.0], &inner, StateLayout::dense());
+        let plain = WorkerState::new(&[1.0, 2.0], &inner);
+        assert_eq!(dense.h, plain.h);
+        assert_eq!(dense.z, plain.z);
+    }
+
+    #[test]
+    fn on_exact_average_tolerates_lean_z() {
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        let layout = StateLayout { lean_h: false, lean_z: true };
+        let mut s = WorkerState::with_layout(&[1.0; 4], &inner, layout);
+        s.w = 0.5;
+        let algo = Local::new(inner);
+        algo.on_exact_average(&mut s); // must not panic on empty z
+        assert_eq!(s.w, 1.0);
+        assert!(s.z.is_empty());
+    }
+
+    #[test]
+    fn needs_debias_splits_push_sum_from_the_rest() {
+        use crate::topology::ExponentialGraph;
+        use std::sync::Arc;
+        let inner = InnerOpt::nesterov_default();
+        assert!(!Local::new(inner).needs_debias());
+        assert!(!AllReduce::new(inner).needs_debias());
+        let topo = Arc::new(ExponentialGraph::new(4));
+        assert!(Sgp::new(inner, topo.clone()).needs_debias());
+        assert!(Sgp::overlap(inner, topo).needs_debias());
+        assert!(Dpsgd::new(inner, 4).needs_debias());
+        assert!(DoubleAvg::new(inner, 12).needs_debias());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use super::{AllReduce, BaseAlgorithm, DoubleAvg, Dpsgd, Local, Sgp};
 use crate::optim::kernels::InnerOpt;
-use crate::topology::ExponentialGraph;
+use crate::topology::{DirectedRing, ExponentialGraph};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -121,6 +121,30 @@ impl AlgoRegistry {
                     as Arc<dyn BaseAlgorithm>
             },
         );
+        r.register(
+            "sgp-static",
+            "SGP over a fixed directed ring (time-varying gossip off)",
+            false,
+            |c: &AlgoCtx| {
+                Arc::new(
+                    Sgp::new(c.inner, Arc::new(DirectedRing::new(c.m)))
+                        .with_tag("-static"),
+                ) as Arc<dyn BaseAlgorithm>
+            },
+        );
+        r.register(
+            "osgp-static",
+            "overlapped SGP over a fixed directed ring",
+            false,
+            |c: &AlgoCtx| {
+                Arc::new(
+                    Sgp::overlap(c.inner, Arc::new(DirectedRing::new(c.m)))
+                        .with_tag("-static"),
+                ) as Arc<dyn BaseAlgorithm>
+            },
+        );
+        r.alias("sgp-exp", "sgp");
+        r.alias("osgp-exp", "osgp");
         r.register(
             "dpsgd",
             "decentralized parallel SGD over a symmetric ring",
@@ -379,6 +403,30 @@ mod tests {
         let sel = r.parse("allreduce").unwrap();
         assert_eq!(sel.key, "ar");
         assert!(r.contains("allreduce") && r.contains("ar"));
+        // The default gossip graph is the time-varying exponential one;
+        // the -exp aliases make that explicit and spell the contrast with
+        // the sgp-static/osgp-static fixed-ring keys.
+        assert_eq!(r.parse("sgp-exp").unwrap().key, "sgp");
+        assert_eq!(r.parse("osgp-exp").unwrap().key, "osgp");
+        let sel = r.parse("sgp-exp-adam").unwrap();
+        assert_eq!(sel.key, "sgp");
+        assert!(sel.inner.uses_second_moment());
+    }
+
+    #[test]
+    fn static_graph_variants_build_and_name() {
+        let r = AlgoRegistry::builtin();
+        for key in ["sgp-static", "osgp-static"] {
+            let sel = r.parse(key).unwrap();
+            assert_eq!(sel.key, key);
+            let algo = r.build(&sel, 4).unwrap();
+            assert_eq!(algo.name(), format!("{key}-nesterov-sgd"));
+            assert!(algo.needs_debias());
+        }
+        assert!(r.build(&r.parse("osgp-static").unwrap(), 4)
+            .unwrap()
+            .name()
+            .starts_with("osgp-static"));
     }
 
     #[test]

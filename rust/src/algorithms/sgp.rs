@@ -28,11 +28,16 @@ pub struct Sgp {
     pub overlap: bool,
     /// OSGP: block for a message after this many receive-less steps.
     pub sync_every: u64,
+    /// Name tag distinguishing registry variants over non-default graphs
+    /// ("" for the time-varying exponential default, "-static" for the
+    /// fixed directed ring). Purely cosmetic: the mixing behaviour lives
+    /// entirely in `topo`.
+    tag: &'static str,
 }
 
 impl Sgp {
     pub fn new(inner: InnerOpt, topo: Arc<dyn Topology>) -> Self {
-        Self { inner, topo, overlap: false, sync_every: 1 }
+        Self { inner, topo, overlap: false, sync_every: 1, tag: "" }
     }
 
     /// OSGP: `sync_every = 1` bounds staleness to one overlapped step —
@@ -41,7 +46,15 @@ impl Sgp {
     /// Looser bounds let a fast worker halve its push-sum weight
     /// geometrically while running solo, destabilizing z = x/w.
     pub fn overlap(inner: InnerOpt, topo: Arc<dyn Topology>) -> Self {
-        Self { inner, topo, overlap: true, sync_every: 1 }
+        Self { inner, topo, overlap: true, sync_every: 1, tag: "" }
+    }
+
+    /// Tag the display name (e.g. "-static" for the fixed-graph registry
+    /// variants, so `sgp-static` builds an algorithm named
+    /// `sgp-static-<inner>`).
+    pub fn with_tag(mut self, tag: &'static str) -> Self {
+        self.tag = tag;
+        self
     }
 
     /// Number of step-`k` messages addressed to `worker`.
@@ -69,8 +82,9 @@ impl Sgp {
 impl BaseAlgorithm for Sgp {
     fn name(&self) -> String {
         format!(
-            "{}-{}",
+            "{}{}-{}",
             if self.overlap { "osgp" } else { "sgp" },
+            self.tag,
             self.inner.name()
         )
     }
@@ -315,5 +329,31 @@ mod tests {
         assert_eq!(sgp(2, true).name(), "osgp-nesterov-sgd");
         assert!(sgp(2, false).lockstep());
         assert!(!sgp(2, true).lockstep());
+        assert_eq!(
+            sgp(2, false).with_tag("-static").name(),
+            "sgp-static-nesterov-sgd"
+        );
+        assert_eq!(
+            sgp(2, true).with_tag("-static").name(),
+            "osgp-static-nesterov-sgd"
+        );
+    }
+
+    #[test]
+    fn static_ring_sgp_conserves_mass_and_mixes() {
+        use crate::topology::DirectedRing;
+        let m = 4;
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 };
+        let algo = Sgp::new(inner, Arc::new(DirectedRing::new(m)))
+            .with_tag("-static");
+        let states = drive(&algo, m, 4, 200, 0.2);
+        let total_w: f64 = states.iter().map(|s| s.w).sum();
+        assert!((total_w - m as f64).abs() < 1e-9, "mass {total_w}");
+        let want = mean(&(1..=m).map(|x| x as f64).collect::<Vec<_>>());
+        for s in &states {
+            for &z in &s.z {
+                assert!((z as f64 - want).abs() < 0.3, "z={z} want {want}");
+            }
+        }
     }
 }

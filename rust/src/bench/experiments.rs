@@ -19,7 +19,7 @@ use crate::net::WorkloadTiming;
 use crate::optim::kernels::InnerOpt;
 use crate::session::TrainBuilder;
 use crate::slowmo::{BufferStrategy, SlowMoCfg};
-use crate::trainer::{Schedule, SeedAggregate, TrainResult};
+use crate::trainer::{Schedule, SeedAggregate, StateMode, TrainResult};
 use anyhow::Result;
 
 /// Task descriptor: which preset stands in for which paper dataset, and
@@ -1143,6 +1143,257 @@ pub fn throughput(env: &Env) -> Result<Table> {
     Ok(table)
 }
 
+// ------------------------------------------------------------------ scale
+
+/// `"i*s-(i+1)*s-1"` range tokens for `m / size` equal groups — the
+/// explicit-spec form [`crate::topology::Groups::parse`] accepts.
+fn range_tier(m: usize, size: usize) -> String {
+    (0..m / size)
+        .map(|i| format!("{}-{}", i * size, (i + 1) * size - 1))
+        .collect::<Vec<_>>()
+        .join("|")
+}
+
+/// The scale sweep's cluster shapes for `m` workers (m a power of two,
+/// ≥ 16): 8 racks of `m/8` and, above them, 2 pods of `m/2`. Returns
+/// `(leaf tier, full leaves-first tree spec)`.
+fn scale_tree_spec(m: usize) -> (String, String) {
+    let leaf = range_tier(m, m / 8);
+    let tree = format!("{leaf};{}", range_tier(m, m / 2));
+    (leaf, tree)
+}
+
+/// Scale fabric sweep (`slowmo exp scale`): worker count m × cluster
+/// topology on the native quad workload, Local base + SlowMo, fixed
+/// per-step compute so the sim-time column isolates communication.
+/// Per m the three modes share one physical cluster shape (8 racks × 2
+/// pods, 10G intra / 1G rack-to-rack / 0.5G + 2 ms pod-to-pod):
+///
+/// - `flat` — flat SlowMo on the tiered fabric (honest baseline:
+///   per-link costs + inter-tier byte accounting, algorithm unchanged);
+/// - `d1`   — two-level hierarchical reduce over the rack partition;
+/// - `d2`   — the full depth-2 tree reduce (rack rings → pod rings).
+///
+/// Small m runs dense worker state; large m (256 → 1024, plus 4096 at
+/// `--scale full`, where the sweep takes minutes) runs
+/// [`StateMode::Shared`]. Cells run in ascending-footprint order with a
+/// [`crate::util::reset_peak_rss`] before each, so every cell's `VmHWM`
+/// reading is its own high-water mark.
+///
+/// Emits `results/BENCH_scale.json` (schema `bench-scale/v1`, checked
+/// in at `results/BENCH_scale.schema.json`) and *asserts*:
+///
+/// - per cell, the depth-2 tree finishes in strictly less simulated
+///   time than flat on the same cluster, and the two-level reduce moves
+///   strictly fewer inter-tier bytes than flat;
+/// - shared-state peak RSS at the largest m sits strictly below the
+///   dense-replica projection (dense bytes/worker measured empirically
+///   between m = 64 and m = 256, floored at the analytic 5 · d · 4 B
+///   state footprint), with at least d · 4 B/worker to spare — half of
+///   the two elided buffers — i.e. memory grows sublinearly in m
+///   relative to dense replication. Skipped loudly where the kernel
+///   doesn't expose `VmHWM`.
+pub fn scale(env: &Env) -> Result<Table> {
+    use crate::jsonx::Json;
+    use std::collections::BTreeMap;
+    let mut table = Table::new(
+        "Scale sweep (Local base + SlowMo, quad, 8 racks × 2 pods)",
+        &["state", "m", "topo", "sim time (s)", "inter bytes",
+          "total bytes", "best train loss", "peak rss (MiB)"],
+    );
+    let d = env.manifest().preset("quad")?.flat_len;
+    let steps: u64 = 48;
+    let tau: u64 = 12;
+    let (inter_lat, inter_bw) = {
+        let c = crate::net::CostModel::ethernet_1g();
+        (c.latency_s, c.bandwidth_bps)
+    };
+    let (tier_lat, tier_bw) = (2e-3, inter_bw / 2.0);
+    // Ascending footprint: each cell's own allocations dominate every
+    // earlier cell's retained allocator pool, so the per-cell VmHWM
+    // reset yields a clean own-high-water reading.
+    let mut cells: Vec<(StateMode, usize)> = vec![
+        (StateMode::Dense, 16),
+        (StateMode::Dense, 64),
+        (StateMode::Shared, 256),
+        (StateMode::Dense, 256),
+        (StateMode::Shared, 1024),
+    ];
+    if env.scale == Scale::Full {
+        cells.push((StateMode::Shared, 4096));
+    }
+    let m_big = cells.last().unwrap().1;
+    let mut entries: Vec<Json> = Vec::new();
+    let mut rss_by_cell: BTreeMap<(&'static str, usize), Option<u64>> =
+        BTreeMap::new();
+    for &(state, m) in &cells {
+        let (leaf, tree) = scale_tree_spec(m);
+        let mut trio: Vec<TrainResult> = Vec::new();
+        for topo in ["flat", "d1", "d2"] {
+            let b = env
+                .session
+                .train("quad")
+                .algo_sel(AlgoSel::with_inner(
+                    "local",
+                    InnerOpt::Nesterov { beta0: 0.0, wd: 0.0 },
+                ))
+                .workers(m)
+                .steps(steps)
+                .seed(0)
+                .slowmo_cfg(SlowMoCfg::new(1.0, 0.5, tau)
+                    .with_buffers(BufferStrategy::Maintain))
+                .schedule(Schedule::Const(0.3))
+                .heterogeneity(1.0)
+                .eval_batches(1)
+                .cost(env.cost())
+                .compute_time(1e-6)
+                .state(state);
+            let b = match topo {
+                "flat" => b
+                    .groups_flat(&tree)
+                    .inter_link(inter_lat, inter_bw)
+                    .tier_link(tier_lat, tier_bw),
+                "d1" => b.groups(&leaf).inter_link(inter_lat, inter_bw),
+                _ => b
+                    .groups(&tree)
+                    .inter_link(inter_lat, inter_bw)
+                    .tier_link(tier_lat, tier_bw),
+            };
+            crate::util::reset_peak_rss();
+            let r = run_cell(env, b)?;
+            table.row(&[
+                state.name().to_string(),
+                m.to_string(),
+                topo.to_string(),
+                format!("{:.3}", r.sim_time),
+                r.bytes_inter.to_string(),
+                r.bytes_sent.to_string(),
+                fmt4(r.best_train_loss),
+                r.peak_rss_bytes
+                    .map(|b| format!("{:.1}", b as f64 / (1 << 20) as f64))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            let mut pairs = vec![
+                ("state", Json::str(state.name())),
+                ("m", Json::num(m as f64)),
+                ("topo", Json::str(topo)),
+                ("spec", Json::str(r.groups.as_deref().unwrap_or(""))),
+                ("sim_time", Json::num(r.sim_time)),
+                ("bytes_inter", Json::num(r.bytes_inter as f64)),
+                ("bytes_sent", Json::num(r.bytes_sent as f64)),
+                ("best_train_loss", Json::num(r.best_train_loss)),
+            ];
+            if let Some(rss) = r.peak_rss_bytes {
+                pairs.push(("peak_rss_bytes", Json::num(rss as f64)));
+            }
+            entries.push(Json::obj(pairs));
+            trio.push(r);
+        }
+        let (flat, d1, d2) = (&trio[0], &trio[1], &trio[2]);
+        anyhow::ensure!(
+            d2.sim_time < flat.sim_time,
+            "scale({},m={m}): depth-2 tree took {:.3}s simulated, flat \
+             took {:.3}s — the tree reduce must beat flat on its own \
+             cluster at equal steps",
+            state.name(),
+            d2.sim_time,
+            flat.sim_time
+        );
+        anyhow::ensure!(
+            d1.bytes_inter < flat.bytes_inter,
+            "scale({},m={m}): two-level reduce moved {} inter-tier \
+             bytes, flat moved {} — hierarchy must cut slow-link \
+             traffic",
+            state.name(),
+            d1.bytes_inter,
+            flat.bytes_inter
+        );
+        // The depth-2 tree's RSS stands in for the cell: all three
+        // topologies hold the same worker state, and `d2` runs last, on
+        // top of an allocator pool its equal-sized siblings warmed.
+        rss_by_cell.insert((state.name(), m), d2.peak_rss_bytes);
+    }
+    let rss = |state: StateMode, m: usize| {
+        rss_by_cell.get(&(state.name(), m)).copied().flatten()
+    };
+    // Shared-state memory gate: project dense replication out to the
+    // largest m from the measured dense slope and require shared-state
+    // to beat the projection with at least half the two elided buffers
+    // (h, z — see StateMode) to spare.
+    let bytes_per_vec = 4.0 * d as f64;
+    let mut gate: Vec<(&str, Json)> = Vec::new();
+    let enforced = match (
+        rss(StateMode::Dense, 64),
+        rss(StateMode::Dense, 256),
+        rss(StateMode::Shared, 256),
+        rss(StateMode::Shared, m_big),
+    ) {
+        (Some(d64), Some(d256), Some(s256), Some(sbig)) => {
+            let dense_slope = ((d256 as f64 - d64 as f64) / 192.0)
+                .max(5.0 * bytes_per_vec);
+            let extra = (m_big - 256) as f64;
+            let projection = d256 as f64 + extra * dense_slope;
+            let margin = extra * bytes_per_vec;
+            anyhow::ensure!(
+                (sbig as f64) < projection,
+                "scale: shared m={m_big} peaked at {sbig} B RSS, dense \
+                 projection is {projection:.0} B ({dense_slope:.0} \
+                 B/worker from m=64..256) — shared state must stay \
+                 strictly below dense replication"
+            );
+            anyhow::ensure!(
+                projection - sbig as f64 >= margin,
+                "scale: shared m={m_big} saved only {:.0} B vs the \
+                 dense projection; the elided h/z buffers guarantee \
+                 {margin:.0} B ({bytes_per_vec:.0} B/worker)",
+                projection - sbig as f64
+            );
+            anyhow::ensure!(
+                s256 < d256,
+                "scale: shared m=256 peaked at {s256} B RSS, dense \
+                 m=256 at {d256} B — shared must be strictly smaller \
+                 at equal m"
+            );
+            gate.push(("dense_slope_bytes_per_worker",
+                       Json::num(dense_slope)));
+            gate.push(("projection_bytes", Json::num(projection)));
+            gate.push(("shared_peak_bytes", Json::num(sbig as f64)));
+            gate.push(("margin_bytes", Json::num(margin)));
+            true
+        }
+        _ => {
+            crate::info!(
+                "scale: peak-RSS gate skipped (no VmHWM on this kernel)"
+            );
+            false
+        }
+    };
+    gate.insert(0, ("enforced", Json::Bool(enforced)));
+    table.print();
+    table.write_json(&env.out_path("scale.json"))?;
+    let bench = Json::obj(vec![
+        ("schema", Json::str("bench-scale/v1")),
+        ("preset", Json::str("quad")),
+        ("d", Json::num(d as f64)),
+        ("steps", Json::num(steps as f64)),
+        ("tau", Json::num(tau as f64)),
+        ("m_max", Json::num(m_big as f64)),
+        ("inter_latency_s", Json::num(inter_lat)),
+        ("inter_bandwidth_bps", Json::num(inter_bw)),
+        ("tier_latency_s", Json::num(tier_lat)),
+        ("tier_bandwidth_bps", Json::num(tier_bw)),
+        ("rss_gate", Json::obj(gate)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let path = env.out_path("BENCH_scale.json");
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&path, crate::jsonx::to_string(&bench))?;
+    crate::info!("wrote {path}");
+    Ok(table)
+}
+
 // ----------------------------------------------------------------- theory
 
 /// Theorem 1 / Corollary 1-2 validation on the quadratic workload
@@ -1223,5 +1474,20 @@ mod tests {
         let t = TaskSpec::cifar();
         let s = (t.sched)(1000);
         assert!(s.gamma(500) > 0.0);
+    }
+
+    #[test]
+    fn scale_tree_specs_are_nested_and_parse() {
+        let (leaf, tree) = scale_tree_spec(16);
+        assert_eq!(leaf, "0-1|2-3|4-5|6-7|8-9|10-11|12-13|14-15");
+        assert_eq!(tree, format!("{leaf};0-7|8-15"));
+        let t = crate::topology::TierTree::parse(&tree, 16).unwrap();
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.leaf().all().len(), 8);
+        let (leaf, tree) = scale_tree_spec(1024);
+        assert!(leaf.starts_with("0-127|128-255"));
+        assert!(tree.ends_with(";0-511|512-1023"));
+        let t = crate::topology::TierTree::parse(&tree, 1024).unwrap();
+        assert_eq!(t.m(), 1024);
     }
 }

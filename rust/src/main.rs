@@ -104,6 +104,12 @@ fn app() -> App {
                                  thread per worker, real concurrent \
                                  transfers; identical math, real wall \
                                  clock; empty = leave config's value)"))
+                .flag(Flag::opt("state", "",
+                                "worker-state layout: dense (default) | \
+                                 shared (one read-only init Arc + \
+                                 copy-on-write buffers for large-m sim \
+                                 runs; sim-only, native kernels; empty = \
+                                 leave config's value)"))
                 .flag(Flag::opt("progress", "0",
                                 "stream a progress line every N steps \
                                  (0 = off)"))
@@ -262,6 +268,16 @@ fn cmd_train(args: &slowmo::clix::Args) -> anyhow::Result<()> {
                 .map_err(anyhow::Error::msg)?,
         )
     };
+    let state_spec = args.string("state");
+    let builder = if state_spec.is_empty() {
+        builder
+    } else {
+        builder.state(
+            state_spec
+                .parse::<slowmo::trainer::StateMode>()
+                .map_err(anyhow::Error::msg)?,
+        )
+    };
     let cfg = builder.build_cfg()?;
     println!("training {} / {} ...", cfg.preset, cfg.algo.spec());
     let r = match args.u64("progress") {
@@ -375,6 +391,9 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         "throughput" => {
             experiments::throughput(&env)?;
         }
+        "scale" => {
+            experiments::scale(&env)?;
+        }
         "all" => {
             experiments::table2(&env)?;
             experiments::theory(&env)?;
@@ -385,7 +404,7 @@ fn cmd_exp(args: &slowmo::clix::Args) -> anyhow::Result<()> {
         other => anyhow::bail!(
             "unknown experiment {other:?} (table1|table2|fig2|fig3|figb2|\
              tableb23|tableb4|doubleavg|noaverage|outers|compress|hier|\
-             semisync|theory|throughput|all)"
+             semisync|theory|throughput|scale|all)"
         ),
     }
     println!("\n[exp {which} done in {}]",

@@ -19,24 +19,31 @@
 use crate::exec::{ExecMode, Lanes};
 use crate::net::chaos::ChaosPlan;
 use crate::net::cost::CostModel;
-use crate::topology::Groups;
+use crate::topology::{Groups, TierTree};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Two-tier link context: a worker [`Groups`] partition plus the α-β
-/// parameters of the slow inter-group links. With tiers installed the
-/// fabric charges every transfer the cost of the link it actually
-/// crosses — `Fabric::cost` for intra-group hops, `Tiers::inter` for
-/// hops between groups — and tallies inter-group wire bytes separately
+/// N-level link context: a [`TierTree`] over the workers plus one α-β
+/// cost model per tier above the leaves. With tiers installed the fabric
+/// charges every transfer the cost of the link it actually crosses —
+/// `Fabric::cost` inside a leaf group, `links[l-1]` for a hop first
+/// joined at tier `l`, `links.last()` for a top-level crossing — and
+/// tallies leaf-crossing wire bytes separately
 /// ([`Fabric::bytes_inter`]), so hierarchical runs and flat runs on the
 /// same tiered cluster are compared honestly.
+///
+/// The historical two-tier setup ([`Fabric::set_tiers`]) is exactly the
+/// depth-1 tree with a single link model: same matches, same charges,
+/// bit for bit.
 #[derive(Clone)]
 pub struct Tiers {
-    pub groups: Arc<Groups>,
-    /// Cost model of the slow inter-group links (`Fabric::cost` stays the
-    /// fast intra-group model).
-    pub inter: CostModel,
+    pub tree: Arc<TierTree>,
+    /// Cost models of the slow links, one per tier: `links[l-1]` governs
+    /// transfers first joined at tier `l` (`Fabric::cost` stays the fast
+    /// intra-leaf-group model); `links[depth-1]` also covers pairs that
+    /// share no group at any tier. Invariant: `links.len() == depth`.
+    pub links: Vec<CostModel>,
 }
 
 /// One gossip message (SGP/OSGP/D-PSGD payload).
@@ -128,10 +135,30 @@ impl Fabric {
 
     /// Install a two-tier link context (worker partition + inter-group
     /// cost model). Every subsequent send is charged per the link it
-    /// crosses and inter-group wire bytes are tallied separately.
+    /// crosses and inter-group wire bytes are tallied separately. This is
+    /// the depth-1 special case of [`Fabric::set_tier_tree`].
     pub fn set_tiers(&mut self, groups: Arc<Groups>, inter: CostModel) {
         assert_eq!(groups.m(), self.m, "tier partition must cover m workers");
-        self.tiers = Some(Tiers { groups, inter });
+        self.tiers = Some(Tiers {
+            tree: Arc::new(TierTree::from_groups(groups)),
+            links: vec![inter],
+        });
+    }
+
+    /// Install an N-level tier tree with one cost model per tier:
+    /// `links[l-1]` is charged to transfers whose endpoints are first
+    /// joined at tier `l` (and `links[depth-1]` to pairs sharing no group
+    /// at any tier); hops inside a leaf group keep the fast
+    /// `Fabric::cost`.
+    pub fn set_tier_tree(&mut self, tree: Arc<TierTree>, links: Vec<CostModel>) {
+        assert_eq!(tree.m(), self.m, "tier tree must cover m workers");
+        assert_eq!(
+            links.len(),
+            tree.depth(),
+            "need one link cost model per tier (depth {})",
+            tree.depth()
+        );
+        self.tiers = Some(Tiers { tree, links });
     }
 
     pub fn m(&self) -> usize {
@@ -157,27 +184,39 @@ impl Fabric {
         self.chaos.as_deref()
     }
 
-    /// The installed worker partition, when two-tier accounting is on.
+    /// The installed leaf worker partition, when tiered accounting is on
+    /// (tier 0 of the tree — what every two-level code path consumes).
     pub fn groups(&self) -> Option<&Groups> {
-        self.tiers.as_ref().map(|t| &*t.groups)
+        self.tiers.as_ref().map(|t| &**t.tree.leaf())
     }
 
-    /// Cost model of the link `from -> to` (`cost` without tiers or for
-    /// intra-group hops; the tier's inter model across groups).
+    /// The installed tier tree, when tiered accounting is on.
+    pub fn tier_tree(&self) -> Option<&Arc<TierTree>> {
+        self.tiers.as_ref().map(|t| &t.tree)
+    }
+
+    /// Cost model of the link `from -> to`: `cost` without tiers or
+    /// inside a leaf group; `links[l-1]` when tier `l` is the first to
+    /// join the endpoints; `links.last()` when no tier does.
     pub fn cost_for_link(&self, from: usize, to: usize) -> &CostModel {
-        match &self.tiers {
-            Some(t) if t.groups.is_inter(from, to) => &t.inter,
-            _ => &self.cost,
+        let Some(t) = &self.tiers else { return &self.cost };
+        match t.tree.join_level(from, to) {
+            Some(0) => &self.cost,
+            Some(l) => &t.links[l - 1],
+            None => t.links.last().expect("links.len() == depth >= 1"),
         }
     }
 
     /// Cost model governing a synchronous collective over `workers`: a
     /// ring round completes when its slowest transfer does, so a ring
-    /// spanning more than one group is gated by the inter-group links.
+    /// spanning tier-`l` groups is gated by the tier-`l` links (and one
+    /// spanning the top tier by the slowest links of all).
     pub fn cost_for_span(&self, workers: &[usize]) -> &CostModel {
-        match &self.tiers {
-            Some(t) if t.groups.spans(workers) => &t.inter,
-            _ => &self.cost,
+        let Some(t) = &self.tiers else { return &self.cost };
+        match t.tree.span_level(workers) {
+            Some(0) => &self.cost,
+            Some(l) => &t.links[l - 1],
+            None => t.links.last().expect("links.len() == depth >= 1"),
         }
     }
 
@@ -187,7 +226,9 @@ impl Fabric {
             .fetch_add(elems as u64 * 4, Ordering::Relaxed);
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
         if let Some(t) = &self.tiers {
-            if t.groups.is_inter(from, to) {
+            // bytes_inter keeps its historical meaning: wire bytes that
+            // left a leaf group, whatever deeper tier the hop joined at.
+            if t.tree.leaf().is_inter(from, to) {
                 self.bytes_inter.fetch_add(wire_bytes, Ordering::Relaxed);
             }
         }
@@ -465,6 +506,73 @@ mod tests {
             "intra span uses the fast model"
         );
         assert_eq!(f.cost_for_span(&[0, 2]).latency_s, inter.latency_s);
+    }
+
+    #[test]
+    fn tier_tree_charges_per_join_level() {
+        use crate::topology::TierTree;
+        // Racks {0,1}{2,3}{4,5}{6,7}, pods {0-3}{4-7}: rack links free,
+        // pod links 1 ms, datacenter links 10 ms.
+        let pod = CostModel { latency_s: 1e-3, bandwidth_bps: f64::INFINITY };
+        let dc = CostModel { latency_s: 1e-2, bandwidth_bps: f64::INFINITY };
+        let tree = Arc::new(
+            TierTree::parse("0-1|2-3|4-5|6-7;0-3|4-7", 8).unwrap(),
+        );
+        let mut f = Fabric::new(8, CostModel::free());
+        f.set_tier_tree(tree, vec![pod.clone(), dc.clone()]);
+        let msg = |from: usize| GossipMsg {
+            from,
+            step: 0,
+            payload: vec![0.0; 4],
+            weight: 1.0,
+            send_time: 0.0,
+        };
+        // Same rack: free, not inter.
+        assert_eq!(f.gossip_send(1, msg(0)), 0.0);
+        assert_eq!(f.bytes_inter(), 0);
+        // Same pod, different rack: pod latency; counts as inter (leaf
+        // crossing), preserving the historical bytes_inter meaning.
+        let eta = f.gossip_send(2, msg(0));
+        assert!((eta - 1e-3).abs() < 1e-12, "{eta}");
+        assert_eq!(f.bytes_inter(), 16);
+        // Different pod: datacenter latency.
+        let eta = f.gossip_send(4, msg(0));
+        assert!((eta - 1e-2).abs() < 1e-12, "{eta}");
+        assert_eq!(f.bytes_inter(), 32);
+        // Span queries walk the same ladder.
+        assert_eq!(f.cost_for_span(&[0, 1]).latency_s, 0.0);
+        assert_eq!(f.cost_for_span(&[0, 2]).latency_s, pod.latency_s);
+        assert_eq!(f.cost_for_span(&[0, 4]).latency_s, dc.latency_s);
+        // The leaf partition is what groups() exposes.
+        assert_eq!(f.groups().unwrap().g(), 4);
+        assert_eq!(f.tier_tree().unwrap().depth(), 2);
+    }
+
+    #[test]
+    fn depth_one_tree_matches_two_tier_setup() {
+        use crate::topology::Groups;
+        let inter = CostModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let groups = Arc::new(Groups::parse("0-1|2-3", 4).unwrap());
+        let mut a = Fabric::new(4, CostModel::free());
+        a.set_tiers(Arc::clone(&groups), inter.clone());
+        let mut b = Fabric::new(4, CostModel::free());
+        b.set_tier_tree(
+            Arc::new(crate::topology::TierTree::from_groups(groups)),
+            vec![inter],
+        );
+        for from in 0..4 {
+            for to in 0..4 {
+                assert_eq!(
+                    a.cost_for_link(from, to).latency_s,
+                    b.cost_for_link(from, to).latency_s,
+                    "{from}->{to}"
+                );
+            }
+        }
+        assert_eq!(
+            a.cost_for_span(&[0, 2]).latency_s,
+            b.cost_for_span(&[0, 2]).latency_s
+        );
     }
 
     #[test]

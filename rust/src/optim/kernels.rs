@@ -215,7 +215,21 @@ impl Kernels {
     ) -> Result<()> {
         match (self, inner) {
             (Kernels::Native, InnerOpt::Nesterov { beta0, wd }) => {
-                super::nesterov_step(x, h, g, gamma, *beta0, *wd);
+                if h.is_empty() && !x.is_empty() {
+                    // Shared-state lean layout: the momentum buffer is
+                    // elided, legal only for beta0 = 0 (where the fused
+                    // kernel writes h but never reads it — x is
+                    // bitwise-identical; see optim::nesterov_step_nomom).
+                    anyhow::ensure!(
+                        *beta0 == 0.0,
+                        "momentum buffer elided but beta0={beta0} != 0 \
+                         (lean state layout requires a momentum-free \
+                         inner optimizer)"
+                    );
+                    super::nesterov_step_nomom(x, g, gamma, *wd);
+                } else {
+                    super::nesterov_step(x, h, g, gamma, *beta0, *wd);
+                }
                 Ok(())
             }
             (Kernels::Native, InnerOpt::Adam { beta1, beta2, eps }) => {
@@ -504,6 +518,34 @@ mod tests {
         assert_eq!(x, x2);
         assert_eq!(m, m2);
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn empty_momentum_buffer_dispatches_to_nomom() {
+        // Lean layout: an empty h with beta0=0 runs the momentum-free
+        // kernel and leaves x bitwise-identical to the dense path.
+        let k = Kernels::Native;
+        let inner = InnerOpt::Nesterov { beta0: 0.0, wd: 1e-4 };
+        let g = vec![0.5f32, -0.25, 0.125];
+        let mut x = vec![1.0f32, 2.0, -3.0];
+        let mut h: Vec<f32> = vec![];
+        let mut v: Vec<f32> = vec![];
+        k.inner_step(&inner, &mut x, &mut h, &mut v, &g, 0.1, 1).unwrap();
+        assert!(h.is_empty(), "lean path must not grow h");
+        let mut x2 = vec![1.0f32, 2.0, -3.0];
+        let mut h2 = vec![0.0f32; 3];
+        let mut v2: Vec<f32> = vec![];
+        k.inner_step(&inner, &mut x2, &mut h2, &mut v2, &g, 0.1, 1)
+            .unwrap();
+        assert_eq!(x, x2);
+        // Eliding h with real momentum is a hard error, not silent drift.
+        let bad = InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 };
+        let mut h3: Vec<f32> = vec![];
+        let e = k
+            .inner_step(&bad, &mut x, &mut h3, &mut v, &g, 0.1, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("beta0"), "{e}");
     }
 
     fn lcg_vec(seed: u64, n: usize, scale: f32) -> Vec<f32> {

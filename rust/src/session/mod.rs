@@ -41,8 +41,8 @@ use crate::optim::kernels::{InnerOpt, Kernels};
 use crate::runtime::{artifacts_dir, Engine, Manifest};
 use crate::slowmo::{BufferStrategy, HierCfg, OuterRegistry, SlowMoCfg};
 use crate::trainer::{
-    self, model_exec, ModelExec, RunObserver, Schedule, TrainCfg,
-    TrainResult,
+    self, model_exec, ModelExec, RunObserver, Schedule, StateMode,
+    TrainCfg, TrainResult,
 };
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::BTreeMap;
@@ -167,23 +167,26 @@ impl Session {
         let init = self.init(&cfg.preset)?;
         let model = self.model(&cfg.preset, cfg.force_pjrt)?;
         let kernels = self.kernels(d, cfg.native_kernels)?;
-        // Hierarchical runs build one group-local algorithm per group
-        // (topologies and collectives sized to the group); flat and
-        // tiers-only runs build the single global instance.
-        let (algos, groups) = match &cfg.hier {
+        // Hierarchical runs resolve the (possibly N-level) tier tree and
+        // build one group-local algorithm per leaf group (topologies and
+        // collectives sized to the group); flat and tiers-only runs
+        // build the single global instance.
+        let (algos, tiers) = match &cfg.hier {
             Some(h) => {
-                let gr = Arc::new(h.resolve(cfg.m).with_context(|| {
-                    format!("resolving groups {:?}", h.spec)
-                })?);
+                let tree =
+                    Arc::new(h.resolve_tree(cfg.m).with_context(|| {
+                        format!("resolving groups {:?}", h.spec)
+                    })?);
                 let algos = if h.two_level {
-                    gr.all()
+                    tree.leaf()
+                        .all()
                         .iter()
                         .map(|g| self.registry.build(&cfg.algo, g.len()))
                         .collect::<Result<Vec<_>>>()?
                 } else {
                     vec![self.registry.build(&cfg.algo, cfg.m)?]
                 };
-                (algos, Some(gr))
+                (algos, Some(tree))
             }
             None => (vec![self.registry.build(&cfg.algo, cfg.m)?], None),
         };
@@ -203,7 +206,7 @@ impl Session {
                 || format!("resolving compress {:?}", cfg.compress.spec()),
             )?)
         };
-        trainer::run_prepared(cfg, algos, groups, outer_rule, compressor,
+        trainer::run_prepared(cfg, algos, tiers, outer_rule, compressor,
                               &init, &desc, &model, &kernels, observer)
     }
 
@@ -280,6 +283,10 @@ pub struct TrainBuilder<'s> {
     tau_inner: Option<u64>,
     inter_latency_s: Option<f64>,
     inter_bandwidth_bps: Option<f64>,
+    /// Per-tier (α seconds, β bytes/s) overrides for tiers above the
+    /// first — see [`TrainBuilder::tier_link`].
+    tier_links: Vec<(f64, f64)>,
+    state: Option<StateMode>,
     inner: Option<InnerOpt>,
     lr: Option<f32>,
     sched: Option<Schedule>,
@@ -305,6 +312,8 @@ impl<'s> TrainBuilder<'s> {
             tau_inner: None,
             inter_latency_s: None,
             inter_bandwidth_bps: None,
+            tier_links: Vec::new(),
+            state: None,
             inner: None,
             lr: None,
             sched: None,
@@ -425,11 +434,14 @@ impl<'s> TrainBuilder<'s> {
     }
 
     /// Partition the workers into hierarchical groups (fast intra-group,
-    /// slow inter-group links) and run two-level SlowMo: the base
+    /// slow inter-group links) and run hierarchical SlowMo: the base
     /// algorithm goes group-local and the outer boundary becomes the
-    /// two-level reduce. `spec` is a [`crate::topology::Groups`] spec —
-    /// a count (`"2"`) or explicit ranges (`"0-3|4-7"`); hard parse
-    /// errors at build time. Requires a SlowMo outer wrapper.
+    /// tiered reduce. `spec` is a [`crate::topology::Groups`] spec —
+    /// a count (`"2"`) or explicit ranges (`"0-3|4-7"`) — or an N-level
+    /// [`crate::topology::TierTree`] spec with `';'`-separated tiers,
+    /// leaves first (`"0-1|2-3|4-5|6-7;0-3|4-7"` = rack → pod); hard
+    /// parse errors at build time naming the offending token. Requires
+    /// a SlowMo outer wrapper.
     pub fn groups(mut self, spec: &str) -> Self {
         self.groups_spec = Some((spec.to_string(), true));
         self
@@ -458,6 +470,27 @@ impl<'s> TrainBuilder<'s> {
     pub fn inter_link(mut self, latency_s: f64, bandwidth_bps: f64) -> Self {
         self.inter_latency_s = Some(latency_s);
         self.inter_bandwidth_bps = Some(bandwidth_bps);
+        self
+    }
+
+    /// Append a link model for the next tier above the last configured
+    /// one: the first call governs transfers first joined at tier 2,
+    /// the second tier 3, and so on (tier 1 uses
+    /// [`TrainBuilder::inter_link`]; unconfigured tiers inherit the
+    /// next-faster link). Requires an N-level [`TrainBuilder::groups`]
+    /// spec deep enough for every entry; an error at build time
+    /// otherwise.
+    pub fn tier_link(mut self, latency_s: f64, bandwidth_bps: f64) -> Self {
+        self.tier_links.push((latency_s, bandwidth_bps));
+        self
+    }
+
+    /// Worker-state layout: [`StateMode::Shared`] initializes every
+    /// worker from one read-only `Arc` and elides provably-unread
+    /// buffers so large-m sims fit in memory (sim-only, native kernels;
+    /// see [`StateMode`]). Default: [`StateMode::Dense`].
+    pub fn state(mut self, mode: StateMode) -> Self {
+        self.state = Some(mode);
         self
     }
 
@@ -598,6 +631,7 @@ impl<'s> TrainBuilder<'s> {
     /// eval_batches = 8
     /// native_kernels = true
     /// force_pjrt = false
+    /// state = "dense"           # "shared" = copy-on-write worker state
     ///
     /// [slowmo]                  # section presence enables SlowMo
     /// alpha = 1.0
@@ -619,12 +653,16 @@ impl<'s> TrainBuilder<'s> {
     /// [exec]                    # execution backend
     /// mode = "threaded"         # "sim" (default) | "threaded"
     ///
-    /// [groups]                  # hierarchical two-level topology
-    /// spec = "2"                # group count, or ranges "0-3|4-7"
+    /// [groups]                  # hierarchical tiered topology
+    /// spec = "2"                # group count, ranges "0-3|4-7", or an
+    ///                           # N-level tree "0-1|2-3;0-3" (tiers
+    ///                           # ';'-separated, leaves first)
     /// tau_inner = 4             # fast intra-group average period (0=off)
     /// two_level = true          # false = flat algo on the tiered fabric
     /// inter_latency_ms = 0.5    # slow inter-group link α (default: the
     /// inter_gbps = 1.0          # run's cost model) and bandwidth
+    /// tier_latency_ms = [2.0]   # per-tier links above tier 1 (entry i
+    /// tier_gbps = [0.25]        # governs tier i+2; set together)
     ///
     /// [chaos]                   # section presence enables chaos
     /// seed = 7
@@ -684,6 +722,18 @@ impl<'s> TrainBuilder<'s> {
             c.get("train", "force_pjrt").and_then(|v| v.as_bool())
         {
             self.cfg.force_pjrt = v;
+        }
+        if let Some(v) = c.get("train", "state") {
+            let s = v.as_str().ok_or_else(|| {
+                anyhow!(
+                    "[train] state must be a string (\"dense\" or \
+                     \"shared\")"
+                )
+            })?;
+            self.state = Some(
+                s.parse::<StateMode>()
+                    .map_err(|e| anyhow!("[train] state: {e}"))?,
+            );
         }
         if c.sections.contains_key("slowmo") {
             let alpha = c.f64_or("slowmo", "alpha", 1.0) as f32;
@@ -808,6 +858,56 @@ impl<'s> TrainBuilder<'s> {
                 })?;
                 // Gigabits/s -> bytes/s.
                 self.inter_bandwidth_bps = Some(f * 1.25e8);
+            }
+            // Per-tier links for N-level trees: two zipped arrays, entry
+            // i governing transfers first joined at tier i + 2.
+            let tier_arr = |key: &str| -> Result<Option<Vec<f64>>> {
+                match c.get("groups", key) {
+                    None => Ok(None),
+                    Some(v) => {
+                        let arr = v.as_arr().ok_or_else(|| {
+                            anyhow!(
+                                "[groups] {key} must be an array of \
+                                 numbers"
+                            )
+                        })?;
+                        arr.iter()
+                            .map(|e| {
+                                e.as_f64().ok_or_else(|| {
+                                    anyhow!(
+                                        "[groups] {key} entries must \
+                                         be numbers"
+                                    )
+                                })
+                            })
+                            .collect::<Result<Vec<f64>>>()
+                            .map(Some)
+                    }
+                }
+            };
+            match (
+                tier_arr("tier_latency_ms")?,
+                tier_arr("tier_gbps")?,
+            ) {
+                (None, None) => {}
+                (Some(lat), Some(bw)) => {
+                    ensure!(
+                        lat.len() == bw.len(),
+                        "[groups] tier_latency_ms and tier_gbps must \
+                         have the same length (got {} and {})",
+                        lat.len(),
+                        bw.len()
+                    );
+                    self.tier_links = lat
+                        .iter()
+                        .zip(&bw)
+                        .map(|(&l, &g)| (l * 1e-3, g * 1.25e8))
+                        .collect();
+                }
+                _ => bail!(
+                    "[groups] tier_latency_ms and tier_gbps must be \
+                     set together (one α and one β per tier)"
+                ),
             }
         }
         if c.sections.contains_key("chaos") {
@@ -971,6 +1071,9 @@ impl<'s> TrainBuilder<'s> {
                 ),
             }
         }
+        if let Some(st) = self.state {
+            cfg.state = st;
+        }
         if let Some((spec, two_level)) = &self.groups_spec {
             let mut h = if *two_level {
                 HierCfg::new(spec)
@@ -982,19 +1085,22 @@ impl<'s> TrainBuilder<'s> {
             }
             h.inter_latency_s = self.inter_latency_s;
             h.inter_bandwidth_bps = self.inter_bandwidth_bps;
+            h.tier_links = self.tier_links.clone();
             cfg.hier = Some(h);
         } else if self.tau_inner.is_some()
             || self.inter_latency_s.is_some()
             || self.inter_bandwidth_bps.is_some()
+            || !self.tier_links.is_empty()
         {
             bail!(
-                "tau_inner()/inter_link() require a groups partition — \
-                 set groups(..) (or a [groups] table) first"
+                "tau_inner()/inter_link()/tier_link() require a groups \
+                 partition — set groups(..) (or a [groups] table) first"
             );
         }
         if let Some(h) = &cfg.hier {
-            // Spec grammar and structural knobs fail hard at build time.
-            h.resolve(cfg.m)
+            // Spec grammar (including N-level tier nesting) and
+            // structural knobs fail hard at build time.
+            h.resolve_tree(cfg.m)
                 .with_context(|| format!("resolving groups {:?}", h.spec))?;
             ensure!(
                 !h.two_level || cfg.slowmo.is_some(),
@@ -1557,6 +1663,115 @@ rule = "adam"
             .tau_inner(2)
             .build_cfg()
             .is_err());
+    }
+
+    #[test]
+    fn builder_state_and_tier_links_flow_through() {
+        // N-level tree spec + per-tier link + shared state.
+        let cfg = TrainBuilder::new("quad")
+            .workers(8)
+            .slowmo(0.7, 8)
+            .groups("0-1|2-3|4-5|6-7;0-3|4-7")
+            .inter_link(5e-4, 1.25e9)
+            .tier_link(2e-3, 1.25e8)
+            .state(StateMode::Shared)
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.state, StateMode::Shared);
+        let h = cfg.hier.as_ref().unwrap();
+        assert_eq!(h.tier_links, vec![(2e-3, 1.25e8)]);
+        let tree = h.resolve_tree(8).unwrap();
+        assert_eq!(tree.depth(), 2);
+        assert_eq!(tree.spec(), "0-1|2-3|4-5|6-7;0-3|4-7");
+        // Dense is the default.
+        let cfg = TrainBuilder::new("quad").build_cfg().unwrap();
+        assert_eq!(cfg.state, StateMode::Dense);
+        // Malformed N-level specs are build-time hard errors naming
+        // the defect.
+        let e = TrainBuilder::new("quad")
+            .workers(8)
+            .slowmo(0.7, 8)
+            .groups("0-1|2-3|4-5|6-7;0-2|3-7")
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("not nested"), "{e}");
+        let e = TrainBuilder::new("quad")
+            .workers(8)
+            .slowmo(0.7, 8)
+            .groups("0-3|4-7;;0-7")
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("empty"), "{e}");
+        // tier_link without a partition is an error, not a no-op.
+        let e = TrainBuilder::new("quad")
+            .tier_link(1e-3, 1e8)
+            .build_cfg()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("groups"), "{e}");
+        // More tier links than tiers above the leaves is rejected.
+        assert!(TrainBuilder::new("quad")
+            .workers(8)
+            .slowmo(0.7, 8)
+            .groups("2")
+            .tier_link(1e-3, 1e8)
+            .build_cfg()
+            .is_err());
+    }
+
+    #[test]
+    fn config_bridge_applies_state_and_tier_links() {
+        let toml = r#"
+[train]
+state = "shared"
+
+[slowmo]
+beta = 0.5
+tau = 8
+
+[groups]
+spec = "0-1|2-3;0-3"
+tier_latency_ms = [2.0]
+tier_gbps = [0.5]
+"#;
+        let c = Config::parse(toml).unwrap();
+        let cfg = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap()
+            .build_cfg()
+            .unwrap();
+        assert_eq!(cfg.state, StateMode::Shared);
+        let h = cfg.hier.unwrap();
+        assert_eq!(h.spec, "0-1|2-3;0-3");
+        assert_eq!(h.tier_links, vec![(2e-3, 0.5 * 1.25e8)]);
+        // Bad state values are hard errors naming the token.
+        let c = Config::parse("[train]\nstate = \"sparse\"").unwrap();
+        let e = TrainBuilder::new("quad")
+            .config(&c)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("sparse"), "{e}");
+        let c = Config::parse("[train]\nstate = 3").unwrap();
+        assert!(TrainBuilder::new("quad").config(&c).is_err());
+        // The tier arrays must be set together, same length, numeric.
+        for bad in [
+            "tier_latency_ms = [1.0]",
+            "tier_gbps = [1.0]",
+            "tier_latency_ms = [1.0, 2.0]\ntier_gbps = [1.0]",
+            "tier_latency_ms = \"fast\"\ntier_gbps = [1.0]",
+            "tier_latency_ms = [\"slow\"]\ntier_gbps = [1.0]",
+        ] {
+            let c = Config::parse(&format!(
+                "[groups]\nspec = \"0-1|2-3;0-3\"\n{bad}"
+            ))
+            .unwrap();
+            assert!(
+                TrainBuilder::new("quad").config(&c).is_err(),
+                "{bad} must be rejected"
+            );
+        }
     }
 
     #[test]

@@ -32,7 +32,7 @@
 
 use crate::compress::{site, CompressState, Compressor};
 use crate::net::{ring_allreduce_mean_group_c, CostModel, Fabric};
-use crate::topology::Groups;
+use crate::topology::{Groups, TierTree};
 use anyhow::{ensure, Result};
 
 /// Collective-id bit for the inter-group leader ring at an outer
@@ -51,6 +51,28 @@ pub(crate) const INNER_COLL_BIT: u64 = 1 << 30;
 /// id sets both stage bits so it can never be a ring id).
 fn bcast_tag(lane: u64) -> u64 {
     (LEADER_COLL_BIT | INNER_COLL_BIT | lane) << 32
+}
+
+/// Collective id of the level-`lvl` leader ring (N-level reduce). Level 1
+/// — the ring over leaf-group leaders — keeps exactly the two-level id
+/// `LEADER_COLL_BIT | lane`, so the depth-1 special case shares lanes
+/// with the historical path; deeper levels stamp the level into bits
+/// 24.. (lanes are `3t + L`, so `t < 2^22` boundaries never collide).
+fn ring_lane_lvl(lane: u64, lvl: usize) -> u64 {
+    debug_assert!(lvl >= 1);
+    if lvl == 1 {
+        LEADER_COLL_BIT | lane
+    } else {
+        LEADER_COLL_BIT | ((lvl as u64) << 24) | lane
+    }
+}
+
+/// Chunk tag of the downward final-mean broadcast feeding level `lvl`
+/// (level 0 = leaf members, matching [`bcast_tag`]; level `l >= 1` = the
+/// non-leader participants of ring `l`). Both stage bits are set, so the
+/// tags can never collide with ring ids at any level.
+fn bcast_tag_lvl(lane: u64, lvl: usize) -> u64 {
+    (LEADER_COLL_BIT | INNER_COLL_BIT | ((lvl as u64) << 24) | lane) << 32
 }
 
 /// The chunk lane carries `Vec<f32>`, but broadcast and rejoin transfers
@@ -72,8 +94,11 @@ pub(crate) fn clock_from_f32s(hi: f32, lo: f32) -> f64 {
 /// Hierarchical-topology configuration for one run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HierCfg {
-    /// [`Groups`] spec string, resolved against the run's worker count
-    /// when the run starts (hard parse error).
+    /// Tier spec string, resolved against the run's worker count when the
+    /// run starts (hard parse error naming the offending token). A plain
+    /// [`Groups`] spec (`"g"`, `"0-3|4-7"`) is the two-level hierarchy;
+    /// `';'`-separated partitions, leaves first (`"0-1|2-3|4-5|6-7;0-3|4-7"`),
+    /// build an N-level [`TierTree`] (rack → pod → datacenter → ...).
     pub spec: String,
     /// Fast intra-group exact average every this many inner steps
     /// (0 = off; boundary steps are skipped — the outer reduce subsumes
@@ -91,6 +116,12 @@ pub struct HierCfg {
     /// Inter-group link bandwidth override (bytes/s); `None` = the run's
     /// cost model.
     pub inter_bandwidth_bps: Option<f64>,
+    /// `(latency_s, bandwidth_bps)` per tier *above* the first crossing:
+    /// entry `i` governs transfers first joined at tier `i + 2` of an
+    /// N-level tree (tier 1 uses the `inter_*` overrides). Missing
+    /// entries inherit the next-faster link, so setting only the
+    /// inter-group link makes every upper tier equally slow.
+    pub tier_links: Vec<(f64, f64)>,
 }
 
 impl HierCfg {
@@ -102,6 +133,7 @@ impl HierCfg {
             two_level: true,
             inter_latency_s: None,
             inter_bandwidth_bps: None,
+            tier_links: Vec::new(),
         }
     }
 
@@ -129,6 +161,17 @@ impl HierCfg {
         self
     }
 
+    /// Append one upper-tier link model (first call = tier 2, next =
+    /// tier 3, ...). Only meaningful with an N-level `';'` spec.
+    pub fn with_tier_link(
+        mut self,
+        latency_s: f64,
+        bandwidth_bps: f64,
+    ) -> Self {
+        self.tier_links.push((latency_s, bandwidth_bps));
+        self
+    }
+
     /// Structural validation (spec grammar is checked by [`Self::resolve`]).
     pub fn validate(&self) -> Result<()> {
         ensure!(
@@ -148,13 +191,64 @@ impl HierCfg {
                 "[groups] inter bandwidth must be > 0 (got {b})"
             );
         }
+        for (i, &(l, b)) in self.tier_links.iter().enumerate() {
+            ensure!(
+                l.is_finite() && l >= 0.0,
+                "[groups] tier-{} latency must be finite and >= 0 (got {l})",
+                i + 2
+            );
+            ensure!(
+                b > 0.0,
+                "[groups] tier-{} bandwidth must be > 0 (got {b})",
+                i + 2
+            );
+        }
         Ok(())
     }
 
-    /// Parse the spec against `m` workers (hard error naming the token).
+    /// Parse the spec against `m` workers as a single partition (hard
+    /// error naming the token). Two-level callers; N-level `';'` specs
+    /// must go through [`Self::resolve_tree`].
     pub fn resolve(&self, m: usize) -> Result<Groups> {
         self.validate()?;
         Groups::parse(&self.spec, m).map_err(anyhow::Error::msg)
+    }
+
+    /// Parse the spec against `m` workers as an N-level [`TierTree`]
+    /// (depth 1 for a plain [`Groups`] spec — identical to
+    /// [`Self::resolve`] wrapped in a tree). Hard error naming the
+    /// offending token, and a depth check against `tier_links`.
+    pub fn resolve_tree(&self, m: usize) -> Result<TierTree> {
+        self.validate()?;
+        let tree =
+            TierTree::parse(&self.spec, m).map_err(anyhow::Error::msg)?;
+        ensure!(
+            self.tier_links.len() <= tree.depth().saturating_sub(1),
+            "[groups] {} tier link override(s) but the tier spec {:?} has \
+             only {} tier(s) above the leaves",
+            self.tier_links.len(),
+            self.spec,
+            tree.depth() - 1
+        );
+        Ok(tree)
+    }
+
+    /// Per-tier slow-link ladder for an N-level run: entry `l - 1`
+    /// governs transfers first joined at tier `l` ([`crate::net::Tiers`]
+    /// invariant: one model per tier). Tier 1 is [`Self::inter_cost`];
+    /// deeper tiers take their `tier_links` override or inherit the
+    /// next-faster link.
+    pub fn tier_costs(&self, intra: &CostModel, depth: usize) -> Vec<CostModel> {
+        let mut links = vec![self.inter_cost(intra)];
+        for l in 1..depth {
+            links.push(match self.tier_links.get(l - 1) {
+                Some(&(latency_s, bandwidth_bps)) => {
+                    CostModel { latency_s, bandwidth_bps }
+                }
+                None => links[l - 1].clone(),
+            });
+        }
+        links
     }
 
     /// The slow inter-group cost model: the run's `intra` model with any
@@ -314,6 +408,206 @@ pub(crate) fn boundary_average(
         clock = clock.max(leader_clock)
             + fabric.cost_for_link(my_leader, worker).xfer_time(d + 2);
         x.copy_from_slice(&payload);
+    }
+    Ok(clock)
+}
+
+/// One boundary-average lane over an N-level [`TierTree`]: rack rings,
+/// then a ladder of leader rings (pod, datacenter, ...), then cascading
+/// broadcasts back down. `tree = None` is the flat exact average and a
+/// depth-1 tree delegates to [`boundary_average`] outright — both are
+/// therefore *bitwise identical* to the historical paths, operation for
+/// operation (asserted in tests and `rust/tests/equivalences.rs`).
+///
+/// Depth `D >= 2` generalizes the two-level schedule recursively:
+///
+/// 1. level-0 ring: each leaf group ring-averages its live members on the
+///    flat-compatible lane id;
+/// 2. level-`l` rings (`l = 1..=D`): the leaders (lowest live rank) of
+///    the live tier-`l-1` subtrees sharing a tier-`l` group (all of them
+///    at `l = D`) scale their subtree means by `c·n/T` (subtree live
+///    count × ring size / scope live count — the exact-mean weighting for
+///    unequal or degraded subtrees; `1.0` exactly, hence skipped, for
+///    equal ones) and ring-average on [`ring_lane_lvl`], gated by that
+///    tier's links via [`Fabric::cost_for_span`];
+/// 3. every top-ring member holds the global mean; each ring leader then
+///    broadcasts it down to its ring's non-ascending participants
+///    ([`bcast_tag_lvl`], packed-clock causality), level by level, until
+///    leaf leaders broadcast to their members.
+///
+/// With a codec, contributions transcode at `site_intra` before the leaf
+/// ring and at `site_leader` before each leader ring a worker enters
+/// (sequential per-worker EF residual reuse across levels — deterministic
+/// because ascent order is).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn boundary_average_tree(
+    fabric: &Fabric,
+    tree: Option<&TierTree>,
+    worker: usize,
+    live: &[usize],
+    x: &mut Vec<f32>,
+    comp: &mut CompressState,
+    mut clock: f64,
+    lane: u64,
+    codec: Option<&dyn Compressor>,
+    site_intra: u64,
+    site_leader: u64,
+) -> Result<f64> {
+    let hier = tree.filter(|t| t.depth() >= 2);
+    let Some(tree) = hier else {
+        return boundary_average(
+            fabric,
+            tree.map(|t| t.leaf().as_ref()),
+            worker,
+            live,
+            x,
+            comp,
+            clock,
+            lane,
+            codec,
+            site_intra,
+            site_leader,
+        );
+    };
+    let d = x.len();
+    let depth = tree.depth();
+
+    // Level-0 ring: live members of my leaf group (flat-compatible lane).
+    let leaf = tree.leaf();
+    let gl = group_live(leaf, live, leaf.group_of(worker));
+    debug_assert!(gl.binary_search(&worker).is_ok());
+    if gl.len() > 1 {
+        if let Some(c) = codec {
+            c.transcode(x, comp, site_intra);
+        }
+    }
+    clock = ring_allreduce_mean_group_c(
+        fabric, worker, &gl, x, clock, lane, codec,
+    );
+
+    // Ascend while I am the leader of my tier-(lvl-1) subtree. rings[l-1]
+    // records the level-l ring I joined (sorted ascending — leaders of
+    // the canonicalized partitions — so ring[0] is its leader; empty when
+    // the level was a single-subtree no-op).
+    let mut rings: Vec<Vec<usize>> = Vec::new();
+    for lvl in 1..=depth {
+        let sub = tree.tier(lvl - 1);
+        let my_sub = group_live(sub, live, sub.group_of(worker));
+        if my_sub.first() != Some(&worker) {
+            break; // not my subtree's leader: wait for the broadcast
+        }
+        // Participants: leaders of every live tier-(lvl-1) subtree in my
+        // level-lvl scope (my tier-lvl group; the whole run at lvl == D),
+        // with their subtree live counts.
+        let in_scope = |w: usize| {
+            lvl == depth || !tree.tier(lvl).is_inter(w, worker)
+        };
+        let parts: Vec<(usize, usize)> = sub
+            .all()
+            .iter()
+            .filter_map(|members| {
+                let mut it = members
+                    .iter()
+                    .filter(|&&w| live.binary_search(&w).is_ok());
+                match it.next() {
+                    Some(&l) if in_scope(l) => Some((l, 1 + it.count())),
+                    _ => None,
+                }
+            })
+            .collect();
+        let n = parts.len();
+        if n <= 1 {
+            // Sole live subtree in scope: my value already is the scope
+            // mean; keep ascending (at the top it is the global mean).
+            rings.push(Vec::new());
+            continue;
+        }
+        let total: usize = parts.iter().map(|&(_, c)| c).sum();
+        let factor = (my_sub.len() * n) as f32 / total as f32;
+        if factor != 1.0 {
+            for v in x.iter_mut() {
+                *v *= factor;
+            }
+        }
+        if let Some(c) = codec {
+            c.transcode(x, comp, site_leader);
+        }
+        let ring: Vec<usize> = parts.iter().map(|&(l, _)| l).collect();
+        clock = ring_allreduce_mean_group_c(
+            fabric,
+            worker,
+            &ring,
+            x,
+            clock,
+            ring_lane_lvl(lane, lvl),
+            codec,
+        );
+        rings.push(ring);
+    }
+    let ascent = rings.len();
+
+    // Obtain the final global mean: top-ring members already hold it;
+    // everyone else receives the level-`ascent` broadcast from the leader
+    // of the ring they stopped at (the leaf leader for ordinary members).
+    if ascent < depth {
+        let sender = match rings.last() {
+            Some(ring) if !ring.is_empty() => ring[0],
+            // ascent == 0 (leaf member), or my last joined level was a
+            // single-subtree no-op — in the latter case I *am* that
+            // level's leader and would have ascended, so this is leaf.
+            _ => gl[0],
+        };
+        debug_assert_ne!(sender, worker);
+        let mut payload =
+            fabric.chunk_recv_tag(worker, bcast_tag_lvl(lane, ascent));
+        ensure!(
+            payload.len() == d + 2,
+            "tier broadcast corrupt at worker {worker}, collective lane \
+             {lane}, level {ascent}: got {} elems, want {}",
+            payload.len(),
+            d + 2
+        );
+        let lo = payload.pop().expect("payload length checked");
+        let hi = payload.pop().expect("payload length checked");
+        let leader_clock = clock_from_f32s(hi, lo);
+        clock = clock.max(leader_clock)
+            + fabric.cost_for_link(sender, worker).xfer_time(d + 2);
+        x.copy_from_slice(&payload);
+    }
+
+    // Cascade the final mean down every ring I *led* (I am ring[0] of
+    // every joined ring except possibly the one I stopped at), then to my
+    // leaf members. Top-ring members already share the mean via the
+    // allreduce, so level `depth` never broadcasts.
+    let led_to = ascent.min(depth.saturating_sub(1));
+    for lvl in (1..=led_to).rev() {
+        if rings[lvl - 1].first() != Some(&worker) {
+            continue; // the ring I received from (or a no-op level)
+        }
+        let others: Vec<usize> = rings[lvl - 1]
+            .iter()
+            .copied()
+            .filter(|&w| w != worker)
+            .collect();
+        if others.is_empty() {
+            continue;
+        }
+        let mut msg = Vec::with_capacity(d + 2);
+        msg.extend_from_slice(x);
+        msg.extend_from_slice(&clock_to_f32s(clock));
+        for &r in &others {
+            fabric.chunk_send(worker, r, bcast_tag_lvl(lane, lvl), msg.clone());
+            clock += fabric.cost_for_link(worker, r).xfer_time(d + 2);
+        }
+    }
+    if ascent >= 1 && gl.len() > 1 {
+        let mut msg = Vec::with_capacity(d + 2);
+        msg.extend_from_slice(x);
+        msg.extend_from_slice(&clock_to_f32s(clock));
+        for &r in gl.iter().filter(|&&w| w != worker) {
+            fabric.chunk_send(worker, r, bcast_tag_lvl(lane, 0), msg.clone());
+            clock += fabric.cost_for_link(worker, r).xfer_time(d + 2);
+        }
     }
     Ok(clock)
 }
@@ -579,6 +873,240 @@ mod tests {
             );
             assert!(out[member] >= out[member - 1]);
         }
+    }
+
+    fn run_tree(
+        tree: &TierTree,
+        live: Vec<usize>,
+        xs: Vec<Vec<f32>>,
+    ) -> Vec<(Vec<f32>, f64)> {
+        let m = tree.m();
+        let fabric = Fabric::new(m, CostModel::free());
+        run_workers(m, |w| {
+            let mut x = xs[w].clone();
+            let mut comp = CompressState::default();
+            let mut clock = 0.0;
+            if live.binary_search(&w).is_ok() {
+                clock = boundary_average_tree(
+                    &fabric,
+                    Some(tree),
+                    w,
+                    &live,
+                    &mut x,
+                    &mut comp,
+                    0.0,
+                    0,
+                    None,
+                    site::OUTER,
+                    site::OUTER_L,
+                )
+                .unwrap();
+            }
+            (x, clock)
+        })
+    }
+
+    #[test]
+    fn depth_one_tree_is_the_two_level_path_bitwise() {
+        // A plain Groups spec wrapped as a depth-1 tree must perform the
+        // identical operations (values AND clocks) as boundary_average.
+        let m = 6;
+        let groups = Groups::parse("0-2|3-5", m).unwrap();
+        let tree = TierTree::parse("0-2|3-5", m).unwrap();
+        assert_eq!(tree.depth(), 1);
+        let cost = CostModel { latency_s: 1e-4, bandwidth_bps: 1e7 };
+        let live: Vec<usize> = (0..m).collect();
+        let xs: Vec<Vec<f32>> = (0..m)
+            .map(|w| (0..11).map(|i| (w * 11 + i) as f32 * 0.1).collect())
+            .collect();
+        let via_groups = {
+            let fabric = Fabric::new(m, cost.clone());
+            run_workers(m, |w| {
+                let mut x = xs[w].clone();
+                let mut comp = CompressState::default();
+                let clock = boundary_average(
+                    &fabric, Some(&groups), w, &live, &mut x, &mut comp,
+                    0.0, 3, None, site::OUTER, site::OUTER_L,
+                )
+                .unwrap();
+                (x, clock)
+            })
+        };
+        let via_tree = {
+            let fabric = Fabric::new(m, cost.clone());
+            run_workers(m, |w| {
+                let mut x = xs[w].clone();
+                let mut comp = CompressState::default();
+                let clock = boundary_average_tree(
+                    &fabric, Some(&tree), w, &live, &mut x, &mut comp,
+                    0.0, 3, None, site::OUTER, site::OUTER_L,
+                )
+                .unwrap();
+                (x, clock)
+            })
+        };
+        assert_eq!(via_tree, via_groups);
+    }
+
+    #[test]
+    fn depth_two_tree_recovers_global_mean() {
+        // Unequal racks under unequal pods (m=7, 3-level hierarchy): the
+        // per-level c·n/T weighting must still land every worker on the
+        // uniform global mean, bit-identical across workers.
+        let m = 7;
+        let tree = TierTree::parse("0|1-3|4-6;0-3|4-6", m).unwrap();
+        assert_eq!(tree.depth(), 2);
+        let xs: Vec<Vec<f32>> = (0..m)
+            .map(|w| (0..9).map(|i| (w * 9 + i) as f32 * 0.01).collect())
+            .collect();
+        let live: Vec<usize> = (0..m).collect();
+        let out = run_tree(&tree, live, xs.clone());
+        for (w, (x, _)) in out.iter().enumerate() {
+            assert_eq!(*x, out[0].0, "worker {w} must agree bitwise");
+        }
+        for i in 0..9 {
+            let g: f64 = (0..m).map(|w| f64::from(xs[w][i])).sum::<f64>()
+                / m as f64;
+            assert!(
+                (f64::from(out[0].0[i]) - g).abs() < 1e-5,
+                "elem {i}: {} want {g}",
+                out[0].0[i]
+            );
+        }
+    }
+
+    #[test]
+    fn depth_two_tree_survivor_weighting() {
+        // Kill the global leader (0) and one worker per right-hand rack:
+        // survivors must agree on the mean over the live set only, and
+        // dead parameters stay untouched.
+        let m = 8;
+        let tree =
+            TierTree::parse("0-1|2-3|4-5|6-7;0-3|4-7", m).unwrap();
+        let xs: Vec<Vec<f32>> =
+            (0..m).map(|w| vec![w as f32; 5]).collect();
+        let live = vec![1usize, 2, 3, 5, 6];
+        let out = run_tree(&tree, live.clone(), xs);
+        let want =
+            live.iter().map(|&w| w as f64).sum::<f64>() / live.len() as f64;
+        for &w in &live {
+            assert_eq!(out[w].0, out[live[0]].0, "worker {w} disagrees");
+            for &v in &out[w].0 {
+                assert!(
+                    (f64::from(v) - want).abs() < 1e-5,
+                    "worker {w}: {v} want {want}"
+                );
+            }
+        }
+        for &w in &[0usize, 4, 7] {
+            assert_eq!(out[w].0, vec![w as f32; 5], "dead worker {w} moved");
+        }
+    }
+
+    #[test]
+    fn depth_three_tree_recovers_global_mean() {
+        // Explicit trivial top tier: the extra level only adds no-op
+        // rings and one more broadcast hop — the mean is unchanged.
+        let m = 8;
+        let tree =
+            TierTree::parse("0-1|2-3|4-5|6-7;0-3|4-7;0-7", m).unwrap();
+        assert_eq!(tree.depth(), 3);
+        let xs: Vec<Vec<f32>> = (0..m)
+            .map(|w| (0..6).map(|i| (w * 6 + i) as f32 * 0.1).collect())
+            .collect();
+        let live: Vec<usize> = (0..m).collect();
+        let out = run_tree(&tree, live, xs.clone());
+        for (w, (x, _)) in out.iter().enumerate() {
+            assert_eq!(*x, out[0].0, "worker {w} must agree bitwise");
+        }
+        for i in 0..6 {
+            let g: f64 = (0..m).map(|w| f64::from(xs[w][i])).sum::<f64>()
+                / m as f64;
+            assert!((f64::from(out[0].0[i]) - g).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn tree_broadcast_cascades_leader_clock() {
+        // Slow network, stale members: every non-top worker's clock must
+        // exceed the global leader's entry time (5.0) — the cascade
+        // carries causality down all levels.
+        let m = 8;
+        let tree =
+            TierTree::parse("0-1|2-3|4-5|6-7;0-3|4-7", m).unwrap();
+        let cost = CostModel { latency_s: 1e-3, bandwidth_bps: 1e6 };
+        let fabric = Fabric::new(m, cost);
+        let live: Vec<usize> = (0..m).collect();
+        let out = run_workers(m, |w| {
+            let mut x = vec![w as f32; 8];
+            let mut comp = CompressState::default();
+            let start = if w == 0 { 5.0 } else { 0.0 };
+            boundary_average_tree(
+                &fabric, Some(&tree), w, &live, &mut x, &mut comp, start,
+                0, None, site::OUTER, site::OUTER_L,
+            )
+            .unwrap()
+        });
+        for (w, &clock) in out.iter().enumerate() {
+            assert!(
+                clock > 5.0,
+                "worker {w} clock {clock} ignores the slow leader"
+            );
+        }
+    }
+
+    #[test]
+    fn hier_cfg_resolves_trees_and_tier_costs() {
+        // Plain spec -> depth-1 tree, same partition as resolve().
+        let cfg = HierCfg::new("0-3|4-7");
+        let tree = cfg.resolve_tree(8).unwrap();
+        assert_eq!(tree.depth(), 1);
+        assert_eq!(**tree.leaf(), cfg.resolve(8).unwrap());
+        // ';' spec -> depth-2 tree; malformed tiers are hard errors that
+        // name the offending token.
+        let deep = HierCfg::new("0-1|2-3;0-3");
+        assert_eq!(deep.resolve_tree(4).unwrap().depth(), 2);
+        let e = HierCfg::new("0-1|2-3;0-2|3")
+            .resolve_tree(4)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("not nested"), "{e}");
+        let e = HierCfg::new("0-1|2-3;;0-3")
+            .resolve_tree(4)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tier 1 is empty"), "{e}");
+        // More tier links than upper tiers is rejected.
+        let e = HierCfg::new("0-1|2-3;0-3")
+            .with_tier_link(1e-3, 1e8)
+            .with_tier_link(1e-2, 1e7)
+            .resolve_tree(4)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("tier link"), "{e}");
+        // Cost ladder: tier 1 from inter_*, tier 2 explicit, tier 3
+        // inherits tier 2.
+        let intra = CostModel::ethernet_10g();
+        let cfg = HierCfg::new("ignored")
+            .with_inter_link(1e-4, 1e9)
+            .with_tier_link(1e-2, 1e7);
+        let links = cfg.tier_costs(&intra, 3);
+        assert_eq!(links.len(), 3);
+        assert_eq!(links[0].latency_s, 1e-4);
+        assert_eq!(links[1].latency_s, 1e-2);
+        assert_eq!(links[2].latency_s, links[1].latency_s);
+        assert_eq!(links[2].bandwidth_bps, links[1].bandwidth_bps);
+        // No overrides at all: every tier inherits the intra model.
+        let flat = HierCfg::new("2").tier_costs(&intra, 2);
+        for l in &flat {
+            assert_eq!(l.latency_s, intra.latency_s);
+            assert_eq!(l.bandwidth_bps, intra.bandwidth_bps);
+        }
+        // Bad tier link parameters fail validation.
+        assert!(HierCfg::new("2")
+            .with_tier_link(-1.0, 1e9)
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -34,7 +34,8 @@ use crate::algorithms::{BaseAlgorithm, WorkerState};
 use crate::compress::{site, Compressor};
 use crate::net::{ChaosPlan, Fabric};
 use crate::optim::kernels::Kernels;
-use crate::topology::Groups;
+use crate::topology::TierTree;
+use crate::util::CowVec;
 use anyhow::{ensure, Result};
 use hier::{clock_from_f32s, clock_to_f32s};
 
@@ -233,7 +234,11 @@ impl SlowMoCfg {
 /// under the noaverage variant they may drift.
 #[derive(Clone, Debug)]
 pub struct OuterState {
-    pub x0: Vec<f32>,
+    /// The outer iterate. Copy-on-write: under the shared-state trainer
+    /// mode every worker's x0 starts as a view of one shared init vector
+    /// and materializes privately at its first outer step
+    /// ([`OuterState::new_shared`]); the dense path owns it outright.
+    pub x0: CowVec,
     /// Rule-owned state buffers (shape decided by [`OuterOpt::init`]).
     pub opt: OuterOptState,
     /// Outer iterations completed.
@@ -257,9 +262,25 @@ pub struct OuterState {
 
 impl OuterState {
     pub fn new(init: &[f32], rule: &dyn OuterOpt) -> Self {
+        Self::with_x0(CowVec::owned(init.to_vec()), init.len(), rule)
+    }
+
+    /// Shared-state mode: x0 views `init` (one allocation for all `m`
+    /// workers) until the first outer update writes it. Bitwise-identical
+    /// to [`Self::new`] in every computation — only the representation
+    /// (and therefore peak RSS) differs.
+    pub fn new_shared(
+        init: std::sync::Arc<Vec<f32>>,
+        rule: &dyn OuterOpt,
+    ) -> Self {
+        let d = init.len();
+        Self::with_x0(CowVec::shared(init), d, rule)
+    }
+
+    fn with_x0(x0: CowVec, d: usize, rule: &dyn OuterOpt) -> Self {
         Self {
-            x0: init.to_vec(),
-            opt: rule.init(init.len()),
+            x0,
+            opt: rule.init(d),
             t: 0,
             late: false,
             pending: None,
@@ -342,15 +363,17 @@ pub fn outer_update_c(
     )
 }
 
-/// [`outer_update_c`] with hierarchical topology: when a [`Groups`]
-/// partition is given, line 6's exact average becomes the two-level
-/// reduce of [`hier::boundary_average`] (fast intra-group rings, a slow
-/// leader ring weighted for unequal groups, broadcast back down), and the
-/// rejoin transfer ships from the rejoiner's own group when possible.
-/// `hier = None` (or a single group) is bitwise-identical to the flat
-/// path. Elastic membership, `scale_state` and the rejoin wire format
-/// all work per group — the outer state is bit-synchronized across every
-/// live worker after each boundary, exactly as in the flat algorithm.
+/// [`outer_update_c`] with hierarchical topology: when a [`TierTree`] is
+/// given, line 6's exact average becomes the N-level reduce of
+/// [`hier::boundary_average_tree`] (leaf-group rings, a ladder of leader
+/// rings weighted for unequal subtrees, cascading broadcasts back down),
+/// and the rejoin transfer ships from the rejoiner's own leaf group when
+/// possible. `hier = None` is bitwise-identical to the flat path, and a
+/// depth-1 tree (one [`crate::topology::Groups`] partition — the
+/// historical two-level hierarchy) to the two-level reduce. Elastic
+/// membership, `scale_state` and the rejoin wire format all work per
+/// group — the outer state is bit-synchronized across every live worker
+/// after each boundary, exactly as in the flat algorithm.
 #[allow(clippy::too_many_arguments)]
 pub fn outer_update_g(
     cfg: &SlowMoCfg,
@@ -364,9 +387,11 @@ pub fn outer_update_g(
     gamma: f32,
     mut clock: f64,
     chaos: Option<&ChaosPlan>,
-    hier: Option<&Groups>,
+    hier: Option<&TierTree>,
     codec: Option<&dyn Compressor>,
 ) -> Result<f64> {
+    // Leaf partition for the per-group helpers (rejoin shipping).
+    let leaf = hier.map(|t| t.leaf().as_ref());
     let codec = codec.filter(|c| !c.is_identity());
     let t = outer.t;
     let d = state.x.len();
@@ -390,7 +415,7 @@ pub fn outer_update_g(
             // so prefer the fast link — else the lowest-ranked
             // contributor).
             let shipper =
-                hier::rejoin_shipper(hier, &plan.contributors(t), worker);
+                hier::rejoin_shipper(leaf, &plan.contributors(t), worker);
             return pull_rejoin_state(
                 rule, fabric, worker, shipper, state, outer, clock, codec,
             );
@@ -473,7 +498,7 @@ pub fn outer_update_g(
                 outer.stale_folds += 1;
             }
             outer.prev_ring = n_ring;
-            let shipper = hier::rejoin_shipper(hier, &ring, worker);
+            let shipper = hier::rejoin_shipper(leaf, &ring, worker);
             return pull_rejoin_state(
                 rule, fabric, worker, shipper, state, outer, clock, codec,
             );
@@ -508,7 +533,7 @@ pub fn outer_update_g(
     if cfg.exact_average {
         {
             let WorkerState { x, comp, .. } = state;
-            clock = hier::boundary_average(
+            clock = hier::boundary_average_tree(
                 fabric,
                 hier,
                 worker,
@@ -620,12 +645,17 @@ pub fn outer_update_g(
     }
 
     // Lines 7-8: the pluggable outer update (fused L1 kernels), in place.
-    rule.step(&mut outer.x0, &state.x, &mut outer.opt, gamma, t, kernels)?;
+    // First write to a shared x0 materializes the private copy here.
+    rule.step(outer.x0.make_mut(), &state.x, &mut outer.opt, gamma, t,
+              kernels)?;
 
-    // Adopt the new outer iterate as the inner starting point.
+    // Adopt the new outer iterate as the inner starting point (the
+    // de-bias mirror z is elided under the lean layout: x IS z there).
     state.x.copy_from_slice(&outer.x0);
     state.w = 1.0;
-    state.z.copy_from_slice(&state.x);
+    if !state.z.is_empty() {
+        state.z.copy_from_slice(&state.x);
+    }
 
     // Ship the fresh outer state to any workers rejoining right now —
     // static fault-window rejoiners, or quorum-late workers resyncing
@@ -641,7 +671,7 @@ pub fn outer_update_g(
     {
         let mine: Vec<usize> = rejoining
             .into_iter()
-            .filter(|&r| hier::rejoin_shipper(hier, &ring, r) == worker)
+            .filter(|&r| hier::rejoin_shipper(leaf, &ring, r) == worker)
             .collect();
         if !mine.is_empty() {
             let (tag_x, tag_u) = rejoin_tags(t);
@@ -657,7 +687,7 @@ pub fn outer_update_g(
             msg.extend_from_slice(&clock_to_f32s(clock));
             debug_assert_eq!(msg.len(), state_msg_len);
             for &r in &mine {
-                fabric.chunk_send(worker, r, tag_x, outer.x0.clone());
+                fabric.chunk_send(worker, r, tag_x, outer.x0.to_vec());
                 fabric.chunk_send(worker, r, tag_u, msg.clone());
             }
             clock += mine
@@ -677,7 +707,7 @@ pub fn outer_update_g(
         BufferStrategy::Average => {
             {
                 let WorkerState { h, comp, .. } = state;
-                clock = hier::boundary_average(
+                clock = hier::boundary_average_tree(
                     fabric,
                     hier,
                     worker,
@@ -693,7 +723,7 @@ pub fn outer_update_g(
             }
             if !state.v.is_empty() {
                 let WorkerState { v, comp, .. } = state;
-                clock = hier::boundary_average(
+                clock = hier::boundary_average_tree(
                     fabric,
                     hier,
                     worker,
@@ -760,7 +790,7 @@ fn pull_rejoin_state(
     clock = clock.max(leader_clock)
         + link.xfer_time(d)
         + link.xfer_time(state_msg_len);
-    outer.x0 = x0;
+    outer.x0 = CowVec::owned(x0);
     for (i, buf) in outer.opt.bufs.iter_mut().enumerate() {
         buf.copy_from_slice(&payload[i * d..(i + 1) * d]);
     }
@@ -777,7 +807,9 @@ fn pull_rejoin_state(
     }
     state.x.copy_from_slice(&outer.x0);
     state.w = 1.0;
-    state.z.copy_from_slice(&state.x);
+    if !state.z.is_empty() {
+        state.z.copy_from_slice(&state.x);
+    }
     // Buffers from before the outage are stale — always reset.
     state.reset_buffers();
     outer.t += 1;

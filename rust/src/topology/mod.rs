@@ -244,6 +244,136 @@ impl Groups {
     }
 }
 
+/// A recursive N-level tier tree over `m` workers — the cluster shape at
+/// production scale (rack → pod → datacenter), generalizing the two-level
+/// [`Groups`] partition. Each tier is itself a `Groups` partition of
+/// `0..m`; tier 0 is the finest (leaf) level and deeper tiers must
+/// *nest*: every tier-`l` group is a union of tier-`l-1` groups.
+///
+/// Spec grammar: `;`-separated tiers, leaves first, each tier in the
+/// [`Groups`] grammar — e.g. `"0-1|2-3|4-5|6-7;0-3|4-7"` is four racks in
+/// two pods over m=8. Hard parse errors name the offending token: gaps,
+/// overlaps and out-of-range workers are rejected by the per-tier
+/// [`Groups::parse`], empty tiers and non-nested ranges by the tree
+/// validation here.
+///
+/// A depth-1 tree is exactly one `Groups` partition — the two-level
+/// hierarchy every existing path runs on (bitwise-identical, asserted in
+/// `rust/src/slowmo/hier.rs` and `rust/tests/equivalences.rs`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TierTree {
+    tiers: Vec<std::sync::Arc<Groups>>,
+}
+
+impl TierTree {
+    /// Wrap a single partition as a depth-1 tree (the two-level case).
+    pub fn from_groups(groups: std::sync::Arc<Groups>) -> Self {
+        Self { tiers: vec![groups] }
+    }
+
+    /// Parse a `;`-separated tier spec against `m` workers (see the type
+    /// docs for the grammar). Errors are hard and name the offending
+    /// token.
+    pub fn parse(spec: &str, m: usize) -> Result<Self, String> {
+        let spec_t = spec.trim();
+        if spec_t.is_empty() {
+            return Err(
+                "tiers spec \"\": expected ';'-separated tier partitions \
+                 (leaves first), e.g. \"0-1|2-3;0-3\""
+                    .into(),
+            );
+        }
+        let mut tiers = Vec::new();
+        for (l, tok) in spec_t.split(';').enumerate() {
+            if tok.trim().is_empty() {
+                return Err(format!(
+                    "tiers spec {spec:?}: tier {l} is empty (token \
+                     {tok:?}) — every ';'-separated tier needs a partition"
+                ));
+            }
+            let tier = Groups::parse(tok, m)
+                .map_err(|e| format!("tiers spec {spec:?}, tier {l}: {e}"))?;
+            tiers.push(std::sync::Arc::new(tier));
+        }
+        let tree = Self { tiers };
+        tree.validate_nesting(spec)?;
+        Ok(tree)
+    }
+
+    /// Check every tier coarsens the one below it: a tier-`l` group may
+    /// never split a tier-`l-1` group across two parents.
+    fn validate_nesting(&self, spec: &str) -> Result<(), String> {
+        for l in 1..self.tiers.len() {
+            let (fine, coarse) = (&self.tiers[l - 1], &self.tiers[l]);
+            for grp in fine.all() {
+                let parent = coarse.group_of(grp[0]);
+                if let Some(&w) =
+                    grp.iter().find(|&&w| coarse.group_of(w) != parent)
+                {
+                    return Err(format!(
+                        "tiers spec {spec:?}: tier {l} is not nested — \
+                         group {}-{} of tier {} is split across tier-{l} \
+                         groups (workers {} and {w} have different \
+                         parents)",
+                        grp[0],
+                        grp[grp.len() - 1],
+                        l - 1,
+                        grp[0],
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of tiers (1 = the two-level hierarchy).
+    pub fn depth(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Total workers.
+    pub fn m(&self) -> usize {
+        self.tiers[0].m()
+    }
+
+    /// The finest (leaf) partition — what two-level code paths consume.
+    pub fn leaf(&self) -> &std::sync::Arc<Groups> {
+        &self.tiers[0]
+    }
+
+    /// Partition at tier `l` (0 = leaves).
+    pub fn tier(&self, l: usize) -> &std::sync::Arc<Groups> {
+        &self.tiers[l]
+    }
+
+    /// All tiers, leaves first.
+    pub fn tiers(&self) -> &[std::sync::Arc<Groups>] {
+        &self.tiers
+    }
+
+    /// The shallowest tier at which `a` and `b` share a group: `Some(0)`
+    /// for same leaf group, `Some(l)` when tier `l` is the first to join
+    /// them, `None` when they differ at every tier (top-level crossing).
+    pub fn join_level(&self, a: usize, b: usize) -> Option<usize> {
+        self.tiers.iter().position(|t| !t.is_inter(a, b))
+    }
+
+    /// The shallowest tier whose groups contain all of `workers`
+    /// (`None` when they span even the top tier).
+    pub fn span_level(&self, workers: &[usize]) -> Option<usize> {
+        self.tiers.iter().position(|t| !t.spans(workers))
+    }
+
+    /// Canonical spec string ("0-1|2-3;0-3").
+    pub fn spec(&self) -> String {
+        self.tiers
+            .iter()
+            .map(|t| t.spec())
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+}
+
 /// A directed communication round: who sends to whom with what weight.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Round {
@@ -602,6 +732,193 @@ mod tests {
             reach = next;
         }
         assert!(reach.iter().all(|row| row.iter().all(|&b| b)));
+    }
+
+    #[test]
+    fn exponential_in_degree_is_at_most_one_every_step() {
+        // Property (scalable-SGP regime): at every step each node sends to
+        // exactly one peer and receives from exactly one peer — the
+        // one-peer time-varying exponential graph never fans in.
+        forall(
+            "exp-in-degree-1",
+            &Pair(UsizeIn(2, 65), UsizeIn(0, 64)),
+            |&(m, k)| {
+                let g = ExponentialGraph::new(m);
+                let mut recv = vec![0usize; m];
+                for w in 0..m {
+                    let r = g.round(w, k as u64);
+                    if r.out.len() != 1 {
+                        return false;
+                    }
+                    recv[r.out[0].0] += 1;
+                }
+                recv.iter().all(|&c| c <= 1) && recv.iter().sum::<usize>() == m
+            },
+        );
+    }
+
+    #[test]
+    fn exponential_period_and_offset_partition() {
+        // Property: the offset schedule has period ceil(log2 m), and any
+        // window of one period partitions its steps exactly over the
+        // offsets {1, 2, 4, ..., 2^(p-1)} — each offset used once.
+        forall(
+            "exp-offset-partition",
+            &Pair(UsizeIn(2, 65), UsizeIn(0, 64)),
+            |&(m, start)| {
+                let g = ExponentialGraph::new(m);
+                let p = (usize::BITS
+                    - (m - 1).leading_zeros())
+                    .max(1) as u64;
+                let window: Vec<usize> = (start as u64..start as u64 + p)
+                    .map(|k| g.offset_at(k))
+                    .collect();
+                let mut want: Vec<usize> =
+                    (0..p).map(|i| 1usize << i).collect();
+                let mut got = window.clone();
+                got.sort_unstable();
+                want.sort_unstable();
+                got == want
+                    && (0..2 * p).all(|k| {
+                        g.offset_at(k) == g.offset_at(k + p)
+                    })
+            },
+        );
+    }
+
+    #[test]
+    fn exponential_push_sum_conserves_mass() {
+        // Push-sum invariant under the time-varying graph: total value
+        // mass and total weight are conserved at every step, and weights
+        // stay strictly positive (the de-bias divisor never degenerates).
+        forall(
+            "exp-push-sum-mass",
+            &Pair(UsizeIn(2, 33), UsizeIn(1, 16)),
+            |&(m, steps)| {
+                let g = ExponentialGraph::new(m);
+                let mut x: Vec<f64> =
+                    (0..m).map(|i| (i as f64) * 0.7 - 1.3).collect();
+                let mut w = vec![1.0f64; m];
+                let mass0: f64 = x.iter().sum();
+                for k in 0..steps as u64 {
+                    let p = mixing_matrix(&g, k);
+                    let apply = |v: &[f64]| -> Vec<f64> {
+                        (0..m)
+                            .map(|dst| {
+                                (0..m)
+                                    .map(|src| p[dst][src] * v[src])
+                                    .sum()
+                            })
+                            .collect()
+                    };
+                    x = apply(&x);
+                    w = apply(&w);
+                    if (x.iter().sum::<f64>() - mass0).abs() > 1e-9
+                        || (w.iter().sum::<f64>() - m as f64).abs() > 1e-9
+                        || w.iter().any(|&wi| wi <= 0.0)
+                    {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn exponential_push_sum_exact_average_at_power_of_two() {
+        // For m a power of two the de-biased ratios hit the exact average
+        // after one period (the hypercube-reduce special case).
+        for m in [2usize, 4, 8, 16, 32] {
+            let g = ExponentialGraph::new(m);
+            let p = (usize::BITS - (m - 1).leading_zeros()).max(1) as u64;
+            let mut x: Vec<f64> =
+                (0..m).map(|i| (i * i) as f64 * 0.11).collect();
+            let mut w = vec![1.0f64; m];
+            let mean = x.iter().sum::<f64>() / m as f64;
+            for k in 0..p {
+                let pk = mixing_matrix(&g, k);
+                let apply = |v: &[f64]| -> Vec<f64> {
+                    (0..m)
+                        .map(|dst| {
+                            (0..m).map(|src| pk[dst][src] * v[src]).sum()
+                        })
+                        .collect()
+                };
+                x = apply(&x);
+                w = apply(&w);
+            }
+            for i in 0..m {
+                assert!(
+                    (x[i] / w[i] - mean).abs() < 1e-9,
+                    "m={m} node {i}: {} vs {mean}",
+                    x[i] / w[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tier_tree_parses_and_nests() {
+        let t = TierTree::parse("0-1|2-3|4-5|6-7;0-3|4-7", 8).unwrap();
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.m(), 8);
+        assert_eq!(t.leaf().g(), 4);
+        assert_eq!(t.tier(1).g(), 2);
+        assert_eq!(t.spec(), "0-1|2-3|4-5|6-7;0-3|4-7");
+        assert_eq!(
+            TierTree::parse(&t.spec(), 8).unwrap(),
+            t,
+            "spec must round-trip"
+        );
+        // join_level: same rack -> 0, same pod -> 1, cross pod -> None.
+        assert_eq!(t.join_level(0, 1), Some(0));
+        assert_eq!(t.join_level(0, 2), Some(1));
+        assert_eq!(t.join_level(0, 4), None);
+        assert_eq!(t.span_level(&[0, 1]), Some(0));
+        assert_eq!(t.span_level(&[0, 3]), Some(1));
+        assert_eq!(t.span_level(&[0, 7]), None);
+        // Bare counts work per tier too, and depth-1 equals plain Groups.
+        let t = TierTree::parse("4;2", 8).unwrap();
+        assert_eq!(t.leaf().spec(), "0-1|2-3|4-5|6-7");
+        assert_eq!(t.tier(1).spec(), "0-3|4-7");
+        let d1 = TierTree::parse("0-3|4-7", 8).unwrap();
+        assert_eq!(d1.depth(), 1);
+        assert_eq!(
+            d1.leaf().as_ref(),
+            &Groups::parse("0-3|4-7", 8).unwrap()
+        );
+        // Three tiers.
+        let t = TierTree::parse("8;4;2", 16).unwrap();
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.join_level(0, 2), Some(1));
+        assert_eq!(t.join_level(0, 4), Some(2));
+        assert_eq!(t.join_level(0, 8), None);
+    }
+
+    #[test]
+    fn tier_tree_malformed_specs_are_hard_errors_naming_the_token() {
+        // Gap inside a tier names the missing worker and the tier.
+        let e = TierTree::parse("0-2|4-7;0-7", 8).unwrap_err();
+        assert!(e.contains("tier 0"), "{e}");
+        assert!(e.contains("worker 3"), "{e}");
+        // Overlap inside a tier names the worker and the token.
+        let e = TierTree::parse("0-3|3-7;0-7", 8).unwrap_err();
+        assert!(e.contains("overlap at worker 3"), "{e}");
+        // Empty tier (trailing or doubled ';') names the tier index.
+        let e = TierTree::parse("0-3|4-7;", 8).unwrap_err();
+        assert!(e.contains("tier 1 is empty"), "{e}");
+        let e = TierTree::parse(";0-7", 8).unwrap_err();
+        assert!(e.contains("tier 0 is empty"), "{e}");
+        // Non-nested ranges name the split group and the worker pair.
+        let e = TierTree::parse("0-2|3-5|6-7;0-3|4-7", 8).unwrap_err();
+        assert!(e.contains("not nested"), "{e}");
+        assert!(e.contains("3-5"), "{e}");
+        // Out-of-range and inverted tokens surface the Groups error with
+        // tier context.
+        let e = TierTree::parse("0-3|4-9;0-7", 8).unwrap_err();
+        assert!(e.contains("4-9") && e.contains("tier 0"), "{e}");
+        assert!(TierTree::parse("", 8).is_err());
     }
 
     #[test]

@@ -39,8 +39,10 @@ pub struct TrainResult {
     /// Outer-optimizer spec string ("slowmo:0.7", "adam:0.9,0.95") when
     /// the run wrapped its base algorithm; `None` for bare runs.
     pub outer: Option<String>,
-    /// Canonical hierarchical-partition spec ("0-3|4-7") when the run was
-    /// tiered (two-level or flat-on-tiers); `None` for flat runs.
+    /// Canonical tier-tree spec when the run was tiered (two-level or
+    /// flat-on-tiers): the leaf partition ("0-3|4-7") for depth-1 runs,
+    /// `';'`-joined tiers leaves-first ("0-3|4-7;0-7") for deeper
+    /// trees; `None` for flat runs.
     pub groups: Option<String>,
     /// Communication-compression spec string ("topk:0.1", "ef:signsgd")
     /// when a codec was configured; `None` for raw-f32 runs.
@@ -91,6 +93,13 @@ pub struct TrainResult {
     /// Semi-synchronous boundaries: stale contributions folded into a
     /// later boundary's average (0 for blocking or `staleness = 0` runs).
     pub stale_folds: u64,
+    /// Worker-state layout the run used ("dense" | "shared").
+    pub state: String,
+    /// Process peak resident set (bytes, Linux `VmHWM`) sampled after the
+    /// run finished; `None` where the kernel doesn't expose it. Whole-
+    /// process, so only comparable across runs in the same process after
+    /// a [`crate::util::reset_peak_rss`].
+    pub peak_rss_bytes: Option<u64>,
     /// Mean grad-norm^2 trajectory per outer iteration (theory bench).
     pub gradnorm_curve: Vec<(u64, f64)>,
     /// Worker 0's final (de-biased) parameters — recorded only when
@@ -130,6 +139,7 @@ impl TrainResult {
             ("retransmits", Json::num(self.retransmits as f64)),
             ("quorum_misses", Json::num(self.quorum_misses as f64)),
             ("stale_folds", Json::num(self.stale_folds as f64)),
+            ("state", Json::str(&self.state)),
             (
                 "train_curve",
                 Json::Arr(
@@ -159,6 +169,9 @@ impl TrainResult {
         }
         if let Some(compress) = &self.compress {
             pairs.push(("compress", Json::str(compress)));
+        }
+        if let Some(rss) = self.peak_rss_bytes {
+            pairs.push(("peak_rss_bytes", Json::num(rss as f64)));
         }
         Json::obj(pairs)
     }
@@ -232,6 +245,8 @@ mod tests {
             retransmits: 0,
             quorum_misses: 3,
             stale_folds: 2,
+            state: "dense".into(),
+            peak_rss_bytes: Some(1 << 20),
             gradnorm_curve: vec![],
             final_params: None,
         }
@@ -261,6 +276,11 @@ mod tests {
         assert_eq!(j.get("comm_wall_time").unwrap().as_f64(), Some(0.3));
         assert_eq!(j.get("quorum_misses").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("stale_folds").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("state").unwrap().as_str(), Some("dense"));
+        assert_eq!(
+            j.get("peak_rss_bytes").unwrap().as_f64(),
+            Some((1u64 << 20) as f64)
+        );
         let parsed =
             crate::jsonx::parse(&crate::jsonx::to_string(&j)).unwrap();
         assert_eq!(parsed.get("best_train_loss").unwrap().as_f64(),

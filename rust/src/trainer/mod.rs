@@ -22,21 +22,67 @@ pub use observer::{
 };
 pub use schedule::Schedule;
 
-use crate::algorithms::{AlgoSel, BaseAlgorithm, Ctx, WorkerState};
+use crate::algorithms::{
+    AlgoSel, BaseAlgorithm, Ctx, StateLayout, WorkerState,
+};
 use crate::compress::{CompressSel, CompressState, Compressor};
 use crate::data::{task_for, Task};
 use crate::exec::ExecMode;
 use crate::net::{ChaosCfg, ChaosPlan, CostModel, Fabric};
-use crate::optim::kernels::Kernels;
+use crate::optim::kernels::{InnerOpt, Kernels};
 use crate::runtime::DataDesc;
 use crate::slowmo::{
-    hier, outer_update_g, HierCfg, OuterOpt, OuterState, SlowMoCfg,
+    hier, outer_update_g, BufferStrategy, HierCfg, OuterOpt, OuterState,
+    SlowMoCfg,
 };
-use crate::topology::Groups;
+use crate::topology::{Groups, TierTree};
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Worker-state layout for the simulator's scale runs.
+///
+/// `Dense` gives every worker the full private buffer set (`x`, `h`,
+/// `z`, `x0`, rule state) — the default, and the only layout the PJRT
+/// kernels or the threaded backend accept. `Shared` initializes every
+/// worker from one read-only `Arc` of the init vector
+/// ([`crate::slowmo::OuterState::new_shared`]) and elides the buffers
+/// the run provably never reads — the momentum buffer `h` when the
+/// inner optimizer is momentum-free and the de-bias mirror `z` when the
+/// base algorithm reports [`BaseAlgorithm::needs_debias`] `false` — so
+/// memory per worker drops from 5 to 3 `d`-vectors and m = 4096 quad
+/// cells fit in one process. Math is bitwise-identical where both
+/// layouts run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateMode {
+    Dense,
+    Shared,
+}
+
+impl StateMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StateMode::Dense => "dense",
+            StateMode::Shared => "shared",
+        }
+    }
+}
+
+impl std::str::FromStr for StateMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "dense" => Ok(StateMode::Dense),
+            "shared" => Ok(StateMode::Shared),
+            other => Err(format!(
+                "unknown state mode {other:?} (use \"dense\" or \
+                 \"shared\")"
+            )),
+        }
+    }
+}
 
 /// Full training configuration for one run. Construct through
 /// [`crate::session::TrainBuilder`] — the builder owns the defaults and
@@ -96,6 +142,11 @@ pub struct TrainCfg {
     /// used by the chaos equivalence tests; off by default (costs one
     /// `d`-sized copy).
     pub record_final_params: bool,
+    /// Worker-state layout (see [`StateMode`]); `Dense` by default.
+    /// `Shared` is sim-only and requires native kernels; chaos, the
+    /// `Average` buffer strategy and semi-synchronous quorums are
+    /// rejected (they overwrite or average buffers the layout elides).
+    pub state: StateMode,
 }
 
 impl TrainCfg {
@@ -123,6 +174,7 @@ impl TrainCfg {
             chaos: None,
             compress: CompressSel::none(),
             record_final_params: false,
+            state: StateMode::Dense,
         }
     }
 }
@@ -235,16 +287,21 @@ impl CheckpointGate {
 pub(crate) fn run_prepared(
     cfg: &TrainCfg,
     algos: Vec<Arc<dyn BaseAlgorithm>>,
-    groups: Option<Arc<Groups>>,
+    tiers: Option<Arc<TierTree>>,
     outer_rule: Option<Arc<dyn OuterOpt>>,
     compressor: Option<Arc<dyn Compressor>>,
-    init: &[f32],
+    init: &Arc<Vec<f32>>,
     desc: &DataDesc,
     model: &ModelExec,
     kernels: &Kernels,
     observer: Option<&mut dyn RunObserver>,
 ) -> Result<TrainResult> {
     let t_wall = Instant::now();
+    // Leaf partition: the group-local algorithm machinery (scopes,
+    // intra-group averages, rejoin shipping) always works on tier 0.
+    let groups: Option<Arc<Groups>> =
+        tiers.as_ref().map(|t| Arc::clone(t.leaf()));
+    let tree_depth = tiers.as_ref().map(|t| t.depth()).unwrap_or(0);
     if let Some(s) = &cfg.slowmo {
         s.validate()?;
         ensure!(
@@ -266,7 +323,7 @@ pub(crate) fn run_prepared(
         h.validate()?;
         let gr = groups.as_deref().ok_or_else(|| {
             anyhow::anyhow!(
-                "hierarchy configured without a resolved partition (run \
+                "hierarchy configured without a resolved tier tree (run \
                  through Session, which parses [groups] spec against m)"
             )
         })?;
@@ -327,6 +384,12 @@ pub(crate) fn run_prepared(
                      tau_inner intra-group averages (membership is only \
                      defined at outer boundaries)"
                 );
+                ensure!(
+                    tree_depth <= 1,
+                    "chaos fault injection supports flat or two-level \
+                     topologies only (rejoin shipping is leaf-group \
+                     based; got a depth-{tree_depth} tier tree)"
+                );
             }
             Some(Arc::new(plan))
         }
@@ -376,7 +439,51 @@ pub(crate) fn run_prepared(
                          (they would deadlock on quorum-late workers)"
                     );
                 }
+                ensure!(
+                    tree_depth <= 1,
+                    "semi-synchronous quorum boundaries support flat or \
+                     two-level topologies only (got a \
+                     depth-{tree_depth} tier tree)"
+                );
             }
+        }
+    }
+    // Shared worker state: the seams it relies on (elided buffers, one
+    // read-only init Arc) hold only on the native sim path without
+    // machinery that overwrites or averages the elided buffers.
+    if cfg.state == StateMode::Shared {
+        ensure!(
+            cfg.native_kernels,
+            "shared worker state requires native kernels (the AOT PJRT \
+             optimizer kernels take full-size momentum buffers and \
+             cannot elide them); set native_kernels = true"
+        );
+        ensure!(
+            cfg.exec == ExecMode::Sim,
+            "shared worker state is sim-only (the scale harness \
+             measures one process's peak RSS under the simulated \
+             fabric); use exec = \"sim\" or state = \"dense\""
+        );
+        ensure!(
+            cfg.chaos.is_none(),
+            "shared worker state cannot combine with chaos injection \
+             (rejoin transfers overwrite buffers the layout elides); \
+             drop [chaos] or use state = \"dense\""
+        );
+        if let Some(s) = &cfg.slowmo {
+            ensure!(
+                s.buffers != BufferStrategy::Average,
+                "shared worker state cannot use the Average buffer \
+                 strategy (it averages momentum buffers the layout may \
+                 elide); use reset/maintain or state = \"dense\""
+            );
+            ensure!(
+                !s.quorum.is_some_and(|q| q < cfg.m),
+                "shared worker state cannot combine with \
+                 semi-synchronous quorum boundaries (resync transfers \
+                 overwrite buffers the layout elides); use quorum = m \
+                 or state = \"dense\""
+            );
         }
     }
     let mut fabric = match &chaos_plan {
@@ -385,17 +492,27 @@ pub(crate) fn run_prepared(
         }
         None => Fabric::with_mode(cfg.m, cfg.cost.clone(), cfg.exec),
     };
-    if let (Some(h), Some(gr)) = (&cfg.hier, &groups) {
-        fabric.set_tiers(Arc::clone(gr), h.inter_cost(&cfg.cost));
+    if let (Some(h), Some(tree)) = (&cfg.hier, &tiers) {
+        fabric.set_tier_tree(
+            Arc::clone(tree),
+            h.tier_costs(&cfg.cost, tree.depth()),
+        );
     }
     let fabric = fabric;
     let mut algo_name =
         display_name(&algos[0].name(), &cfg.slowmo, outer_rule.as_deref());
     if let (Some(h), Some(gr)) = (&cfg.hier, &groups) {
+        // Depth-1 trees keep the historical two-level display names.
+        let depth_suffix = if tree_depth >= 2 {
+            format!(",d{tree_depth}")
+        } else {
+            String::new()
+        };
         if h.two_level {
             algo_name.push_str(&format!(
-                "+hier(g{}{})",
+                "+hier(g{}{}{})",
                 gr.g(),
+                depth_suffix,
                 if h.tau_inner > 0 {
                     format!(",ti{}", h.tau_inner)
                 } else {
@@ -403,7 +520,11 @@ pub(crate) fn run_prepared(
                 }
             ));
         } else {
-            algo_name.push_str(&format!("+tiered(g{})", gr.g()));
+            algo_name.push_str(&format!(
+                "+tiered(g{}{})",
+                gr.g(),
+                depth_suffix
+            ));
         }
     }
     if codec.is_some() {
@@ -450,12 +571,33 @@ pub(crate) fn run_prepared(
                 }
                 _ => (&algos[0], None),
             };
-        let mut state = WorkerState::new(init, algo.inner());
+        let mut state = if cfg.state == StateMode::Shared {
+            // Elide what this run provably never reads: `h` when the
+            // inner optimizer carries no momentum, `z` when the base
+            // algorithm needs no de-bias mirror.
+            let layout = StateLayout {
+                lean_h: matches!(
+                    algo.inner(),
+                    InnerOpt::Nesterov { beta0, .. } if *beta0 == 0.0
+                ),
+                lean_z: !algo.needs_debias(),
+            };
+            WorkerState::with_layout(init, algo.inner(), layout)
+        } else {
+            WorkerState::new(init, algo.inner())
+        };
         // Key the compression streams/residuals by (run seed, rank) so
         // randomized codecs are deterministic per worker.
         state.comp = CompressState::new(cfg.seed, w as u64);
-        let mut outer =
-            outer_rule.as_deref().map(|r| OuterState::new(init, r));
+        let mut outer = outer_rule.as_deref().map(|r| {
+            if cfg.state == StateMode::Shared {
+                // All m workers reference one init allocation; x0
+                // copies on its first write (the first outer step).
+                OuterState::new_shared(Arc::clone(init), r)
+            } else {
+                OuterState::new(init, r)
+            }
+        });
         let mut ctx = Ctx {
             worker: w,
             m: cfg.m,
@@ -557,15 +699,15 @@ pub(crate) fn run_prepared(
                 (&cfg.slowmo, outer_rule.as_deref(), outer.as_mut())
             {
                 if scfg.is_boundary(k) {
-                    let hier_groups = if two_level {
-                        groups.as_deref()
+                    let hier_tree = if two_level {
+                        tiers.as_deref()
                     } else {
                         None
                     };
                     ctx.clock = outer_update_g(
                         scfg, rule, algo.as_ref(), &fabric, kernels, w,
                         &mut state, outer, gamma_outer, ctx.clock,
-                        chaos_plan.as_deref(), hier_groups, codec,
+                        chaos_plan.as_deref(), hier_tree, codec,
                     )?;
                     if w == 0 {
                         if let Some(obs) = &observer {
@@ -789,7 +931,9 @@ fn assemble(
     TrainResult {
         algo: algo_name,
         outer: cfg.slowmo.as_ref().map(|s| s.outer.spec()),
-        groups: fabric.groups().map(|g| g.spec()),
+        // The full tier-tree spec; identical to the leaf partition's
+        // spec for depth-1 (historical two-level) runs.
+        groups: fabric.tier_tree().map(|t| t.spec()),
         compress: if cfg.compress.is_none() {
             None
         } else {
@@ -816,6 +960,8 @@ fn assemble(
         retransmits,
         quorum_misses,
         stale_folds,
+        state: cfg.state.name().to_string(),
+        peak_rss_bytes: crate::util::peak_rss_bytes(),
         gradnorm_curve,
         final_params,
     }
@@ -954,5 +1100,16 @@ mod tests {
         assert!(cfg.compress.is_none());
         assert!(cfg.hier.is_none());
         assert!(!cfg.record_final_params);
+        assert_eq!(cfg.state, StateMode::Dense);
+    }
+
+    #[test]
+    fn state_mode_parses_and_names_round_trip() {
+        for mode in [StateMode::Dense, StateMode::Shared] {
+            assert_eq!(mode.name().parse::<StateMode>().unwrap(), mode);
+        }
+        let e = "sparse".parse::<StateMode>().unwrap_err();
+        assert!(e.contains("sparse"), "{e}");
+        assert!(e.contains("dense"), "{e}");
     }
 }

@@ -78,6 +78,118 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Parse the `VmHWM` line out of a `/proc/self/status` dump, returning
+/// bytes. Factored out of [`peak_rss_bytes`] so the parser is unit-testable
+/// on every platform; kernel format is `VmHWM:\t  123456 kB`.
+pub fn parse_vmhwm_bytes(status: &str) -> Option<u64> {
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line
+        .strip_prefix("VmHWM:")?
+        .trim()
+        .strip_suffix("kB")?
+        .trim()
+        .parse()
+        .ok()?;
+    Some(kb * 1024)
+}
+
+/// Peak resident set size ("high-water mark") of this process in bytes:
+/// `VmHWM` from `/proc/self/status` on Linux, `None` elsewhere. The scale
+/// bench uses this for its memory headline; [`reset_peak_rss`] rebases the
+/// mark between cells.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    parse_vmhwm_bytes(&status)
+}
+
+/// Reset the peak-RSS high-water mark to the process's *current* RSS
+/// (writes `5` to `/proc/self/clear_refs`; no privilege needed for self).
+/// Returns `false` where unsupported — callers that depend on per-phase
+/// peaks must then fall back to ascending-footprint run ordering, which
+/// keeps the monotone mark meaningful.
+pub fn reset_peak_rss() -> bool {
+    std::fs::write("/proc/self/clear_refs", b"5").is_ok()
+}
+
+/// A copy-on-write `f32` vector: starts as a view of a shared read-only
+/// base ([`CowVec::shared`]) and materializes a private copy only on
+/// first mutation ([`CowVec::make_mut`]). The shared-state trainer mode
+/// hands every worker the *same* `Arc` of the initial parameters, so
+/// `m` outer iterates cost one `d`-vector until a worker's first outer
+/// boundary actually writes — the copy-on-write half of the scale
+/// tentpole (the lean state layouts are the other half).
+///
+/// Reads go through `Deref<Target = [f32]>`, so `&cow[..]`, indexing and
+/// slice methods all work on either representation. Equality, `Clone`
+/// and `Debug` compare/copy the *logical contents* — a shared and an
+/// owned `CowVec` with equal elements are equal.
+#[derive(Clone)]
+pub struct CowVec {
+    base: std::sync::Arc<Vec<f32>>,
+    own: Option<Vec<f32>>,
+}
+
+impl CowVec {
+    /// A fully private vector (the dense-replica representation).
+    pub fn owned(v: Vec<f32>) -> Self {
+        Self { base: std::sync::Arc::new(Vec::new()), own: Some(v) }
+    }
+
+    /// A view of `base`; no copy until [`Self::make_mut`].
+    pub fn shared(base: std::sync::Arc<Vec<f32>>) -> Self {
+        Self { base, own: None }
+    }
+
+    /// Still borrowing the shared base (no private copy materialized)?
+    pub fn is_shared(&self) -> bool {
+        self.own.is_none()
+    }
+
+    /// Mutable access, materializing a private copy of the base on first
+    /// use (and dropping this handle's claim on the shared allocation).
+    pub fn make_mut(&mut self) -> &mut Vec<f32> {
+        if self.own.is_none() {
+            self.own = Some(self.base.as_ref().clone());
+            self.base = std::sync::Arc::new(Vec::new());
+        }
+        self.own.as_mut().expect("just materialized")
+    }
+
+    /// A detached plain copy of the contents.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self[..].to_vec()
+    }
+}
+
+impl std::ops::Deref for CowVec {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.own.as_deref().unwrap_or(&self.base)
+    }
+}
+
+impl std::fmt::Debug for CowVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CowVec")
+            .field("shared", &self.is_shared())
+            .field("data", &&self[..])
+            .finish()
+    }
+}
+
+impl PartialEq for CowVec {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Vec<f32>> for CowVec {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self[..] == other[..]
+    }
+}
+
 /// Wall-clock seconds since the epoch (for log stamps).
 pub fn now_epoch_secs() -> f64 {
     SystemTime::now()
@@ -162,6 +274,70 @@ mod tests {
             < 1e-3);
         assert_eq!(stddev(&[1.0]), 0.0);
         assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn vmhwm_parser() {
+        let status = "Name:\tslowmo\nVmPeak:\t  999 kB\nVmHWM:\t  \
+                      123456 kB\nVmRSS:\t  100 kB\n";
+        assert_eq!(parse_vmhwm_bytes(status), Some(123456 * 1024));
+        // Missing line, malformed number, wrong unit: all None, no panic.
+        assert_eq!(parse_vmhwm_bytes("Name:\tx\n"), None);
+        assert_eq!(parse_vmhwm_bytes("VmHWM:\t  lots kB\n"), None);
+        assert_eq!(parse_vmhwm_bytes("VmHWM:\t  12 MB\n"), None);
+    }
+
+    #[test]
+    fn peak_rss_reads_on_linux() {
+        let peak = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            // Any live process has touched at least a page.
+            assert!(peak.unwrap() > 0);
+        } else {
+            assert!(peak.is_none());
+        }
+    }
+
+    #[test]
+    fn reset_peak_rss_never_raises_the_mark() {
+        let Some(before) = peak_rss_bytes() else {
+            assert!(!reset_peak_rss() || !cfg!(target_os = "linux"));
+            return;
+        };
+        // Touch a buffer large enough to move the high-water mark, drop
+        // it, then rebase: the mark must not exceed the pre-reset peak.
+        let buf = vec![1u8; 8 << 20];
+        assert!(buf.iter().map(|&b| b as u64).sum::<u64>() > 0);
+        drop(buf);
+        let peak = peak_rss_bytes().unwrap().max(before);
+        if reset_peak_rss() {
+            assert!(peak_rss_bytes().unwrap() <= peak);
+        }
+    }
+
+    #[test]
+    fn cow_vec_materializes_on_first_write_only() {
+        let base = std::sync::Arc::new(vec![1.0f32, 2.0, 3.0]);
+        let mut a = CowVec::shared(std::sync::Arc::clone(&base));
+        let b = CowVec::shared(std::sync::Arc::clone(&base));
+        assert!(a.is_shared() && b.is_shared());
+        assert_eq!(a[1], 2.0);
+        assert_eq!(a, b);
+        // 2 handles + 1 local Arc, zero copies so far.
+        assert_eq!(std::sync::Arc::strong_count(&base), 3);
+        a.make_mut()[0] = 9.0;
+        assert!(!a.is_shared());
+        assert_eq!(std::sync::Arc::strong_count(&base), 2);
+        assert_eq!(a[0], 9.0);
+        assert_eq!(b[0], 1.0, "the base and other handles are untouched");
+        assert_ne!(a, b);
+        // Logical equality ignores representation.
+        assert_eq!(CowVec::owned(vec![1.0, 2.0, 3.0]), b);
+        assert_eq!(b, vec![1.0f32, 2.0, 3.0]);
+        assert_eq!(b.to_vec(), vec![1.0f32, 2.0, 3.0]);
+        // Cloning a shared handle stays shared; cloning owned stays owned.
+        assert!(b.clone().is_shared());
+        assert!(!a.clone().is_shared());
     }
 
     #[test]

@@ -17,7 +17,7 @@ use slowmo::slowmo::{
     OuterState, SlowMoCfg,
 };
 use slowmo::testkit::chaos_seed;
-use slowmo::topology::{ExponentialGraph, Groups};
+use slowmo::topology::{ExponentialGraph, Groups, TierTree};
 use slowmo::trainer::{Schedule, TrainResult};
 use std::sync::Arc;
 
@@ -778,7 +778,8 @@ fn hier_whole_group_outage_falls_back_to_global_shipper() {
     let m = 4;
     let d = 6;
     let cost = CostModel::free();
-    let groups = Groups::parse("0-1|2-3", m).unwrap();
+    let tree =
+        TierTree::from_groups(Arc::new(Groups::parse("0-1|2-3", m).unwrap()));
     let plan = Arc::new(
         ChaosPlan::new(
             ChaosCfg {
@@ -809,7 +810,7 @@ fn hier_whole_group_outage_falls_back_to_global_shipper() {
             }
             outer_update_g(&cfg, &*rule, &algo, &fabric, &kernels, w,
                            &mut st, &mut ou, 0.1, 0.0, Some(&*plan),
-                           Some(&groups), None)
+                           Some(&tree), None)
                 .unwrap();
         }
         (st, ou)

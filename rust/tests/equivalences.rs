@@ -10,7 +10,7 @@ use slowmo::optim::kernels::InnerOpt;
 use slowmo::session::Session;
 use slowmo::slowmo::{BufferStrategy, OuterSel, SlowMoCfg};
 use slowmo::testkit::chaos_seed;
-use slowmo::trainer::{Schedule, TrainResult};
+use slowmo::trainer::{Schedule, StateMode, TrainResult};
 
 fn session() -> Option<Session> {
     match Session::native_only() {
@@ -952,6 +952,238 @@ fn threaded_rejects_chaos() {
         .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("sim-only"), "{msg}");
+}
+
+// ---------------------- scale fabric: N-level trees + shared state
+// The depth-2 tree reduce and the copy-on-write shared layout are both
+// *representation* changes: where they overlap with an existing path
+// they must land on identical bits, and where they cannot run they must
+// fail loudly at build time.
+
+/// Quad run with an explicit state layout and optional tier topology.
+/// `tiered` charges a slow pod-crossing link above the rack link so the
+/// tree's latency win is observable.
+fn quads(
+    s: &Session,
+    m: usize,
+    steps: u64,
+    slowmo: Option<SlowMoCfg>,
+    groups: Option<(&str, bool)>,
+    state: StateMode,
+    tiered: bool,
+) -> TrainResult {
+    let mut b = s
+        .train("quad")
+        .algo_sel(local())
+        .workers(m)
+        .steps(steps)
+        .seed(11)
+        .slowmo_opt(slowmo)
+        .schedule(Schedule::Const(0.2))
+        .heterogeneity(1.0)
+        .eval_batches(1)
+        .cost(CostModel::ethernet_10g())
+        .compute_time(1e-6)
+        .record_params(true)
+        .state(state);
+    if tiered {
+        b = b.inter_link(5e-4, 1.25e8).tier_link(2e-3, 6.25e7);
+    }
+    if let Some((spec, two_level)) = groups {
+        b = if two_level {
+            b.groups(spec)
+        } else {
+            b.groups_flat(spec)
+        };
+    }
+    b.run().unwrap()
+}
+
+#[test]
+fn tree_trivial_top_matches_two_level_math_for_every_outer_rule() {
+    // A depth-2 tree whose top tier is one group covering everything
+    // computes exactly the two-level average: the top-tier allreduce
+    // runs over members that already hold identical bits, and the
+    // descent re-broadcasts those same bits. So for every registered
+    // outer rule the math is bitwise-identical — but NOT free: the
+    // descent moves a redundant broadcast the depth-1 path never sends.
+    let Some(s) = session() else { return };
+    let keys: Vec<String> = s
+        .outer_registry()
+        .keys()
+        .iter()
+        .map(|k| k.to_string())
+        .collect();
+    for key in &keys {
+        let sel = s.outer_registry().parse(key).unwrap();
+        let cfg = SlowMoCfg::with_outer(sel, 8);
+        let d1 = quadg(&s, 4, 64, Some(cfg.clone()),
+                       Some(("0-1|2-3", true)), 0, None);
+        let d2 = quadg(&s, 4, 64, Some(cfg),
+                       Some(("0-1|2-3;0-3", true)), 0, None);
+        assert_eq!(d2.final_params, d1.final_params, "{key}");
+        assert!(d2.final_params.is_some(), "{key}");
+        assert_eq!(d2.train_curve, d1.train_curve, "{key}");
+        assert!(
+            d2.bytes_sent > d1.bytes_sent,
+            "{key}: the trivial top tier must cost extra broadcast \
+             bytes ({} !> {})",
+            d2.bytes_sent,
+            d1.bytes_sent
+        );
+        assert!(d2.algo.contains(",d2"), "{key}: {}", d2.algo);
+        assert!(!d1.algo.contains(",d2"), "{key}: {}", d1.algo);
+        assert_eq!(d2.groups.as_deref(), Some("0-1|2-3;0-3"), "{key}");
+    }
+}
+
+#[test]
+fn deep_tree_recovers_global_mean_and_beats_flat_time() {
+    // m=8 in 4 racks × 2 pods with a genuinely slow pod link: the
+    // depth-2 reduce computes the same global average up to fp
+    // association while crossing the slow tier O(pods) times instead of
+    // O(m) — so it wins simulated time against flat SlowMo charged on
+    // the identical fabric, at equal step budgets.
+    let Some(s) = session() else { return };
+    let spec = "0-1|2-3|4-5|6-7;0-3|4-7";
+    let cfg = SlowMoCfg::new(1.0, 0.7, 8);
+    let flat = quads(&s, 8, 64, Some(cfg.clone()),
+                     Some((spec, false)), StateMode::Dense, true);
+    let tree = quads(&s, 8, 64, Some(cfg),
+                     Some((spec, true)), StateMode::Dense, true);
+    assert_eq!(tree.steps_run, flat.steps_run);
+    let (a, b) = (
+        tree.final_params.as_ref().unwrap(),
+        flat.final_params.as_ref().unwrap(),
+    );
+    assert!(
+        slowmo::util::allclose(a, b, 1e-4, 1e-5),
+        "depth-2 mean drifted from the flat mean"
+    );
+    assert!(
+        tree.sim_time < flat.sim_time,
+        "tree {} !< flat {}",
+        tree.sim_time,
+        flat.sim_time
+    );
+    assert!(tree.algo.contains("+hier(g4,d2)"), "{}", tree.algo);
+    assert!(flat.algo.contains("+tiered(g4,d2)"), "{}", flat.algo);
+}
+
+#[test]
+fn shared_state_is_bitwise_identical_to_dense_for_every_outer_rule() {
+    // The copy-on-write layout is a memory optimization, not an
+    // algorithm: for every registered outer rule the shared run lands
+    // on the dense run's exact bits, bytes and simulated time.
+    let Some(s) = session() else { return };
+    let keys: Vec<String> = s
+        .outer_registry()
+        .keys()
+        .iter()
+        .map(|k| k.to_string())
+        .collect();
+    for key in &keys {
+        let sel = s.outer_registry().parse(key).unwrap();
+        let cfg = SlowMoCfg::with_outer(sel, 8);
+        let dense = quads(&s, 4, 64, Some(cfg.clone()), None,
+                          StateMode::Dense, false);
+        let shared = quads(&s, 4, 64, Some(cfg), None,
+                           StateMode::Shared, false);
+        assert_eq!(shared.final_params, dense.final_params, "{key}");
+        assert!(shared.final_params.is_some(), "{key}");
+        assert_eq!(shared.train_curve, dense.train_curve, "{key}");
+        assert_eq!(shared.sim_time, dense.sim_time, "{key}");
+        assert_eq!(shared.bytes_sent, dense.bytes_sent, "{key}");
+        assert_eq!(shared.state, "shared", "{key}");
+        assert_eq!(dense.state, "dense", "{key}");
+    }
+}
+
+#[test]
+fn shared_state_is_bitwise_identical_to_dense_on_the_tree() {
+    // The shared layout composes with the depth-2 tree reduce — the
+    // copy-on-write vectors flow through ascent, cascade and leaf
+    // broadcast without moving a bit, a byte or a tick.
+    let Some(s) = session() else { return };
+    let spec = "0-1|2-3|4-5|6-7;0-3|4-7";
+    let cfg = SlowMoCfg::new(1.0, 0.7, 8);
+    let dense = quads(&s, 8, 64, Some(cfg.clone()),
+                      Some((spec, true)), StateMode::Dense, true);
+    let shared = quads(&s, 8, 64, Some(cfg),
+                       Some((spec, true)), StateMode::Shared, true);
+    assert_eq!(shared.final_params, dense.final_params);
+    assert!(shared.final_params.is_some());
+    assert_eq!(shared.train_curve, dense.train_curve);
+    assert_eq!(shared.sim_time, dense.sim_time);
+    assert_eq!(shared.bytes_sent, dense.bytes_sent);
+    assert_eq!(shared.bytes_inter, dense.bytes_inter);
+    assert_eq!(shared.state, "shared");
+}
+
+#[test]
+fn shared_state_rejects_unsupported_combinations() {
+    // Shared state is a sim-only layout with provable-elision
+    // preconditions; every unsupported combination is a build-time hard
+    // error naming the conflict, never a silent dense fallback.
+    let Some(s) = session() else { return };
+    let base = || {
+        s.train("quad")
+            .algo_sel(local())
+            .workers(4)
+            .steps(16)
+            .seed(11)
+            .slowmo_cfg(SlowMoCfg::new(1.0, 0.7, 8))
+            .schedule(Schedule::Const(0.2))
+            .heterogeneity(1.0)
+            .eval_batches(1)
+            .cost(CostModel::free())
+            .compute_time(1e-6)
+            .state(StateMode::Shared)
+    };
+    fn msg(b: slowmo::session::TrainBuilder<'_>) -> String {
+        format!("{:#}", b.run().unwrap_err())
+    }
+    let threaded = msg(base().exec(ExecMode::Threaded));
+    assert!(threaded.contains("sim-only"), "{threaded}");
+    let avg = msg(base().buffers(BufferStrategy::Average));
+    assert!(avg.contains("Average"), "{avg}");
+    let chaos = msg(base().chaos_opt(Some(net_chaos())));
+    assert!(chaos.contains("chaos"), "{chaos}");
+    let quorum = msg(
+        base().slowmo_cfg(SlowMoCfg::new(1.0, 0.7, 8).with_quorum(2)),
+    );
+    assert!(quorum.contains("quorum"), "{quorum}");
+}
+
+#[test]
+fn static_gossip_degenerates_to_exponential_at_m2() {
+    // At m=2 the time-varying exponential graph has a single offset, so
+    // the frozen-ring variant is the same communication pattern bit for
+    // bit; at m=4 the offsets diverge (1,2,1,2,… vs always 1) — same
+    // bytes, different mixing.
+    let Some(s) = session() else { return };
+    let algo = |spec: &str| {
+        let mut sel = s.registry().parse(spec).unwrap();
+        sel.inner = sgd();
+        sel
+    };
+    let slowmo = Some(SlowMoCfg::new(1.0, 0.6, 8));
+    let exp2 = quadx(&s, 2, 64, algo("sgp"), slowmo.clone(), None);
+    let ring2 =
+        quadx(&s, 2, 64, algo("sgp-static"), slowmo.clone(), None);
+    assert_eq!(ring2.final_params, exp2.final_params);
+    assert!(ring2.final_params.is_some());
+    assert_eq!(ring2.train_curve, exp2.train_curve);
+    assert_eq!(ring2.bytes_sent, exp2.bytes_sent);
+    assert!(ring2.algo.contains("sgp-static"), "{}", ring2.algo);
+    let exp4 = quadx(&s, 4, 64, algo("sgp"), slowmo.clone(), None);
+    let ring4 = quadx(&s, 4, 64, algo("sgp-static"), slowmo, None);
+    assert_eq!(ring4.bytes_sent, exp4.bytes_sent);
+    assert_ne!(
+        ring4.final_params, exp4.final_params,
+        "m=4: frozen ring must mix differently from the \
+         time-varying graph"
+    );
 }
 
 #[test]
