@@ -33,7 +33,7 @@ e2e: artifacts
 	python python/compile/aot.py --out-dir artifacts --group e2e
 
 # Hot-path micro-benchmarks (ROADMAP item 5a): emits
-# results/BENCH_micro.json (schema bench-micro/v1, validated in CI
+# results/BENCH_micro.json (schema bench-micro/v2, validated in CI
 # against results/BENCH_micro.schema.json). Scale via SLOWMO_SCALE.
 bench:
 	cargo bench --bench micro

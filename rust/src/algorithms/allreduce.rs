@@ -6,9 +6,11 @@
 //! the paper's "traditional Allreduce implementation of parallel
 //! SGD/Adam" and the τ=1 anchor of the SlowMo framework.
 
-use super::{apply_inner, compress_payload, BaseAlgorithm, Ctx, WorkerState};
+use super::{
+    apply_inner, compress_payload_pooled, BaseAlgorithm, Ctx, WorkerState,
+};
 use crate::compress::site;
-use crate::net::ring_allreduce_mean_group_c;
+use crate::net::ring_allreduce_mean_group_p;
 use crate::optim::kernels::InnerOpt;
 use anyhow::Result;
 
@@ -39,27 +41,40 @@ impl BaseAlgorithm for AllReduce {
         gamma: f32,
         k: u64,
     ) -> Result<()> {
-        let mut avg = g.to_vec();
+        // Hot path: the averaging buffer, the group list and every
+        // collective send chunk come from the per-worker scratch pools
+        // (and return to them before this step ends), so the steady-state
+        // step makes no heap allocations — pinned by the `alloc_gate`
+        // integration test. Bitwise-identical to the fresh-buffer path.
+        let fabric = ctx.fabric;
+        let codec = ctx.compress;
+        let mut avg = ctx.scratch.f32s.take();
+        avg.extend_from_slice(g);
         // The collective runs over this worker's communication scope: the
         // whole run, or one hierarchy group (group-local gradient
         // averaging).
-        let group = ctx.scope_members();
+        let mut group = ctx.scratch.idx.take();
+        ctx.scope_members_into(&mut group);
         // Compress the gradient contribution (EF-SGD style: the residual
         // at the GRAD site re-injects whatever this step's codec
         // dropped). A single worker sends nothing, so nothing is lossily
         // transcoded either — no accuracy cost for bytes never on the
         // wire.
         if group.len() > 1 {
-            compress_payload(
-                ctx.compress, &mut state.comp, &mut avg, site::GRAD,
+            compress_payload_pooled(
+                codec, &mut state.comp, &mut avg, site::GRAD,
+                &mut ctx.scratch,
             );
         }
         // coll_id = k keys the chaos delay stream per step.
-        ctx.clock = ring_allreduce_mean_group_c(
-            ctx.fabric, ctx.worker, &group, &mut avg, ctx.clock, k,
-            ctx.compress.filter(|c| !c.is_identity()),
+        ctx.clock = ring_allreduce_mean_group_p(
+            fabric, ctx.worker, &group, &mut avg, ctx.clock, k,
+            codec.filter(|c| !c.is_identity()),
+            &mut ctx.scratch.f32s,
         );
         apply_inner(ctx, &self.inner, state, &avg, gamma)?;
+        ctx.scratch.f32s.put(avg);
+        ctx.scratch.idx.put(group);
         if !state.z.is_empty() {
             state.z.copy_from_slice(&state.x);
         }

@@ -135,7 +135,8 @@ mod tests {
             let mut st = WorkerState::new(&[w as f32; 4], algo.inner());
             let mut ctx = Ctx { worker: w, m, fabric: &fabric,
                                 kernels: &kernels, compress: None,
-                                scope: None, clock: 0.0 };
+                                scope: None, clock: 0.0,
+                                scratch: crate::util::Scratch::new() };
             for k in 0..40 {
                 algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
             }

@@ -88,7 +88,8 @@ mod tests {
         let kernels = Kernels::Native;
         let mut ctx = Ctx { worker: 0, m: 2, fabric: &fabric,
                             kernels: &kernels, compress: None,
-                            scope: None, clock: 0.0 };
+                            scope: None, clock: 0.0,
+                            scratch: crate::util::Scratch::new() };
         let mut st = WorkerState::new(&[1.0; 8], algo.inner());
         algo.step(&mut ctx, &mut st, &[0.1; 8], 0.1, 0).unwrap();
         assert_eq!(fabric.msgs_sent(), 0);

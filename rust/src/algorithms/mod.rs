@@ -31,6 +31,7 @@ pub use sgp::Sgp;
 use crate::compress::{CompressState, Compressor};
 use crate::net::{Fabric, GossipMsg};
 use crate::optim::kernels::{InnerOpt, Kernels};
+use crate::util::Scratch;
 use anyhow::Result;
 
 /// Per-worker mutable optimizer state. Flat `f32[d]` vectors matching the
@@ -158,6 +159,14 @@ pub struct Ctx<'a> {
     /// Simulated wall-clock for this worker (advanced by comm waits; the
     /// trainer adds compute time).
     pub clock: f64,
+    /// Per-worker scratch-buffer pools for the allocation-free hot path
+    /// (see [`crate::util::pool`]): codec wire data, collective send
+    /// chunks, EF decode temporaries. Owned by the Ctx so every per-step
+    /// allocation site reaches steady state after one warmup step —
+    /// pinned by the `alloc_gate` integration test. Algorithms must
+    /// return what they take within the same step (never hold a pooled
+    /// buffer across a boundary).
+    pub scratch: Scratch,
 }
 
 impl<'a> Ctx<'a> {
@@ -190,6 +199,16 @@ impl<'a> Ctx<'a> {
         match self.scope {
             None => (0..self.m).collect(),
             Some(s) => s.to_vec(),
+        }
+    }
+
+    /// [`Ctx::scope_members`] into a recycled buffer (cleared first) —
+    /// the allocation-free variant for the step-loop hot path.
+    pub fn scope_members_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        match self.scope {
+            None => out.extend(0..self.m),
+            Some(s) => out.extend_from_slice(s),
         }
     }
 }
@@ -263,6 +282,24 @@ pub(crate) fn compress_payload(
     }
 }
 
+/// [`compress_payload`] through the codec's pooled transcode: scratch and
+/// wire buffers come from (and return to) `sc`, so a warm pool makes the
+/// round-trip allocation-free. Bitwise-identical to the fresh path.
+pub(crate) fn compress_payload_pooled(
+    compress: Option<&dyn Compressor>,
+    comp: &mut CompressState,
+    payload: &mut [f32],
+    site: u64,
+    sc: &mut Scratch,
+) -> u64 {
+    match compress {
+        Some(c) if !c.is_identity() => {
+            c.transcode_pooled(payload, comp, site, sc)
+        }
+        _ => payload.len() as u64 * 4,
+    }
+}
+
 /// Run the inner optimizer (nesterov/adam) on (x, h, v) in place.
 pub(crate) fn apply_inner(
     ctx: &mut Ctx,
@@ -307,6 +344,7 @@ pub mod testutil {
                 compress: None,
                 scope: None,
                 clock: 0.0,
+                scratch: Scratch::new(),
             };
             let target = vec![(w + 1) as f32; d];
             for k in 0..steps {

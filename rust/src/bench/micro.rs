@@ -12,11 +12,14 @@
 
 use super::Env;
 use crate::benchkit::{Bench, Stats};
-use crate::compress::{site, CompressState, Compressor, Demo};
+use crate::compress::{site, CompressRegistry, CompressState, Compressor,
+                      Demo};
 use crate::data::task_for;
 use crate::exec::run_workers;
 use crate::jsonx::Json;
-use crate::net::{ring_allreduce_mean, CostModel, Fabric};
+use crate::net::{ring_allreduce_mean, ring_allreduce_mean_group_p,
+                 CostModel, Fabric};
+use crate::util::{Pool, Scratch};
 use crate::optim::kernels::{dct2_chunked, dct3_chunked, DctPlans, InnerOpt,
                             Kernels};
 use crate::runtime::engine::Arg;
@@ -110,6 +113,52 @@ pub fn run(env: &Env) -> Result<Bench> {
         b.run("demo-transcode/d65536/k0.1c64", || {
             demo.transcode(&mut y, &mut st, site::OUTER);
         });
+        // Pooled counterpart: the Scratch persists across iterations, so
+        // after the first round the transcode is allocation-free.
+        let mut st = CompressState::new(1, 0);
+        let mut y = x.clone();
+        let mut sc = Scratch::new();
+        b.run("demo-transcode-pooled/d65536/k0.1c64", || {
+            demo.transcode_pooled(&mut y, &mut st, site::OUTER, &mut sc);
+        });
+    }
+
+    // ---- pooled vs fresh hot paths (ROADMAP 5(b): buffer pools) ----
+    {
+        let d = 65536usize;
+        let reg = CompressRegistry::builtin();
+        let ef = reg.build(&reg.parse("ef:topk:0.1")?)?;
+        let mut rng = crate::rng::Xoshiro256::seed_from(5);
+        let mut x = vec![0.0f32; d];
+        rng.fill_normal(&mut x, 1.0);
+        let mut st = CompressState::new(1, 0);
+        let mut y = x.clone();
+        b.run("transcode-fresh/ef-topk0.1/d65536", || {
+            ef.transcode(&mut y, &mut st, site::OUTER);
+        });
+        let mut st = CompressState::new(1, 0);
+        let mut y = x.clone();
+        let mut sc = Scratch::new();
+        b.run("transcode-pooled/ef-topk0.1/d65536", || {
+            ef.transcode_pooled(&mut y, &mut st, site::OUTER, &mut sc);
+        });
+        // Pooled ring allreduce: one pool per worker persists across
+        // iterations, so steady-state sends reuse recycled chunk buffers
+        // instead of cloning each slice.
+        let m = 4usize;
+        let fabric = Fabric::new(m, CostModel::free());
+        let pools: Vec<std::sync::Mutex<Pool<f32>>> =
+            (0..m).map(|_| std::sync::Mutex::new(Pool::new())).collect();
+        let group: Vec<usize> = (0..m).collect();
+        b.run(&format!("ring-allreduce-pooled/m{m}/d{d}"), || {
+            run_workers(m, |w| {
+                let mut x = vec![w as f32; d];
+                let mut pool = pools[w].lock().unwrap();
+                ring_allreduce_mean_group_p(
+                    &fabric, w, &group, &mut x, 0.0, 0, None, &mut pool,
+                );
+            });
+        });
     }
 
     // ---- raw PJRT execute overhead (tiny graph: the axpy kernel) ----
@@ -132,16 +181,17 @@ pub fn run(env: &Env) -> Result<Bench> {
 
     b.report();
     b.write_jsonl(&env.out_path("micro.jsonl"))?;
-    // Checked-in perf trajectory: schema `bench-micro/v1`, validated in
-    // CI against results/BENCH_micro.schema.json (`make bench`). The
-    // previous run (if any) is loaded *before* the overwrite so it can
-    // serve as the regression baseline below.
+    // Checked-in perf trajectory: schema `bench-micro/v2` (v2 added the
+    // pooled-vs-fresh rows), validated in CI against
+    // results/BENCH_micro.schema.json (`make bench`). The previous run
+    // (if any) is loaded *before* the overwrite so it can serve as the
+    // regression baseline below.
     let path = env.out_path("BENCH_micro.json");
     let baseline = std::fs::read_to_string(&path)
         .ok()
         .and_then(|s| crate::jsonx::parse(&s).ok());
     let bench = Json::obj(vec![
-        ("schema", Json::str("bench-micro/v1")),
+        ("schema", Json::str("bench-micro/v2")),
         ("scale", Json::str(env.scale.name())),
         (
             "entries",
@@ -226,7 +276,7 @@ mod tests {
 
     fn doc(scale: &str, entries: &[(&str, f64)]) -> Json {
         Json::obj(vec![
-            ("schema", Json::str("bench-micro/v1")),
+            ("schema", Json::str("bench-micro/v2")),
             ("scale", Json::str(scale)),
             (
                 "entries",

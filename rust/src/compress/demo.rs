@@ -24,9 +24,11 @@
 //! chunks, capped at the raw `4·d`.
 
 use super::{
-    k_of, site, sparse_pack, sparse_unpack, CompressState, Compressor, Wire,
+    decode_len_check, k_of, site, sparse_pack_into, sparse_unpack,
+    CompressState, Compressor, Wire,
 };
 use crate::optim::kernels::{dct2_chunked, dct3_chunked, DctPlans};
+use crate::util::Scratch;
 
 /// `demo[:k,chunk]` — per-chunk DCT top-k with a persistent frequency
 /// residual. `frac` is the kept fraction per chunk (`ceil(frac·n)`
@@ -58,25 +60,28 @@ impl Demo {
         let tail = d % self.chunk;
         full * k_of(self.frac, self.chunk) + k_of(self.frac, tail)
     }
-}
 
-impl Compressor for Demo {
-    fn key(&self) -> String {
-        "demo".into()
-    }
-
-    fn params(&self) -> String {
-        format!("{},{}", self.frac, self.chunk)
-    }
-
-    fn encode(&self, x: &[f32], st: &mut CompressState, s: u64) -> Wire {
+    /// Shared body of the fresh and pooled encodes: with `Some(sc)` the
+    /// spectrum scratch, the per-chunk order buffer, the kept-index list
+    /// and the wire data all come from (and return to) the pools;
+    /// bitwise-identical either way.
+    fn encode_impl(
+        &self,
+        x: &[f32],
+        st: &mut CompressState,
+        s: u64,
+        mut sc: Option<&mut Scratch>,
+    ) -> Wire {
         let d = x.len();
         if d == 0 {
             return Wire { data: Vec::new(), d: 0, wire_bytes: 0 };
         }
         // Forward transform, then fold in the carried frequency residual
         // (the codec's analogue of `ef`'s `x + r`).
-        let mut f = vec![0.0f32; d];
+        let mut f = match sc.as_deref_mut() {
+            Some(sc) => sc.f32s.take_filled(d),
+            None => vec![0.0f32; d],
+        };
         dct2_chunked(&self.plans, x, &mut f, self.chunk);
         {
             let r = st.residual(s, d);
@@ -86,12 +91,18 @@ impl Compressor for Demo {
         }
         // Per-chunk top-|coefficient| selection with the same total
         // order as `topk` (index tie-break), kept as global indices.
-        let mut kept: Vec<usize> = Vec::with_capacity(self.total_k(d));
+        let (mut kept, mut order) = match sc.as_deref_mut() {
+            Some(sc) => (sc.idx.take(), sc.idx.take()),
+            None => (Vec::new(), Vec::new()),
+        };
+        kept.clear();
+        kept.reserve(self.total_k(d));
         let mut lo = 0;
         while lo < d {
             let n = (d - lo).min(self.chunk);
             let k = k_of(self.frac, n);
-            let mut order: Vec<usize> = (lo..lo + n).collect();
+            order.clear();
+            order.extend(lo..lo + n);
             if k < n {
                 order.select_nth_unstable_by(k - 1, |&a, &b| {
                     f[b].abs()
@@ -100,7 +111,7 @@ impl Compressor for Demo {
                 });
                 order.truncate(k);
             }
-            kept.extend(order);
+            kept.extend_from_slice(&order);
             lo += n;
         }
         kept.sort_unstable();
@@ -114,20 +125,66 @@ impl Compressor for Demo {
                 r[i] = 0.0;
             }
         }
-        sparse_pack(&kept, &f, self.wire_bytes(d))
+        let data = match sc.as_deref_mut() {
+            Some(sc) => sc.f32s.take(),
+            None => Vec::new(),
+        };
+        let wire = sparse_pack_into(&kept, &f, self.wire_bytes(d), data);
+        if let Some(sc) = sc {
+            sc.f32s.put(f);
+            sc.idx.put(kept);
+            sc.idx.put(order);
+        }
+        wire
+    }
+}
+
+impl Compressor for Demo {
+    fn key(&self) -> String {
+        "demo".into()
+    }
+
+    fn params(&self) -> String {
+        format!("{},{}", self.frac, self.chunk)
+    }
+
+    fn encode(&self, x: &[f32], st: &mut CompressState, s: u64) -> Wire {
+        self.encode_impl(x, st, s, None)
+    }
+
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        st: &mut CompressState,
+        s: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        self.encode_impl(x, st, s, Some(sc))
     }
 
     fn decode(&self, wire: &Wire, out: &mut [f32]) {
         let d = wire.d;
-        debug_assert_eq!(out.len(), d);
+        decode_len_check("demo", wire, out.len(), 2 * self.total_k(d));
         if d == 0 {
             return;
         }
         // Scatter kept coefficients into the frequency scratch, then
         // inverse-transform chunk by chunk.
         let mut f = vec![0.0f32; d];
-        sparse_unpack(wire, &mut f, 1.0);
+        sparse_unpack("demo", wire, &mut f, 1.0);
         dct3_chunked(&self.plans, &f, out, self.chunk);
+    }
+
+    fn decode_pooled(&self, wire: &Wire, out: &mut [f32], sc: &mut Scratch) {
+        let d = wire.d;
+        decode_len_check("demo", wire, out.len(), 2 * self.total_k(d));
+        if d == 0 {
+            return;
+        }
+        let mut f = sc.f32s.take_filled(d);
+        sparse_unpack("demo", wire, &mut f, 1.0);
+        dct3_chunked(&self.plans, &f, out, self.chunk);
+        sc.f32s.put(f);
     }
 
     fn wire_bytes(&self, d: usize) -> u64 {

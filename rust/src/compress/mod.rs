@@ -48,6 +48,7 @@
 //!   top double-counts dropped mass.
 
 use crate::rng::{stream, Xoshiro256};
+use crate::util::Scratch;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -245,6 +246,72 @@ pub trait Compressor: Send + Sync {
         self.decode(&wire, x);
         wire.wire_bytes
     }
+
+    /// Buffer-reusing variant of [`Compressor::encode`]: internal scratch
+    /// and the returned [`Wire::data`] vec are drawn from `sc` where the
+    /// codec supports it, so a warm pool makes the encode allocation-free.
+    /// Bitwise-identical to `encode` — pools change where bytes live,
+    /// never their values (pinned in tests). The default ignores the pool.
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        st: &mut CompressState,
+        site: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        let _ = sc;
+        self.encode(x, st, site)
+    }
+
+    /// Buffer-reusing variant of [`Compressor::decode`], for codecs that
+    /// need an intermediate buffer (demo's spectrum). Bitwise-identical
+    /// to `decode`; the default ignores the pool.
+    fn decode_pooled(&self, wire: &Wire, out: &mut [f32], sc: &mut Scratch) {
+        let _ = sc;
+        self.decode(wire, out);
+    }
+
+    /// Buffer-reusing [`Compressor::transcode`]: encode and decode draw
+    /// from `sc`, and the wire's data buffer is recycled into the pool
+    /// after decode — a warm pool makes the whole round-trip
+    /// allocation-free (pinned by the `alloc_gate` integration test).
+    fn transcode_pooled(
+        &self,
+        x: &mut [f32],
+        st: &mut CompressState,
+        s: u64,
+        sc: &mut Scratch,
+    ) -> u64 {
+        if self.is_identity() {
+            return x.len() as u64 * 4;
+        }
+        let wire = self.encode_pooled(x, st, s, sc);
+        self.decode_pooled(&wire, x, sc);
+        let bytes = wire.wire_bytes;
+        sc.f32s.put(wire.data);
+        bytes
+    }
+}
+
+/// Named hard error for decode length mismatches (satellite contract:
+/// a wire that does not match `out` must fail with the codec key and the
+/// offending lengths, never an opaque slice-index panic).
+#[track_caller]
+fn decode_len_check(
+    codec: &str,
+    wire: &Wire,
+    out_len: usize,
+    want_slots: usize,
+) {
+    assert!(
+        wire.d == out_len && wire.data.len() == want_slots,
+        "[compress] {codec} decode length mismatch: wire.d={} vs \
+         out.len()={}; wire.data carries {} f32 slot(s), codec expects {}",
+        wire.d,
+        out_len,
+        wire.data.len(),
+        want_slots,
+    );
 }
 
 /// Human-readable "key" or "key(params)" fragment for display names.
@@ -372,7 +439,24 @@ impl Compressor for NoneCompressor {
         }
     }
 
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        _st: &mut CompressState,
+        _s: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        let mut data = sc.f32s.take();
+        data.extend_from_slice(x);
+        Wire {
+            data,
+            d: x.len(),
+            wire_bytes: x.len() as u64 * 4,
+        }
+    }
+
     fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        decode_len_check("none", wire, out.len(), wire.d);
         out.copy_from_slice(&wire.data);
     }
 
@@ -403,23 +487,42 @@ impl Compressor for HalfQuant {
     }
 
     fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
-        let data = x
-            .iter()
-            .map(|&v| if self.bf { round_bf16(v) } else { round_f16(v) })
-            .collect();
-        Wire {
-            data,
-            d: x.len(),
-            wire_bytes: self.wire_bytes(x.len()),
-        }
+        self.encode_into(x, Vec::new())
+    }
+
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        _st: &mut CompressState,
+        _s: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        self.encode_into(x, sc.f32s.take())
     }
 
     fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        decode_len_check(&self.key(), wire, out.len(), wire.d);
         out.copy_from_slice(&wire.data);
     }
 
     fn wire_bytes(&self, d: usize) -> u64 {
         d as u64 * 2
+    }
+}
+
+impl HalfQuant {
+    fn encode_into(&self, x: &[f32], mut data: Vec<f32>) -> Wire {
+        data.clear();
+        data.reserve(x.len());
+        data.extend(
+            x.iter()
+                .map(|&v| if self.bf { round_bf16(v) } else { round_f16(v) }),
+        );
+        Wire {
+            data,
+            d: x.len(),
+            wire_bytes: self.wire_bytes(x.len()),
+        }
     }
 }
 
@@ -439,7 +542,19 @@ fn sparse_wire_bytes(k: usize, d: usize) -> u64 {
 /// Pack kept (index, value) pairs into a [`Wire`]: first `k` slots carry
 /// the index bit patterns, the next `k` the values.
 fn sparse_pack(idx: &[usize], x: &[f32], wire_bytes: u64) -> Wire {
-    let mut data = Vec::with_capacity(idx.len() * 2);
+    sparse_pack_into(idx, x, wire_bytes, Vec::new())
+}
+
+/// [`sparse_pack`] writing into a recycled buffer (cleared first), so a
+/// warm pool makes the pack allocation-free.
+fn sparse_pack_into(
+    idx: &[usize],
+    x: &[f32],
+    wire_bytes: u64,
+    mut data: Vec<f32>,
+) -> Wire {
+    data.clear();
+    data.reserve(idx.len() * 2);
     data.extend(idx.iter().map(|&i| f32::from_bits(i as u32)));
     data.extend(idx.iter().map(|&i| x[i]));
     Wire {
@@ -449,12 +564,25 @@ fn sparse_pack(idx: &[usize], x: &[f32], wire_bytes: u64) -> Wire {
     }
 }
 
-fn sparse_unpack(wire: &Wire, out: &mut [f32], scale: f32) {
-    out.fill(0.0);
+fn sparse_unpack(codec: &str, wire: &Wire, out: &mut [f32], scale: f32) {
+    decode_len_check(codec, wire, out.len(), wire.data.len());
     let k = wire.data.len() / 2;
+    assert!(
+        wire.data.len() % 2 == 0 && k <= wire.d,
+        "[compress] {codec} decode length mismatch: {} wire slot(s) is \
+         not an (index, value) pairing for d={}",
+        wire.data.len(),
+        wire.d,
+    );
+    out.fill(0.0);
     for j in 0..k {
         let i = wire.data[j].to_bits() as usize;
-        debug_assert!(i < out.len(), "sparse index out of range");
+        assert!(
+            i < out.len(),
+            "[compress] {codec} decode length mismatch: sparse index {i} \
+             out of range for out.len()={}",
+            out.len(),
+        );
         out[i] = wire.data[k + j] * scale;
     }
 }
@@ -477,9 +605,46 @@ impl Compressor for TopK {
     }
 
     fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
+        let mut order = Vec::new();
+        self.select(x, &mut order);
+        sparse_pack(&order, x, self.wire_bytes(x.len()))
+    }
+
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        _st: &mut CompressState,
+        _s: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        let mut order = sc.idx.take();
+        self.select(x, &mut order);
+        let wire =
+            sparse_pack_into(&order, x, self.wire_bytes(x.len()),
+                             sc.f32s.take());
+        sc.idx.put(order);
+        wire
+    }
+
+    fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        decode_len_check("topk", wire, out.len(),
+                         2 * k_of(self.frac, wire.d));
+        sparse_unpack("topk", wire, out, 1.0);
+    }
+
+    fn wire_bytes(&self, d: usize) -> u64 {
+        sparse_wire_bytes(k_of(self.frac, d), d)
+    }
+}
+
+impl TopK {
+    /// The kept index set (the `k` largest-|x| coordinates), ascending,
+    /// written into `order` — shared by the fresh and pooled encodes.
+    fn select(&self, x: &[f32], order: &mut Vec<usize>) {
         let d = x.len();
         let k = k_of(self.frac, d);
-        let mut order: Vec<usize> = (0..d).collect();
+        order.clear();
+        order.extend(0..d);
         // O(d) selection of the k largest-|x| indices (total order with
         // the index tie-break, so the kept set is deterministic), then
         // sort just those k for the wire layout.
@@ -492,15 +657,6 @@ impl Compressor for TopK {
             order.truncate(k);
         }
         order.sort_unstable();
-        sparse_pack(&order, x, self.wire_bytes(d))
-    }
-
-    fn decode(&self, wire: &Wire, out: &mut [f32]) {
-        sparse_unpack(wire, out, 1.0);
-    }
-
-    fn wire_bytes(&self, d: usize) -> u64 {
-        sparse_wire_bytes(k_of(self.frac, d), d)
     }
 }
 
@@ -522,30 +678,62 @@ impl Compressor for RandK {
     }
 
     fn encode(&self, x: &[f32], st: &mut CompressState, s: u64) -> Wire {
-        let d = x.len();
-        let k = k_of(self.frac, d);
-        let mut rng = st.next_stream(s);
-        // Partial Fisher-Yates: k distinct indices.
-        let mut pool: Vec<usize> = (0..d).collect();
-        for j in 0..k {
-            let pick = j + rng.below((d - j) as u64) as usize;
-            pool.swap(j, pick);
-        }
-        let mut kept = pool[..k].to_vec();
-        kept.sort_unstable();
+        let mut kept = Vec::new();
+        self.draw(x.len(), st, s, &mut kept);
         // The d/k rescale is applied at decode so the wire carries the raw
         // values (exact) and EF residuals see the decoded estimate.
-        sparse_pack(&kept, x, self.wire_bytes(d))
+        sparse_pack(&kept, x, self.wire_bytes(x.len()))
+    }
+
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        st: &mut CompressState,
+        s: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        let mut kept = sc.idx.take();
+        self.draw(x.len(), st, s, &mut kept);
+        let wire = sparse_pack_into(&kept, x, self.wire_bytes(x.len()),
+                                    sc.f32s.take());
+        sc.idx.put(kept);
+        wire
     }
 
     fn decode(&self, wire: &Wire, out: &mut [f32]) {
+        decode_len_check("randk", wire, out.len(),
+                         2 * k_of(self.frac, wire.d));
         let k = wire.data.len() / 2;
         let scale = if k == 0 { 0.0 } else { wire.d as f32 / k as f32 };
-        sparse_unpack(wire, out, scale);
+        sparse_unpack("randk", wire, out, scale);
     }
 
     fn wire_bytes(&self, d: usize) -> u64 {
         sparse_wire_bytes(k_of(self.frac, d), d)
+    }
+}
+
+impl RandK {
+    /// Draw the kept index set (k distinct, ascending) into `pool` via a
+    /// partial Fisher-Yates over the site's deterministic stream — shared
+    /// by the fresh and pooled encodes.
+    fn draw(
+        &self,
+        d: usize,
+        st: &mut CompressState,
+        s: u64,
+        pool: &mut Vec<usize>,
+    ) {
+        let k = k_of(self.frac, d);
+        let mut rng = st.next_stream(s);
+        pool.clear();
+        pool.extend(0..d);
+        for j in 0..k {
+            let pick = j + rng.below((d - j) as u64) as usize;
+            pool.swap(j, pick);
+        }
+        pool.truncate(k);
+        pool.sort_unstable();
     }
 }
 
@@ -562,22 +750,33 @@ impl SignSgd {
     fn n_chunks(&self, d: usize) -> usize {
         d.div_ceil(self.chunk)
     }
-}
 
-impl Compressor for SignSgd {
-    fn key(&self) -> String {
-        "signsgd".into()
+    /// `true` when the sparse layout (per-chunk scales + packed sign
+    /// words) would not beat raw f32, i.e. [`Compressor::wire_bytes`]
+    /// clamps to `4·d` (pathologically small `chunk`). In that regime the
+    /// wire carries `x` verbatim — `d` slots matching the charged bytes —
+    /// so layout and accounting agree. Deterministic in `(chunk, d)`;
+    /// encode and decode need no wire flag to agree.
+    fn dense_fallback(&self, d: usize) -> bool {
+        d > 0
+            && self.n_chunks(d) as u64 * 4 + d.div_ceil(8) as u64
+                >= d as u64 * 4
     }
 
-    fn params(&self) -> String {
-        self.chunk.to_string()
-    }
-
-    fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
+    fn encode_into(&self, x: &[f32], mut data: Vec<f32>) -> Wire {
         let d = x.len();
+        data.clear();
+        if self.dense_fallback(d) {
+            data.extend_from_slice(x);
+            return Wire {
+                data,
+                d,
+                wire_bytes: self.wire_bytes(d),
+            };
+        }
         let n_chunks = self.n_chunks(d);
         let n_words = d.div_ceil(32);
-        let mut data = Vec::with_capacity(n_chunks + n_words);
+        data.reserve(n_chunks + n_words);
         for c in 0..n_chunks {
             let lo = c * self.chunk;
             let hi = (lo + self.chunk).min(d);
@@ -604,10 +803,41 @@ impl Compressor for SignSgd {
             wire_bytes: self.wire_bytes(d),
         }
     }
+}
+
+impl Compressor for SignSgd {
+    fn key(&self) -> String {
+        "signsgd".into()
+    }
+
+    fn params(&self) -> String {
+        self.chunk.to_string()
+    }
+
+    fn encode(&self, x: &[f32], _st: &mut CompressState, _s: u64) -> Wire {
+        self.encode_into(x, Vec::new())
+    }
+
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        _st: &mut CompressState,
+        _s: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        self.encode_into(x, sc.f32s.take())
+    }
 
     fn decode(&self, wire: &Wire, out: &mut [f32]) {
         let d = wire.d;
+        if self.dense_fallback(d) {
+            decode_len_check("signsgd", wire, out.len(), d);
+            out.copy_from_slice(&wire.data);
+            return;
+        }
         let n_chunks = self.n_chunks(d);
+        decode_len_check("signsgd", wire, out.len(),
+                         n_chunks + d.div_ceil(32));
         for (i, o) in out.iter_mut().enumerate() {
             let scale = wire.data[i / self.chunk];
             let word = wire.data[n_chunks + i / 32].to_bits();
@@ -635,6 +865,51 @@ pub struct ErrorFeedback {
     pub inner: Arc<dyn Compressor>,
 }
 
+impl ErrorFeedback {
+    /// One residual-map walk per message: take the residual buffer out of
+    /// the map (leaving an empty vec on the existing key), fold `x` in,
+    /// subtract the decode, and re-insert — the old path walked the map
+    /// twice and allocated `e`/`dec` fresh every call. Bitwise-identical:
+    /// `r + x` equals the old `x + r` (IEEE f32 addition commutes) and
+    /// the in-place `e -= dec` computes the same `(x + r) - dec`
+    /// (equivalence-tested against a reference of the old path).
+    fn encode_impl(
+        &self,
+        x: &[f32],
+        st: &mut CompressState,
+        s: u64,
+        sc: Option<&mut Scratch>,
+    ) -> Wire {
+        let d = x.len();
+        let mut e = std::mem::take(st.residual(s, d));
+        for (ev, xv) in e.iter_mut().zip(x) {
+            *ev += *xv;
+        }
+        let wire;
+        match sc {
+            Some(sc) => {
+                wire = self.inner.encode_pooled(&e, st, s, sc);
+                let mut dec = sc.f32s.take_filled(d);
+                self.inner.decode_pooled(&wire, &mut dec, sc);
+                for (ev, dv) in e.iter_mut().zip(&dec) {
+                    *ev -= *dv;
+                }
+                sc.f32s.put(dec);
+            }
+            None => {
+                wire = self.inner.encode(&e, st, s);
+                let mut dec = vec![0.0f32; d];
+                self.inner.decode(&wire, &mut dec);
+                for (ev, dv) in e.iter_mut().zip(&dec) {
+                    *ev -= *dv;
+                }
+            }
+        }
+        st.set_residual(s, e);
+        wire
+    }
+}
+
 impl Compressor for ErrorFeedback {
     fn key(&self) -> String {
         "ef".into()
@@ -645,26 +920,25 @@ impl Compressor for ErrorFeedback {
     }
 
     fn encode(&self, x: &[f32], st: &mut CompressState, s: u64) -> Wire {
-        let d = x.len();
-        let mut e = x.to_vec();
-        {
-            let r = st.residual(s, d);
-            for (ev, rv) in e.iter_mut().zip(r.iter()) {
-                *ev += *rv;
-            }
-        }
-        let wire = self.inner.encode(&e, st, s);
-        let mut dec = vec![0.0f32; d];
-        self.inner.decode(&wire, &mut dec);
-        let r = st.residual(s, d);
-        for ((rv, ev), dv) in r.iter_mut().zip(&e).zip(&dec) {
-            *rv = ev - dv;
-        }
-        wire
+        self.encode_impl(x, st, s, None)
+    }
+
+    fn encode_pooled(
+        &self,
+        x: &[f32],
+        st: &mut CompressState,
+        s: u64,
+        sc: &mut Scratch,
+    ) -> Wire {
+        self.encode_impl(x, st, s, Some(sc))
     }
 
     fn decode(&self, wire: &Wire, out: &mut [f32]) {
         self.inner.decode(wire, out);
+    }
+
+    fn decode_pooled(&self, wire: &Wire, out: &mut [f32], sc: &mut Scratch) {
+        self.inner.decode_pooled(wire, out, sc);
     }
 
     fn wire_bytes(&self, d: usize) -> u64 {
@@ -1425,6 +1699,169 @@ mod tests {
                     c.wire_bytes(d),
                     d * 4
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn ef_restructured_path_matches_old_reference() {
+        // Reference implementation of the pre-refactor EF encode: two
+        // residual-map walks plus fresh `e`/`dec` buffers. The
+        // restructured single-walk path must be bitwise-identical to it
+        // (wire, decoded values via the wire, and the stored residual).
+        fn reference(
+            inner: &dyn Compressor,
+            x: &[f32],
+            st: &mut CompressState,
+            s: u64,
+        ) -> Wire {
+            let d = x.len();
+            let r = st.residual(s, d).clone();
+            let mut e = x.to_vec();
+            for (ev, rv) in e.iter_mut().zip(&r) {
+                *ev += *rv;
+            }
+            let wire = inner.encode(&e, st, s);
+            let mut dec = vec![0.0f32; d];
+            inner.decode(&wire, &mut dec);
+            let newr: Vec<f32> =
+                e.iter().zip(&dec).map(|(a, b)| a - b).collect();
+            st.set_residual(s, newr);
+            wire
+        }
+        let inners = [
+            Arc::new(TopK { frac: 0.5 }) as Arc<dyn Compressor>,
+            Arc::new(SignSgd { chunk: 4 }) as Arc<dyn Compressor>,
+            Arc::new(RandK { frac: 0.5 }) as Arc<dyn Compressor>,
+        ];
+        for inner in inners {
+            let ef = ErrorFeedback { inner: inner.clone() };
+            let mut sa = CompressState::new(9, 1);
+            let mut sb = CompressState::new(9, 1);
+            for round in 0..4 {
+                let x: Vec<f32> = demo(21)
+                    .iter()
+                    .map(|v| v * (round as f32 + 1.0))
+                    .collect();
+                let wa = ef.encode(&x, &mut sa, site::OUTER);
+                let wb = reference(inner.as_ref(), &x, &mut sb,
+                                   site::OUTER);
+                assert_eq!(wa.d, wb.d);
+                assert_eq!(wa.wire_bytes, wb.wire_bytes);
+                assert_eq!(wa.data.len(), wb.data.len());
+                for (a, b) in wa.data.iter().zip(&wb.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{} wire, round {round}", ef.params());
+                }
+                let ra = sa.residual_opt(site::OUTER).unwrap();
+                let rb = sb.residual_opt(site::OUTER).unwrap();
+                for (a, b) in ra.iter().zip(rb) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{} residual, round {round}", ef.params());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signsgd_dense_fallback_layout_matches_accounting() {
+        // Clamp regime: when per-chunk scales + sign words cannot beat
+        // raw f32 (chunk == 1, or d == 1), wire_bytes clamps to 4·d.
+        // The wire must then actually carry d slots — layout and
+        // accounting agree — and the round-trip is exact (the charged
+        // bytes buy a verbatim copy, including -0.0).
+        for (chunk, d) in [(1usize, 5usize), (1, 32), (2, 1), (64, 1)] {
+            let c = SignSgd { chunk };
+            assert!(c.dense_fallback(d), "chunk={chunk} d={d}");
+            assert_eq!(c.wire_bytes(d), d as u64 * 4);
+            let mut x = demo(d);
+            x[0] = -0.0;
+            let wire = c.encode(&x, &mut st(), site::GRAD);
+            assert_eq!(wire.data.len(), d,
+                       "dense wire carries d slots (chunk={chunk} d={d})");
+            assert_eq!(wire.wire_bytes, d as u64 * 4);
+            let mut y = vec![0.0f32; d];
+            c.decode(&wire, &mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "chunk={chunk} d={d}");
+            }
+        }
+        // Outside the clamp the 1-bit layout is still in force.
+        let c = SignSgd { chunk: 4 };
+        assert!(!c.dense_fallback(8));
+        assert_eq!(c.encode(&demo(8), &mut st(), site::GRAD).data.len(),
+                   2 + 1); // 2 chunk scales + 1 sign word
+    }
+
+    #[test]
+    #[should_panic(expected = "decode length mismatch")]
+    fn decode_rejects_wrong_out_length() {
+        let c = NoneCompressor;
+        let wire = c.encode(&demo(8), &mut st(), site::GRAD);
+        let mut out = vec![0.0f32; 7];
+        c.decode(&wire, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode length mismatch")]
+    fn topk_decode_rejects_truncated_wire() {
+        let c = TopK { frac: 0.5 };
+        let mut wire = c.encode(&demo(8), &mut st(), site::GRAD);
+        wire.data.pop();
+        let mut out = vec![0.0f32; 8];
+        c.decode(&wire, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode length mismatch")]
+    fn signsgd_decode_rejects_truncated_wire() {
+        let c = SignSgd { chunk: 4 };
+        let mut wire = c.encode(&demo(8), &mut st(), site::GRAD);
+        wire.data.pop();
+        let mut out = vec![0.0f32; 8];
+        c.decode(&wire, &mut out);
+    }
+
+    #[test]
+    fn pooled_transcode_bitwise_matches_fresh_for_all_builtins() {
+        let r = CompressRegistry::builtin();
+        for spec in ["none", "fp16", "bf16", "topk:0.25", "randk:0.25",
+                     "signsgd:8", "signsgd:1", "demo:0.25,16",
+                     "ef:topk:0.5", "ef:signsgd:8"] {
+            let c = r.build(&r.parse(spec).unwrap()).unwrap();
+            let mut sf = CompressState::new(11, 2);
+            let mut sp = CompressState::new(11, 2);
+            let mut sc = Scratch::new();
+            let x = demo(37);
+            for round in 0..3 {
+                let mut yf = x.clone();
+                let mut yp = x.clone();
+                let bf = c.transcode(&mut yf, &mut sf, site::OUTER);
+                let bp = c.transcode_pooled(&mut yp, &mut sp, site::OUTER,
+                                            &mut sc);
+                assert_eq!(bf, bp, "{spec} round {round}: wire bytes");
+                for (a, b) in yf.iter().zip(&yp) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{spec} round {round}");
+                }
+            }
+            // Residual state (EF / demo) stayed bitwise in lockstep too.
+            match (sf.residual_opt(site::OUTER),
+                   sp.residual_opt(site::OUTER)) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.len(), b.len(), "{spec}");
+                    for (u, v) in a.iter().zip(b) {
+                        assert_eq!(u.to_bits(), v.to_bits(),
+                                   "{spec} residual");
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("{spec}: residual presence diverged"),
+            }
+            // And the pool is genuinely being fed and drained.
+            if !c.is_identity() {
+                assert!(sc.f32s.idle() > 0, "{spec}: pool never recycled");
             }
         }
     }

@@ -14,19 +14,22 @@
 
 use super::fabric::Fabric;
 use crate::compress::Compressor;
+use crate::util::Pool;
 
 /// Chunk boundaries: split `len` into `m` nearly-equal ranges.
 pub fn chunk_ranges(len: usize, m: usize) -> Vec<(usize, usize)> {
+    (0..m).map(|i| chunk_range(len, m, i)).collect()
+}
+
+/// The `i`-th of `m` nearly-equal ranges over `len` — closed-form, so the
+/// ring's hot loop needs no per-call boundary vector. Identical to
+/// `chunk_ranges(len, m)[i]` (the first `len % m` chunks are one longer).
+#[inline]
+pub fn chunk_range(len: usize, m: usize, i: usize) -> (usize, usize) {
     let base = len / m;
     let rem = len % m;
-    let mut out = Vec::with_capacity(m);
-    let mut start = 0;
-    for i in 0..m {
-        let sz = base + usize::from(i < rem);
-        out.push((start, start + sz));
-        start += sz;
-    }
-    out
+    let start = i * base + i.min(rem);
+    (start, start + base + usize::from(i < rem))
 }
 
 /// In-place ring allreduce-mean of `x` across all `m` workers.
@@ -87,6 +90,29 @@ pub fn ring_allreduce_mean_group_c(
     coll_id: u64,
     codec: Option<&dyn Compressor>,
 ) -> f64 {
+    let mut pool = Pool::new();
+    ring_allreduce_mean_group_p(
+        fabric, worker, group, x, now, coll_id, codec, &mut pool,
+    )
+}
+
+/// [`ring_allreduce_mean_group_c`] drawing its per-round send buffers
+/// from `pool` and recycling every received chunk back into it, so a warm
+/// pool makes the whole collective allocation-free: each round takes one
+/// buffer out (shipped to the ring successor) and puts the one arriving
+/// from the predecessor back — the buffer population is constant, it just
+/// migrates around the ring. Bitwise-identical to the unpooled path.
+#[allow(clippy::too_many_arguments)]
+pub fn ring_allreduce_mean_group_p(
+    fabric: &Fabric,
+    worker: usize,
+    group: &[usize],
+    x: &mut [f32],
+    now: f64,
+    coll_id: u64,
+    codec: Option<&dyn Compressor>,
+    pool: &mut Pool<f32>,
+) -> f64 {
     let n = group.len();
     assert!(n > 0, "empty collective group");
     let rank = group
@@ -102,7 +128,6 @@ pub fn ring_allreduce_mean_group_c(
             None => len as u64 * 4,
         }
     };
-    let ranges = chunk_ranges(x.len(), n);
     let next = group[(rank + 1) % n];
     let tag_base = coll_id << 32;
 
@@ -111,37 +136,43 @@ pub fn ring_allreduce_mean_group_c(
     // (w - r) mod n, receive + accumulate chunk (w - r - 1) mod n.
     for r in 0..n - 1 {
         let send_idx = (rank + n - r) % n;
-        let (s, e) = ranges[send_idx];
+        let (s, e) = chunk_range(x.len(), n, send_idx);
+        let mut buf = pool.take();
+        buf.extend_from_slice(&x[s..e]);
         fabric.chunk_send_wire(
             worker,
             next,
             tag_base | r as u64,
-            x[s..e].to_vec(),
+            buf,
             wire_of(e - s),
         );
         let data = fabric.chunk_recv_tag(worker, tag_base | r as u64);
         let recv_idx = (rank + n - r - 1) % n;
-        let (s, e) = ranges[recv_idx];
+        let (s, e) = chunk_range(x.len(), n, recv_idx);
         debug_assert_eq!(data.len(), e - s);
         for (dst, src) in x[s..e].iter_mut().zip(&data) {
             *dst += src;
         }
+        pool.put(data);
     }
     // Allgather: circulate the reduced chunks.
     for r in 0..n - 1 {
         let send_idx = (rank + 1 + n - r) % n;
-        let (s, e) = ranges[send_idx];
+        let (s, e) = chunk_range(x.len(), n, send_idx);
+        let mut buf = pool.take();
+        buf.extend_from_slice(&x[s..e]);
         fabric.chunk_send_wire(
             worker,
             next,
             tag_base | (n + r) as u64,
-            x[s..e].to_vec(),
+            buf,
             wire_of(e - s),
         );
         let data = fabric.chunk_recv_tag(worker, tag_base | (n + r) as u64);
         let recv_idx = (rank + n - r) % n;
-        let (s, e) = ranges[recv_idx];
+        let (s, e) = chunk_range(x.len(), n, recv_idx);
         x[s..e].copy_from_slice(&data);
+        pool.put(data);
     }
     let inv_n = 1.0 / n as f32;
     for v in x.iter_mut() {
@@ -364,6 +395,59 @@ mod tests {
             x
         });
         assert!(outs.iter().all(|x| x.iter().all(|&v| v == 1.0)));
+    }
+
+    #[test]
+    fn chunk_range_matches_chunk_ranges() {
+        for (len, m) in [(10usize, 3usize), (7, 7), (5, 8), (0, 2),
+                         (100, 1), (65536, 4)] {
+            let r = chunk_ranges(len, m);
+            for i in 0..m {
+                assert_eq!(chunk_range(len, m, i), r[i], "len={len} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_allreduce_is_bitwise_identical_and_recycles() {
+        let m = 4;
+        let d = 37;
+        let group: Vec<usize> = (0..m).collect();
+        let fresh = {
+            let fabric = Fabric::new(m, CostModel::free());
+            run_workers(m, |w| {
+                let mut rng = Xoshiro256::seed_from(w as u64 + 1);
+                let mut x = vec![0.0f32; d];
+                rng.fill_normal(&mut x, 1.0);
+                for k in 0..3 {
+                    ring_allreduce_mean_group_c(
+                        &fabric, w, &group, &mut x, 0.0, k, None,
+                    );
+                }
+                x
+            })
+        };
+        let fabric = Fabric::new(m, CostModel::free());
+        let pooled = run_workers(m, |w| {
+            let mut rng = Xoshiro256::seed_from(w as u64 + 1);
+            let mut x = vec![0.0f32; d];
+            rng.fill_normal(&mut x, 1.0);
+            let mut pool = Pool::new();
+            for k in 0..3 {
+                ring_allreduce_mean_group_p(
+                    &fabric, w, &group, &mut x, 0.0, k, None, &mut pool,
+                );
+            }
+            // Steady state: each collective returns as many buffers as
+            // it takes, so the pool holds the recycled receives.
+            assert!(pool.idle() > 0, "w{w}: nothing recycled");
+            x
+        });
+        for (w, (a, b)) in fresh.iter().zip(&pooled).enumerate() {
+            let a_bits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+            let b_bits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a_bits, b_bits, "worker {w} diverged");
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod fabric;
 pub use chaos::{ChaosCfg, ChaosPlan, FaultWindow};
 pub use collectives::{
     ring_allreduce_mean, ring_allreduce_mean_group,
-    ring_allreduce_mean_group_c,
+    ring_allreduce_mean_group_c, ring_allreduce_mean_group_p,
 };
 pub use cost::{CostModel, WorkloadTiming};
 pub use fabric::{Fabric, GossipMsg, Tiers};

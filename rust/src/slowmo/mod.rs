@@ -258,6 +258,11 @@ pub struct OuterState {
     pub quorum_misses: u64,
     /// Stale contributions of this worker folded at a later boundary.
     pub stale_folds: u64,
+    /// Reusable per-boundary staging buffer (pending snapshots, the
+    /// stale-fold accumulator). Pre-sized to `d + 2` at first use so the
+    /// packed-clock append never reallocates; always empty between
+    /// boundaries — it never holds live data.
+    pub staging: Vec<f32>,
 }
 
 impl OuterState {
@@ -287,6 +292,7 @@ impl OuterState {
             prev_ring: 0,
             quorum_misses: 0,
             stale_folds: 0,
+            staging: Vec::new(),
         }
     }
 
@@ -511,7 +517,14 @@ pub fn outer_update_g(
             outer.quorum_misses += 1;
             outer.late = true;
             if cfg.staleness >= 1 {
-                outer.pending = Some(state.x.clone());
+                // Snapshot into the staging buffer (capacity d + 2 so
+                // the resync send can append the packed clock without
+                // reallocating) — bitwise-identical to a fresh clone.
+                let mut snap = std::mem::take(&mut outer.staging);
+                snap.clear();
+                snap.reserve(d + 2);
+                snap.extend_from_slice(&state.x);
+                outer.pending = Some(snap);
             }
             outer.prev_ring = n_ring;
             outer.t += 1;
@@ -561,8 +574,12 @@ pub fn outer_update_g(
         let collector = ring[0];
         if worker == collector {
             let qn = ring.len() as f32;
-            let mut acc: Vec<f32> =
-                state.x.iter().map(|&v| v * qn).collect();
+            // Fold accumulator lives in the staging buffer — reused
+            // across boundaries, returned below before the broadcast.
+            let mut acc = std::mem::take(&mut outer.staging);
+            acc.clear();
+            acc.reserve(d);
+            acc.extend(state.x.iter().map(|&v| v * qn));
             let mut weight = qn;
             for &r in &resyncers {
                 let mut payload =
@@ -588,7 +605,9 @@ pub fn outer_update_g(
             for (x, a) in state.x.iter_mut().zip(&acc) {
                 *x = a / weight;
             }
-            let mut msg = state.x.clone();
+            outer.staging = acc;
+            let mut msg = Vec::with_capacity(d + 2);
+            msg.extend_from_slice(&state.x);
             msg.extend_from_slice(&clock_to_f32s(clock));
             for &r in &ring[1..] {
                 fabric.chunk_send(worker, r, foldb_tag(t), msg.clone());

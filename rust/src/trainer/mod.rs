@@ -606,6 +606,7 @@ pub(crate) fn run_prepared(
             compress: codec,
             scope,
             clock: 0.0,
+            scratch: crate::util::Scratch::new(),
         };
         let mut out = WorkerOut {
             losses: Vec::with_capacity(cfg.steps as usize),

@@ -1,5 +1,8 @@
 //! Small shared utilities: float vector math helpers, formatting, logging.
 
+pub mod pool;
+pub use pool::{Pool, Scratch};
+
 use std::time::{SystemTime, UNIX_EPOCH};
 
 /// Squared L2 norm of a slice.

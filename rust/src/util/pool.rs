@@ -1,0 +1,166 @@
+//! Buffer pools for the allocation-free hot path (ROADMAP item 5(b)).
+//!
+//! A [`Pool`] is a FIFO free-list of `Vec<T>` buffers: `take` hands out a
+//! cleared buffer (capacity retained from its previous life), `put`
+//! recycles one. After a warmup pass every hot-path site that draws from
+//! a pool reaches steady state — the same few buffers cycle forever and
+//! the global allocator is never touched again. The `alloc_gate`
+//! integration test pins this with a counting `GlobalAlloc`.
+//!
+//! Obligations for pool users (see ROADMAP "Buffer pools & the
+//! allocation gate"):
+//! - never hold a pooled buffer across an outer boundary — take, use,
+//!   put within one step so pools cannot grow without bound;
+//! - pools change *where* bytes live, never their values: a pooled
+//!   variant of any routine must be bitwise-identical to the fresh one.
+
+use std::collections::VecDeque;
+
+/// FIFO free-list of reusable `Vec<T>` buffers.
+///
+/// FIFO (not LIFO) so that when buffers of several sizes circulate
+/// through one pool, every buffer rotates through every role: after a
+/// bounded warmup each buffer has served the largest role once and
+/// carries its capacity forever after, so the steady state is
+/// allocation-free regardless of which buffer lands in which role.
+#[derive(Debug)]
+pub struct Pool<T> {
+    free: VecDeque<Vec<T>>,
+}
+
+impl<T> Default for Pool<T> {
+    fn default() -> Self {
+        Self { free: VecDeque::new() }
+    }
+}
+
+impl<T> Pool<T> {
+    pub fn new() -> Self {
+        Self { free: VecDeque::new() }
+    }
+
+    /// Number of buffers currently resting in the free list.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Take a buffer: empty (`len == 0`) but with whatever capacity it
+    /// accumulated in previous lives. Allocation-free once the pool is
+    /// warm; returns a fresh `Vec::new()` when the pool is empty.
+    pub fn take(&mut self) -> Vec<T> {
+        self.free.pop_front().unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool. The contents are dropped (`clear`);
+    /// the capacity is retained for the next `take`.
+    pub fn put(&mut self, mut buf: Vec<T>) {
+        buf.clear();
+        self.free.push_back(buf);
+    }
+}
+
+impl<T: Clone + Default> Pool<T> {
+    /// Take a buffer resized to `len`, every slot `T::default()`.
+    /// Allocation-free when a warm buffer with `capacity >= len` is
+    /// available.
+    pub fn take_filled(&mut self, len: usize) -> Vec<T> {
+        let mut buf = self.take();
+        buf.resize(len, T::default());
+        buf
+    }
+}
+
+/// Per-worker scratch buffers handed down through `algorithms::Ctx`.
+///
+/// One instance per worker thread — pools are not shared or locked; the
+/// buffers themselves migrate freely between workers through the fabric
+/// (a send buffer drawn from worker A's pool is recycled into worker
+/// B's pool on receipt, keeping the total population constant).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Payload-sized float buffers: codec wire data, EF decode
+    /// temporaries, demo spectra, ring-allreduce send chunks.
+    pub f32s: Pool<f32>,
+    /// Index scratch: top-k order buffers, kept-coefficient lists,
+    /// collective group membership.
+    pub idx: Pool<usize>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_recycle_order() {
+        let mut p: Pool<f32> = Pool::new();
+        let mut a = Vec::with_capacity(10);
+        a.push(1.0);
+        let b = Vec::with_capacity(20);
+        p.put(a);
+        p.put(b);
+        assert_eq!(p.idle(), 2);
+        // First in, first out — and contents were cleared on put.
+        let first = p.take();
+        assert_eq!(first.capacity(), 10);
+        assert!(first.is_empty());
+        assert_eq!(p.take().capacity(), 20);
+        assert_eq!(p.idle(), 0);
+    }
+
+    #[test]
+    fn capacity_is_retained_across_lives() {
+        let mut p: Pool<f32> = Pool::new();
+        let mut buf = p.take();
+        buf.extend_from_slice(&[0.0; 4096]);
+        let cap = buf.capacity();
+        assert!(cap >= 4096);
+        let ptr = buf.as_ptr();
+        p.put(buf);
+        let again = p.take();
+        assert_eq!(again.capacity(), cap);
+        assert_eq!(again.as_ptr(), ptr, "no reallocation on recycle");
+    }
+
+    #[test]
+    fn take_filled_zeroes_every_slot() {
+        let mut p: Pool<f32> = Pool::new();
+        let mut buf = p.take();
+        buf.extend_from_slice(&[7.0; 64]);
+        p.put(buf);
+        let z = p.take_filled(64);
+        assert_eq!(z.len(), 64);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn cross_size_safety() {
+        // A buffer used at one size then recycled for a different size
+        // never leaks stale contents or mis-sizes.
+        let mut p: Pool<f32> = Pool::new();
+        let mut big = p.take();
+        big.resize(1000, 3.5);
+        p.put(big);
+        let small = p.take_filled(10);
+        assert_eq!(small.len(), 10);
+        assert!(small.iter().all(|&v| v == 0.0));
+        p.put(small);
+        let big_again = p.take_filled(2000);
+        assert_eq!(big_again.len(), 2000);
+        assert!(big_again.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn empty_pool_hands_out_fresh_buffers() {
+        let mut p: Pool<usize> = Pool::new();
+        assert_eq!(p.idle(), 0);
+        let buf = p.take();
+        assert!(buf.is_empty());
+        assert_eq!(buf.capacity(), 0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Steady-state allocation gate: after a warmup pass, one inner step of
+//! the hot path (`local` / `ar` × `none` / `ef:topk` / `demo`) makes
+//! ZERO heap allocations. A counting `GlobalAlloc` wraps the system
+//! allocator; every cell runs its workers between two barriers and the
+//! global alloc counter must not move across the measured window.
+//!
+//! Design notes:
+//! - One `#[global_allocator]` per test binary, and the counter is
+//!   process-global — so this file holds a SINGLE `#[test]` that walks
+//!   all cells serially. Parallel libtest threads would cross-contaminate
+//!   the count.
+//! - `ar` cells run on the `threaded` fabric: the sim backend's mpsc
+//!   mailboxes allocate a node per send by design, while the threaded
+//!   per-link `VecDeque`s retain capacity. The pools' contract is the
+//!   same on both backends; the gate pins the backend that is supposed
+//!   to be allocation-free.
+//! - Warmup is generous (32 steps): the FIFO pools rotate buffers
+//!   through every role, so each buffer must serve the largest role once
+//!   before the steady state is reached.
+//! - The gradient buffer is precomputed and reused — the trainer's
+//!   `train_step` owns gradient allocation; this gate pins the
+//!   algorithm step path itself (codec encode/decode, collectives,
+//!   inner optimizer, fabric routing).
+
+use slowmo::algorithms::{AllReduce, BaseAlgorithm, Ctx, Local, WorkerState};
+use slowmo::compress::{CompressRegistry, CompressState, Compressor};
+use slowmo::exec::{run_workers, Barrier, ExecMode};
+use slowmo::net::{CostModel, Fabric};
+use slowmo::optim::kernels::{InnerOpt, Kernels};
+use slowmo::util::Scratch;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Counts every allocation event (alloc / alloc_zeroed / realloc) from
+/// any thread; frees are not counted — the gate is about *acquiring*
+/// heap memory in the steady state.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::SeqCst)
+}
+
+const M: usize = 4;
+const D: usize = 4096;
+const WARMUP: u64 = 32;
+const MEASURE: u64 = 8;
+
+/// Run one cell: warm every worker up, barrier, snapshot the global
+/// counter, run `MEASURE` lockstep steps on all workers, barrier, and
+/// return how many allocation events the whole fleet produced.
+fn steady_state_allocs(
+    algo: &dyn BaseAlgorithm,
+    codec: Option<&dyn Compressor>,
+) -> u64 {
+    let fabric = Fabric::with_mode(M, CostModel::free(), ExecMode::Threaded);
+    let kernels = Kernels::Native;
+    let barrier = Barrier::new(M);
+    let snap = AtomicU64::new(0);
+    let deltas = run_workers(M, |w| {
+        let init: Vec<f32> =
+            (0..D).map(|i| ((i + w) as f32 * 0.01).sin()).collect();
+        let mut state = WorkerState::new(&init, algo.inner());
+        state.comp = CompressState::new(7, w as u64);
+        let mut ctx = Ctx {
+            worker: w,
+            m: M,
+            fabric: &fabric,
+            kernels: &kernels,
+            compress: codec,
+            scope: None,
+            clock: 0.0,
+            scratch: Scratch::new(),
+        };
+        let g: Vec<f32> =
+            (0..D).map(|i| ((i * 7 + w) as f32 * 0.001).cos()).collect();
+        let mut k = 0u64;
+        for _ in 0..WARMUP {
+            algo.step(&mut ctx, &mut state, &g, 0.05, k).unwrap();
+            k += 1;
+        }
+        barrier.wait();
+        if w == 0 {
+            snap.store(alloc_events(), Ordering::SeqCst);
+        }
+        barrier.wait();
+        for _ in 0..MEASURE {
+            algo.step(&mut ctx, &mut state, &g, 0.05, k).unwrap();
+            k += 1;
+        }
+        barrier.wait();
+        if w == 0 {
+            alloc_events() - snap.load(Ordering::SeqCst)
+        } else {
+            0
+        }
+    });
+    deltas[0]
+}
+
+#[test]
+fn steady_state_inner_step_is_allocation_free() {
+    let reg = CompressRegistry::builtin();
+    let codecs: Vec<(&str, Option<Arc<dyn Compressor>>)> = vec![
+        ("none", None),
+        ("ef:topk:0.25",
+         Some(reg.build(&reg.parse("ef:topk:0.25").unwrap()).unwrap())),
+        ("demo:0.25,64",
+         Some(reg.build(&reg.parse("demo:0.25,64").unwrap()).unwrap())),
+    ];
+    let inner = InnerOpt::Nesterov { beta0: 0.9, wd: 0.0 };
+    let algos: Vec<(&str, Box<dyn BaseAlgorithm>)> = vec![
+        ("local", Box::new(Local::new(inner))),
+        ("ar", Box::new(AllReduce::new(inner))),
+    ];
+    for (aname, algo) in &algos {
+        for (cname, codec) in &codecs {
+            let delta =
+                steady_state_allocs(algo.as_ref(), codec.as_deref());
+            assert_eq!(
+                delta, 0,
+                "[alloc-gate] {aname} x {cname}: {delta} heap \
+                 allocation event(s) across {MEASURE} steady-state \
+                 steps on {M} workers (d={D}) — the hot path must not \
+                 touch the allocator after warmup"
+            );
+        }
+    }
+}

@@ -251,6 +251,7 @@ fn sgp_push_sum_tolerates_chaos_fabric() {
                 compress: None,
                 scope: None,
                 clock: 0.0,
+                scratch: slowmo::util::Scratch::new(),
             };
             for k in 0..steps {
                 algo.step(&mut ctx, &mut st, &[0.0; 4], 0.1, k).unwrap();
